@@ -1,0 +1,72 @@
+//! Bench: the L3 collective primitives — the communicator rank's hot
+//! path. Measures effective bandwidth of the fixed-order reductions
+//! and the ring-allreduce baseline over paper-sized buffers
+//! (ResNet-50 ≈ 25.6M f32 ≈ 102 MB).
+//!
+//! Run: `cargo bench --bench collectives`
+
+use lsgd::collective;
+use lsgd::data::Rng;
+use lsgd::util::bench::Harness;
+
+fn rand_vec(seed: u64, n: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.f64() as f32 - 0.5).collect()
+}
+
+fn main() {
+    let mut h = Harness::default();
+    println!("# collectives — fixed-order reductions + ring baseline");
+
+    // sizes: tiny model, small model, ResNet-50-sized (the paper's payload)
+    for &(label, n) in &[("134k", 134_400usize), ("3.7M", 3_696_128), ("25.6M", 25_600_000)] {
+        let a = rand_vec(1, n);
+        let b = rand_vec(2, n);
+        let mut acc = a.clone();
+        let s = h.bench(&format!("add_assign/{label}"), || {
+            collective::add_assign(&mut acc, &b);
+            acc[0]
+        });
+        let gbps = (n as f64 * 4.0 * 3.0) / s.median / 1e9; // r+r+w
+        println!("    → {gbps:.2} GB/s effective");
+    }
+
+    // K-way fold (the local Reduce of Alg. 3 line 6) at paper group size
+    let n = 3_696_128;
+    let bufs: Vec<Vec<f32>> = (0..4u64).map(|i| rand_vec(10 + i, n)).collect();
+    let refs: Vec<&[f32]> = bufs.iter().map(|v| v.as_slice()).collect();
+    h.bench("reduce_scaled/4way/3.7M", || collective::reduce_scaled(&refs, 0.25));
+
+    // hierarchical (LSGD) vs flat association at 8 workers
+    let bufs8: Vec<Vec<f32>> = (0..8u64).map(|i| rand_vec(20 + i, n)).collect();
+    let refs8: Vec<&[f32]> = bufs8.iter().map(|v| v.as_slice()).collect();
+    h.bench("flat_allreduce/8way/3.7M", || collective::flat_allreduce(&refs8));
+    let grouped: Vec<Vec<&[f32]>> = (0..2)
+        .map(|g| bufs8[g * 4..(g + 1) * 4].iter().map(|v| v.as_slice()).collect())
+        .collect();
+    h.bench("hierarchical_allreduce/2x4/3.7M", || {
+        collective::hierarchical_allreduce(&grouped, 8)
+    });
+
+    // ring allreduce (the CSGD baseline's real data movement)
+    for ranks in [2usize, 4, 8] {
+        let mut ring_bufs: Vec<Vec<f32>> = (0..ranks as u64).map(|i| rand_vec(30 + i, n)).collect();
+        h.bench(&format!("ring_allreduce/{ranks}ranks/3.7M"), || {
+            collective::ring_allreduce(&mut ring_bufs, 1.0 / ranks as f32);
+            ring_bufs[0][0]
+        });
+    }
+
+    // broadcast (Alg. 3 line 9)
+    let src = rand_vec(40, n);
+    let mut d1 = vec![0.0f32; n];
+    let mut d2 = vec![0.0f32; n];
+    let mut d3 = vec![0.0f32; n];
+    let mut d4 = vec![0.0f32; n];
+    h.bench("broadcast/4dst/3.7M", || {
+        collective::broadcast(&src, &mut [&mut d1, &mut d2, &mut d3, &mut d4]);
+        d1[0]
+    });
+
+    println!("\n{}", h.csv());
+}

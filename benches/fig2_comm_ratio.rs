@@ -1,0 +1,66 @@
+//! Bench harness for **Fig. 2**: CSGD training time vs Allreduce time
+//! per step (and their ratio) as workers scale 4 → 256.
+//!
+//! Paper shape to reproduce: total communication time *grows* with N
+//! (α-dominated ring) while per-epoch iteration count falls; the
+//! allreduce/train ratio increases roughly linearly past 64 workers —
+//! the stated reason CSGD stops scaling.
+//!
+//! Run: `cargo bench --bench fig2_comm_ratio`
+
+use lsgd::metrics::{FigureSeries, ScalingRow};
+use lsgd::simnet::{self, AllreduceAlgo, ClusterModel};
+use lsgd::topology::Topology;
+use lsgd::util::bench::Harness;
+
+fn main() {
+    let m = ClusterModel::paper_k80();
+    let mut series = FigureSeries::new("Fig. 2 — CSGD train vs Allreduce time per step (paper-calibrated)");
+    println!("{:>8} {:>10} {:>12} {:>12} {:>9}", "workers", "epoch_its", "allreduce_s", "step_s", "ratio");
+    for g in [1usize, 2, 4, 8, 16, 32, 64] {
+        let topo = Topology::new(g, 4).unwrap();
+        let s = simnet::step_time_csgd(&m, &topo);
+        let n = topo.num_workers();
+        // ImageNet: 1.28M images / (64·N) iterations per epoch
+        let iters_per_epoch = 1_281_167 / (64 * n);
+        println!(
+            "{:>8} {:>10} {:>12.4} {:>12.4} {:>9.3}",
+            n,
+            iters_per_epoch,
+            s.global_allreduce,
+            s.total,
+            s.global_allreduce / s.total
+        );
+        series.push(ScalingRow {
+            workers: n,
+            groups: g,
+            algo: "csgd".into(),
+            step_seconds: s.total,
+            throughput: simnet::throughput(&m, &topo, s.total),
+            comm_seconds: s.global_allreduce,
+            comm_fraction: s.global_allreduce / s.total,
+            efficiency_pct: 0.0,
+        });
+    }
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/fig2.csv", series.to_csv()).unwrap();
+    println!("→ bench_results/fig2.csv");
+
+    // ablation: the same sweep under recursive halving-doubling shows
+    // the ratio collapse — the baseline's weakness is algorithmic
+    let mut m2 = m.clone();
+    m2.algo = AllreduceAlgo::RecursiveHalvingDoubling;
+    let s_ring = simnet::step_time_csgd(&m, &Topology::new(64, 4).unwrap());
+    let s_rhd = simnet::step_time_csgd(&m2, &Topology::new(64, 4).unwrap());
+    println!(
+        "\nablation @256 workers: ring allreduce {:.3}s vs RHD {:.3}s",
+        s_ring.global_allreduce, s_rhd.global_allreduce
+    );
+
+    // micro-bench the model evaluation itself (it sits inside every
+    // sweep loop of the figure harness)
+    let mut h = Harness::quick();
+    let topo = Topology::new(64, 4).unwrap();
+    h.bench("step_time_csgd/eval", || simnet::step_time_csgd(&m, &topo));
+    h.bench("step_time_lsgd/eval", || simnet::step_time_lsgd(&m, &topo));
+}

@@ -1,0 +1,95 @@
+//! Bench harness for **Fig. 4** (throughput, LSGD vs CSGD) and
+//! **Fig. 5** (their ratio) over the paper's 4 → 256 worker sweep.
+//!
+//! Paper shape to reproduce:
+//!   * CSGD is slightly FASTER at 1–2 nodes (LSGD pays two-layer
+//!     communication overhead);
+//!   * crossover, then LSGD's throughput stays near-linear while
+//!     CSGD's flattens;
+//!   * at 256 workers LSGD ≈ 1.42× CSGD (93.1 % vs 63.8 % efficiency).
+//!
+//! The sweep runs the discrete-event simulator (not just the closed
+//! form), so dependency resolution and the overlap window are
+//! exercised at every point.
+//!
+//! Run: `cargo bench --bench fig4_throughput`
+
+use lsgd::metrics::{FigureSeries, ScalingRow};
+use lsgd::simnet::{self, des, ClusterModel};
+use lsgd::topology::Topology;
+use lsgd::util::bench::Harness;
+
+fn main() {
+    let m = ClusterModel::paper_k80();
+    let steps = 8;
+    let mut fig4 = FigureSeries::new("Fig. 4 — throughput (samples/s), DES-played");
+    let mut fig5 = FigureSeries::new("Fig. 5 — LSGD/CSGD throughput ratio");
+    for g in [1usize, 2, 4, 8, 16, 32, 64] {
+        let topo = Topology::new(g, 4).unwrap();
+        let n = topo.num_workers();
+        let c_step = des::per_step(&des::run_csgd(&m, &topo, steps), steps);
+        let l_step = des::per_step(&des::run_lsgd(&m, &topo, steps), steps);
+        let c_thr = simnet::throughput(&m, &topo, c_step);
+        let l_thr = simnet::throughput(&m, &topo, l_step);
+        for (algo, st, thr) in [("csgd", c_step, c_thr), ("lsgd", l_step, l_thr)] {
+            fig4.push(ScalingRow {
+                workers: n,
+                groups: g,
+                algo: algo.into(),
+                step_seconds: st,
+                throughput: thr,
+                comm_seconds: 0.0,
+                comm_fraction: 0.0,
+                efficiency_pct: 0.0,
+            });
+        }
+        fig5.push(ScalingRow {
+            workers: n,
+            groups: g,
+            algo: "l/c".into(),
+            step_seconds: l_step / c_step,
+            throughput: l_thr / c_thr,
+            comm_seconds: 0.0,
+            comm_fraction: 0.0,
+            efficiency_pct: 100.0 * l_thr / c_thr,
+        });
+    }
+    print!("{}", fig4.to_table());
+    println!();
+    print!("{}", fig5.to_table());
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/fig4.csv", fig4.to_csv()).unwrap();
+    std::fs::write("bench_results/fig5.csv", fig5.to_csv()).unwrap();
+    println!("→ bench_results/fig4.csv, bench_results/fig5.csv");
+
+    // the paper's qualitative checkpoints, asserted
+    let r8 = fig5.rows[1].throughput;
+    let r256 = fig5.rows[6].throughput;
+    assert!(r8 < 1.0, "LSGD should trail at 8 workers (got ratio {r8:.3})");
+    assert!(r256 > 1.3, "LSGD should lead at 256 workers (got ratio {r256:.3})");
+    println!("shape checks OK: ratio@8={r8:.3} (<1), ratio@256={r256:.3} (>1.3)");
+
+    // ablation: stragglers — synchronous SGD (both schedules!) pays the
+    // max of per-group compute jitter at every barrier; the penalty
+    // approaches the full jitter bound as groups grow (E[max of G
+    // uniforms] → 1). Neither the paper's CSGD nor LSGD mitigates this;
+    // the DES quantifies it.
+    println!("\n# ablation — straggler jitter (compute × (1 + j·U[0,1)) per group/step)");
+    println!("{:>8} {:>8} {:>14} {:>14}", "workers", "jitter", "csgd_slowdown", "lsgd_slowdown");
+    for g in [2usize, 16, 64] {
+        let topo = Topology::new(g, 4).unwrap();
+        for j in [0.1, 0.3] {
+            let c0 = des::per_step(&des::run_csgd(&m, &topo, steps), steps);
+            let cj = des::per_step(&des::run_csgd_jittered(&m, &topo, steps, j), steps);
+            let l0 = des::per_step(&des::run_lsgd(&m, &topo, steps), steps);
+            let lj = des::per_step(&des::run_lsgd_jittered(&m, &topo, steps, j), steps);
+            println!("{:>8} {:>8.2} {:>13.1}% {:>13.1}%", g * 4, j, 100.0 * (cj / c0 - 1.0), 100.0 * (lj / l0 - 1.0));
+        }
+    }
+
+    // DES cost itself (it's the inner loop of this harness)
+    let mut h = Harness::quick();
+    let topo = Topology::new(64, 4).unwrap();
+    h.bench("des::run_lsgd/64x4/8steps", || des::run_lsgd(&m, &topo, 8).makespan);
+    h.bench("des::run_csgd/64x4/8steps", || des::run_csgd(&m, &topo, 8).makespan);
+}

@@ -1,0 +1,93 @@
+//! Bench harness for **Fig. 6**: scaling efficiency (% of perfect
+//! linear) for LSGD and CSGD, 4 → 256 workers.
+//!
+//! Paper numbers to land on (asserted):
+//!   * CSGD: 98.7 % @ 8 workers, dropping to 63.8 % @ 256;
+//!   * LSGD: ≈100 % up to 32 workers, 93.1 % @ 256.
+//!
+//! Also sweeps the I/O window (the ablation DESIGN.md calls out): the
+//! paper's §5.4 prediction — "LSGD will show better linear scalability
+//! when we use bigger data [longer loads]" — is checked by varying
+//! `t_io` and watching the 256-worker efficiency endpoint.
+//!
+//! Run: `cargo bench --bench fig6_efficiency`
+
+use lsgd::metrics::{FigureSeries, ScalingRow};
+use lsgd::simnet::{self, ClusterModel};
+use lsgd::topology::Topology;
+
+fn efficiency_series(m: &ClusterModel) -> FigureSeries {
+    let base_c = simnet::step_time_csgd(m, &Topology::new(1, 4).unwrap()).total;
+    let base_l = simnet::step_time_lsgd(m, &Topology::new(1, 4).unwrap()).total;
+    let mut s = FigureSeries::new("Fig. 6 — scaling efficiency (%)");
+    for g in [1usize, 2, 4, 8, 16, 32, 64] {
+        let topo = Topology::new(g, 4).unwrap();
+        let c = simnet::step_time_csgd(m, &topo);
+        let l = simnet::step_time_lsgd(m, &topo);
+        s.push(ScalingRow {
+            workers: topo.num_workers(),
+            groups: g,
+            algo: "csgd".into(),
+            step_seconds: c.total,
+            throughput: simnet::throughput(m, &topo, c.total),
+            comm_seconds: c.global_allreduce,
+            comm_fraction: c.global_allreduce / c.total,
+            efficiency_pct: 100.0 * base_c / c.total,
+        });
+        s.push(ScalingRow {
+            workers: topo.num_workers(),
+            groups: g,
+            algo: "lsgd".into(),
+            step_seconds: l.total,
+            throughput: simnet::throughput(m, &topo, l.total),
+            comm_seconds: l.global_exposed,
+            comm_fraction: l.global_exposed / l.total,
+            efficiency_pct: 100.0 * base_l / l.total,
+        });
+    }
+    s
+}
+
+fn main() {
+    let m = ClusterModel::paper_k80();
+    let series = efficiency_series(&m);
+    print!("{}", series.to_table());
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/fig6.csv", series.to_csv()).unwrap();
+    println!("→ bench_results/fig6.csv");
+
+    // paper endpoints, asserted (tolerance ±1 %)
+    let eff = |algo: &str, workers: usize| {
+        series
+            .rows
+            .iter()
+            .find(|r| r.algo == algo && r.workers == workers)
+            .unwrap()
+            .efficiency_pct
+    };
+    let checks = [
+        ("csgd", 8, 98.7),
+        ("csgd", 256, 63.8),
+        ("lsgd", 256, 93.1),
+    ];
+    for (algo, w, want) in checks {
+        let got = eff(algo, w);
+        assert!(
+            (got - want).abs() < 1.0,
+            "{algo}@{w}: {got:.1}% vs paper {want}%"
+        );
+        println!("paper check OK: {algo}@{w} workers = {got:.1}% (paper: {want}%)");
+    }
+
+    // ablation: the I/O window size drives LSGD's endpoint (§5.4)
+    println!("\n# ablation — LSGD efficiency @256 workers vs data-loading window");
+    println!("{:>8} {:>12} {:>10}", "t_io(s)", "exposed(s)", "eff_%");
+    for t_io in [0.0, 0.15, 0.35, 0.55, 0.70, 1.0] {
+        let mut mi = ClusterModel::paper_k80();
+        mi.t_io = t_io;
+        let base = simnet::step_time_lsgd(&mi, &Topology::new(1, 4).unwrap()).total;
+        let s = simnet::step_time_lsgd(&mi, &Topology::new(64, 4).unwrap());
+        println!("{:>8.2} {:>12.4} {:>10.1}", t_io, s.global_exposed, 100.0 * base / s.total);
+    }
+    println!("(longer loads hide the whole allreduce → efficiency → 100 %, the paper's prediction)");
+}

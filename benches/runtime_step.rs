@@ -1,0 +1,71 @@
+//! Bench: the PJRT runtime hot path — grad_step / sgd_update /
+//! reduce / eval per preset (requires `make artifacts`).
+//!
+//! This is the end-to-end per-table bench for the *real* execution
+//! layer: every number here feeds the `scaling_sweep` calibration and
+//! EXPERIMENTS.md §Perf. The fused-update and reduce rows measure the
+//! L1 Pallas kernels through their AOT-lowered HLO.
+//!
+//! Run: `cargo bench --bench runtime_step`
+
+use lsgd::data::Rng;
+use lsgd::runtime::Engine;
+use lsgd::util::bench::Harness;
+
+fn rand_vec(seed: u64, n: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| (rng.f64() as f32 - 0.5) * 0.1).collect()
+}
+
+fn rand_tokens(seed: u64, n: usize, vocab: i32) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.below(vocab as u64) as i32).collect()
+}
+
+fn bench_preset(h: &mut Harness, preset: &str) {
+    let engine = match Engine::load(std::path::Path::new("artifacts"), preset) {
+        Ok(e) => e,
+        Err(e) => {
+            println!("skipping preset {preset}: {e:#}");
+            return;
+        }
+    };
+    let p = engine.param_count();
+    let vocab = engine.manifest.config.vocab as i32;
+    let ntok = engine.micro_batch() * engine.tokens_per_sample();
+    let w = engine.init_params().unwrap();
+    let m = vec![0.0f32; p];
+    let g = rand_vec(1, p);
+    let a = rand_vec(2, p);
+    let b = rand_vec(3, p);
+    let toks = rand_tokens(4, ntok, vocab);
+
+    println!("\n# preset {preset}: {p} params, micro_batch {}", engine.micro_batch());
+    let s = h.bench(&format!("{preset}/grad_step"), || engine.grad_step(&w, &toks).unwrap());
+    let tokens_s = (engine.micro_batch() * (engine.tokens_per_sample() - 1)) as f64 / s.median;
+    println!("    → {tokens_s:.0} tokens/s fwd+bwd");
+    let s = h.bench(&format!("{preset}/sgd_update"), || {
+        engine.sgd_update(&w, &m, &g, 0.1).unwrap()
+    });
+    println!("    → {:.2} GB/s (5 streams)", p as f64 * 4.0 * 5.0 / s.median / 1e9);
+    let s = h.bench(&format!("{preset}/reduce2"), || engine.reduce2(&a, &b, 0.5).unwrap());
+    println!("    → {:.2} GB/s (3 streams)", p as f64 * 4.0 * 3.0 / s.median / 1e9);
+    let refs: Vec<&[f32]> = vec![&a, &b, &g, &w];
+    h.bench(&format!("{preset}/reduce_fold/4way"), || {
+        engine.reduce_fold(&refs, 0.25).unwrap()
+    });
+    h.bench(&format!("{preset}/eval_step"), || engine.eval_step(&w, &toks).unwrap());
+}
+
+fn main() {
+    // quick budget: the base preset's grad_step runs ~6 s/iteration on
+    // this 1-core testbed; the default 2 s budget would still do 5
+    // iterations each but warmup×3 adds up across 15 rows.
+    let mut h = Harness::quick();
+    for preset in ["tiny", "small", "base"] {
+        bench_preset(&mut h, preset);
+    }
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/runtime_step.csv", h.csv()).unwrap();
+    println!("\n→ bench_results/runtime_step.csv");
+}

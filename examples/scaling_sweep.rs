@@ -1,0 +1,115 @@
+//! Scaling sweep: the paper's §5.4 study end-to-end — runs BOTH real
+//! small-scale training (measuring actual step times at several
+//! topologies on this machine) AND the calibrated cluster model sweep
+//! to 256 workers, printing Figs. 2/4/5/6 side by side.
+//!
+//! The real runs calibrate `t_compute`/`t_update` for the model, so
+//! the projected sweep is anchored in measured numbers — the
+//! substitution story of DESIGN.md §2 made concrete.
+//!
+//! ```bash
+//! cargo run --release --example scaling_sweep -- --preset tiny --steps 6
+//! ```
+
+use anyhow::Result;
+use lsgd::config::{Algo, ExperimentConfig};
+use lsgd::metrics::{FigureSeries, ScalingRow};
+use lsgd::runtime::Engine;
+use lsgd::sched::Trainer;
+use lsgd::simnet::{self, ClusterModel};
+use lsgd::topology::Topology;
+use lsgd::util::cli::Args;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let a = Args::parse(&argv, &[])?;
+    let preset = a.str_or("preset", "tiny");
+    let steps = a.usize_or("steps", 6)?;
+    let io_latency = a.f64_or("io-latency", 0.05)?;
+    a.finish()?;
+
+    let engine = Engine::load(std::path::Path::new("artifacts"), &preset)?;
+
+    // -- Part 1: real measured runs at laptop-scale topologies --------
+    println!("== measured on this machine (preset {preset}, {steps} steps/point) ==");
+    let mut measured = FigureSeries::new("measured step times");
+    let mut t_compute_per_worker = 0.0;
+    let mut t_update_per_worker = 0.0;
+    for (g, w) in [(1, 1), (1, 2), (2, 2), (2, 4)] {
+        for algo in [Algo::Csgd, Algo::Lsgd] {
+            let mut cfg = ExperimentConfig::default();
+            cfg.algo = algo;
+            cfg.topology = Topology::new(g, w)?;
+            cfg.steps = steps;
+            cfg.data.io_latency = io_latency;
+            cfg.optim.linear_scaling = false;
+            let mut tr = Trainer::new(&engine, cfg, false)?;
+            let t0 = std::time::Instant::now();
+            let r = tr.run()?;
+            let wall = t0.elapsed().as_secs_f64();
+            let n = g * w;
+            let comm = r.timers.total("allreduce")
+                + r.timers.total("local_reduce")
+                + r.timers.total("global_allreduce")
+                + r.timers.total("broadcast");
+            measured.push(ScalingRow {
+                workers: n,
+                groups: g,
+                algo: algo.to_string(),
+                step_seconds: wall / steps as f64,
+                throughput: (steps * n * engine.micro_batch()) as f64 / wall,
+                comm_seconds: comm / steps as f64,
+                comm_fraction: comm / wall,
+                efficiency_pct: 0.0,
+            });
+            // per-worker compute/update calibration from the largest run
+            if (g, w) == (2, 4) {
+                t_compute_per_worker = r.timers.mean("compute");
+                t_update_per_worker = r.timers.mean("update");
+            }
+        }
+    }
+    print!("{}", measured.to_table());
+
+    // -- Part 2: calibrated projection to the paper's 256-worker scale
+    println!("\n== projected to the paper's cluster (measured compute plugged in) ==");
+    let mut m = ClusterModel::paper_k80();
+    // keep the paper's fabric; swap in this machine's measured compute
+    m.t_compute = t_compute_per_worker;
+    m.t_update = t_update_per_worker;
+    m.t_io = io_latency;
+    m.grad_bytes = engine.manifest.grad_bytes();
+    m.local_batch = engine.micro_batch();
+
+    let base_c = simnet::step_time_csgd(&m, &Topology::new(1, 4)?).total;
+    let base_l = simnet::step_time_lsgd(&m, &Topology::new(1, 4)?).total;
+    let mut projected = FigureSeries::new("projected sweep (this model on the paper's fabric)");
+    for g in [1usize, 2, 4, 8, 16, 32, 64] {
+        let topo = Topology::new(g, 4)?;
+        let c = simnet::step_time_csgd(&m, &topo);
+        let l = simnet::step_time_lsgd(&m, &topo);
+        projected.push(ScalingRow {
+            workers: topo.num_workers(),
+            groups: g,
+            algo: "csgd".into(),
+            step_seconds: c.total,
+            throughput: simnet::throughput(&m, &topo, c.total),
+            comm_seconds: c.global_allreduce,
+            comm_fraction: c.global_allreduce / c.total,
+            efficiency_pct: 100.0 * base_c / c.total,
+        });
+        projected.push(ScalingRow {
+            workers: topo.num_workers(),
+            groups: g,
+            algo: "lsgd".into(),
+            step_seconds: l.total,
+            throughput: simnet::throughput(&m, &topo, l.total),
+            comm_seconds: l.global_exposed,
+            comm_fraction: l.global_exposed / l.total,
+            efficiency_pct: 100.0 * base_l / l.total,
+        });
+    }
+    print!("{}", projected.to_table());
+    println!("scaling_sweep OK");
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! End-to-end driver: train a transformer LM with LSGD and log the
+//! loss curve — the repo's full-system validation run (EXPERIMENTS.md
+//! §E2E records its output).
+//!
+//! All three layers compose here: the L1 Pallas kernels (fused update,
+//! reduce, xent) inside the L2 JAX-lowered HLO, executed per worker by
+//! the L3 scheduler with real I/O-overlapped hierarchical reduction.
+//!
+//! ```bash
+//! # default: 'small' preset (3.7M params), 300 steps, 2×2 workers
+//! cargo run --release --example train_transformer
+//! # the ResNet-50-sized run used in EXPERIMENTS.md:
+//! cargo run --release --example train_transformer -- \
+//!     --preset base --steps 60 --groups 2 --workers 2 --eval-every 20
+//! ```
+
+use anyhow::Result;
+use lsgd::config::{Algo, ExperimentConfig};
+use lsgd::runtime::Engine;
+use lsgd::sched::Trainer;
+use lsgd::topology::Topology;
+use lsgd::util::cli::Args;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let a = Args::parse(&argv, &["dedup-replicas", "csgd"])?;
+    let preset = a.str_or("preset", "small");
+    let groups = a.usize_or("groups", 2)?;
+    let workers = a.usize_or("workers", 2)?;
+    let steps = a.usize_or("steps", 300)?;
+    let eval_every = a.usize_or("eval-every", 50)?;
+    let io_latency = a.f64_or("io-latency", 0.0)?;
+    let curve_out = a.str_or("curve-out", "train_curve.csv");
+    let dedup = a.switch("dedup-replicas");
+    let use_csgd = a.switch("csgd");
+    a.finish()?;
+
+    let engine = Engine::load(std::path::Path::new("artifacts"), &preset)?;
+    let mut cfg = ExperimentConfig::default();
+    cfg.algo = if use_csgd { Algo::Csgd } else { Algo::Lsgd };
+    cfg.topology = Topology::new(groups, workers)?;
+    cfg.steps = steps;
+    cfg.eval_every = eval_every;
+    cfg.data.train_samples = 4096;
+    cfg.data.val_samples = 256;
+    cfg.data.io_latency = io_latency;
+    cfg.optim.linear_scaling = false; // small global batches here; keep base lr
+    cfg.optim.warmup_epochs = 0.0;
+
+    println!(
+        "training {} ({:.1}M params, {:.1} MB grads) with {} on {}x{} for {} steps",
+        preset,
+        engine.param_count() as f64 / 1e6,
+        engine.manifest.grad_bytes() / 1e6,
+        cfg.algo,
+        groups,
+        workers,
+        steps
+    );
+
+    let mut trainer = Trainer::new(&engine, cfg.clone(), dedup)?;
+    let t0 = std::time::Instant::now();
+    let result = trainer.run()?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    // loss curve (decimated print, full CSV on disk)
+    println!("\nstep   train_loss   lr");
+    let stride = (steps / 20).max(1);
+    for (st, loss, lr) in result.curve.train.iter().filter(|(s, _, _)| s % stride == 0) {
+        println!("{st:>5}  {loss:>10.4}  {lr:.5}");
+    }
+    for (st, vl, va) in &result.curve.eval {
+        println!("eval@{st}: loss={vl:.4} top1={:.2}%", va * 100.0);
+    }
+
+    let n = cfg.topology.num_workers();
+    let samples = (steps * n * engine.micro_batch()) as f64;
+    println!("\nwall={wall:.1}s  {:.2} samples/s  {:.3}s/step", samples / wall, wall / steps as f64);
+    for (phase, total) in result.timers.phases() {
+        println!("  {phase:<18} {total:>9.3}s ({:.1}%)", 100.0 * total / result.timers.grand_total());
+    }
+
+    std::fs::write(&curve_out, result.curve.to_csv())?;
+    println!("curve written to {curve_out}");
+
+    let first = result.curve.train.first().unwrap().1;
+    let last = result.curve.train.last().unwrap().1;
+    anyhow::ensure!(last < first, "no learning happened: {first} → {last}");
+    println!("train_transformer OK ({first:.3} → {last:.3})");
+    Ok(())
+}

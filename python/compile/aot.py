@@ -1,0 +1,174 @@
+"""AOT compiler: lower every L2 entrypoint to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); the Rust coordinator then
+loads ``artifacts/*.hlo.txt`` via ``HloModuleProto::from_text_file`` and
+never touches Python again.
+
+Interchange is HLO **text**, not ``.serialize()``: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which this image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per preset we emit:
+
+  {preset}_grad_step.hlo.txt   (params[P], tokens[B,S+1] i32) -> (grad[P], loss[])
+  {preset}_sgd_update.hlo.txt  (params[P], mom[P], grad[P], lr[1]) -> (params'[P], mom'[P])
+  {preset}_reduce2.hlo.txt     (stacked[2,P], scale[1]) -> sum[P]
+  {preset}_reduce4.hlo.txt     (stacked[4,P], scale[1]) -> sum[P]
+  {preset}_eval_step.hlo.txt   (params[P], tokens[B,S+1] i32) -> (loss[], correct[])
+  {preset}_init.bin            initial flat params, f32 LE, seed 0
+  manifest.json                shapes/offsets/signatures for the Rust side
+
+``reduce2``/``reduce4`` cover any fan-in: the Rust collective left-folds
+pairwise (or 4-way) in rank order, preserving the fixed association the
+bitwise CSGD≡LSGD audit depends on (DESIGN.md §6).
+"""
+
+import argparse
+import functools
+import json
+import math
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import schedule
+
+# Per-worker micro-batch (the paper uses 64 images/worker; we scale the
+# token batch so per-step compute is tractable on this CPU testbed).
+MICRO_BATCH = {"tiny": 4, "small": 8, "base": 8, "large100m": 4}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_preset(preset: str, out_dir: str, micro_batch: int | None = None) -> dict:
+    cfg = M.PRESETS[preset]
+    b = micro_batch or MICRO_BATCH[preset]
+    p = M.param_count(cfg)
+    s1 = cfg.seq + 1
+
+    params_spec = jax.ShapeDtypeStruct((p,), jnp.float32)
+    tokens_spec = jax.ShapeDtypeStruct((b, s1), jnp.int32)
+    lr_spec = jax.ShapeDtypeStruct((1,), jnp.float32)
+
+    def emit(name, fn, *specs):
+        path = os.path.join(out_dir, f"{preset}_{name}.hlo.txt")
+        text = to_hlo_text(jax.jit(fn).lower(*specs))
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  wrote {path} ({len(text)/1e6:.2f} MB)", flush=True)
+        return os.path.basename(path)
+
+    arts = {}
+    arts["grad_step"] = emit(
+        "grad_step",
+        lambda w, t: tuple(M.grad_step(w, t, cfg)),
+        params_spec,
+        tokens_spec,
+    )
+    arts["sgd_update"] = emit(
+        "sgd_update",
+        lambda w, m, g, lr: tuple(M.sgd_update(w, m, g, lr)),
+        params_spec,
+        params_spec,
+        params_spec,
+        lr_spec,
+    )
+    for k in (2, 4):
+        arts[f"reduce{k}"] = emit(
+            f"reduce{k}",
+            lambda st, sc: (M.reduce_k(st, sc),),
+            jax.ShapeDtypeStruct((k, p), jnp.float32),
+            lr_spec,
+        )
+    arts["eval_step"] = emit(
+        "eval_step",
+        lambda w, t: tuple(M.eval_step(w, t, cfg)),
+        params_spec,
+        tokens_spec,
+    )
+
+    init = M.init_params(cfg, seed=0)
+    init_path = os.path.join(out_dir, f"{preset}_init.bin")
+    with open(init_path, "wb") as f:
+        f.write(bytes(jnp.asarray(init, jnp.float32).tobytes()))
+    print(f"  wrote {init_path} ({p} f32)", flush=True)
+
+    table = []
+    off = 0
+    for name, shape in M.param_table(cfg):
+        n = math.prod(shape)
+        table.append({"name": name, "shape": list(shape), "offset": off, "size": n})
+        off += n
+
+    return {
+        "config": {
+            "name": cfg.name,
+            "layers": cfg.layers,
+            "d_model": cfg.d_model,
+            "heads": cfg.heads,
+            "d_ff": cfg.d_ff,
+            "vocab": cfg.vocab,
+            "seq": cfg.seq,
+        },
+        "param_count": p,
+        "micro_batch": b,
+        "tokens_per_sample": s1,
+        "artifacts": arts,
+        "init": os.path.basename(init_path),
+        "params": table,
+        "optimizer": {"momentum": 0.9, "weight_decay": 1e-4},
+        "kernel_schedule": schedule.mode(),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--presets", default="tiny,small")
+    ap.add_argument("--micro-batch", type=int, default=None)
+    ap.add_argument(
+        "--schedule",
+        choices=["cpu", "tpu"],
+        default="cpu",
+        help="kernel tiling: cpu = single-block grid (interpret-mode "
+        "friendly), tpu = 8192-f32 VMEM tiles (the paper-shaped layout)",
+    )
+    args = ap.parse_args()
+
+    schedule.set_mode(args.schedule)
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    manifest = {}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+
+    for preset in args.presets.split(","):
+        preset = preset.strip()
+        if not preset:
+            continue
+        if preset not in M.PRESETS:
+            sys.exit(f"unknown preset {preset!r}; have {sorted(M.PRESETS)}")
+        print(f"lowering preset {preset} "
+              f"({M.param_count(M.PRESETS[preset])/1e6:.1f}M params)", flush=True)
+        manifest[preset] = lower_preset(preset, args.out_dir, args.micro_batch)
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Layer-1 Pallas kernels for the LSGD reproduction.
+
+All kernels run in ``interpret=True`` mode: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret-mode lowering (plain HLO ops)
+is the correctness target and real-TPU performance is estimated
+structurally (see DESIGN.md §Hardware-Adaptation and EXPERIMENTS.md §Perf).
+"""
+
+from .sgd_update import fused_sgd_momentum, BLOCK as SGD_BLOCK
+from .reduce import grad_reduce, BLOCK as REDUCE_BLOCK
+from .xent import softmax_xent, softmax_xent_raw
+
+__all__ = [
+    "fused_sgd_momentum",
+    "grad_reduce",
+    "softmax_xent",
+    "softmax_xent_raw",
+    "SGD_BLOCK",
+    "REDUCE_BLOCK",
+]

@@ -1,0 +1,86 @@
+"""K-way gradient reduction as a Pallas kernel.
+
+This is the compute core of both LSGD communication layers
+(Algorithm 3):
+
+  * line 6  — the *local* Reduce of worker gradients to the group's
+              communicator, with the "divide by N" fused in (the paper
+              divides at the communicator so workers never rescale);
+  * line 8  — the *global* Allreduce among communicators, whose math is
+              again a K-way sum of per-group partial gradients.
+
+The paper performs these with (CUDA-aware) MPI reduce trees; the
+arithmetic each tree node executes is exactly this kernel: a
+fixed-order sum of K aligned flat buffers with an optional scale.
+Fixed order matters — the bitwise CSGD≡LSGD equivalence audit
+(DESIGN.md §6) relies on every reduction using the same association, so
+the kernel sums rows in index order (a left fold), never a reassociated
+tree.
+
+TPU mapping: grid-tiled over the flat axis, each step loads a (K, BLOCK)
+tile (K ≤ 8 workers per group in the paper ⇒ ≤ 256 KiB VMEM at
+BLOCK=8192), streams it through the VPU. Bandwidth-bound; roofline =
+HBM read BW × (K+1)/K.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import schedule
+
+BLOCK = schedule.TPU_BLOCK
+
+
+def _reduce_kernel(scale_ref, x_ref, o_ref, *, k):
+    # Fixed-order left-fold over the K rows: Σ_{i=0..K-1} x[i, :].
+    acc = x_ref[0, :]
+    for i in range(1, k):
+        acc = acc + x_ref[i, :]
+    o_ref[...] = acc * scale_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def _grad_reduce_jit(stacked, scale, *, block):
+    """Sum K flat gradient buffers in rank order and scale the result.
+
+    Args:
+      stacked: (K, P) f32 — gradient buffer per participant, row i is the
+        buffer of rank i (rank order defines the reduction order).
+      scale: scalar f32 runtime input — 1.0 for a plain sum (global
+        Allreduce partial), 1/N for the communicator's divide-by-N.
+      block: tile size along P (static).
+
+    Returns:
+      (P,) f32 — ``scale * Σ_i stacked[i]`` with a rank-order left-fold.
+    """
+    k, p = stacked.shape
+    scale = jnp.asarray(scale, jnp.float32).reshape((1,))
+    pad = (-p) % block
+    if pad:
+        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
+    n_blocks = stacked.shape[1] // block
+    out = pl.pallas_call(
+        functools.partial(_reduce_kernel, k=k),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((k, block), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((stacked.shape[1],), jnp.float32),
+        interpret=True,
+    )(scale, stacked)
+    if pad:
+        out = out[:p]
+    return out
+
+
+def grad_reduce(stacked, scale, *, block=None):
+    """Public entry: resolves the tile size from the active schedule
+    (see kernels/schedule.py) unless an explicit ``block`` is given."""
+    if block is None:
+        block = schedule.block_for(stacked.shape[1])
+    return _grad_reduce_jit(stacked, scale, block=block)

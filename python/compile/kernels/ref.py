@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+Each function computes the same math as its kernel with plain jax.numpy
+(no pallas, no tiling) and is the ground truth for the pytest/hypothesis
+correctness sweeps in ``python/tests/test_kernel.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_momentum_ref(w, m, g, lr, *, mu=0.9, wd=1e-4):
+    """Reference fused SGD+momentum step (heavy ball + L2 decay)."""
+    lr = jnp.asarray(lr, jnp.float32).reshape(())
+    m_new = mu * m + g + wd * w
+    w_new = w - lr * m_new
+    return w_new, m_new
+
+
+def grad_reduce_ref(stacked, scale):
+    """Reference rank-order left-fold sum of K flat buffers, scaled.
+
+    Deliberately a python-loop left fold (not jnp.sum) so the f32
+    association matches the kernel's fixed reduction order exactly.
+    """
+    scale = jnp.asarray(scale, jnp.float32).reshape(())
+    acc = stacked[0]
+    for i in range(1, stacked.shape[0]):
+        acc = acc + stacked[i]
+    return acc * scale
+
+
+def softmax_xent_ref(logits, targets):
+    """Reference per-row cross-entropy loss and gradient wrt logits."""
+    z = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(z, axis=-1)
+    zy = jnp.take_along_axis(z, targets[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    loss = lse - zy
+    p = jax.nn.softmax(z, axis=-1)
+    onehot = jax.nn.one_hot(targets, z.shape[-1], dtype=jnp.float32)
+    return loss, p - onehot

@@ -1,0 +1,56 @@
+"""Kernel tiling schedule: TPU-shaped vs CPU-interpret-shaped.
+
+The Pallas kernels are *written* for the TPU memory hierarchy
+(BLOCK = 8192 f32 = 32 KiB VMEM tiles, 8-row xent tiles — see
+DESIGN.md §Hardware-Adaptation). But this repo *executes* them in
+interpret mode on CPU PJRT, where the lowered grid becomes an XLA
+while-loop whose body updates the output through a full-buffer
+``dynamic_update_slice`` — i.e. every grid step copies the whole output
+buffer. For a 3.7M-parameter update that is 452 × 14.8 MB ≈ 6.7 GB of
+pure copy traffic per optimizer step (measured: 3.86 s vs ~40 ms of
+useful bandwidth — EXPERIMENTS.md §Perf).
+
+The schedule mode fixes the mismatch without forking the kernels:
+
+* ``tpu``  — the paper-shaped tiling (default for the library; what a
+  real-TPU lowering would use);
+* ``cpu``  — one grid step over the padded buffer (grid=1), eliminating
+  the per-step copy. VMEM-footprint reasoning does not apply on CPU.
+
+``aot.py`` selects ``cpu`` when lowering artifacts for this testbed;
+tests exercise both by passing explicit ``block=``/``rows=``.
+"""
+
+TPU_BLOCK = 8192
+TPU_XENT_ROWS = 8
+
+_MODE = "tpu"
+
+
+def set_mode(mode: str) -> None:
+    """Select the tiling schedule: ``"tpu"`` or ``"cpu"``."""
+    global _MODE
+    if mode not in ("tpu", "cpu"):
+        raise ValueError(f"unknown schedule mode {mode!r}")
+    _MODE = mode
+
+
+def mode() -> str:
+    return _MODE
+
+
+def block_for(length: int) -> int:
+    """Flat-vector tile size for the update/reduce kernels."""
+    if _MODE == "tpu":
+        return TPU_BLOCK
+    # cpu: a single padded block — one grid step, one output write
+    pad = (-length) % TPU_BLOCK
+    return max(TPU_BLOCK, length + pad)
+
+
+def rows_for(batch_rows: int) -> int:
+    """Row-tile size for the fused softmax-xent kernel."""
+    if _MODE == "tpu":
+        return TPU_XENT_ROWS
+    pad = (-batch_rows) % TPU_XENT_ROWS
+    return max(TPU_XENT_ROWS, batch_rows + pad)

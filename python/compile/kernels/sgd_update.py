@@ -1,0 +1,96 @@
+"""Fused SGD-with-momentum parameter update as a Pallas kernel.
+
+This is the *deferred update* of LSGD (Algorithm 3, line 10): after the
+communicator broadcasts the globally averaged gradient, every worker
+applies
+
+    m' = mu * m + g + wd * w        (heavy-ball momentum + L2 weight decay,
+                                     matching the paper's PyTorch settings:
+                                     momentum 0.9, weight decay 1e-4)
+    w' = w  - lr * m'
+
+over the *flat* parameter vector. The paper's implementation does this
+as a fused CUDA optimizer step; here it is a 1-D grid-tiled Pallas
+kernel — the TPU analogue streams VMEM-sized blocks of the four live
+buffers (w, m, g, out-w, out-m) through the VPU.
+
+Tiling: BLOCK = 8192 f32 = 32 KiB per buffer, 5 live buffers = 160 KiB
+VMEM footprint per grid step — far below the ~16 MiB VMEM budget, so a
+real-TPU lowering can double-buffer the HBM↔VMEM pipeline. The op is
+bandwidth-bound (5 streams, ~3 flops/element), so roofline = HBM BW.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import schedule
+
+BLOCK = schedule.TPU_BLOCK
+
+
+def _sgd_kernel(lr_ref, w_ref, m_ref, g_ref, ow_ref, om_ref, *, mu, wd):
+    w = w_ref[...]
+    m = m_ref[...]
+    g = g_ref[...]
+    lr = lr_ref[0]
+    m_new = mu * m + g + wd * w
+    om_ref[...] = m_new
+    ow_ref[...] = w - lr * m_new
+
+
+@functools.partial(jax.jit, static_argnames=("mu", "wd", "block"))
+def _fused_sgd_momentum_jit(w, m, g, lr, *, mu, wd, block):
+    """Apply one fused SGD+momentum step to flat f32 vectors.
+
+    Args:
+      w: flat parameters, shape (P,) f32.
+      m: flat momentum buffer, shape (P,) f32.
+      g: flat (already averaged) gradient, shape (P,) f32.
+      lr: scalar learning rate, shape () or (1,) f32 (runtime input —
+          the warmup/decay schedule changes it every step).
+      mu: momentum coefficient (static).
+      wd: weight decay (static).
+      block: tile size (static).
+
+    Returns:
+      (w_new, m_new) with the same shapes as (w, m).
+    """
+    p = w.shape[0]
+    lr = jnp.asarray(lr, jnp.float32).reshape((1,))
+    pad = (-p) % block
+    if pad:
+        # zero-pad: pads stay zero through the update (g=w=m=0 ⇒ m'=w'=0)
+        w = jnp.pad(w, (0, pad))
+        m = jnp.pad(m, (0, pad))
+        g = jnp.pad(g, (0, pad))
+    n_blocks = w.shape[0] // block
+    grid = (n_blocks,)
+    vec_spec = pl.BlockSpec((block,), lambda i: (i,))
+    lr_spec = pl.BlockSpec((1,), lambda i: (0,))
+    out_shape = [
+        jax.ShapeDtypeStruct(w.shape, jnp.float32),
+        jax.ShapeDtypeStruct(w.shape, jnp.float32),
+    ]
+    w_new, m_new = pl.pallas_call(
+        functools.partial(_sgd_kernel, mu=mu, wd=wd),
+        grid=grid,
+        in_specs=[lr_spec, vec_spec, vec_spec, vec_spec],
+        out_specs=[vec_spec, vec_spec],
+        out_shape=out_shape,
+        interpret=True,
+    )(lr, w, m, g)
+    if pad:
+        w_new = w_new[:p]
+        m_new = m_new[:p]
+    return w_new, m_new
+
+
+def fused_sgd_momentum(w, m, g, lr, *, mu=0.9, wd=1e-4, block=None):
+    """Public entry: resolves the tile size from the active schedule
+    (see kernels/schedule.py) unless an explicit ``block`` is given."""
+    if block is None:
+        block = schedule.block_for(w.shape[0])
+    return _fused_sgd_momentum_jit(w, m, g, lr, mu=mu, wd=wd, block=block)

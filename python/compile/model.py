@@ -1,0 +1,207 @@
+"""Layer-2: the training workload — a decoder-only transformer LM in JAX.
+
+The paper trains ResNet-50 on ImageNet; the LSGD algorithm itself is
+model-agnostic (§6: "Since LSGD is a variation of SGD, it is adaptable
+to any deep neural network"). Our substitution (DESIGN.md §2) is a
+transformer language model on a synthetic corpus: it exercises the same
+dense-gradient Allreduce pattern, and the ``base`` preset is sized to
+ResNet-50's 25.6M parameters so communication volumes match the paper's.
+
+Everything the Rust coordinator calls is expressed over a **single flat
+f32 parameter vector** — the same representation the paper's MPI
+Allreduce sees (PyTorch flattens gradients bucket-wise for NCCL/MPI).
+That keeps the Rust↔HLO interface to four entrypoints:
+
+  grad_step(params, tokens)          -> (flat_grad, mean_loss)
+  sgd_update(params, mom, grad, lr)  -> (params', mom')     [L1 kernel]
+  reduce_k(stacked, scale)           -> reduced flat buffer [L1 kernel]
+  eval_step(params, tokens)          -> (mean_loss, correct_count)
+
+``tokens`` is an int32 (B, S+1) array; inputs are tokens[:, :-1] and
+next-token targets tokens[:, 1:]. The loss goes through the fused
+Pallas softmax-xent kernel via its custom_vjp, so the L1 kernel sits in
+the lowered backward HLO.
+"""
+
+import dataclasses
+import functools
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_sgd_momentum, grad_reduce, softmax_xent, softmax_xent_raw
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static transformer hyperparameters (fixed at AOT time)."""
+
+    name: str
+    layers: int
+    d_model: int
+    heads: int
+    d_ff: int
+    vocab: int
+    seq: int  # context length fed to the model (tokens arrays are seq+1 wide)
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.heads == 0
+        return self.d_model // self.heads
+
+
+# ``base`` ≈ ResNet-50's 25.6M params — matched so per-step Allreduce
+# bytes equal the paper's (25.6M × 4 B ≈ 102 MB), which is what the
+# simnet calibration (Fig. 2/4/6) consumes.
+PRESETS: Dict[str, ModelConfig] = {
+    "tiny": ModelConfig("tiny", layers=2, d_model=64, heads=4, d_ff=256, vocab=256, seq=32),
+    "small": ModelConfig("small", layers=4, d_model=256, heads=8, d_ff=1024, vocab=1024, seq=64),
+    "base": ModelConfig("base", layers=8, d_model=512, heads=8, d_ff=2048, vocab=1024, seq=128),
+    "large100m": ModelConfig("large100m", layers=12, d_model=768, heads=12, d_ff=3072, vocab=8192, seq=128),
+}
+
+
+def param_table(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) table defining the flat-vector layout."""
+    t: List[Tuple[str, Tuple[int, ...]]] = [
+        ("tok_embed", (cfg.vocab, cfg.d_model)),
+        ("pos_embed", (cfg.seq, cfg.d_model)),
+    ]
+    for i in range(cfg.layers):
+        p = f"layer{i}."
+        t += [
+            (p + "ln1_scale", (cfg.d_model,)),
+            (p + "ln1_bias", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.d_model)),
+            (p + "wk", (cfg.d_model, cfg.d_model)),
+            (p + "wv", (cfg.d_model, cfg.d_model)),
+            (p + "wo", (cfg.d_model, cfg.d_model)),
+            (p + "ln2_scale", (cfg.d_model,)),
+            (p + "ln2_bias", (cfg.d_model,)),
+            (p + "w_up", (cfg.d_model, cfg.d_ff)),
+            (p + "b_up", (cfg.d_ff,)),
+            (p + "w_down", (cfg.d_ff, cfg.d_model)),
+            (p + "b_down", (cfg.d_model,)),
+        ]
+    t += [
+        ("lnf_scale", (cfg.d_model,)),
+        ("lnf_bias", (cfg.d_model,)),
+        ("w_out", (cfg.d_model, cfg.vocab)),
+    ]
+    return t
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(math.prod(s) for _, s in param_table(cfg))
+
+
+def unflatten(flat: jnp.ndarray, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    """Slice the flat vector into named tensors (static offsets)."""
+    out = {}
+    off = 0
+    for name, shape in param_table(cfg):
+        n = math.prod(shape)
+        out[name] = flat[off : off + n].reshape(shape)
+        off += n
+    return out
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> jnp.ndarray:
+    """Seeded flat-vector initialization (scaled-normal / zeros / ones)."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape in param_table(cfg):
+        key, sub = jax.random.split(key)
+        short = name.split(".")[-1]
+        if short.startswith("ln") and short.endswith("scale"):
+            arr = jnp.ones(shape, jnp.float32)
+        elif short.startswith("b_") or short.endswith("bias"):
+            arr = jnp.zeros(shape, jnp.float32)
+        elif short in ("wo", "w_down"):
+            # residual-branch outputs: GPT-2-style depth-scaled init
+            std = 0.02 / math.sqrt(2 * cfg.layers)
+            arr = std * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            arr = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+        chunks.append(arr.reshape(-1))
+    return jnp.concatenate(chunks)
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _attention(x, p, prefix, cfg: ModelConfig):
+    b, s, d = x.shape
+    h, hd = cfg.heads, cfg.head_dim
+
+    def split(w):
+        return (x @ p[prefix + w]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = split("wq"), split("wk"), split("wv")
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(hd)
+    mask = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    att = jnp.where(mask, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return o @ p[prefix + "wo"]
+
+
+def _mlp(x, p, prefix):
+    h = jax.nn.gelu(x @ p[prefix + "w_up"] + p[prefix + "b_up"])
+    return h @ p[prefix + "w_down"] + p[prefix + "b_down"]
+
+
+def forward(flat_params: jnp.ndarray, inputs: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Transformer forward: int32 (B, S) token ids → (B, S, V) logits."""
+    p = unflatten(flat_params, cfg)
+    b, s = inputs.shape
+    x = p["tok_embed"][inputs] + p["pos_embed"][None, :s, :]
+    for i in range(cfg.layers):
+        pre = f"layer{i}."
+        x = x + _attention(_layer_norm(x, p[pre + "ln1_scale"], p[pre + "ln1_bias"]), p, pre, cfg)
+        x = x + _mlp(_layer_norm(x, p[pre + "ln2_scale"], p[pre + "ln2_bias"]), p, pre)
+    x = _layer_norm(x, p["lnf_scale"], p["lnf_bias"])
+    return x @ p["w_out"]
+
+
+def loss_fn(flat_params: jnp.ndarray, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Mean next-token cross-entropy via the fused L1 xent kernel."""
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(flat_params, inputs, cfg)
+    b, s, v = logits.shape
+    return softmax_xent(logits.reshape(b * s, v), targets.reshape(b * s))
+
+
+def grad_step(flat_params: jnp.ndarray, tokens: jnp.ndarray, cfg: ModelConfig):
+    """Worker compute phase (Alg. 3 lines 3–5): flat gradient + loss."""
+    loss, grad = jax.value_and_grad(lambda w: loss_fn(w, tokens, cfg))(flat_params)
+    return grad, loss
+
+
+def sgd_update(flat_params, momentum, grad, lr, *, mu=0.9, wd=1e-4):
+    """Deferred update (Alg. 3 line 10) — the fused L1 kernel."""
+    return fused_sgd_momentum(flat_params, momentum, grad, lr, mu=mu, wd=wd)
+
+
+def reduce_k(stacked, scale):
+    """Rank-order K-way reduce (Alg. 3 lines 6/8) — the L1 kernel."""
+    return grad_reduce(stacked, scale)
+
+
+def eval_step(flat_params: jnp.ndarray, tokens: jnp.ndarray, cfg: ModelConfig):
+    """Validation: (mean loss, top-1 correct count) on one batch."""
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(flat_params, inputs, cfg)
+    b, s, v = logits.shape
+    flat_logits = logits.reshape(b * s, v)
+    flat_targets = targets.reshape(b * s)
+    loss_rows, _ = softmax_xent_raw(flat_logits, flat_targets)
+    pred = jnp.argmax(flat_logits, axis=-1).astype(jnp.int32)
+    correct = jnp.sum((pred == flat_targets).astype(jnp.int32))
+    return jnp.mean(loss_rows), correct

@@ -1,0 +1,6 @@
+# Allow `pytest python/tests/` from the repo root: the `compile`
+# package is rooted at python/.
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

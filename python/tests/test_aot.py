@@ -1,0 +1,59 @@
+"""AOT pipeline: lowering produces loadable HLO text + a sane manifest."""
+
+import json
+import os
+import tempfile
+
+import numpy as np
+
+from compile import aot, model as M
+
+
+class TestLowerTiny:
+    def test_emits_all_artifacts_and_manifest(self):
+        with tempfile.TemporaryDirectory() as d:
+            entry = aot.lower_preset("tiny", d, micro_batch=2)
+            for art in entry["artifacts"].values():
+                path = os.path.join(d, art)
+                assert os.path.exists(path)
+                head = open(path).read(200)
+                assert "HloModule" in head  # HLO text, not proto bytes
+            init = np.fromfile(os.path.join(d, entry["init"]), dtype="<f4")
+            assert init.shape[0] == entry["param_count"]
+            assert entry["param_count"] == M.param_count(M.PRESETS["tiny"])
+            assert entry["micro_batch"] == 2
+
+    def test_param_table_offsets_contiguous(self):
+        with tempfile.TemporaryDirectory() as d:
+            entry = aot.lower_preset("tiny", d, micro_batch=2)
+            off = 0
+            for row in entry["params"]:
+                assert row["offset"] == off
+                assert row["size"] == int(np.prod(row["shape"]))
+                off += row["size"]
+            assert off == entry["param_count"]
+
+    def test_init_matches_seeded_init(self):
+        with tempfile.TemporaryDirectory() as d:
+            entry = aot.lower_preset("tiny", d, micro_batch=2)
+            init = np.fromfile(os.path.join(d, entry["init"]), dtype="<f4")
+            ref = np.asarray(M.init_params(M.PRESETS["tiny"], seed=0))
+            np.testing.assert_array_equal(init, ref)
+
+
+class TestRepoManifest:
+    """Validate the checked-in artifacts/ dir when present (post-`make
+    artifacts`); skipped on a clean tree."""
+
+    def test_manifest_consistency(self):
+        path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+        if not os.path.exists(path):
+            import pytest
+
+            pytest.skip("artifacts not built")
+        man = json.load(open(path))
+        for preset, entry in man.items():
+            cfg = M.PRESETS[preset]
+            assert entry["param_count"] == M.param_count(cfg)
+            assert entry["config"]["vocab"] == cfg.vocab
+            assert entry["tokens_per_sample"] == cfg.seq + 1

@@ -1,0 +1,146 @@
+//! Equivalence auditor — the paper's §4.2 claim, made checkable.
+//!
+//! "Algorithm 1, 2, and 3 implement the same SGD formula and we claim
+//! [they] have same accuracy." The auditor runs CSGD and LSGD under
+//! identical conditions (same seed → same global batch sequence, same
+//! AOT artifacts → same floating-point programs, same initial
+//! parameters) and compares the *entire parameter trajectory*:
+//!
+//! * **bitwise** when both schedules use the aligned reduction
+//!   association (the default — stronger than the paper's claim);
+//! * **tolerance-level** (relative ulp drift) for the paper-literal
+//!   division placement, quantifying exactly how much f32
+//!   non-associativity the paper's real-arithmetic argument glosses
+//!   over.
+
+use anyhow::Result;
+use crate::config::{Algo, ExperimentConfig};
+use crate::runtime::Engine;
+use crate::sched::{LsgdOptions, RunResult, Trainer};
+
+/// Outcome of one audit comparison.
+#[derive(Debug, Clone)]
+pub struct AuditReport {
+    pub steps: usize,
+    /// First step whose post-update checksums differ (None = identical
+    /// the whole way).
+    pub first_divergence: Option<usize>,
+    /// Max |a-b| over final parameters.
+    pub max_abs_diff: f32,
+    /// Max |a-b| / (1e-12 + |b|) over final parameters.
+    pub max_rel_diff: f32,
+    /// Fraction of final parameters that are bit-identical.
+    pub bitwise_equal_frac: f64,
+    /// Mean train-loss absolute gap across steps.
+    pub mean_loss_gap: f64,
+}
+
+impl AuditReport {
+    pub fn bitwise_identical(&self) -> bool {
+        self.first_divergence.is_none() && self.bitwise_equal_frac == 1.0
+    }
+}
+
+/// Compare two completed runs step-by-step.
+pub fn compare(a: &RunResult, b: &RunResult) -> AuditReport {
+    let steps = a.steps.min(b.steps);
+    let first_divergence = (0..steps).find(|&i| a.step_checksums[i] != b.step_checksums[i]);
+    let n = a.final_params.len().min(b.final_params.len());
+    let mut max_abs = 0.0_f32;
+    let mut max_rel = 0.0_f32;
+    let mut eq = 0usize;
+    for i in 0..n {
+        let (x, y) = (a.final_params[i], b.final_params[i]);
+        let d = (x - y).abs();
+        max_abs = max_abs.max(d);
+        max_rel = max_rel.max(d / (1e-12 + y.abs()));
+        if x.to_bits() == y.to_bits() {
+            eq += 1;
+        }
+    }
+    let mean_loss_gap = a
+        .curve
+        .train
+        .iter()
+        .zip(b.curve.train.iter())
+        .map(|((_, la, _), (_, lb, _))| (la - lb).abs())
+        .sum::<f64>()
+        / steps.max(1) as f64;
+    AuditReport {
+        steps,
+        first_divergence,
+        max_abs_diff: max_abs,
+        max_rel_diff: max_rel,
+        bitwise_equal_frac: eq as f64 / n.max(1) as f64,
+        mean_loss_gap,
+    }
+}
+
+/// Run CSGD and LSGD under `cfg` and audit the trajectories.
+///
+/// `paper_literal_division` selects the Alg. 3 line 6 scaling order
+/// (tolerance-level equivalence) vs the bitwise-aligned default.
+pub fn run_audit(
+    engine: &Engine,
+    base_cfg: &ExperimentConfig,
+    paper_literal_division: bool,
+) -> Result<(AuditReport, RunResult, RunResult)> {
+    let mut cfg_c = base_cfg.clone();
+    cfg_c.algo = Algo::Csgd;
+    let mut cfg_l = base_cfg.clone();
+    cfg_l.algo = Algo::Lsgd;
+
+    let mut tc = Trainer::new(engine, cfg_c, false)?;
+    let rc = tc.run()?;
+    let mut tl = Trainer::new(engine, cfg_l, false)?;
+    let rl = tl.run_with(LsgdOptions { divide_at_local_reduce: paper_literal_division })?;
+
+    Ok((compare(&rc, &rl), rc, rl))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{PhaseTimers, TrainCurve};
+
+    fn mk_result(params: Vec<f32>, sums: Vec<u64>) -> RunResult {
+        RunResult {
+            curve: TrainCurve::new("x"),
+            timers: PhaseTimers::new(),
+            steps: sums.len(),
+            step_checksums: sums,
+            final_params: params,
+            hidden_io_secs: 0.0,
+        }
+    }
+
+    #[test]
+    fn identical_runs_report_bitwise() {
+        let a = mk_result(vec![1.0, 2.0], vec![1, 2, 3]);
+        let b = mk_result(vec![1.0, 2.0], vec![1, 2, 3]);
+        let r = compare(&a, &b);
+        assert!(r.bitwise_identical());
+        assert_eq!(r.max_abs_diff, 0.0);
+        assert_eq!(r.first_divergence, None);
+    }
+
+    #[test]
+    fn divergence_located_at_first_mismatch() {
+        let a = mk_result(vec![1.0], vec![1, 2, 3, 4]);
+        let b = mk_result(vec![1.0], vec![1, 2, 9, 4]);
+        let r = compare(&a, &b);
+        assert_eq!(r.first_divergence, Some(2));
+    }
+
+    #[test]
+    fn near_equal_params_report_small_rel_diff() {
+        let x = 1.0_f32;
+        let y = f32::from_bits(x.to_bits() + 1);
+        let a = mk_result(vec![x, 2.0], vec![1]);
+        let b = mk_result(vec![y, 2.0], vec![1]);
+        let r = compare(&a, &b);
+        assert!(!r.bitwise_identical());
+        assert!(r.max_rel_diff < 1e-6);
+        assert_eq!(r.bitwise_equal_frac, 0.5);
+    }
+}

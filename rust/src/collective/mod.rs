@@ -1,0 +1,194 @@
+//! In-process collectives over flat `f32` gradient buffers.
+//!
+//! These are the *real* (data-moving) counterparts of the paper's MPI
+//! operations — `Reduce`, `Allreduce`, `Broadcast` (Algorithm 3 lines
+//! 6, 8, 9). Workers in this reproduction live in one address space, so
+//! a collective is a deterministic sequence of vector adds/copies; the
+//! *timing* of the paper's networked collectives is modelled separately
+//! in [`crate::simnet`].
+//!
+//! Determinism contract (DESIGN.md §6): every reduction is a
+//! **fixed-order left fold in rank order**. `((g0 + g1) + g2) + g3`,
+//! never a reassociated tree, never atomics — so the CSGD and LSGD
+//! schedulers produce bitwise-identical sums when they fold the same
+//! buffers with the same grouping, which is exactly the paper's "same
+//! mathematical formula" claim made checkable.
+//!
+//! The ring-allreduce implementation exists for the baseline/ablation
+//! benches (it is what NCCL/CSGD would run); it reassociates, so it is
+//! *not* used on the equivalence-audited path.
+
+pub mod ring;
+
+pub use ring::ring_allreduce;
+
+/// `acc[i] += src[i]` — the primitive every reduction is built from.
+///
+/// The hot loop of the communicator rank; auto-vectorizes to the
+/// platform's SIMD width (see benches/collectives.rs for measured BW).
+#[inline]
+pub fn add_assign(acc: &mut [f32], src: &[f32]) {
+    assert_eq!(acc.len(), src.len(), "collective buffer length mismatch");
+    for (a, s) in acc.iter_mut().zip(src.iter()) {
+        *a += s;
+    }
+}
+
+/// Multiply a buffer in place (the paper's "divide by N" at the
+/// communicator, Alg. 3 line 6).
+#[inline]
+pub fn scale(buf: &mut [f32], s: f32) {
+    for v in buf.iter_mut() {
+        *v *= s;
+    }
+}
+
+/// Fixed-order left-fold sum of `buffers` (ascending index = rank
+/// order), scaled by `scale_by`. The result equals the L1
+/// `grad_reduce` kernel bitwise for the same inputs.
+pub fn reduce_scaled(buffers: &[&[f32]], scale_by: f32) -> Vec<f32> {
+    assert!(!buffers.is_empty(), "reduce over zero buffers");
+    let mut acc = buffers[0].to_vec();
+    for b in &buffers[1..] {
+        add_assign(&mut acc, b);
+    }
+    if scale_by != 1.0 {
+        scale(&mut acc, scale_by);
+    }
+    acc
+}
+
+/// Reduce-to-root (Alg. 3 line 6): fold worker buffers into `root`.
+/// `root` is overwritten with `scale_by * Σ buffers` (rank order).
+pub fn reduce_to_root(root: &mut [f32], buffers: &[&[f32]], scale_by: f32) {
+    assert!(!buffers.is_empty());
+    root.copy_from_slice(buffers[0]);
+    for b in &buffers[1..] {
+        add_assign(root, b);
+    }
+    if scale_by != 1.0 {
+        scale(root, scale_by);
+    }
+}
+
+/// Broadcast (Alg. 3 line 9): copy `src` into every destination.
+pub fn broadcast(src: &[f32], dsts: &mut [&mut [f32]]) {
+    for d in dsts.iter_mut() {
+        d.copy_from_slice(src);
+    }
+}
+
+/// The LSGD two-layer reduction (Alg. 3 lines 6+8), returning the
+/// globally averaged gradient: group-local left folds, then a
+/// cross-group left fold, then one scale by `1/N`.
+///
+/// Association: `Σ_g (Σ_w g_{g,w})` with both folds in ascending id
+/// order. The CSGD scheduler uses the *same* association (via
+/// [`hierarchical_allreduce`]) so the trajectories match bitwise.
+pub fn hierarchical_allreduce(
+    per_group: &[Vec<&[f32]>],
+    num_workers: usize,
+) -> Vec<f32> {
+    assert!(!per_group.is_empty());
+    let group_sums: Vec<Vec<f32>> = per_group
+        .iter()
+        .map(|bufs| reduce_scaled(bufs, 1.0))
+        .collect();
+    let refs: Vec<&[f32]> = group_sums.iter().map(|v| v.as_slice()).collect();
+    reduce_scaled(&refs, 1.0 / num_workers as f32)
+}
+
+/// Flat rank-order allreduce: `1/N · (((g0+g1)+g2)+…)`. The naive
+/// textbook Algorithm-2 order, kept for the tolerance-level audit (a
+/// different association than [`hierarchical_allreduce`], so equal only
+/// to ~1e-6 in f32).
+pub fn flat_allreduce(buffers: &[&[f32]]) -> Vec<f32> {
+    reduce_scaled(buffers, 1.0 / buffers.len() as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(n: usize, seed: u64) -> Vec<f32> {
+        // deterministic pseudo-random buffer (LCG), no rand dep
+        let mut x = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+        (0..n)
+            .map(|_| {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                ((x >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+            })
+            .collect()
+    }
+
+    #[test]
+    fn reduce_matches_manual_fold() {
+        let a = mk(1000, 1);
+        let b = mk(1000, 2);
+        let c = mk(1000, 3);
+        let got = reduce_scaled(&[&a, &b, &c], 1.0);
+        let want: Vec<f32> = (0..1000).map(|i| (a[i] + b[i]) + c[i]).collect();
+        assert_eq!(got, want); // bitwise
+    }
+
+    #[test]
+    fn reduce_to_root_equals_reduce_scaled() {
+        let bufs: Vec<Vec<f32>> = (0..4).map(|i| mk(333, i)).collect();
+        let refs: Vec<&[f32]> = bufs.iter().map(|v| v.as_slice()).collect();
+        let mut root = vec![0.0; 333];
+        reduce_to_root(&mut root, &refs, 0.25);
+        assert_eq!(root, reduce_scaled(&refs, 0.25));
+    }
+
+    #[test]
+    fn broadcast_copies_everywhere() {
+        let src = mk(64, 9);
+        let mut d1 = vec![0.0; 64];
+        let mut d2 = vec![1.0; 64];
+        broadcast(&src, &mut [&mut d1, &mut d2]);
+        assert_eq!(d1, src);
+        assert_eq!(d2, src);
+    }
+
+    #[test]
+    fn hierarchical_association_is_group_then_global() {
+        // 2 groups × 2 workers
+        let g: Vec<Vec<f32>> = (0..4).map(|i| mk(500, 10 + i)).collect();
+        let got = hierarchical_allreduce(
+            &[vec![&g[0], &g[1]], vec![&g[2], &g[3]]],
+            4,
+        );
+        let want: Vec<f32> = (0..500)
+            .map(|i| ((g[0][i] + g[1][i]) + (g[2][i] + g[3][i])) * 0.25)
+            .collect();
+        assert_eq!(got, want); // bitwise
+    }
+
+    #[test]
+    fn hierarchical_vs_flat_close_but_not_necessarily_bitwise() {
+        let g: Vec<Vec<f32>> = (0..4).map(|i| mk(2000, 20 + i)).collect();
+        let refs: Vec<&[f32]> = g.iter().map(|v| v.as_slice()).collect();
+        let h = hierarchical_allreduce(&[vec![&g[0], &g[1]], vec![&g[2], &g[3]]], 4);
+        let f = flat_allreduce(&refs);
+        for i in 0..2000 {
+            assert!((h[i] - f[i]).abs() <= 1e-6 * (1.0 + f[i].abs()));
+        }
+    }
+
+    #[test]
+    fn single_group_hierarchical_equals_flat_bitwise() {
+        // with one group the associations coincide exactly
+        let g: Vec<Vec<f32>> = (0..4).map(|i| mk(100, 30 + i)).collect();
+        let refs: Vec<&[f32]> = g.iter().map(|v| v.as_slice()).collect();
+        let h = hierarchical_allreduce(&[refs.clone()], 4);
+        let f = flat_allreduce(&refs);
+        assert_eq!(h, f);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn mismatched_lengths_panic() {
+        let mut a = vec![0.0; 3];
+        add_assign(&mut a, &[1.0, 2.0]);
+    }
+}

@@ -1,0 +1,148 @@
+//! Ring allreduce — the bandwidth-optimal algorithm the paper's CSGD
+//! baseline effectively runs (CUDA-aware OpenMPI / NCCL style).
+//!
+//! Implemented over in-memory per-rank buffers so the baseline benches
+//! measure real data movement with the real chunking pattern:
+//! `N-1` reduce-scatter steps + `N-1` allgather steps over `N` chunks.
+//!
+//! NOTE: ring reassociates the sum (chunk `c` is folded starting at rank
+//! `(c+1) mod N`), so results can differ from the fixed-order fold in
+//! the last ulps — which is precisely why the equivalence-audited
+//! schedulers use [`super::reduce_scaled`] instead. The cost *model*
+//! for this algorithm (2(N−1)/N · bytes / BW) lives in
+//! [`crate::simnet::cost`].
+
+/// In-place ring allreduce of `ranks` equal-length buffers, then scale.
+///
+/// After the call every buffer holds `scale · Σ_r bufs[r]` (up to ring
+/// association). Panics if buffers are empty or lengths differ.
+pub fn ring_allreduce(bufs: &mut [Vec<f32>], scale: f32) {
+    let n = bufs.len();
+    assert!(n > 0, "ring over zero ranks");
+    let len = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == len), "ring buffer length mismatch");
+    if n == 1 {
+        for v in bufs[0].iter_mut() {
+            *v *= scale;
+        }
+        return;
+    }
+
+    // chunk boundaries: chunk c covers [bounds[c], bounds[c+1])
+    let bounds: Vec<usize> = (0..=n).map(|c| c * len / n).collect();
+
+    // reduce-scatter: step s, rank r sends chunk (r - s) to rank r+1
+    for s in 0..n - 1 {
+        for r in 0..n {
+            let src = r;
+            let dst = (r + 1) % n;
+            let c = (r + n - s) % n;
+            let (lo, hi) = (bounds[c], bounds[c + 1]);
+            // dst_chunk += src_chunk — simulate the transfer+reduce
+            let (a, b) = if src < dst {
+                let (x, y) = bufs.split_at_mut(dst);
+                (&x[src][lo..hi], &mut y[0][lo..hi])
+            } else {
+                let (x, y) = bufs.split_at_mut(src);
+                let dst_slice = &mut x[dst];
+                (&y[0][lo..hi], &mut dst_slice[lo..hi])
+            };
+            for (d, s) in b.iter_mut().zip(a.iter()) {
+                *d += s;
+            }
+        }
+    }
+
+    // scale the owned (fully reduced) chunk on its final owner:
+    // after n-1 steps, chunk c is complete on rank (c + n - 1) % n... we
+    // instead identify it directly: rank r owns chunk (r + 1) % n.
+    for r in 0..n {
+        let c = (r + 1) % n;
+        let (lo, hi) = (bounds[c], bounds[c + 1]);
+        for v in bufs[r][lo..hi].iter_mut() {
+            *v *= scale;
+        }
+    }
+
+    // allgather: step s, rank r sends chunk (r + 1 - s) to rank r+1
+    for s in 0..n - 1 {
+        for r in 0..n {
+            let dst = (r + 1) % n;
+            let c = (r + 1 + n - s) % n;
+            let (lo, hi) = (bounds[c], bounds[c + 1]);
+            let (a, b) = if r < dst {
+                let (x, y) = bufs.split_at_mut(dst);
+                (&x[r][lo..hi], &mut y[0][lo..hi])
+            } else {
+                let (x, y) = bufs.split_at_mut(r);
+                let dst_slice = &mut x[dst];
+                (&y[0][lo..hi], &mut dst_slice[lo..hi])
+            };
+            b.copy_from_slice(a);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(n: usize, seed: u64) -> Vec<f32> {
+        let mut x = seed.wrapping_mul(2862933555777941757).wrapping_add(3037000493);
+        (0..n)
+            .map(|_| {
+                x = x.wrapping_mul(2862933555777941757).wrapping_add(3037000493);
+                ((x >> 40) as f32 / (1u64 << 23) as f32) - 0.5
+            })
+            .collect()
+    }
+
+    fn check(n_ranks: usize, len: usize) {
+        let mut bufs: Vec<Vec<f32>> = (0..n_ranks as u64).map(|i| mk(len, i + 1)).collect();
+        let want: Vec<f32> = (0..len)
+            .map(|i| bufs.iter().map(|b| b[i] as f64).sum::<f64>() as f32 / n_ranks as f32)
+            .collect();
+        ring_allreduce(&mut bufs, 1.0 / n_ranks as f32);
+        for r in 0..n_ranks {
+            for i in 0..len {
+                assert!(
+                    (bufs[r][i] - want[i]).abs() <= 1e-5 * (1.0 + want[i].abs()),
+                    "rank {r} idx {i}: {} vs {}",
+                    bufs[r][i],
+                    want[i]
+                );
+            }
+        }
+        // all ranks identical (bitwise) after allgather
+        for r in 1..n_ranks {
+            assert_eq!(bufs[r], bufs[0], "rank {r} diverged");
+        }
+    }
+
+    #[test]
+    fn ring_2_ranks() {
+        check(2, 1000);
+    }
+
+    #[test]
+    fn ring_4_ranks() {
+        check(4, 4096);
+    }
+
+    #[test]
+    fn ring_odd_ranks_odd_len() {
+        check(5, 1013); // uneven chunk boundaries
+    }
+
+    #[test]
+    fn ring_more_ranks_than_elems() {
+        check(8, 5); // degenerate tiny buffers, some chunks empty
+    }
+
+    #[test]
+    fn ring_single_rank_scales_only() {
+        let mut bufs = vec![vec![2.0_f32; 10]];
+        ring_allreduce(&mut bufs, 0.5);
+        assert_eq!(bufs[0], vec![1.0_f32; 10]);
+    }
+}

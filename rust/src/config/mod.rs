@@ -1,0 +1,322 @@
+//! Experiment configuration: TOML-subset files + CLI overrides.
+//!
+//! One [`ExperimentConfig`] fully describes a run: topology, model
+//! preset (which AOT artifact set to load), optimizer schedule
+//! (§5.3: linear-scaling rule + gradual warmup + 1/10 decay every 30
+//! epochs), data pipeline, and the cluster timing model used by the
+//! figure benches. `configs/paper.toml` mirrors the paper's settings.
+//!
+//! Parsing goes through [`crate::util::kvconf`] (the offline build has
+//! no serde/toml — see Cargo.toml).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::simnet::{AllreduceAlgo, ClusterModel, Link};
+use crate::topology::Topology;
+use crate::util::kvconf::KvConf;
+
+/// Which schedule to run (paper Algorithm 2 vs Algorithm 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Algo {
+    /// Conventional distributed SGD — flat allreduce every step.
+    Csgd,
+    /// Layered SGD — local reduce, overlapped global allreduce,
+    /// broadcast, deferred update.
+    #[default]
+    Lsgd,
+}
+
+impl std::str::FromStr for Algo {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "csgd" => Ok(Algo::Csgd),
+            "lsgd" => Ok(Algo::Lsgd),
+            other => anyhow::bail!("unknown algo {other:?} (csgd|lsgd)"),
+        }
+    }
+}
+
+impl std::fmt::Display for Algo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Algo::Csgd => write!(f, "csgd"),
+            Algo::Lsgd => write!(f, "lsgd"),
+        }
+    }
+}
+
+/// Optimizer + learning-rate schedule settings (§5.3/§5.3.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OptimConfig {
+    /// Base learning rate at the reference global batch (paper: 0.1 at
+    /// batch 256 = one node of four workers).
+    pub base_lr: f64,
+    /// Global batch the base lr refers to.
+    pub base_global_batch: usize,
+    /// Linear-scaling rule (Goyal et al.): lr = base_lr · (batch/base).
+    pub linear_scaling: bool,
+    /// Gradual-warmup epochs (paper: 5).
+    pub warmup_epochs: f64,
+    /// Multiply lr by `decay_factor` every `decay_every_epochs`.
+    pub decay_factor: f64,
+    pub decay_every_epochs: f64,
+    /// Momentum (paper: 0.9) — must match the AOT-baked kernel constant.
+    pub momentum: f64,
+    /// Weight decay (paper: 1e-4) — must match the AOT-baked constant.
+    pub weight_decay: f64,
+}
+
+impl Default for OptimConfig {
+    fn default() -> Self {
+        Self {
+            base_lr: 0.1,
+            base_global_batch: 256,
+            linear_scaling: true,
+            warmup_epochs: 5.0,
+            decay_factor: 0.1,
+            decay_every_epochs: 30.0,
+            momentum: 0.9,
+            weight_decay: 1e-4,
+        }
+    }
+}
+
+/// Data-pipeline settings.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataConfig {
+    /// Corpus size in samples (one "epoch" = one pass).
+    pub train_samples: usize,
+    /// Held-out samples for the Fig. 7 accuracy curve.
+    pub val_samples: usize,
+    /// Seed for the synthetic corpus AND the per-step global batch
+    /// draw — fixing it makes CSGD and LSGD see identical data.
+    pub seed: u64,
+    /// Simulated per-batch I/O latency in seconds applied by the
+    /// loader (0 disables; the LSGD overlap window in real runs).
+    pub io_latency: f64,
+}
+
+impl Default for DataConfig {
+    fn default() -> Self {
+        Self { train_samples: 4096, val_samples: 512, seed: 0x5eed, io_latency: 0.0 }
+    }
+}
+
+/// The complete description of a run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    /// Algorithm under test.
+    pub algo: Algo,
+    /// Groups × workers-per-group.
+    pub topology: Topology,
+    /// AOT artifact preset to load (`tiny`/`small`/`base`/`large100m`).
+    pub preset: String,
+    /// Directory holding `manifest.json` + `*.hlo.txt`.
+    pub artifacts_dir: PathBuf,
+    /// Number of optimization steps to run.
+    pub steps: usize,
+    /// Evaluate every `eval_every` steps (0 = never).
+    pub eval_every: usize,
+    pub optim: OptimConfig,
+    pub data: DataConfig,
+    /// Timing model for simulated-scale runs and the figure benches.
+    pub cluster: ClusterModel,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            algo: Algo::Lsgd,
+            topology: Topology::paper_base(),
+            preset: "tiny".into(),
+            artifacts_dir: "artifacts".into(),
+            steps: 50,
+            eval_every: 0,
+            optim: OptimConfig::default(),
+            data: DataConfig::default(),
+            cluster: ClusterModel::paper_k80(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a TOML-subset file. Missing keys keep their defaults.
+    pub fn from_toml_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse from a TOML-subset string (see [`KvConf`] for the grammar).
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let kv = KvConf::parse(text)?;
+        let d = Self::default();
+        let cfg = Self {
+            algo: kv.str_or("algo", "lsgd").parse()?,
+            topology: Topology::new(
+                kv.usize_or("topology.groups", d.topology.groups)?,
+                kv.usize_or("topology.workers_per_group", d.topology.workers_per_group)?,
+            )?,
+            preset: kv.str_or("preset", &d.preset),
+            artifacts_dir: PathBuf::from(kv.str_or("artifacts_dir", "artifacts")),
+            steps: kv.usize_or("steps", d.steps)?,
+            eval_every: kv.usize_or("eval_every", d.eval_every)?,
+            optim: OptimConfig {
+                base_lr: kv.f64_or("optim.base_lr", d.optim.base_lr)?,
+                base_global_batch: kv
+                    .usize_or("optim.base_global_batch", d.optim.base_global_batch)?,
+                linear_scaling: kv.bool_or("optim.linear_scaling", d.optim.linear_scaling)?,
+                warmup_epochs: kv.f64_or("optim.warmup_epochs", d.optim.warmup_epochs)?,
+                decay_factor: kv.f64_or("optim.decay_factor", d.optim.decay_factor)?,
+                decay_every_epochs: kv
+                    .f64_or("optim.decay_every_epochs", d.optim.decay_every_epochs)?,
+                momentum: kv.f64_or("optim.momentum", d.optim.momentum)?,
+                weight_decay: kv.f64_or("optim.weight_decay", d.optim.weight_decay)?,
+            },
+            data: DataConfig {
+                train_samples: kv.usize_or("data.train_samples", d.data.train_samples)?,
+                val_samples: kv.usize_or("data.val_samples", d.data.val_samples)?,
+                seed: kv.u64_or("data.seed", d.data.seed)?,
+                io_latency: kv.f64_or("data.io_latency", d.data.io_latency)?,
+            },
+            cluster: ClusterModel {
+                intra: Link {
+                    alpha: kv.f64_or("cluster.intra_alpha", d.cluster.intra.alpha)?,
+                    beta: kv.f64_or("cluster.intra_beta", d.cluster.intra.beta)?,
+                },
+                inter: Link {
+                    alpha: kv.f64_or("cluster.inter_alpha", d.cluster.inter.alpha)?,
+                    beta: kv.f64_or("cluster.inter_beta", d.cluster.inter.beta)?,
+                },
+                comm_inter: Link {
+                    alpha: kv.f64_or("cluster.comm_inter_alpha", d.cluster.comm_inter.alpha)?,
+                    beta: kv.f64_or("cluster.comm_inter_beta", d.cluster.comm_inter.beta)?,
+                },
+                t_compute: kv.f64_or("cluster.t_compute", d.cluster.t_compute)?,
+                t_io: kv.f64_or("cluster.t_io", d.cluster.t_io)?,
+                grad_bytes: kv.f64_or("cluster.grad_bytes", d.cluster.grad_bytes)?,
+                t_update: kv.f64_or("cluster.t_update", d.cluster.t_update)?,
+                algo: match kv.str_or("cluster.allreduce", "ring").as_str() {
+                    "ring" => AllreduceAlgo::Ring,
+                    "rhd" => AllreduceAlgo::RecursiveHalvingDoubling,
+                    other => anyhow::bail!("cluster.allreduce: unknown algo {other:?}"),
+                },
+                local_batch: kv.usize_or("cluster.local_batch", d.cluster.local_batch)?,
+            },
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity checks shared by every entry path.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.topology.groups > 0 && self.topology.workers_per_group > 0);
+        anyhow::ensure!(self.steps > 0, "steps must be positive");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.optim.momentum),
+            "momentum out of range"
+        );
+        anyhow::ensure!(self.optim.base_global_batch > 0);
+        anyhow::ensure!(self.data.train_samples > 0);
+        Ok(())
+    }
+
+    /// Serialize back to the TOML subset (`lsgd config dump`).
+    pub fn to_toml(&self) -> String {
+        format!(
+            "algo = \"{}\"\npreset = \"{}\"\nartifacts_dir = \"{}\"\nsteps = {}\neval_every = {}\n\n\
+             [topology]\ngroups = {}\nworkers_per_group = {}\n\n\
+             [optim]\nbase_lr = {}\nbase_global_batch = {}\nlinear_scaling = {}\nwarmup_epochs = {}\n\
+             decay_factor = {}\ndecay_every_epochs = {}\nmomentum = {}\nweight_decay = {}\n\n\
+             [data]\ntrain_samples = {}\nval_samples = {}\nseed = {}\nio_latency = {}\n\n\
+             [cluster]\nintra_alpha = {}\nintra_beta = {}\ninter_alpha = {}\ninter_beta = {}\n\
+             comm_inter_alpha = {}\ncomm_inter_beta = {}\nt_compute = {}\nt_io = {}\n\
+             grad_bytes = {}\nt_update = {}\nallreduce = \"{}\"\nlocal_batch = {}\n",
+            self.algo,
+            self.preset,
+            self.artifacts_dir.display(),
+            self.steps,
+            self.eval_every,
+            self.topology.groups,
+            self.topology.workers_per_group,
+            self.optim.base_lr,
+            self.optim.base_global_batch,
+            self.optim.linear_scaling,
+            self.optim.warmup_epochs,
+            self.optim.decay_factor,
+            self.optim.decay_every_epochs,
+            self.optim.momentum,
+            self.optim.weight_decay,
+            self.data.train_samples,
+            self.data.val_samples,
+            self.data.seed,
+            self.data.io_latency,
+            self.cluster.intra.alpha,
+            self.cluster.intra.beta,
+            self.cluster.inter.alpha,
+            self.cluster.inter.beta,
+            self.cluster.comm_inter.alpha,
+            self.cluster.comm_inter.beta,
+            self.cluster.t_compute,
+            self.cluster.t_io,
+            self.cluster.grad_bytes,
+            self.cluster.t_update,
+            match self.cluster.algo {
+                AllreduceAlgo::Ring => "ring",
+                AllreduceAlgo::RecursiveHalvingDoubling => "rhd",
+            },
+            self.cluster.local_batch,
+        )
+    }
+
+    /// The paper's global mini-batch for this topology (64 × N).
+    pub fn global_batch(&self, micro_batch: usize) -> usize {
+        self.topology.num_workers() * micro_batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_roundtrips_through_toml() {
+        let c = ExperimentConfig::default();
+        let s = c.to_toml();
+        let c2 = ExperimentConfig::from_toml(&s).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn partial_toml_gets_defaults() {
+        let c = ExperimentConfig::from_toml("algo = \"csgd\"\n[topology]\ngroups = 8\n").unwrap();
+        assert_eq!(c.algo, Algo::Csgd);
+        assert_eq!(c.topology.groups, 8);
+        assert_eq!(c.topology.workers_per_group, 4); // default
+        assert_eq!(c.optim.momentum, 0.9);
+        assert_eq!(c.optim.weight_decay, 1e-4);
+    }
+
+    #[test]
+    fn validation_rejects_zero_steps() {
+        let mut c = ExperimentConfig::default();
+        c.steps = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn bad_algo_rejected() {
+        assert!(ExperimentConfig::from_toml("algo = \"async\"\n").is_err());
+    }
+
+    #[test]
+    fn paper_global_batch_rule() {
+        let mut c = ExperimentConfig::default();
+        c.topology = Topology::paper_max();
+        assert_eq!(c.global_batch(64), 16384); // the paper's 16k
+    }
+}

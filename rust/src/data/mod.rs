@@ -1,0 +1,311 @@
+//! Data pipeline: synthetic corpus, global-batch partitioner, loader.
+//!
+//! The paper's ImageNet pipeline supplies two things LSGD depends on:
+//! (1) a *partitionable* global mini-batch `M = ⊔ M^i` drawn fresh each
+//! step, and (2) real per-batch I/O latency — the window Algorithm 3
+//! hides the inter-group allreduce in. Our substitute (DESIGN.md §2):
+//!
+//! * a seeded **zipfian token corpus** (synthetic "language") — tokens
+//!   follow a zipf-like rank distribution with local bigram structure
+//!   so the LM has actual signal to learn (Fig. 7 needs a falling
+//!   loss/rising accuracy curve, not noise);
+//! * a **deterministic global-batch partitioner**: the global batch is
+//!   drawn first from the corpus PRNG, *then* split into `{M^i}` by
+//!   worker rank — so the same seed yields the same global batch
+//!   regardless of topology or algorithm. This is what makes
+//!   CSGD ≡ LSGD ≡ sequential-SGD comparable sample-by-sample (§3);
+//! * a [`Loader`] with a configurable synthetic I/O latency.
+
+use crate::topology::{Topology, WorkerId};
+
+/// Deterministic splitmix64 — stable across platforms, no rand dep.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self(seed)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9e3779b97f4a7c15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, n)`.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+/// A synthetic corpus of token sequences with zipfian unigrams and a
+/// deterministic bigram drift (so next-token prediction is learnable).
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    /// Sequences, each `seq_len + 1` tokens (inputs + shifted targets).
+    seqs: Vec<Vec<i32>>,
+    pub vocab: usize,
+    pub tokens_per_sample: usize,
+}
+
+impl Corpus {
+    /// Generate `n_samples` sequences. Zipf exponent ~1.1 over the
+    /// vocabulary, and each token depends on its predecessor via a
+    /// fixed affine map + zipf noise — a tiny Markov "language".
+    pub fn synthetic(n_samples: usize, tokens_per_sample: usize, vocab: usize, seed: u64) -> Self {
+        assert!(vocab >= 4, "vocab too small");
+        let mut rng = Rng::new(seed);
+        // precompute zipf CDF
+        let weights: Vec<f64> = (1..=vocab).map(|r| 1.0 / (r as f64).powf(1.1)).collect();
+        let total: f64 = weights.iter().sum();
+        let mut cdf = Vec::with_capacity(vocab);
+        let mut acc = 0.0;
+        for w in &weights {
+            acc += w / total;
+            cdf.push(acc);
+        }
+        let zipf = |rng: &mut Rng| -> i32 {
+            let u = rng.f64();
+            cdf.partition_point(|&c| c < u) as i32
+        };
+        let seqs = (0..n_samples)
+            .map(|_| {
+                let mut s = Vec::with_capacity(tokens_per_sample);
+                let mut prev = zipf(&mut rng);
+                s.push(prev);
+                for _ in 1..tokens_per_sample {
+                    // 70%: deterministic successor (learnable), 30%: zipf draw
+                    let t = if rng.f64() < 0.7 {
+                        (prev.wrapping_mul(31).wrapping_add(7)).rem_euclid(vocab as i32)
+                    } else {
+                        zipf(&mut rng)
+                    };
+                    s.push(t);
+                    prev = t;
+                }
+                s
+            })
+            .collect();
+        Self { seqs, vocab, tokens_per_sample }
+    }
+
+    pub fn len(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seqs.is_empty()
+    }
+
+    pub fn sample(&self, i: usize) -> &[i32] {
+        &self.seqs[i % self.seqs.len()]
+    }
+}
+
+/// Draws the per-step global batch and shards it `{M^i}`.
+///
+/// The draw consumes a *step-indexed* PRNG stream (`seed ⊕ step`), so
+/// batch `t` is identical for any topology/algorithm — the paper's §3
+/// precondition for Algorithms 1/2/3 computing the same update.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Partitioner {
+    seed: u64,
+    corpus_len: usize,
+}
+
+impl Partitioner {
+    pub fn new(seed: u64, corpus_len: usize) -> Self {
+        assert!(corpus_len > 0);
+        Self { seed, corpus_len }
+    }
+
+    /// Indices of the global mini-batch for optimization step `step`.
+    pub fn global_batch(&self, step: usize, global_batch: usize) -> Vec<usize> {
+        let mut rng = Rng::new(self.seed ^ (step as u64).wrapping_mul(0x9e37_79b9));
+        (0..global_batch)
+            .map(|_| rng.below(self.corpus_len as u64) as usize)
+            .collect()
+    }
+
+    /// Worker `w`'s shard `M^i` of step `step`'s global batch — the
+    /// contiguous slice given by [`Topology::shard_range`].
+    pub fn shard(
+        &self,
+        topo: &Topology,
+        w: WorkerId,
+        step: usize,
+        global_batch: usize,
+    ) -> anyhow::Result<Vec<usize>> {
+        let all = self.global_batch(step, global_batch);
+        let range = topo.shard_range(w, global_batch)?;
+        Ok(all[range].to_vec())
+    }
+}
+
+/// Materializes token batches (flattened i32, row-major `(B, S+1)`),
+/// optionally sleeping to model the paper's data-loading latency.
+#[derive(Debug)]
+pub struct Loader {
+    pub corpus: Corpus,
+    pub partitioner: Partitioner,
+    /// Simulated seconds per batch load (the LSGD overlap window).
+    pub io_latency: f64,
+}
+
+impl Loader {
+    pub fn new(corpus: Corpus, seed: u64, io_latency: f64) -> Self {
+        let partitioner = Partitioner::new(seed, corpus.len());
+        Self { corpus, partitioner, io_latency }
+    }
+
+    /// Worker shard batch for `step`, flattened row-major.
+    pub fn load_shard(
+        &self,
+        topo: &Topology,
+        w: WorkerId,
+        step: usize,
+        global_batch: usize,
+    ) -> anyhow::Result<Vec<i32>> {
+        let idx = self.partitioner.shard(topo, w, step, global_batch)?;
+        self.simulate_io();
+        Ok(self.gather(&idx))
+    }
+
+    /// Every worker's shard for `step`, loaded "in parallel": the
+    /// simulated latency is paid ONCE per step (all workers load
+    /// concurrently in the paper's cluster), then shards are gathered.
+    pub fn load_all_shards(
+        &self,
+        topo: &Topology,
+        step: usize,
+        global_batch: usize,
+    ) -> anyhow::Result<Vec<Vec<i32>>> {
+        let all = self.partitioner.global_batch(step, global_batch);
+        self.simulate_io();
+        topo.all_workers()
+            .map(|w| {
+                let range = topo.shard_range(w, global_batch)?;
+                Ok(self.gather(&all[range]))
+            })
+            .collect()
+    }
+
+    /// The whole global batch (sequential-SGD oracle path).
+    pub fn load_global(&self, step: usize, global_batch: usize) -> Vec<i32> {
+        let idx = self.partitioner.global_batch(step, global_batch);
+        self.simulate_io();
+        self.gather(&idx)
+    }
+
+    /// Validation batches: a fixed sweep over the corpus tail.
+    pub fn load_eval(&self, batch: usize, batch_idx: usize) -> Vec<i32> {
+        let start = batch_idx * batch;
+        let idx: Vec<usize> = (start..start + batch).map(|i| i % self.corpus.len()).collect();
+        self.gather(&idx)
+    }
+
+    fn gather(&self, idx: &[usize]) -> Vec<i32> {
+        let spl = self.corpus.tokens_per_sample;
+        let mut out = Vec::with_capacity(idx.len() * spl);
+        for &i in idx {
+            out.extend_from_slice(self.corpus.sample(i));
+        }
+        out
+    }
+
+    fn simulate_io(&self) {
+        if self.io_latency > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(self.io_latency));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Topology;
+
+    #[test]
+    fn corpus_deterministic_and_in_range() {
+        let a = Corpus::synthetic(16, 33, 256, 42);
+        let b = Corpus::synthetic(16, 33, 256, 42);
+        for i in 0..16 {
+            assert_eq!(a.sample(i), b.sample(i));
+            assert!(a.sample(i).iter().all(|&t| (0..256).contains(&t)));
+            assert_eq!(a.sample(i).len(), 33);
+        }
+        let c = Corpus::synthetic(16, 33, 256, 43);
+        assert_ne!(a.sample(0), c.sample(0));
+    }
+
+    #[test]
+    fn corpus_is_zipf_skewed() {
+        let c = Corpus::synthetic(64, 128, 256, 7);
+        let mut counts = vec![0usize; 256];
+        for i in 0..64 {
+            for &t in c.sample(i) {
+                counts[t as usize] += 1;
+            }
+        }
+        // head tokens should dominate the tail
+        let head: usize = counts[..16].iter().sum();
+        let tail: usize = counts[240..].iter().sum();
+        assert!(head > 5 * tail.max(1), "head {head} vs tail {tail}");
+    }
+
+    #[test]
+    fn global_batch_independent_of_topology() {
+        let p = Partitioner::new(99, 1000);
+        let b1 = p.global_batch(7, 64);
+        let b2 = p.global_batch(7, 64);
+        assert_eq!(b1, b2);
+        // and a different step gives a different batch
+        assert_ne!(b1, p.global_batch(8, 64));
+    }
+
+    #[test]
+    fn shards_partition_the_global_batch() {
+        let p = Partitioner::new(3, 512);
+        let topo = Topology::new(2, 4).unwrap();
+        let global = p.global_batch(5, 32);
+        let mut rebuilt = vec![];
+        for w in topo.all_workers() {
+            rebuilt.extend(p.shard(&topo, w, 5, 32).unwrap());
+        }
+        assert_eq!(rebuilt, global);
+    }
+
+    #[test]
+    fn loader_shapes() {
+        let corpus = Corpus::synthetic(128, 17, 64, 1);
+        let loader = Loader::new(corpus, 9, 0.0);
+        let topo = Topology::new(1, 2).unwrap();
+        let shard = loader.load_shard(&topo, WorkerId(0), 0, 8).unwrap();
+        assert_eq!(shard.len(), 4 * 17); // 8/2 workers = 4 samples
+        let global = loader.load_global(0, 8);
+        assert_eq!(global.len(), 8 * 17);
+        // worker 0's shard is the head of the global batch
+        assert_eq!(&global[..shard.len()], &shard[..]);
+    }
+
+    #[test]
+    fn eval_batches_tile_the_corpus() {
+        let corpus = Corpus::synthetic(10, 5, 64, 2);
+        let loader = Loader::new(corpus, 0, 0.0);
+        let b0 = loader.load_eval(4, 0);
+        let b1 = loader.load_eval(4, 1);
+        assert_eq!(b0.len(), 20);
+        assert_ne!(b0, b1);
+    }
+}

@@ -1,0 +1,47 @@
+//! # lsgd — Layered SGD, reproduced
+//!
+//! A production-style reproduction of *“Layered SGD: A Decentralized and
+//! Synchronous SGD Algorithm for Scalable Deep Neural Network Training”*
+//! (Yu, Flynn, Yoo, D'Imperio; BNL 2019).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **L1 (Pallas)** — fused SGD-momentum update, fixed-order gradient
+//!   reduction and fused softmax-xent kernels (`python/compile/kernels/`),
+//! * **L2 (JAX)** — a transformer-LM training step lowered AOT to HLO text
+//!   (`python/compile/model.py`, `aot.py`),
+//! * **L3 (this crate)** — topology, schedulers (CSGD = Algorithm 2,
+//!   LSGD = Algorithm 3), real in-process collectives, a discrete-event
+//!   cluster simulator for the paper's scalability figures, the data
+//!   pipeline with an I/O latency model, metrics, and the CLI launcher.
+//!
+//! Python never runs on the training path: `make artifacts` lowers the HLO
+//! once, then the [`runtime`] module loads and executes it via PJRT-CPU.
+//!
+//! ## Paper ↔ module map
+//!
+//! | Paper concept | Module |
+//! |---|---|
+//! | worker / communicator ranks, groups (Fig. 3) | [`topology`] |
+//! | Reduce / Allreduce / Broadcast (Alg. 3 lines 6, 8, 9) | [`collective`] |
+//! | Algorithm 2 (CSGD) and Algorithm 3 (LSGD) step schedules | [`sched`] |
+//! | cluster + interconnect timing (Figs. 2, 4, 5, 6) | [`simnet`] |
+//! | mini-batch draw + partition `{M^i}` (§3) | [`data`] |
+//! | SGD + momentum + weight decay + warmup/decay schedule (§5.3) | [`optim`] |
+//! | throughput / scaling-efficiency measurement | [`metrics`] |
+//! | "same parameter values" claim (§4.2) | [`audit`] |
+
+pub mod audit;
+pub mod collective;
+pub mod config;
+pub mod data;
+pub mod metrics;
+pub mod optim;
+pub mod runtime;
+pub mod sched;
+pub mod simnet;
+pub mod topology;
+pub mod util;
+
+pub use config::ExperimentConfig;
+pub use topology::Topology;

@@ -1,0 +1,379 @@
+//! `lsgd` — the launcher.
+//!
+//! ```text
+//! lsgd train    --algo lsgd --preset tiny --groups 2 --workers 4 --steps 100
+//! lsgd audit    --preset tiny --steps 20 [--paper-literal]
+//! lsgd bench    fig2|fig4|fig5|fig6 [--allreduce ring|rhd] [--csv out.csv]
+//! lsgd simulate --groups 64 --workers 4 --steps 5     (DES timeline)
+//! lsgd config   dump|check [--file configs/paper.toml]
+//! lsgd info     [--artifacts artifacts]
+//! ```
+//!
+//! Training/audit need `make artifacts` first; the `bench` and
+//! `simulate` subcommands run on the calibrated cluster model alone.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use lsgd::audit;
+use lsgd::config::{Algo, ExperimentConfig};
+use lsgd::metrics::{FigureSeries, ScalingRow};
+use lsgd::runtime::{Engine, Manifest};
+use lsgd::sched::Trainer;
+use lsgd::simnet::{self, des, AllreduceAlgo, ClusterModel};
+use lsgd::topology::Topology;
+use lsgd::util::cli::Args;
+
+const USAGE: &str = "\
+lsgd — Layered SGD (Yu et al. 2019) reproduction launcher
+
+USAGE: lsgd <SUBCOMMAND> [flags]
+
+SUBCOMMANDS:
+  train     train with CSGD (Alg. 2) or LSGD (Alg. 3) on real HLO compute
+            --algo csgd|lsgd --preset P --groups G --workers W --steps K
+            --eval-every K --seed S --io-latency SECS --train-samples N
+            --dedup-replicas --config FILE --curve-out FILE
+  audit     run CSGD and LSGD back-to-back, compare trajectories bitwise
+            (same flags as train, plus --paper-literal)
+  bench     regenerate a paper figure from the calibrated cluster model
+            fig2|fig4|fig5|fig6 [--allreduce ring|rhd] [--csv FILE]
+            [--t-compute S] [--t-io S]
+  simulate  discrete-event timeline at scale
+            --algo csgd|lsgd --groups G --workers W --steps K
+  config    dump | check [--file FILE]
+  info      [--artifacts DIR]
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" {
+        print!("{USAGE}");
+        return;
+    }
+    let sub = argv[0].clone();
+    let rest = &argv[1..];
+    let result = match sub.as_str() {
+        "train" => cmd_train(rest),
+        "audit" => cmd_audit(rest),
+        "bench" => cmd_bench(rest),
+        "simulate" => cmd_simulate(rest),
+        "config" => cmd_config(rest),
+        "info" => cmd_info(rest),
+        other => {
+            eprintln!("unknown subcommand {other:?}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const TRAIN_SWITCHES: &[&str] = &["dedup-replicas", "paper-literal"];
+
+/// Shared train/audit flag handling → an [`ExperimentConfig`].
+fn parse_train_config(a: &Args, algo: Algo) -> Result<ExperimentConfig> {
+    let mut cfg = match a.opt_str("config") {
+        Some(p) => ExperimentConfig::from_toml_file(&PathBuf::from(p))?,
+        None => ExperimentConfig::default(),
+    };
+    cfg.algo = algo;
+    cfg.topology = Topology::new(
+        a.usize_or("groups", cfg.topology.groups)?,
+        a.usize_or("workers", cfg.topology.workers_per_group)?,
+    )?;
+    cfg.preset = a.str_or("preset", &cfg.preset);
+    cfg.artifacts_dir = PathBuf::from(a.str_or("artifacts", &cfg.artifacts_dir.to_string_lossy()));
+    cfg.steps = a.usize_or("steps", cfg.steps)?;
+    cfg.eval_every = a.usize_or("eval-every", cfg.eval_every)?;
+    cfg.data.seed = a.u64_or("seed", cfg.data.seed)?;
+    cfg.data.io_latency = a.f64_or("io-latency", cfg.data.io_latency)?;
+    cfg.data.train_samples = a.usize_or("train-samples", cfg.data.train_samples)?;
+    cfg.data.val_samples = a.usize_or("val-samples", cfg.data.val_samples)?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(rest: &[String]) -> Result<()> {
+    let a = Args::parse(rest, TRAIN_SWITCHES)?;
+    let algo: Algo = a.str_or("algo", "lsgd").parse()?;
+    let cfg = parse_train_config(&a, algo)?;
+    let curve_out = a.opt_str("curve-out");
+    let dedup = a.switch("dedup-replicas");
+    a.finish()?;
+
+    eprintln!(
+        "loading artifacts preset={} from {}…",
+        cfg.preset,
+        cfg.artifacts_dir.display()
+    );
+    let engine = Engine::load(&cfg.artifacts_dir, &cfg.preset)?;
+    eprintln!(
+        "engine up: platform={}, params={} ({:.1} MB grads), micro_batch={}",
+        engine.platform(),
+        engine.param_count(),
+        engine.manifest.grad_bytes() / 1e6,
+        engine.micro_batch()
+    );
+    let mut trainer = Trainer::new(&engine, cfg.clone(), dedup)?;
+    let t0 = std::time::Instant::now();
+    let result = trainer.run()?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let n = cfg.topology.num_workers();
+    let samples = (result.steps * n * engine.micro_batch()) as f64;
+    println!(
+        "algo={} topology={}x{} steps={}",
+        cfg.algo, cfg.topology.groups, cfg.topology.workers_per_group, result.steps
+    );
+    println!("wall={wall:.2}s  throughput={:.1} samples/s", samples / wall);
+    for (phase, total) in result.timers.phases() {
+        println!(
+            "  phase {phase:<18} total={total:>9.3}s mean={:>9.5}s",
+            result.timers.mean(phase)
+        );
+    }
+    if result.hidden_io_secs > 0.0 {
+        println!("  I/O hidden under global allreduce: {:.3}s", result.hidden_io_secs);
+    }
+    if let (Some((_, l0, _)), Some((_, l1, _))) =
+        (result.curve.train.first(), result.curve.train.last())
+    {
+        println!("loss: {l0:.4} → {l1:.4}");
+    }
+    for (st, vl, va) in &result.curve.eval {
+        println!("  eval@{st}: loss={vl:.4} top1={:.2}%", va * 100.0);
+    }
+    if let Some(path) = curve_out {
+        std::fs::write(&path, result.curve.to_csv())?;
+        println!("curve written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_audit(rest: &[String]) -> Result<()> {
+    let a = Args::parse(rest, TRAIN_SWITCHES)?;
+    let cfg = parse_train_config(&a, Algo::Lsgd)?;
+    let paper_literal = a.switch("paper-literal");
+    a.finish()?;
+
+    let engine = Engine::load(&cfg.artifacts_dir, &cfg.preset)?;
+    let (report, rc, rl) = audit::run_audit(&engine, &cfg, paper_literal)?;
+    println!(
+        "audit over {} steps (division placement: {})",
+        report.steps,
+        if paper_literal { "paper-literal (Alg. 3 line 6)" } else { "bitwise-aligned" }
+    );
+    println!("  first divergence : {:?}", report.first_divergence);
+    println!("  bitwise equal    : {:.2}%", report.bitwise_equal_frac * 100.0);
+    println!("  max abs diff     : {:e}", report.max_abs_diff);
+    println!("  max rel diff     : {:e}", report.max_rel_diff);
+    println!("  mean loss gap    : {:e}", report.mean_loss_gap);
+    println!(
+        "  csgd final loss={:.4}  lsgd final loss={:.4}",
+        rc.curve.train.last().map(|x| x.1).unwrap_or(f64::NAN),
+        rl.curve.train.last().map(|x| x.1).unwrap_or(f64::NAN),
+    );
+    if paper_literal {
+        anyhow::ensure!(
+            report.max_rel_diff < 1e-2,
+            "paper-literal LSGD drifted beyond tolerance"
+        );
+        println!("PASS (tolerance-level equivalence, as expected for f32 reassociation)");
+    } else {
+        anyhow::ensure!(report.bitwise_identical(), "trajectories not bitwise identical");
+        println!("PASS (bitwise-identical trajectories — §4.2 claim verified exactly)");
+    }
+    Ok(())
+}
+
+fn parse_allreduce(s: &str) -> Result<AllreduceAlgo> {
+    Ok(match s {
+        "ring" => AllreduceAlgo::Ring,
+        "rhd" => AllreduceAlgo::RecursiveHalvingDoubling,
+        other => anyhow::bail!("unknown allreduce algo {other:?} (ring|rhd)"),
+    })
+}
+
+/// The group counts the paper sweeps (4 → 256 workers at W=4).
+const SWEEP: &[usize] = &[1, 2, 4, 8, 16, 32, 64];
+
+fn cmd_bench(rest: &[String]) -> Result<()> {
+    let a = Args::parse(rest, &[])?;
+    let figure = a
+        .positional()
+        .first()
+        .context("bench needs a figure: fig2|fig4|fig5|fig6")?
+        .clone();
+    let mut m = ClusterModel::paper_k80();
+    m.algo = parse_allreduce(&a.str_or("allreduce", "ring"))?;
+    if let Some(tc) = a.opt_f64("t-compute")? {
+        m.t_compute = tc;
+    }
+    if let Some(ti) = a.opt_f64("t-io")? {
+        m.t_io = ti;
+    }
+    let csv = a.opt_str("csv");
+    a.finish()?;
+
+    let series = run_figure(&figure, &m)?;
+    print!("{}", series.to_table());
+    if let Some(path) = csv {
+        std::fs::write(&path, series.to_csv())?;
+        eprintln!("csv written to {path}");
+    }
+    Ok(())
+}
+
+/// Build the requested figure's series from the cluster model.
+/// (Also used by benches/fig*.rs via the library path.)
+fn run_figure(figure: &str, m: &ClusterModel) -> Result<FigureSeries> {
+    let base_topo = Topology::new(1, 4)?;
+    let base_c = simnet::step_time_csgd(m, &base_topo).total;
+    let base_l = simnet::step_time_lsgd(m, &base_topo).total;
+    let mut series = FigureSeries::new(match figure {
+        "fig2" => "Fig. 2 — CSGD train vs Allreduce time per step",
+        "fig4" => "Fig. 4 — throughput, LSGD vs CSGD",
+        "fig5" => "Fig. 5 — LSGD/CSGD throughput ratio",
+        "fig6" => "Fig. 6 — scaling efficiency (%)",
+        other => anyhow::bail!("unknown figure {other:?} (fig2|fig4|fig5|fig6)"),
+    });
+    for &g in SWEEP {
+        let topo = Topology::new(g, 4)?;
+        let n = topo.num_workers();
+        let c = simnet::step_time_csgd(m, &topo);
+        let l = simnet::step_time_lsgd(m, &topo);
+        series.push(ScalingRow {
+            workers: n,
+            groups: g,
+            algo: "csgd".into(),
+            step_seconds: c.total,
+            throughput: simnet::throughput(m, &topo, c.total),
+            comm_seconds: c.global_allreduce,
+            comm_fraction: c.global_allreduce / c.total,
+            efficiency_pct: 100.0 * simnet::scaling_efficiency(base_c, c.total),
+        });
+        if figure != "fig2" {
+            series.push(ScalingRow {
+                workers: n,
+                groups: g,
+                algo: "lsgd".into(),
+                step_seconds: l.total,
+                throughput: simnet::throughput(m, &topo, l.total),
+                comm_seconds: l.global_exposed,
+                comm_fraction: l.global_exposed / l.total,
+                efficiency_pct: 100.0 * simnet::scaling_efficiency(base_l, l.total),
+            });
+        }
+    }
+    if figure == "fig5" {
+        // rewrite rows into the ratio series the paper plots
+        let mut ratio = FigureSeries::new(&series.title);
+        for pair in series.rows.chunks(2) {
+            let (c, l) = (&pair[0], &pair[1]);
+            ratio.push(ScalingRow {
+                workers: c.workers,
+                groups: c.groups,
+                algo: "l/c".into(),
+                step_seconds: l.step_seconds / c.step_seconds,
+                throughput: l.throughput / c.throughput,
+                comm_seconds: 0.0,
+                comm_fraction: 0.0,
+                efficiency_pct: 100.0 * l.throughput / c.throughput,
+            });
+        }
+        return Ok(ratio);
+    }
+    Ok(series)
+}
+
+fn cmd_simulate(rest: &[String]) -> Result<()> {
+    let a = Args::parse(rest, &[])?;
+    let groups = a.usize_or("groups", 4)?;
+    let workers = a.usize_or("workers", 4)?;
+    let steps = a.usize_or("steps", 3)?;
+    let algo: Algo = a.str_or("algo", "lsgd").parse()?;
+    a.finish()?;
+
+    let m = ClusterModel::paper_k80();
+    let topo = Topology::new(groups, workers)?;
+    let r = match algo {
+        Algo::Lsgd => des::run_lsgd(&m, &topo, steps),
+        Algo::Csgd => des::run_csgd(&m, &topo, steps),
+    };
+    println!(
+        "{algo} {groups}x{workers} steps={steps}: makespan={:.3}s per_step={:.3}s hidden_comm={:.3}s",
+        r.makespan,
+        des::per_step(&r, steps),
+        r.hidden_comm
+    );
+    // print the first step's timeline
+    let mut spans: Vec<_> = r.spans.iter().filter(|s| s.step == 0).collect();
+    spans.sort_by(|a, b| (a.start, &a.rank).partial_cmp(&(b.start, &b.rank)).unwrap());
+    for s in spans.iter().take(40) {
+        println!("  [{:>8.3} → {:>8.3}] {:<12} {}", s.start, s.end, s.rank, s.phase);
+    }
+    Ok(())
+}
+
+fn cmd_config(rest: &[String]) -> Result<()> {
+    let a = Args::parse(rest, &[])?;
+    let action = a.positional().first().context("config needs dump|check")?.clone();
+    let file = a.opt_str("file");
+    a.finish()?;
+    match action.as_str() {
+        "dump" => {
+            let cfg = match file {
+                Some(p) => ExperimentConfig::from_toml_file(&PathBuf::from(p))?,
+                None => ExperimentConfig::default(),
+            };
+            print!("{}", cfg.to_toml());
+        }
+        "check" => {
+            let p = file.context("--file required for check")?;
+            let cfg = ExperimentConfig::from_toml_file(&PathBuf::from(&p))?;
+            cfg.validate()?;
+            println!(
+                "{p} OK ({}, {} groups × {} workers, preset {})",
+                cfg.algo, cfg.topology.groups, cfg.topology.workers_per_group, cfg.preset
+            );
+        }
+        other => anyhow::bail!("unknown config action {other:?} (dump|check)"),
+    }
+    Ok(())
+}
+
+fn cmd_info(rest: &[String]) -> Result<()> {
+    let a = Args::parse(rest, &[])?;
+    let artifacts = PathBuf::from(a.str_or("artifacts", "artifacts"));
+    a.finish()?;
+    match Manifest::load(&artifacts) {
+        Ok(m) => {
+            println!("artifacts dir: {}", artifacts.display());
+            for name in m.presets() {
+                let p = m.preset(name)?;
+                println!(
+                    "  {name}: {} params ({:.1} MB grads), micro_batch={}, L={} d={} V={} S={}",
+                    p.param_count,
+                    p.grad_bytes() / 1e6,
+                    p.micro_batch,
+                    p.config.layers,
+                    p.config.d_model,
+                    p.config.vocab,
+                    p.config.seq
+                );
+            }
+        }
+        Err(e) => println!("no artifacts: {e:#}"),
+    }
+    let client = xla::PjRtClient::cpu()?;
+    println!(
+        "PJRT platform: {} ({} devices)",
+        client.platform_name(),
+        client.device_count()
+    );
+    Ok(())
+}

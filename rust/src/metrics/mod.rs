@@ -1,0 +1,235 @@
+//! Run metrics: step timers, phase breakdowns, throughput, scaling
+//! efficiency, and CSV/JSON emitters for the figure harness.
+//!
+//! Everything the paper reports is derived from these counters:
+//! Fig. 2 = `phase fraction (allreduce / total)`, Fig. 4 = `throughput`,
+//! Fig. 5 = throughput ratio, Fig. 6 = `scaling_efficiency` vs base.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Accumulates wall-clock per named phase across steps.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimers {
+    totals: BTreeMap<String, f64>,
+    counts: BTreeMap<String, u64>,
+}
+
+impl PhaseTimers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record `secs` against phase `name`.
+    pub fn add(&mut self, name: &str, secs: f64) {
+        *self.totals.entry(name.to_string()).or_default() += secs;
+        *self.counts.entry(name.to_string()).or_default() += 1;
+    }
+
+    /// Time a closure and record it.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(name, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn total(&self, name: &str) -> f64 {
+        self.totals.get(name).copied().unwrap_or(0.0)
+    }
+
+    pub fn mean(&self, name: &str) -> f64 {
+        let c = self.counts.get(name).copied().unwrap_or(0);
+        if c == 0 {
+            0.0
+        } else {
+            self.total(name) / c as f64
+        }
+    }
+
+    pub fn grand_total(&self) -> f64 {
+        self.totals.values().sum()
+    }
+
+    /// Fraction of the grand total spent in `name` (Fig. 2's ratio).
+    pub fn fraction(&self, name: &str) -> f64 {
+        let g = self.grand_total();
+        if g == 0.0 {
+            0.0
+        } else {
+            self.total(name) / g
+        }
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.totals.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+}
+
+/// One row of a figure table: everything needed to reprint the paper's
+/// series for a given worker count.
+#[derive(Debug, Clone)]
+pub struct ScalingRow {
+    pub workers: usize,
+    pub groups: usize,
+    pub algo: String,
+    pub step_seconds: f64,
+    pub throughput: f64,
+    pub comm_seconds: f64,
+    pub comm_fraction: f64,
+    pub efficiency_pct: f64,
+}
+
+/// Collected series for one figure (rows sorted by worker count).
+#[derive(Debug, Clone, Default)]
+pub struct FigureSeries {
+    pub title: String,
+    pub rows: Vec<ScalingRow>,
+}
+
+impl FigureSeries {
+    pub fn new(title: &str) -> Self {
+        Self { title: title.to_string(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: ScalingRow) {
+        self.rows.push(row);
+    }
+
+    /// Render as an aligned text table (what the bench binaries print).
+    pub fn to_table(&self) -> String {
+        let mut s = format!("# {}\n", self.title);
+        s.push_str(&format!(
+            "{:>8} {:>7} {:>6} {:>12} {:>14} {:>11} {:>10} {:>11}\n",
+            "workers", "groups", "algo", "step_s", "samples/s", "comm_s", "comm_frac", "eff_%"
+        ));
+        for r in &self.rows {
+            s.push_str(&format!(
+                "{:>8} {:>7} {:>6} {:>12.4} {:>14.1} {:>11.4} {:>10.3} {:>11.1}\n",
+                r.workers,
+                r.groups,
+                r.algo,
+                r.step_seconds,
+                r.throughput,
+                r.comm_seconds,
+                r.comm_fraction,
+                r.efficiency_pct
+            ));
+        }
+        s
+    }
+
+    /// CSV (one file per figure, consumed by plotting or EXPERIMENTS.md).
+    pub fn to_csv(&self) -> String {
+        let mut s =
+            String::from("workers,groups,algo,step_seconds,throughput,comm_seconds,comm_fraction,efficiency_pct\n");
+        for r in &self.rows {
+            s.push_str(&format!(
+                "{},{},{},{},{},{},{},{}\n",
+                r.workers,
+                r.groups,
+                r.algo,
+                r.step_seconds,
+                r.throughput,
+                r.comm_seconds,
+                r.comm_fraction,
+                r.efficiency_pct
+            ));
+        }
+        s
+    }
+}
+
+/// Loss/accuracy curve for Fig. 7.
+#[derive(Debug, Clone, Default)]
+pub struct TrainCurve {
+    pub algo: String,
+    /// (step, train_loss, lr)
+    pub train: Vec<(usize, f64, f64)>,
+    /// (step, val_loss, val_top1)
+    pub eval: Vec<(usize, f64, f64)>,
+}
+
+impl TrainCurve {
+    pub fn new(algo: &str) -> Self {
+        Self { algo: algo.to_string(), ..Default::default() }
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("kind,step,loss,extra\n");
+        for (st, l, lr) in &self.train {
+            s.push_str(&format!("train,{st},{l},{lr}\n"));
+        }
+        for (st, l, a) in &self.eval {
+            s.push_str(&format!("eval,{st},{l},{a}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timers_accumulate_and_average() {
+        let mut t = PhaseTimers::new();
+        t.add("compute", 1.0);
+        t.add("compute", 3.0);
+        t.add("allreduce", 1.0);
+        assert_eq!(t.total("compute"), 4.0);
+        assert_eq!(t.mean("compute"), 2.0);
+        assert_eq!(t.grand_total(), 5.0);
+        assert!((t.fraction("allreduce") - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_closure_records_positive() {
+        let mut t = PhaseTimers::new();
+        let v = t.time("work", || {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(t.total("work") >= 0.004);
+    }
+
+    #[test]
+    fn unknown_phase_is_zero() {
+        let t = PhaseTimers::new();
+        assert_eq!(t.total("nope"), 0.0);
+        assert_eq!(t.mean("nope"), 0.0);
+        assert_eq!(t.fraction("nope"), 0.0);
+    }
+
+    #[test]
+    fn figure_series_renders() {
+        let mut f = FigureSeries::new("Fig. 4");
+        f.push(ScalingRow {
+            workers: 4,
+            groups: 1,
+            algo: "lsgd".into(),
+            step_seconds: 1.0,
+            throughput: 256.0,
+            comm_seconds: 0.1,
+            comm_fraction: 0.1,
+            efficiency_pct: 100.0,
+        });
+        let table = f.to_table();
+        assert!(table.contains("Fig. 4"));
+        assert!(table.contains("lsgd"));
+        let csv = f.to_csv();
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.lines().nth(1).unwrap().starts_with("4,1,lsgd"));
+    }
+
+    #[test]
+    fn train_curve_csv() {
+        let mut c = TrainCurve::new("csgd");
+        c.train.push((0, 5.5, 0.1));
+        c.eval.push((10, 5.0, 0.02));
+        let csv = c.to_csv();
+        assert!(csv.contains("train,0,5.5,0.1"));
+        assert!(csv.contains("eval,10,5,0.02"));
+    }
+}

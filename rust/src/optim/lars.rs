@@ -1,0 +1,180 @@
+//! LARS — Layer-wise Adaptive Rate Scaling (You et al. [16, 22]).
+//!
+//! The paper's §6 names this as future work: "we will investigate the
+//! incorporation of LARS into our algorithm". Since LSGD only changes
+//! the communication *schedule*, any optimizer whose update is a
+//! deterministic function of `(w, m, ḡ, lr)` slots into the deferred
+//! update (Alg. 3 line 10) without touching either collective layer —
+//! this module demonstrates exactly that.
+//!
+//! Per parameter tensor `l` (the manifest's [`crate::runtime::ParamRow`]
+//! segments of the flat vector):
+//!
+//! ```text
+//! λ_l = η · ‖w_l‖ / (‖g_l‖ + β·‖w_l‖ + ε)      (trust ratio)
+//! m_l ← μ·m_l + λ_l · lr · (g_l + β·w_l)
+//! w_l ← w_l − m_l
+//! ```
+//!
+//! Host-side implementation (norms are cheap segment reductions); a
+//! production TPU path would fuse the segment norms into an L1 kernel
+//! the same way `fused_sgd_momentum` fuses the SGD step — noted in
+//! DESIGN.md §8 as the remaining future-work item. Like the SGD path,
+//! the update is a fixed-order deterministic function, so the
+//! CSGD ≡ LSGD equivalence audit applies unchanged (covered in
+//! `rust/tests/equivalence.rs` via the host-mirror trainer path).
+
+/// Flat-vector segmentation: `(offset, size)` per tensor.
+pub type Segments = Vec<(usize, usize)>;
+
+/// LARS optimizer state/config over a flat parameter vector.
+#[derive(Debug, Clone)]
+pub struct Lars {
+    /// Trust coefficient η (You et al. use 0.001 for ResNet-50).
+    pub eta: f32,
+    /// Momentum μ (paper setting: 0.9).
+    pub momentum: f32,
+    /// Weight decay β (paper setting: 1e-4).
+    pub weight_decay: f32,
+    /// Numerical floor for the trust-ratio denominator.
+    pub eps: f32,
+    /// Tensor boundaries within the flat vector.
+    pub segments: Segments,
+}
+
+impl Lars {
+    pub fn new(segments: Segments) -> Self {
+        Self { eta: 1e-3, momentum: 0.9, weight_decay: 1e-4, eps: 1e-9, segments }
+    }
+
+    /// From the runtime manifest's parameter table.
+    pub fn from_param_rows(rows: &[crate::runtime::ParamRow]) -> Self {
+        Self::new(rows.iter().map(|r| (r.offset, r.size)).collect())
+    }
+
+    /// Euclidean norm of a slice (f64 accumulation for stability).
+    fn norm(v: &[f32]) -> f32 {
+        v.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    /// Per-tensor trust ratios λ_l for diagnostics/tests.
+    pub fn trust_ratios(&self, w: &[f32], g: &[f32]) -> Vec<f32> {
+        self.segments
+            .iter()
+            .map(|&(off, len)| {
+                let wn = Self::norm(&w[off..off + len]);
+                let gn = Self::norm(&g[off..off + len]);
+                if wn == 0.0 || gn == 0.0 {
+                    // You et al.: fall back to the plain lr when either
+                    // norm vanishes (fresh bias vectors, zero grads)
+                    1.0
+                } else {
+                    self.eta * wn / (gn + self.weight_decay * wn + self.eps)
+                }
+            })
+            .collect()
+    }
+
+    /// One in-place LARS step over the flat buffers.
+    pub fn step(&self, w: &mut [f32], m: &mut [f32], g: &[f32], lr: f32) {
+        assert_eq!(w.len(), m.len());
+        assert_eq!(w.len(), g.len());
+        let ratios = self.trust_ratios(w, g);
+        for (seg, &(off, len)) in self.segments.iter().enumerate() {
+            let lam = ratios[seg] * lr;
+            for i in off..off + len {
+                let upd = g[i] + self.weight_decay * w[i];
+                m[i] = self.momentum * m[i] + lam * upd;
+                w[i] -= m[i];
+            }
+            let _ = seg;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn segs() -> Segments {
+        vec![(0, 4), (4, 4)]
+    }
+
+    #[test]
+    fn trust_ratio_formula() {
+        let lars = Lars { eta: 0.001, momentum: 0.9, weight_decay: 1e-4, eps: 0.0, segments: segs() };
+        let w = vec![3.0, 4.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0]; // norms 5, 1
+        let g = vec![0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 0.0, 0.0]; // norms 1, 2
+        let r = lars.trust_ratios(&w, &g);
+        assert!((r[0] - 0.001 * 5.0 / (1.0 + 1e-4 * 5.0)).abs() < 1e-9);
+        assert!((r[1] - 0.001 * 1.0 / (2.0 + 1e-4)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_norm_segments_fall_back_to_unit_ratio() {
+        let lars = Lars::new(segs());
+        let w = vec![0.0; 8];
+        let g = vec![1.0; 8];
+        assert_eq!(lars.trust_ratios(&w, &g), vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn step_scales_update_per_segment() {
+        let mut lars = Lars::new(vec![(0, 2), (2, 2)]);
+        lars.momentum = 0.0;
+        lars.weight_decay = 0.0;
+        lars.eps = 0.0;
+        let mut w = vec![1.0_f32, 0.0, 100.0, 0.0]; // seg norms 1, 100
+        let mut m = vec![0.0_f32; 4];
+        let g = vec![1.0_f32, 0.0, 1.0, 0.0]; // grad norms 1, 1
+        lars.step(&mut w, &mut m, &g, 1.0);
+        // seg0: λ = η·1/1 = 1e-3 ⇒ w[0] = 1 - 1e-3
+        assert!((w[0] - (1.0 - 1e-3)).abs() < 1e-7);
+        // seg1: λ = η·100/1 = 0.1 ⇒ w[2] = 100 - 0.1 — big weights get
+        // proportionally big steps (the LARS property)
+        assert!((w[2] - (100.0 - 0.1)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut lars = Lars::new(vec![(0, 2)]);
+        lars.weight_decay = 0.0;
+        let mut w = vec![1.0_f32, 1.0];
+        let mut m = vec![0.0_f32; 2];
+        let g = vec![0.5_f32, 0.5];
+        lars.step(&mut w, &mut m, &g, 0.1);
+        let m1 = m[0];
+        lars.step(&mut w, &mut m, &g, 0.1);
+        assert!(m[0] > m1, "momentum should grow under constant gradient");
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let lars = Lars::new(vec![(0, 3), (3, 5)]);
+        let run = || {
+            let mut w: Vec<f32> = (0..8).map(|i| (i as f32 + 1.0) * 0.1).collect();
+            let mut m = vec![0.0_f32; 8];
+            let g: Vec<f32> = (0..8).map(|i| 0.01 * (8 - i) as f32).collect();
+            for _ in 0..5 {
+                lars.step(&mut w, &mut m, &g, 0.1);
+            }
+            w
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn from_param_rows_matches_offsets() {
+        let rows = vec![
+            crate::runtime::ParamRow { name: "a".into(), shape: vec![2, 3], offset: 0, size: 6 },
+            crate::runtime::ParamRow { name: "b".into(), shape: vec![4], offset: 6, size: 4 },
+        ];
+        let lars = Lars::from_param_rows(&rows);
+        assert_eq!(lars.segments, vec![(0, 6), (6, 4)]);
+    }
+}

@@ -1,0 +1,177 @@
+//! Optimizer semantics on the host side.
+//!
+//! Two things live here:
+//!
+//! 1. [`LrSchedule`] — the paper's §5.3 learning-rate policy: linear
+//!    scaling with global batch (lr = 0.1 · batch/256), gradual warmup
+//!    over the first 5 epochs (per *iteration*, as in Goyal et al.),
+//!    and ×0.1 decay every 30 epochs.
+//! 2. [`lars`] — Layer-wise Adaptive Rate Scaling (the paper's §6
+//!    future-work item), slotting into the same deferred-update seam.
+//! 3. [`HostSgd`] — a pure-Rust mirror of the L1 fused kernel
+//!    (`m' = μm + g + wd·w; w' = w − lr·m'`). The schedulers run the
+//!    HLO kernel; the mirror exists for property tests, the simulator
+//!    paths, and as an independent oracle in the equivalence audit.
+
+pub mod lars;
+
+pub use lars::Lars;
+
+use crate::config::OptimConfig;
+
+/// The paper's learning-rate schedule, resolved against a topology.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LrSchedule {
+    /// Target (post-warmup) learning rate after linear scaling.
+    pub target_lr: f64,
+    /// Warmup start lr (the base lr, paper: 0.1).
+    pub base_lr: f64,
+    /// Iterations per epoch for this run.
+    pub steps_per_epoch: usize,
+    /// Warmup length in iterations.
+    pub warmup_steps: usize,
+    /// Decay interval in iterations.
+    pub decay_every_steps: usize,
+    pub decay_factor: f64,
+}
+
+impl LrSchedule {
+    /// Resolve the §5.3.1 rules: `global_batch` is `64·N` in the paper;
+    /// e.g. 256 workers → batch 16k → target lr 6.4 with warmup from 0.1.
+    pub fn from_config(opt: &OptimConfig, global_batch: usize, steps_per_epoch: usize) -> Self {
+        let steps_per_epoch = steps_per_epoch.max(1);
+        let scale = if opt.linear_scaling {
+            global_batch as f64 / opt.base_global_batch as f64
+        } else {
+            1.0
+        };
+        let target_lr = opt.base_lr * scale;
+        // Gradual warmup exists to tame lr *increases* (Goyal et al.);
+        // when linear scaling lands at or below the base lr (global
+        // batch ≤ reference) there is nothing to warm up to.
+        let warmup_steps = if target_lr > opt.base_lr {
+            (opt.warmup_epochs * steps_per_epoch as f64).round() as usize
+        } else {
+            0
+        };
+        Self {
+            target_lr,
+            base_lr: opt.base_lr,
+            steps_per_epoch,
+            warmup_steps,
+            decay_every_steps: (opt.decay_every_epochs * steps_per_epoch as f64).round() as usize,
+            decay_factor: opt.decay_factor,
+        }
+    }
+
+    /// Learning rate at optimization step `t` (0-based).
+    ///
+    /// Warmup interpolates base→target *every iteration* (Goyal et al.
+    /// §2.2 "gradual warmup", which the paper adopts); afterwards the
+    /// stepwise decay applies relative to the post-warmup epoch count.
+    pub fn lr_at(&self, step: usize) -> f64 {
+        if self.warmup_steps > 0 && step < self.warmup_steps {
+            let frac = (step + 1) as f64 / self.warmup_steps as f64;
+            return self.base_lr + (self.target_lr - self.base_lr) * frac;
+        }
+        let mut lr = self.target_lr;
+        if self.decay_every_steps > 0 {
+            let decays = (step - self.warmup_steps) / self.decay_every_steps;
+            lr *= self.decay_factor.powi(decays as i32);
+        }
+        lr
+    }
+}
+
+/// Host-side mirror of the fused SGD+momentum+weight-decay kernel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostSgd {
+    pub momentum: f32,
+    pub weight_decay: f32,
+}
+
+impl HostSgd {
+    pub fn new(momentum: f32, weight_decay: f32) -> Self {
+        Self { momentum, weight_decay }
+    }
+
+    /// One in-place update step over the flat buffers.
+    pub fn step(&self, w: &mut [f32], m: &mut [f32], g: &[f32], lr: f32) {
+        assert_eq!(w.len(), m.len());
+        assert_eq!(w.len(), g.len());
+        for i in 0..w.len() {
+            let mn = self.momentum * m[i] + g[i] + self.weight_decay * w[i];
+            m[i] = mn;
+            w[i] -= lr * mn;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OptimConfig;
+
+    fn sched(global_batch: usize, spe: usize) -> LrSchedule {
+        LrSchedule::from_config(&OptimConfig::default(), global_batch, spe)
+    }
+
+    #[test]
+    fn paper_linear_scaling_256_workers() {
+        // 256 workers × 64 = 16384 → lr 6.4 (§5.3.1)
+        let s = sched(16384, 100);
+        assert!((s.target_lr - 6.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn base_topology_keeps_base_lr() {
+        let s = sched(256, 100);
+        assert!((s.target_lr - 0.1).abs() < 1e-12);
+        // warmup is then a no-op ramp at the base lr
+        assert!((s.lr_at(0) - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn warmup_ramps_to_target_then_holds() {
+        let s = sched(16384, 10); // warmup = 50 steps
+        assert_eq!(s.warmup_steps, 50);
+        assert!(s.lr_at(0) < s.lr_at(25));
+        assert!(s.lr_at(25) < s.lr_at(49));
+        assert!((s.lr_at(49) - 6.4).abs() < 1e-9);
+        assert!((s.lr_at(50) - 6.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decay_every_30_epochs() {
+        let s = sched(16384, 10); // decay_every = 300 steps
+        let post = s.warmup_steps;
+        assert!((s.lr_at(post + 299) - 6.4).abs() < 1e-9);
+        assert!((s.lr_at(post + 300) - 0.64).abs() < 1e-9);
+        assert!((s.lr_at(post + 600) - 0.064).abs() < 1e-9);
+    }
+
+    #[test]
+    fn host_sgd_matches_closed_form() {
+        let sgd = HostSgd::new(0.9, 1e-4);
+        let mut w = vec![1.0_f32, -2.0, 0.5];
+        let mut m = vec![0.1_f32, 0.0, -0.3];
+        let g = vec![0.01_f32, 0.02, 0.03];
+        let (w0, m0) = (w.clone(), m.clone());
+        sgd.step(&mut w, &mut m, &g, 0.1);
+        for i in 0..3 {
+            let mn = 0.9 * m0[i] + g[i] + 1e-4 * w0[i];
+            assert!((m[i] - mn).abs() < 1e-7);
+            assert!((w[i] - (w0[i] - 0.1 * mn)).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn zero_momentum_zero_decay_is_vanilla_sgd() {
+        let sgd = HostSgd::new(0.0, 0.0);
+        let mut w = vec![1.0_f32; 4];
+        let mut m = vec![0.0_f32; 4];
+        sgd.step(&mut w, &mut m, &[0.5; 4], 1.0);
+        assert_eq!(w, vec![0.5_f32; 4]);
+        assert_eq!(m, vec![0.5_f32; 4]);
+    }
+}

@@ -1,0 +1,280 @@
+//! `artifacts/manifest.json` — the static contract between the AOT
+//! compiler (`python/compile/aot.py`) and the Rust runtime: per-preset
+//! model config, flat-parameter layout, entrypoint artifact names and
+//! the optimizer constants baked into the fused update kernel.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One tensor's slot in the flat parameter vector.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamRow {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// Transformer hyperparameters the preset was lowered with.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub layers: usize,
+    pub d_model: usize,
+    pub heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq: usize,
+}
+
+/// Optimizer constants baked into the AOT kernel (must match the
+/// host-side config; checked by [`PresetManifest::check_optimizer`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OptimizerBaked {
+    pub momentum: f64,
+    pub weight_decay: f64,
+}
+
+/// Everything the runtime needs to know about one preset.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PresetManifest {
+    pub config: ModelConfig,
+    pub param_count: usize,
+    pub micro_batch: usize,
+    pub tokens_per_sample: usize,
+    /// entrypoint name → artifact filename
+    pub artifacts: BTreeMap<String, String>,
+    /// initial-parameters binary (f32 LE)
+    pub init: String,
+    pub params: Vec<ParamRow>,
+    pub optimizer: OptimizerBaked,
+}
+
+impl PresetManifest {
+    /// Gradient payload in bytes (what the collectives move per step).
+    pub fn grad_bytes(&self) -> f64 {
+        self.param_count as f64 * 4.0
+    }
+
+    /// Validate internal consistency (offsets contiguous, sizes match).
+    pub fn validate(&self) -> Result<()> {
+        let mut off = 0;
+        for row in &self.params {
+            anyhow::ensure!(
+                row.offset == off,
+                "param {} offset {} != expected {off}",
+                row.name,
+                row.offset
+            );
+            let n: usize = row.shape.iter().product();
+            anyhow::ensure!(n == row.size, "param {} size mismatch", row.name);
+            off += row.size;
+        }
+        anyhow::ensure!(
+            off == self.param_count,
+            "param table covers {off} of {} params",
+            self.param_count
+        );
+        for ep in ["grad_step", "sgd_update", "reduce2", "reduce4", "eval_step"] {
+            anyhow::ensure!(self.artifacts.contains_key(ep), "missing entrypoint {ep}");
+        }
+        Ok(())
+    }
+
+    /// The optimizer constants are compile-time in the kernel; a
+    /// mismatched host config would silently train differently, so the
+    /// schedulers refuse to start on a mismatch.
+    pub fn check_optimizer(&self, momentum: f64, weight_decay: f64) -> Result<()> {
+        anyhow::ensure!(
+            (self.optimizer.momentum - momentum).abs() < 1e-12,
+            "config momentum {momentum} != AOT-baked {}",
+            self.optimizer.momentum
+        );
+        anyhow::ensure!(
+            (self.optimizer.weight_decay - weight_decay).abs() < 1e-12,
+            "config weight_decay {weight_decay} != AOT-baked {}",
+            self.optimizer.weight_decay
+        );
+        Ok(())
+    }
+}
+
+/// The whole manifest file: preset name → [`PresetManifest`].
+#[derive(Debug, Clone, Default)]
+pub struct Manifest(pub BTreeMap<String, PresetManifest>);
+
+impl Manifest {
+    /// Read + parse `<dir>/manifest.json`.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        Self::from_json(&j)
+    }
+
+    /// Extract (and validate) one preset.
+    pub fn preset(&self, name: &str) -> Result<PresetManifest> {
+        let p = self
+            .0
+            .get(name)
+            .with_context(|| format!("preset {name:?}; available: {:?}", self.presets()))?
+            .clone();
+        p.validate()?;
+        Ok(p)
+    }
+
+    pub fn presets(&self) -> Vec<&str> {
+        self.0.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Decode the whole manifest document.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut out = BTreeMap::new();
+        for (name, entry) in j.as_obj()? {
+            out.insert(name.clone(), PresetManifest::from_json(entry)
+                .with_context(|| format!("preset {name}"))?);
+        }
+        Ok(Self(out))
+    }
+}
+
+impl PresetManifest {
+    /// Decode one preset entry from the manifest JSON.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let cfg = j.get("config")?;
+        let config = ModelConfig {
+            name: cfg.get("name")?.as_str()?.to_string(),
+            layers: cfg.get("layers")?.as_usize()?,
+            d_model: cfg.get("d_model")?.as_usize()?,
+            heads: cfg.get("heads")?.as_usize()?,
+            d_ff: cfg.get("d_ff")?.as_usize()?,
+            vocab: cfg.get("vocab")?.as_usize()?,
+            seq: cfg.get("seq")?.as_usize()?,
+        };
+        let mut artifacts = BTreeMap::new();
+        for (k, v) in j.get("artifacts")?.as_obj()? {
+            artifacts.insert(k.clone(), v.as_str()?.to_string());
+        }
+        let mut params = Vec::new();
+        for row in j.get("params")?.as_arr()? {
+            params.push(ParamRow {
+                name: row.get("name")?.as_str()?.to_string(),
+                shape: row
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<_>>()?,
+                offset: row.get("offset")?.as_usize()?,
+                size: row.get("size")?.as_usize()?,
+            });
+        }
+        let opt = j.get("optimizer")?;
+        Ok(Self {
+            config,
+            param_count: j.get("param_count")?.as_usize()?,
+            micro_batch: j.get("micro_batch")?.as_usize()?,
+            tokens_per_sample: j.get("tokens_per_sample")?.as_usize()?,
+            artifacts,
+            init: j.get("init")?.as_str()?.to_string(),
+            params,
+            optimizer: OptimizerBaked {
+                momentum: opt.get("momentum")?.as_f64()?,
+                weight_decay: opt.get("weight_decay")?.as_f64()?,
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> PresetManifest {
+        let mut artifacts = BTreeMap::new();
+        for ep in ["grad_step", "sgd_update", "reduce2", "reduce4", "eval_step"] {
+            artifacts.insert(ep.to_string(), format!("tiny_{ep}.hlo.txt"));
+        }
+        PresetManifest {
+            config: ModelConfig {
+                name: "tiny".into(),
+                layers: 2,
+                d_model: 4,
+                heads: 2,
+                d_ff: 8,
+                vocab: 16,
+                seq: 8,
+            },
+            param_count: 12,
+            micro_batch: 2,
+            tokens_per_sample: 9,
+            artifacts,
+            init: "tiny_init.bin".into(),
+            params: vec![
+                ParamRow { name: "a".into(), shape: vec![2, 3], offset: 0, size: 6 },
+                ParamRow { name: "b".into(), shape: vec![6], offset: 6, size: 6 },
+            ],
+            optimizer: OptimizerBaked { momentum: 0.9, weight_decay: 1e-4 },
+        }
+    }
+
+    #[test]
+    fn valid_manifest_passes() {
+        sample().validate().unwrap();
+    }
+
+    #[test]
+    fn bad_offset_fails() {
+        let mut m = sample();
+        m.params[1].offset = 7;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn missing_entrypoint_fails() {
+        let mut m = sample();
+        m.artifacts.remove("reduce2");
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn optimizer_mismatch_detected() {
+        let m = sample();
+        m.check_optimizer(0.9, 1e-4).unwrap();
+        assert!(m.check_optimizer(0.8, 1e-4).is_err());
+        assert!(m.check_optimizer(0.9, 0.0).is_err());
+    }
+
+    #[test]
+    fn grad_bytes_is_4x_params() {
+        assert_eq!(sample().grad_bytes(), 48.0);
+    }
+
+    #[test]
+    fn json_decode_matches_sample() {
+        let doc = r#"{
+          "config": {"name":"tiny","layers":2,"d_model":4,"heads":2,"d_ff":8,"vocab":16,"seq":8},
+          "param_count": 12, "micro_batch": 2, "tokens_per_sample": 9,
+          "artifacts": {"grad_step":"tiny_grad_step.hlo.txt","sgd_update":"tiny_sgd_update.hlo.txt",
+                        "reduce2":"tiny_reduce2.hlo.txt","reduce4":"tiny_reduce4.hlo.txt",
+                        "eval_step":"tiny_eval_step.hlo.txt"},
+          "init": "tiny_init.bin",
+          "params": [{"name":"a","shape":[2,3],"offset":0,"size":6},
+                     {"name":"b","shape":[6],"offset":6,"size":6}],
+          "optimizer": {"momentum": 0.9, "weight_decay": 0.0001}
+        }"#;
+        let j = Json::parse(doc).unwrap();
+        let m = PresetManifest::from_json(&j).unwrap();
+        assert_eq!(m, sample());
+        m.validate().unwrap();
+    }
+}

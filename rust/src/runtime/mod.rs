@@ -1,0 +1,258 @@
+//! PJRT runtime: load the AOT HLO-text artifacts and execute them.
+//!
+//! The only place the crate touches XLA. One [`Engine`] per model
+//! preset: it compiles each entrypoint **once** (all simulated workers
+//! share the executables — they run the identical floating-point
+//! program, which the bitwise-equivalence audit requires) and exposes
+//! typed wrappers that marshal flat `f32`/`i32` host buffers through
+//! `xla::Literal`s.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): this
+//! image's xla_extension 0.5.1 rejects jax≥0.5 serialized protos
+//! (64-bit instruction ids), the text parser reassigns ids. See
+//! `python/compile/aot.py` and /opt/xla-example/README.md.
+
+pub mod manifest;
+
+pub use manifest::{Manifest, ParamRow, PresetManifest};
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Compiled executables + manifest for one model preset.
+pub struct Engine {
+    client: PjRtClient,
+    grad_step: PjRtLoadedExecutable,
+    sgd_update: PjRtLoadedExecutable,
+    reduce2: PjRtLoadedExecutable,
+    reduce4: PjRtLoadedExecutable,
+    eval_step: PjRtLoadedExecutable,
+    /// Static shape/offset info for this preset.
+    pub manifest: PresetManifest,
+    artifacts_dir: std::path::PathBuf,
+}
+
+impl Engine {
+    /// Load `manifest.json` from `artifacts_dir` and compile every
+    /// entrypoint of `preset` on the PJRT CPU client.
+    pub fn load(artifacts_dir: &Path, preset: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?
+            .preset(preset)
+            .with_context(|| format!("preset {preset:?} not in manifest (run `make artifacts`)"))?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let compile = |name: &str| -> Result<PjRtLoadedExecutable> {
+            let file = manifest
+                .artifacts
+                .get(name)
+                .with_context(|| format!("artifact {name} missing from manifest"))?;
+            let path = artifacts_dir.join(file);
+            let proto = HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))
+        };
+        Ok(Self {
+            grad_step: compile("grad_step")?,
+            sgd_update: compile("sgd_update")?,
+            reduce2: compile("reduce2")?,
+            reduce4: compile("reduce4")?,
+            eval_step: compile("eval_step")?,
+            client,
+            manifest,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+        })
+    }
+
+    /// Number of flat parameters for this preset.
+    pub fn param_count(&self) -> usize {
+        self.manifest.param_count
+    }
+
+    /// Per-worker micro-batch the artifacts were lowered for.
+    pub fn micro_batch(&self) -> usize {
+        self.manifest.micro_batch
+    }
+
+    /// Tokens per sample (`seq + 1`).
+    pub fn tokens_per_sample(&self) -> usize {
+        self.manifest.tokens_per_sample
+    }
+
+    /// PJRT platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// The seed-0 initial parameter vector emitted at AOT time.
+    pub fn init_params(&self) -> Result<Vec<f32>> {
+        let path = self.artifacts_dir.join(&self.manifest.init);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        anyhow::ensure!(
+            bytes.len() == self.manifest.param_count * 4,
+            "init file size mismatch: {} bytes for {} params",
+            bytes.len(),
+            self.manifest.param_count
+        );
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    // All executions go through `execute_b` over buffers this Engine
+    // uploads itself: the crate's literal-taking `execute` *leaks every
+    // input device buffer* (xla-0.1.6 xla_rs.cc `execute`:
+    // `buffer.release()` with no matching delete — ~payload×k bytes per
+    // call, OOM after ~100 training steps), and the literal staging
+    // copy is pure overhead anyway. See EXPERIMENTS.md §Perf.
+
+    fn upload_tokens(&self, tokens: &[i32]) -> Result<PjRtBuffer> {
+        let b = self.manifest.micro_batch;
+        let s1 = self.manifest.tokens_per_sample;
+        anyhow::ensure!(
+            tokens.len() == b * s1,
+            "token batch must be {b}x{s1}, got {} elements",
+            tokens.len()
+        );
+        Ok(self.client.buffer_from_host_buffer(tokens, &[b, s1], None)?)
+    }
+
+    fn upload_params(&self, v: &[f32], what: &str) -> Result<PjRtBuffer> {
+        anyhow::ensure!(
+            v.len() == self.manifest.param_count,
+            "{what} length {} != param_count {}",
+            v.len(),
+            self.manifest.param_count
+        );
+        Ok(self.client.buffer_from_host_buffer(v, &[v.len()], None)?)
+    }
+
+    fn upload_scalar(&self, v: f32) -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(&[v], &[1], None)?)
+    }
+
+    /// Worker compute phase (Alg. 3 lines 3–5): gradient + mean loss
+    /// over one micro-batch shard.
+    pub fn grad_step(&self, params: &[f32], tokens: &[i32]) -> Result<(Vec<f32>, f32)> {
+        let p = self.upload_params(params, "params")?;
+        let t = self.upload_tokens(tokens)?;
+        let result = self.grad_step.execute_b(&[&p, &t])?[0][0].to_literal_sync()?;
+        let (grad, loss) = result.to_tuple2()?;
+        Ok((grad.to_vec::<f32>()?, loss.get_first_element::<f32>()?))
+    }
+
+    /// Deferred fused update (Alg. 3 line 10) via the L1 Pallas kernel.
+    pub fn sgd_update(
+        &self,
+        params: &[f32],
+        momentum: &[f32],
+        grad: &[f32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let p = self.upload_params(params, "params")?;
+        let m = self.upload_params(momentum, "momentum")?;
+        let g = self.upload_params(grad, "grad")?;
+        let lr = self.upload_scalar(lr)?;
+        let result =
+            self.sgd_update.execute_b(&[&p, &m, &g, &lr])?[0][0].to_literal_sync()?;
+        let (w2, m2) = result.to_tuple2()?;
+        Ok((w2.to_vec::<f32>()?, m2.to_vec::<f32>()?))
+    }
+
+    /// `scale · (a + b)` via the L1 reduce kernel (fixed association).
+    pub fn reduce2(&self, a: &[f32], b: &[f32], scale: f32) -> Result<Vec<f32>> {
+        let p = self.manifest.param_count;
+        anyhow::ensure!(a.len() == p && b.len() == p, "reduce2 buffer length mismatch");
+        let mut stacked = Vec::with_capacity(2 * p);
+        stacked.extend_from_slice(a);
+        stacked.extend_from_slice(b);
+        let st = self.client.buffer_from_host_buffer(&stacked, &[2, p], None)?;
+        let sc = self.upload_scalar(scale)?;
+        let result = self.reduce2.execute_b(&[&st, &sc])?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    /// `scale · (((a+b)+c)+d)` via the 4-way kernel.
+    pub fn reduce4(&self, bufs: [&[f32]; 4], scale: f32) -> Result<Vec<f32>> {
+        let p = self.manifest.param_count;
+        let mut stacked = Vec::with_capacity(4 * p);
+        for b in bufs {
+            anyhow::ensure!(b.len() == p, "reduce4 buffer length mismatch");
+            stacked.extend_from_slice(b);
+        }
+        let st = self.client.buffer_from_host_buffer(&stacked, &[4, p], None)?;
+        let sc = self.upload_scalar(scale)?;
+        let result = self.reduce4.execute_b(&[&st, &sc])?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    /// Rank-order left fold of any fan-in, built from the 4/2-way
+    /// kernels. The association is identical to folding one buffer at
+    /// a time (kernel sums rows in index order), preserving the bitwise
+    /// contract (python/tests: `test_pairwise_fold_equals_flat_fold`).
+    pub fn reduce_fold(&self, bufs: &[&[f32]], scale: f32) -> Result<Vec<f32>> {
+        anyhow::ensure!(!bufs.is_empty(), "reduce over zero buffers");
+        if bufs.len() == 1 {
+            let mut out = bufs[0].to_vec();
+            if scale != 1.0 {
+                crate::collective::scale(&mut out, scale);
+            }
+            return Ok(out);
+        }
+        let mut i;
+        let mut acc = if bufs.len() >= 4 {
+            i = 4;
+            self.reduce4([bufs[0], bufs[1], bufs[2], bufs[3]], 1.0)?
+        } else {
+            i = 2;
+            self.reduce2(bufs[0], bufs[1], 1.0)?
+        };
+        while i < bufs.len() {
+            if bufs.len() - i >= 3 {
+                acc = self.reduce4([&acc, bufs[i], bufs[i + 1], bufs[i + 2]], 1.0)?;
+                i += 3;
+            } else {
+                acc = self.reduce2(&acc, bufs[i], 1.0)?;
+                i += 1;
+            }
+        }
+        if scale != 1.0 {
+            crate::collective::scale(&mut acc, scale);
+        }
+        Ok(acc)
+    }
+
+    /// Validation: (mean loss, top-1 correct count) on one batch.
+    pub fn eval_step(&self, params: &[f32], tokens: &[i32]) -> Result<(f32, i64)> {
+        let p = self.upload_params(params, "params")?;
+        let t = self.upload_tokens(tokens)?;
+        let result = self.eval_step.execute_b(&[&p, &t])?[0][0].to_literal_sync()?;
+        let (loss, correct) = result.to_tuple2()?;
+        Ok((
+            loss.get_first_element::<f32>()?,
+            correct.get_first_element::<i32>()? as i64,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine tests that need artifacts live in rust/tests/runtime.rs
+    // (integration scope, after `make artifacts`). Here: pure helpers.
+
+    #[test]
+    fn f32_le_decode_matches() {
+        let v = [1.5_f32, -2.25, 0.0];
+        let bytes: Vec<u8> = v.iter().flat_map(|f| f.to_le_bytes()).collect();
+        let back: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        assert_eq!(back, v);
+    }
+}

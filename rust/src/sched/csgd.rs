@@ -1,0 +1,67 @@
+//! Algorithm 2 — conventional distributed SGD (the paper's baseline).
+//!
+//! Per step: every worker draws its shard `M^i`, computes `Δw^i`, a
+//! flat Allreduce averages the gradients over all `N` workers, then
+//! every worker applies the update *before the next iteration starts*
+//! (Alg. 2 line 8 — contrast with LSGD's deferred line 10).
+//!
+//! The allreduce goes through the L1 reduce kernel via
+//! [`crate::runtime::Engine::reduce_fold`], folding **group-wise then
+//! across groups** — the association real MPI reduce trees use and the
+//! one LSGD's two-layer reduction induces, so the two algorithms'
+//! trajectories stay bitwise-comparable (DESIGN.md §6).
+
+use anyhow::Result;
+
+use super::{checksum, RunResult, Trainer};
+use crate::metrics::{PhaseTimers, TrainCurve};
+
+/// Run Algorithm 2 for `cfg.steps` optimization steps.
+pub fn run(t: &mut Trainer) -> Result<RunResult> {
+    let mut timers = PhaseTimers::new();
+    let mut curve = TrainCurve::new("csgd");
+    let mut checksums = Vec::with_capacity(t.cfg.steps);
+
+    for step in 0..t.cfg.steps {
+        // lines 2–6: draw shards, accumulate ∆w^i (I/O is serial here —
+        // Alg. 2 has no overlap window; this is the cost LSGD removes)
+        let shards = timers.time("io", || t.load_all_shards(step))?;
+        let (grads, loss) = t.compute_grads(&shards, &mut timers)?;
+
+        // line 7: Allreduce over all workers and divide by N —
+        // group-wise association (see module docs)
+        let avg = timers.time("allreduce", || -> Result<Vec<f32>> {
+            let mut group_sums: Vec<Vec<f32>> = Vec::with_capacity(t.topo.groups);
+            for g in t.topo.all_groups() {
+                let bufs: Vec<&[f32]> =
+                    t.topo.workers_of(g).map(|w| grads[w.0].as_slice()).collect();
+                group_sums.push(t.engine.reduce_fold(&bufs, 1.0)?);
+            }
+            let refs: Vec<&[f32]> = group_sums.iter().map(|v| v.as_slice()).collect();
+            t.engine
+                .reduce_fold(&refs, 1.0 / t.topo.num_workers() as f32)
+        })?;
+
+        // line 8: update w_{t+1} on every worker, synchronously
+        let lr = t.lr.lr_at(step) as f32;
+        t.apply_update(&avg, lr, &mut timers)?;
+
+        debug_assert!(t.replicas_identical(), "CSGD replicas diverged at step {step}");
+        checksums.push(checksum(&t.replica_of(0).params));
+        curve.train.push((step, loss, lr as f64));
+
+        if t.cfg.eval_every > 0 && (step + 1) % t.cfg.eval_every == 0 {
+            let (vl, va) = t.evaluate()?;
+            curve.eval.push((step, vl, va));
+        }
+    }
+
+    Ok(RunResult {
+        curve,
+        timers,
+        step_checksums: checksums,
+        final_params: t.replica_of(0).params.clone(),
+        hidden_io_secs: 0.0,
+        steps: t.cfg.steps,
+    })
+}

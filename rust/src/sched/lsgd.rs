@@ -1,0 +1,131 @@
+//! Algorithm 3 — Layered SGD (the paper's contribution).
+//!
+//! Per step `t` (paper Alg. 3, two columns):
+//!
+//! ```text
+//! workers                          communicators
+//! ───────                          ─────────────
+//! compute Δw^i over M^i_t
+//! Reduce Δw^i → communicator       fold group gradients (L1 kernel)
+//! load M^i_{t+1}      ∥            Allreduce over communicators
+//! Broadcast ← communicator         scale by 1/N, send to workers
+//! deferred update w_{t+1}
+//! ```
+//!
+//! The overlap is real wall-clock overlap in this implementation: the
+//! next-batch load (including the configured I/O latency) runs on a
+//! background thread while the main thread executes the communicator
+//! allreduce; [`RunResult::hidden_io_secs`] accumulates
+//! `min(t_io, t_allreduce)` per step — the quantity the paper's
+//! scalability argument rests on.
+
+use anyhow::Result;
+use std::time::Instant;
+
+use super::{checksum, LsgdOptions, RunResult, Trainer};
+use crate::collective;
+use crate::metrics::{PhaseTimers, TrainCurve};
+
+/// Run Algorithm 3 for `cfg.steps` optimization steps.
+pub fn run(t: &mut Trainer, opts: LsgdOptions) -> Result<RunResult> {
+    let mut timers = PhaseTimers::new();
+    let mut curve = TrainCurve::new("lsgd");
+    let mut checksums = Vec::with_capacity(t.cfg.steps);
+    let mut hidden_io = 0.0_f64;
+    let n = t.topo.num_workers() as f32;
+
+    // Alg. 3 line 1: the first mini-batch is drawn before the loop
+    let mut batch = timers.time("io", || t.load_all_shards(0))?;
+    debug_assert_eq!(batch.len(), t.topo.num_workers());
+
+    for step in 0..t.cfg.steps {
+        // lines 3–5: worker compute phase
+        let (grads, loss) = t.compute_grads(&batch, &mut timers)?;
+
+        // line 6: Reduce Δw^i to each group's communicator
+        let local_scale = if opts.divide_at_local_reduce { 1.0 / n } else { 1.0 };
+        let partials = timers.time("local_reduce", || -> Result<Vec<Vec<f32>>> {
+            let mut v = Vec::with_capacity(t.topo.groups);
+            for g in t.topo.all_groups() {
+                let bufs: Vec<&[f32]> =
+                    t.topo.workers_of(g).map(|w| grads[w.0].as_slice()).collect();
+                v.push(t.engine.reduce_fold(&bufs, local_scale)?);
+            }
+            Ok(v)
+        })?;
+
+        // line 8: global Allreduce over communicators ∥ next-batch I/O.
+        // Real overlap: the loader runs on a scoped background thread.
+        let global_scale = if opts.divide_at_local_reduce { 1.0 } else { 1.0 / n };
+        // only Send state crosses into the loader thread (the PJRT
+        // engine is a single-threaded handle and stays on this thread)
+        let loader = &t.loader;
+        let topo = &t.topo;
+        let gb = t.global_batch();
+        let (avg, next_batch, t_comm, t_io) = std::thread::scope(
+            |s| -> Result<(Vec<f32>, Option<Vec<Vec<i32>>>, f64, f64)> {
+                let io_handle = if step + 1 < t.cfg.steps {
+                    Some(s.spawn(move || {
+                        let t0 = Instant::now();
+                        let b = loader.load_all_shards(topo, step + 1, gb);
+                        (b, t0.elapsed().as_secs_f64())
+                    }))
+                } else {
+                    None
+                };
+                let t0 = Instant::now();
+                let refs: Vec<&[f32]> = partials.iter().map(|v| v.as_slice()).collect();
+                let avg = t.engine.reduce_fold(&refs, global_scale)?;
+                let t_comm = t0.elapsed().as_secs_f64();
+                match io_handle {
+                    Some(h) => {
+                        let (b, t_io) = h.join().expect("loader thread panicked");
+                        Ok((avg, Some(b?), t_comm, t_io))
+                    }
+                    None => Ok((avg, None, t_comm, 0.0)),
+                }
+            },
+        )?;
+        timers.add("global_allreduce", t_comm);
+        timers.add("io_overlapped", t_io);
+        hidden_io += t_comm.min(t_io);
+
+        // line 9: Broadcast from each communicator to its workers —
+        // real data movement into per-worker gradient buffers
+        let received: Vec<Vec<f32>> = timers.time("broadcast", || {
+            let mut per_worker = vec![vec![0.0_f32; avg.len()]; t.replicas.len()];
+            let mut dsts: Vec<&mut [f32]> =
+                per_worker.iter_mut().map(|v| v.as_mut_slice()).collect();
+            collective::broadcast(&avg, &mut dsts);
+            per_worker
+        });
+
+        // line 10: deferred update w_{t+1} ← w_t − ε·Δw
+        let lr = t.lr.lr_at(step) as f32;
+        let grad0 = &received[0];
+        debug_assert!(received.iter().all(|g| g == grad0));
+        t.apply_update(grad0, lr, &mut timers)?;
+
+        debug_assert!(t.replicas_identical(), "LSGD replicas diverged at step {step}");
+        checksums.push(checksum(&t.replica_of(0).params));
+        curve.train.push((step, loss, lr as f64));
+
+        if t.cfg.eval_every > 0 && (step + 1) % t.cfg.eval_every == 0 {
+            let (vl, va) = t.evaluate()?;
+            curve.eval.push((step, vl, va));
+        }
+
+        if let Some(b) = next_batch {
+            batch = b;
+        }
+    }
+
+    Ok(RunResult {
+        curve,
+        timers,
+        step_checksums: checksums,
+        final_params: t.replica_of(0).params.clone(),
+        hidden_io_secs: hidden_io,
+        steps: t.cfg.steps,
+    })
+}

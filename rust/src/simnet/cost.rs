@@ -1,0 +1,148 @@
+//! α–β (latency–bandwidth) collective cost models.
+//!
+//! The paper's testbed has two link classes: intra-node (PCIe to the
+//! K80s, cheap) and inter-node (InfiniBand EDR, expensive relative to
+//! on-node). Every collective the two schedulers issue is costed with
+//! the standard LogP-style α–β forms used by the MPI/NCCL literature:
+//!
+//! * binomial-tree reduce / broadcast over `p` ranks:
+//!     `ceil(log2 p) · (α + n/β)`
+//! * ring allreduce over `p` ranks:
+//!     `2(p−1)·α + 2·(p−1)/p · n/β`
+//! * recursive halving-doubling allreduce:
+//!     `2·log2(p)·α + 2·(p−1)/p · n/β`
+//!
+//! These are *time* models only; numeric association is handled by
+//! [`crate::collective`].
+
+/// One link class: startup latency `alpha` (seconds) and bandwidth
+/// `beta` (bytes/second).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Link {
+    /// Per-message startup latency in seconds.
+    pub alpha: f64,
+    /// Bandwidth in bytes per second.
+    pub beta: f64,
+}
+
+impl Link {
+    /// Point-to-point transfer time of `n` bytes.
+    pub fn p2p(&self, n_bytes: f64) -> f64 {
+        self.alpha + n_bytes / self.beta
+    }
+}
+
+fn log2_ceil(p: usize) -> f64 {
+    debug_assert!(p >= 1);
+    (usize::BITS - (p - 1).leading_zeros()) as f64
+}
+
+/// Binomial-tree reduce of `n_bytes` to a root over `p` ranks.
+pub fn reduce_tree(link: Link, p: usize, n_bytes: f64) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    log2_ceil(p) * link.p2p(n_bytes)
+}
+
+/// Binomial-tree broadcast (same cost form as the reduce).
+pub fn broadcast_tree(link: Link, p: usize, n_bytes: f64) -> f64 {
+    reduce_tree(link, p, n_bytes)
+}
+
+/// Ring allreduce over `p` ranks — bandwidth-optimal, latency-heavy:
+/// `2(p−1)` serialized chunk steps. This is what the CSGD baseline's
+/// NCCL/OpenMPI allreduce runs, and its `O(p)` α term is the linear
+/// communication-ratio growth the paper's Fig. 2 shows past 64 workers.
+pub fn allreduce_ring(link: Link, p: usize, n_bytes: f64) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    let pf = p as f64;
+    2.0 * (pf - 1.0) * link.alpha + 2.0 * (pf - 1.0) / pf * n_bytes / link.beta
+}
+
+/// Recursive halving-doubling allreduce — latency-optimal alternative
+/// (ablation: `lsgd bench fig2 --algo rhd`).
+pub fn allreduce_rhd(link: Link, p: usize, n_bytes: f64) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    let pf = p as f64;
+    2.0 * log2_ceil(p) * link.alpha + 2.0 * (pf - 1.0) / pf * n_bytes / link.beta
+}
+
+/// Which allreduce algorithm a schedule costs with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AllreduceAlgo {
+    #[default]
+    Ring,
+    RecursiveHalvingDoubling,
+}
+
+impl AllreduceAlgo {
+    pub fn cost(self, link: Link, p: usize, n_bytes: f64) -> f64 {
+        match self {
+            AllreduceAlgo::Ring => allreduce_ring(link, p, n_bytes),
+            AllreduceAlgo::RecursiveHalvingDoubling => allreduce_rhd(link, p, n_bytes),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const L: Link = Link { alpha: 1e-5, beta: 1e9 };
+
+    #[test]
+    fn p2p_is_alpha_plus_transfer() {
+        assert!((L.p2p(1e9) - (1e-5 + 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_rank_collectives_are_free() {
+        assert_eq!(reduce_tree(L, 1, 1e6), 0.0);
+        assert_eq!(allreduce_ring(L, 1, 1e6), 0.0);
+        assert_eq!(allreduce_rhd(L, 1, 1e6), 0.0);
+    }
+
+    #[test]
+    fn tree_cost_grows_logarithmically() {
+        let c2 = reduce_tree(L, 2, 1e6);
+        let c4 = reduce_tree(L, 4, 1e6);
+        let c8 = reduce_tree(L, 8, 1e6);
+        assert!((c4 / c2 - 2.0).abs() < 1e-9);
+        assert!((c8 / c2 - 3.0).abs() < 1e-9);
+        // non power of two rounds up
+        assert_eq!(reduce_tree(L, 5, 1e6), reduce_tree(L, 8, 1e6));
+    }
+
+    #[test]
+    fn ring_alpha_term_linear_in_p() {
+        // tiny message: bandwidth term negligible → cost ∝ (p−1)
+        let c = |p| allreduce_ring(L, p, 8.0);
+        assert!((c(65) / c(9) - 2.0 * 64.0 * L.alpha / (2.0 * 8.0 * L.alpha)).abs() < 0.01);
+    }
+
+    #[test]
+    fn ring_bandwidth_term_saturates() {
+        // huge message: cost → 2·n/β regardless of p
+        let big = 1e9;
+        let c256 = allreduce_ring(L, 256, big);
+        let c1024 = allreduce_ring(L, 1024, big);
+        assert!((c256 - 2.0 * big / L.beta).abs() / c256 < 0.05);
+        assert!((c1024 - c256).abs() / c256 < 0.05);
+    }
+
+    #[test]
+    fn rhd_beats_ring_on_latency() {
+        let small = 8.0;
+        assert!(allreduce_rhd(L, 256, small) < allreduce_ring(L, 256, small));
+        // but both share the same bandwidth term
+        let big = 1e10;
+        let r = allreduce_ring(L, 256, big);
+        let h = allreduce_rhd(L, 256, big);
+        assert!((r - h).abs() / r < 0.01);
+    }
+}

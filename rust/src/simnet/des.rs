@@ -1,0 +1,390 @@
+//! Discrete-event replay of the CSGD / LSGD schedules.
+//!
+//! The closed forms in [`super`] assume a perfectly synchronous steady
+//! state. This engine checks that assumption by actually *playing* the
+//! schedule: each rank is a state machine, each phase an event with
+//! explicit dependencies (workers can't reduce before every group
+//! member finished compute; a communicator can't start the global
+//! allreduce before its local reduce landed; a worker can't start step
+//! `t+1` before broadcast + deferred update of step `t`).
+//!
+//! `tests` cross-validate: the DES makespan over `k` steps must match
+//! `k × step_time_*().total` to float precision — if someone edits one
+//! model and not the other, the suite fails.
+
+use super::{cost, ClusterModel, StepBreakdown};
+use crate::topology::Topology;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// One scheduled event in the simulated cluster.
+#[derive(Debug, Clone, PartialEq)]
+struct Event {
+    at: f64,
+    seq: u64, // FIFO tiebreak for equal times (determinism)
+    kind: EventKind,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum EventKind {
+    ComputeDone { group: usize, step: usize },
+    ReduceDone { group: usize, step: usize },
+    IoDone { group: usize, step: usize },
+    GlobalDone { step: usize },
+    BroadcastDone { group: usize, step: usize },
+    UpdateDone { group: usize, step: usize },
+}
+
+impl Eq for Event {}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap on (time, seq): BinaryHeap is a max-heap so reverse
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// A labelled interval on some rank's timeline (for tracing/plots).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub rank: String,
+    pub phase: &'static str,
+    pub start: f64,
+    pub end: f64,
+    pub step: usize,
+}
+
+/// Result of a DES run.
+#[derive(Debug, Clone)]
+pub struct DesResult {
+    /// Wall-clock to finish all steps (last update lands).
+    pub makespan: f64,
+    /// Per-rank, per-phase spans (trace of the whole run).
+    pub spans: Vec<Span>,
+    /// Seconds of inter-group allreduce hidden under worker I/O,
+    /// summed over steps (the paper's overlap win, measured).
+    pub hidden_comm: f64,
+}
+
+struct Engine {
+    queue: BinaryHeap<Event>,
+    seq: u64,
+    spans: Vec<Span>,
+}
+
+impl Engine {
+    fn new() -> Self {
+        Self { queue: BinaryHeap::new(), seq: 0, spans: Vec::new() }
+    }
+
+    fn schedule(&mut self, at: f64, kind: EventKind) {
+        self.seq += 1;
+        self.queue.push(Event { at, seq: self.seq, kind });
+    }
+
+    fn span(&mut self, rank: String, phase: &'static str, start: f64, end: f64, step: usize) {
+        self.spans.push(Span { rank, phase, start, end, step });
+    }
+}
+
+/// Deterministic per-(group, step) compute-time jitter in `[0, 1)`
+/// (splitmix-style hash) — models stragglers: synchronous SGD pays the
+/// *max* over participants at every barrier. Used by the `_jittered`
+/// variants; the paper's runs are homogeneous (jitter = 0).
+fn jitter_u(group: usize, step: usize) -> f64 {
+    let mut z = (group as u64 + 1).wrapping_mul(0x9e3779b97f4a7c15)
+        ^ (step as u64).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    ((z ^ (z >> 31)) >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// Play `steps` LSGD iterations (Algorithm 3) and return the trace.
+///
+/// All workers of a group advance in lockstep (identical durations), so
+/// the engine tracks one worker-lane per group plus one communicator
+/// lane per group — the same granularity as the closed-form model but
+/// with real dependency resolution.
+pub fn run_lsgd(m: &ClusterModel, topo: &Topology, steps: usize) -> DesResult {
+    run_lsgd_jittered(m, topo, steps, 0.0)
+}
+
+/// LSGD with straggler jitter: group `g`'s compute phase at step `t`
+/// takes `t_compute · (1 + jitter · u(g, t))`. The DES's dependency
+/// resolution then shows the synchronous-barrier cost (the global
+/// allreduce starts only when the *slowest* group has reduced).
+pub fn run_lsgd_jittered(
+    m: &ClusterModel,
+    topo: &Topology,
+    steps: usize,
+    jitter: f64,
+) -> DesResult {
+    let g = topo.groups;
+    let w = topo.workers_per_group;
+    let red = cost::reduce_tree(m.intra, w + 1, m.grad_bytes);
+    let bcast = cost::broadcast_tree(m.intra, w + 1, m.grad_bytes);
+    let t_g = m.algo.cost(m.comm_inter, g, m.grad_bytes);
+
+    let mut e = Engine::new();
+    // per-(step, group) progress state
+    let mut io_done_at = vec![vec![f64::NAN; g]; steps];
+    let mut bcast_scheduled = vec![vec![false; g]; steps];
+    let mut groups_reduced = vec![0usize; steps];
+    let mut global_done_at = vec![f64::NAN; steps];
+    let mut makespan: f64 = 0.0;
+
+    let t_comp = |gi: usize, step: usize| m.t_compute * (1.0 + jitter * jitter_u(gi, step));
+
+    // step 0: batches are pre-loaded (paper Alg. 3 draws M^i at line 1)
+    for gi in 0..g {
+        let d = t_comp(gi, 0);
+        e.span(format!("g{gi}/workers"), "compute", 0.0, d, 0);
+        e.schedule(d, EventKind::ComputeDone { group: gi, step: 0 });
+    }
+
+    while let Some(ev) = e.queue.pop() {
+        let now = ev.at;
+        makespan = makespan.max(now);
+        match ev.kind {
+            EventKind::ComputeDone { group, step } => {
+                e.span(format!("g{group}/workers"), "reduce", now, now + red, step);
+                e.schedule(now + red, EventKind::ReduceDone { group, step });
+            }
+            EventKind::ReduceDone { group, step } => {
+                // workers start loading the NEXT batch immediately
+                e.span(format!("g{group}/workers"), "io", now, now + m.t_io, step);
+                e.schedule(now + m.t_io, EventKind::IoDone { group, step });
+                groups_reduced[step] += 1;
+                if groups_reduced[step] == g {
+                    // all communicators hold their partial sum: global AR
+                    e.span("comms".into(), "global_allreduce", now, now + t_g, step);
+                    e.schedule(now + t_g, EventKind::GlobalDone { step });
+                }
+            }
+            EventKind::IoDone { group, step } => {
+                io_done_at[step][group] = now;
+                try_broadcast(
+                    &mut e, group, step, &global_done_at, &io_done_at, &mut bcast_scheduled, bcast,
+                );
+            }
+            EventKind::GlobalDone { step } => {
+                global_done_at[step] = now;
+                for gi in 0..g {
+                    // groups whose io already finished were blocked on us
+                    try_broadcast(
+                        &mut e, gi, step, &global_done_at, &io_done_at, &mut bcast_scheduled, bcast,
+                    );
+                }
+            }
+            EventKind::BroadcastDone { group, step } => {
+                e.span(format!("g{group}/workers"), "update", now, now + m.t_update, step);
+                e.schedule(now + m.t_update, EventKind::UpdateDone { group, step });
+            }
+            EventKind::UpdateDone { group, step } => {
+                if step + 1 < steps {
+                    let d = t_comp(group, step + 1);
+                    e.span(format!("g{group}/workers"), "compute", now, now + d, step + 1);
+                    e.schedule(now + d, EventKind::ComputeDone { group, step: step + 1 });
+                }
+                makespan = makespan.max(now);
+            }
+        }
+    }
+
+    // hidden communication per step: the part of the inter-group
+    // allreduce that ran inside the I/O window = min(t_io, t_g)
+    let hidden = t_g.min(m.t_io) * steps as f64;
+
+    DesResult { makespan, spans: e.spans, hidden_comm: hidden }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn try_broadcast(
+    e: &mut Engine,
+    group: usize,
+    step: usize,
+    global_done_at: &[f64],
+    io_done_at: &[Vec<f64>],
+    bcast_scheduled: &mut [Vec<bool>],
+    bcast: f64,
+) {
+    let gd = global_done_at[step];
+    let io = io_done_at[step][group];
+    if gd.is_nan() || io.is_nan() || bcast_scheduled[step][group] {
+        return; // a dependency is still in flight (its event will retry)
+    }
+    bcast_scheduled[step][group] = true;
+    let start = gd.max(io);
+    e.span(format!("g{group}/workers"), "broadcast", start, start + bcast, step);
+    e.schedule(start + bcast, EventKind::BroadcastDone { group, step });
+}
+
+/// Play `steps` CSGD iterations (Algorithm 2): io → compute → flat
+/// allreduce over all N workers → update, fully serialized.
+pub fn run_csgd(m: &ClusterModel, topo: &Topology, steps: usize) -> DesResult {
+    run_csgd_jittered(m, topo, steps, 0.0)
+}
+
+/// CSGD with straggler jitter: the flat allreduce is a barrier over all
+/// `G` groups, so every step pays the MAX of the per-group compute
+/// extensions.
+pub fn run_csgd_jittered(
+    m: &ClusterModel,
+    topo: &Topology,
+    steps: usize,
+    jitter: f64,
+) -> DesResult {
+    let n = topo.num_workers();
+    let fabric = super::flat_fabric(m, topo);
+    let ar = m.algo.cost(fabric, n, m.grad_bytes);
+    let mut e = Engine::new();
+    let mut t = 0.0;
+    for step in 0..steps {
+        let slowest = (0..topo.groups)
+            .map(|gi| m.t_compute * (1.0 + jitter * jitter_u(gi, step)))
+            .fold(0.0_f64, f64::max);
+        e.span("workers".into(), "io", t, t + m.t_io, step);
+        t += m.t_io;
+        e.span("workers".into(), "compute", t, t + slowest, step);
+        t += slowest;
+        e.span("workers".into(), "allreduce", t, t + ar, step);
+        t += ar;
+        e.span("workers".into(), "update", t, t + m.t_update, step);
+        t += m.t_update;
+    }
+    DesResult { makespan: t, spans: e.spans, hidden_comm: 0.0 }
+}
+
+/// Convenience: steady-state per-step time from a DES run.
+pub fn per_step(result: &DesResult, steps: usize) -> f64 {
+    result.makespan / steps as f64
+}
+
+/// Cross-check helper used by tests and the figure benches: DES vs
+/// closed form for one schedule.
+pub fn validate_against_closed_form(
+    m: &ClusterModel,
+    topo: &Topology,
+    steps: usize,
+) -> (f64, f64, StepBreakdown, StepBreakdown) {
+    let des_l = per_step(&run_lsgd(m, topo, steps), steps);
+    let des_c = per_step(&run_csgd(m, topo, steps), steps);
+    (des_l, des_c, super::step_time_lsgd(m, topo), super::step_time_csgd(m, topo))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csgd_des_matches_closed_form() {
+        let m = ClusterModel::paper_k80();
+        for g in [1, 2, 8, 64] {
+            let topo = Topology::new(g, 4).unwrap();
+            let (_, des_c, _, cf) = validate_against_closed_form(&m, &topo, 10);
+            assert!(
+                (des_c - cf.total).abs() < 1e-9,
+                "G={g}: DES {des_c} vs closed {c}",
+                c = cf.total
+            );
+        }
+    }
+
+    #[test]
+    fn lsgd_des_matches_closed_form() {
+        let m = ClusterModel::paper_k80();
+        for g in [1, 2, 8, 64] {
+            let topo = Topology::new(g, 4).unwrap();
+            let (des_l, _, cf, _) = validate_against_closed_form(&m, &topo, 10);
+            assert!(
+                (des_l - cf.total).abs() / cf.total < 1e-6,
+                "G={g}: DES {des_l} vs closed {c}",
+                c = cf.total
+            );
+        }
+    }
+
+    #[test]
+    fn lsgd_des_matches_when_allreduce_dominates_io() {
+        let mut m = ClusterModel::paper_k80();
+        m.t_io = 0.01; // force the exposed-comm branch
+        let topo = Topology::new(64, 4).unwrap();
+        let (des_l, _, cf, _) = validate_against_closed_form(&m, &topo, 8);
+        assert!((des_l - cf.total).abs() / cf.total < 1e-6);
+    }
+
+    #[test]
+    fn spans_cover_every_step() {
+        let m = ClusterModel::paper_k80();
+        let topo = Topology::new(2, 4).unwrap();
+        let r = run_lsgd(&m, &topo, 3);
+        for step in 0..3 {
+            for phase in ["compute", "reduce", "io", "broadcast", "update"] {
+                assert!(
+                    r.spans.iter().any(|s| s.step == step && s.phase == phase),
+                    "missing {phase} span for step {step}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_jitter_matches_baseline() {
+        let m = ClusterModel::paper_k80();
+        let topo = Topology::new(8, 4).unwrap();
+        assert_eq!(
+            run_lsgd_jittered(&m, &topo, 5, 0.0).makespan,
+            run_lsgd(&m, &topo, 5).makespan
+        );
+        assert_eq!(
+            run_csgd_jittered(&m, &topo, 5, 0.0).makespan,
+            run_csgd(&m, &topo, 5).makespan
+        );
+    }
+
+    #[test]
+    fn stragglers_slow_both_schedules_within_bound() {
+        let m = ClusterModel::paper_k80();
+        let topo = Topology::new(16, 4).unwrap();
+        let steps = 6;
+        for jitter in [0.1, 0.3] {
+            let base_l = run_lsgd(&m, &topo, steps).makespan;
+            let jit_l = run_lsgd_jittered(&m, &topo, steps, jitter).makespan;
+            assert!(jit_l > base_l, "jitter must cost something");
+            // bound: every step's compute can stretch at most (1+jitter)×
+            assert!(jit_l <= base_l + jitter * m.t_compute * steps as f64 + 1e-9);
+            let base_c = run_csgd(&m, &topo, steps).makespan;
+            let jit_c = run_csgd_jittered(&m, &topo, steps, jitter).makespan;
+            assert!(jit_c > base_c && jit_c <= base_c + jitter * m.t_compute * steps as f64 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn straggler_penalty_grows_with_group_count() {
+        // synchronous barriers pay E[max of G draws] — more groups,
+        // closer to the full jitter bound
+        let m = ClusterModel::paper_k80();
+        let steps = 20;
+        let pen = |g: usize| {
+            let topo = Topology::new(g, 4).unwrap();
+            run_csgd_jittered(&m, &topo, steps, 0.3).makespan - run_csgd(&m, &topo, steps).makespan
+        };
+        assert!(pen(16) > pen(2), "16-group penalty {} vs 2-group {}", pen(16), pen(2));
+    }
+
+    #[test]
+    fn hidden_comm_positive_at_scale() {
+        let m = ClusterModel::paper_k80();
+        let topo = Topology::new(64, 4).unwrap();
+        let r = run_lsgd(&m, &topo, 5);
+        assert!(r.hidden_comm > 0.0);
+    }
+}

@@ -1,0 +1,269 @@
+//! Cluster timing simulator for the paper's scalability study.
+//!
+//! The paper's Figures 2/4/5/6 are *time* measurements on a 64-node
+//! K80/InfiniBand-EDR cluster we do not have. This module rebuilds that
+//! testbed as a calibrated analytic + discrete-event model:
+//!
+//! * [`cost`] — α–β collective cost models (ring / tree / RHD);
+//! * [`ClusterModel`] — the machine: link classes, per-worker compute
+//!   time, per-batch I/O time, gradient bytes;
+//! * [`step_time_csgd`] / [`step_time_lsgd`] — closed-form per-step
+//!   schedules of Algorithms 2 and 3, exposing every phase (compute,
+//!   local reduce, global allreduce, the LSGD overlap window, broadcast,
+//!   update);
+//! * [`des`] — a discrete-event engine that replays the same schedules
+//!   event-by-event per rank and must agree with the closed forms
+//!   (cross-validated in tests).
+//!
+//! Calibration (`ClusterModel::paper_k80`) reproduces the paper's quoted
+//! endpoints — CSGD scaling efficiency 98.7 % @ 8 workers → 63.8 % @ 256;
+//! LSGD ≈ 100 % ≤ 32 → 93.1 % @ 256 — see `rust/tests/figures.rs`.
+
+pub mod cost;
+pub mod des;
+
+pub use cost::{AllreduceAlgo, Link};
+
+use crate::topology::Topology;
+
+/// Everything the timing model needs to know about the machine + job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterModel {
+    /// Intra-group link (paper: PCIe/NVLink + shared memory on a node).
+    pub intra: Link,
+    /// Inter-group fabric as seen by the *worker* (GPU) ranks running
+    /// the flat CSGD allreduce — CUDA-aware OpenMPI staging through
+    /// host memory, so α is in the millisecond range (this is what
+    /// makes the paper's Fig. 2 ratio grow linearly past 64 workers).
+    pub inter: Link,
+    /// Inter-group fabric as seen by the *communicator* (CPU) ranks
+    /// running LSGD's global allreduce. α is fitted from the paper's
+    /// 93.1 %@256 endpoint: it implies the 64-rank communicator
+    /// allreduce costs ≈0.69 s — i.e. slightly MORE per hop than the
+    /// worker fabric (a single dedicated CPU core per node drives it),
+    /// which is exactly why LSGD dips below 100 % only at 256 workers.
+    pub comm_inter: Link,
+    /// Seconds of forward+backward per worker per step (fixed local
+    /// batch ⇒ constant across N; paper: ResNet-50 @ 64 img on a K80).
+    pub t_compute: f64,
+    /// Seconds to load one worker's local mini-batch (the I/O that
+    /// Algorithm 3 overlaps with the communicator allreduce).
+    pub t_io: f64,
+    /// Gradient payload per step, bytes (paper: ResNet-50 ≈ 25.6M × 4 B).
+    pub grad_bytes: f64,
+    /// Seconds for the deferred parameter update (fused SGD kernel).
+    pub t_update: f64,
+    /// Allreduce algorithm used by the flat CSGD baseline and by the
+    /// communicator ring in LSGD.
+    pub algo: AllreduceAlgo,
+    /// Samples per worker per step (paper: 64 images).
+    pub local_batch: usize,
+}
+
+impl ClusterModel {
+    /// Calibrated to the paper's testbed (§5.1): dual-K80 nodes (4
+    /// workers/node), InfiniBand EDR, ResNet-50 (102 MB gradients),
+    /// 64 images/worker. Constants are tuned so the model lands on the
+    /// paper's quoted scaling-efficiency endpoints (Fig. 6): CSGD
+    /// 98.7 % @ 8 → 63.8 % @ 256, LSGD 93.1 % @ 256.
+    pub fn paper_k80() -> Self {
+        Self {
+            // on-node: PCIe gen3-ish effective, low latency
+            intra: Link { alpha: 8e-6, beta: 9.0e9 },
+            // fitted: ar(8) = 40.8 ms, ar(256) = 1.044 s (Fig. 6 inverse)
+            inter: Link { alpha: 2.0191e-3, beta: 14.3e9 },
+            // fitted: t_g(64) = 0.688 s ⇒ 93.1 % efficiency at 256
+            comm_inter: Link { alpha: 5.3475e-3, beta: 14.3e9 },
+            // K80 ResNet-50 fwd+bwd @ 64 images ≈ 1.23 s (≈ 52 img/s)
+            t_compute: 1.23,
+            // 64 JPEGs from local SAS + decode + H2D, prefetch-amortized
+            t_io: 0.55,
+            grad_bytes: 25.6e6 * 4.0,
+            t_update: 0.012,
+            algo: AllreduceAlgo::Ring,
+            local_batch: 64,
+        }
+    }
+
+    /// A model for *this* testbed (CPU PJRT): fill the compute/update/io
+    /// fields from measured step times, keep the paper's fabric.
+    pub fn measured(t_compute: f64, t_io: f64, t_update: f64, grad_bytes: f64, local_batch: usize) -> Self {
+        Self { t_compute, t_io, t_update, grad_bytes, local_batch, ..Self::paper_k80() }
+    }
+}
+
+/// Per-phase breakdown of one training step (seconds). `global_exposed`
+/// is the part of the inter-group allreduce *not* hidden by I/O — zero
+/// means the paper's ideal "communication fully overlapped" regime.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct StepBreakdown {
+    pub compute: f64,
+    pub io: f64,
+    pub local_reduce: f64,
+    pub global_allreduce: f64,
+    pub global_exposed: f64,
+    pub broadcast: f64,
+    pub update: f64,
+    pub total: f64,
+}
+
+/// Effective link for a flat collective spanning the whole cluster:
+/// intra-node fabric while the job fits one group, the (slow, staged)
+/// worker inter-node fabric as soon as it spans groups.
+pub(crate) fn flat_fabric(m: &ClusterModel, topo: &Topology) -> Link {
+    if topo.groups == 1 {
+        m.intra
+    } else {
+        m.inter
+    }
+}
+
+/// Algorithm 2 (CSGD) steady-state step time.
+///
+/// Schedule: load shard → compute grads → flat Allreduce over all `N`
+/// workers (crossing the slow fabric) → update. Nothing overlaps — the
+/// paper's Fig. 2 measures exactly this serialized allreduce share.
+pub fn step_time_csgd(m: &ClusterModel, topo: &Topology) -> StepBreakdown {
+    let n = topo.num_workers();
+    let ar = m.algo.cost(flat_fabric(m, topo), n, m.grad_bytes);
+    let total = m.t_io + m.t_compute + ar + m.t_update;
+    StepBreakdown {
+        compute: m.t_compute,
+        io: m.t_io,
+        local_reduce: 0.0,
+        global_allreduce: ar,
+        global_exposed: ar,
+        broadcast: 0.0,
+        update: m.t_update,
+        total,
+    }
+}
+
+/// Algorithm 3 (LSGD) steady-state step time.
+///
+/// Schedule per iteration `t` (paper Alg. 3):
+///   compute Δw  →  Reduce to communicator (intra, W ranks)
+///   →  [ workers: load next batch  ∥  communicators: Allreduce over G ]
+///   →  Broadcast (intra, W ranks)  →  deferred update.
+///
+/// The inter-group allreduce contributes only `max(0, t_g − t_io)` —
+/// the paper's headline mechanism ("communication time is overlapped
+/// with I/O latency of workers").
+pub fn step_time_lsgd(m: &ClusterModel, topo: &Topology) -> StepBreakdown {
+    let w = topo.workers_per_group;
+    let g = topo.groups;
+    let red = cost::reduce_tree(m.intra, w + 1, m.grad_bytes);
+    let bcast = cost::broadcast_tree(m.intra, w + 1, m.grad_bytes);
+    // communicators talk communicator-to-communicator
+    let t_g = m.algo.cost(m.comm_inter, g, m.grad_bytes);
+    let exposed = (t_g - m.t_io).max(0.0);
+    let overlap_window = m.t_io.max(t_g);
+    let total = m.t_compute + red + overlap_window + bcast + m.t_update;
+    StepBreakdown {
+        compute: m.t_compute,
+        io: m.t_io,
+        local_reduce: red,
+        global_allreduce: t_g,
+        global_exposed: exposed,
+        broadcast: bcast,
+        update: m.t_update,
+        total,
+    }
+}
+
+/// Throughput in samples/second for a schedule's step time.
+pub fn throughput(m: &ClusterModel, topo: &Topology, step_total: f64) -> f64 {
+    (topo.num_workers() * m.local_batch) as f64 / step_total
+}
+
+/// Scaling efficiency vs the single-group base (the paper normalizes
+/// Fig. 6 to the 4-worker node): `(T_base / T_N)`, since per-worker
+/// work is constant.
+pub fn scaling_efficiency(base_step: f64, step: f64) -> f64 {
+    base_step / step
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo(g: usize) -> Topology {
+        Topology::new(g, 4).unwrap()
+    }
+
+    #[test]
+    fn csgd_single_group_uses_intra_fabric() {
+        let m = ClusterModel::paper_k80();
+        let s1 = step_time_csgd(&m, &topo(1));
+        let s2 = step_time_csgd(&m, &topo(2));
+        // crossing nodes must be much more expensive
+        assert!(s2.global_allreduce > 2.0 * s1.global_allreduce);
+    }
+
+    #[test]
+    fn csgd_allreduce_grows_with_n() {
+        let m = ClusterModel::paper_k80();
+        let mut last = 0.0;
+        for g in [2, 4, 8, 16, 32, 64] {
+            let s = step_time_csgd(&m, &topo(g));
+            assert!(s.global_allreduce > last, "allreduce not monotone at G={g}");
+            last = s.global_allreduce;
+        }
+    }
+
+    #[test]
+    fn lsgd_hides_global_allreduce_when_io_dominates() {
+        let mut m = ClusterModel::paper_k80();
+        m.t_io = 100.0; // pathological I/O
+        let s = step_time_lsgd(&m, &topo(64));
+        assert_eq!(s.global_exposed, 0.0);
+        // step pays io once, not io + allreduce
+        assert!((s.total - (m.t_compute + s.local_reduce + 100.0 + s.broadcast + m.t_update)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lsgd_exposes_only_excess_when_allreduce_dominates() {
+        let mut m = ClusterModel::paper_k80();
+        m.t_io = 0.0;
+        let s = step_time_lsgd(&m, &topo(64));
+        assert!((s.global_exposed - s.global_allreduce).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lsgd_slightly_slower_at_one_group() {
+        // paper Fig. 5: two-layer communication costs a little at 1–2 nodes
+        let m = ClusterModel::paper_k80();
+        let c = step_time_csgd(&m, &topo(1));
+        let l = step_time_lsgd(&m, &topo(1));
+        assert!(l.total > c.total);
+        assert!(l.total < 1.35 * c.total, "overhead should be modest: {} vs {}", l.total, c.total);
+    }
+
+    #[test]
+    fn lsgd_beats_csgd_at_scale() {
+        let m = ClusterModel::paper_k80();
+        let c = step_time_csgd(&m, &topo(64));
+        let l = step_time_lsgd(&m, &topo(64));
+        assert!(l.total < c.total);
+    }
+
+    #[test]
+    fn efficiency_monotone_decreasing_for_csgd() {
+        let m = ClusterModel::paper_k80();
+        let base = step_time_csgd(&m, &topo(1)).total;
+        let mut last = 1.01;
+        for g in [2, 4, 8, 16, 32, 64] {
+            let e = scaling_efficiency(base, step_time_csgd(&m, &topo(g)).total);
+            assert!(e < last);
+            last = e;
+        }
+    }
+
+    #[test]
+    fn throughput_uses_global_batch() {
+        let m = ClusterModel::paper_k80();
+        let t = topo(2);
+        let thr = throughput(&m, &t, 2.0);
+        assert!((thr - (8.0 * 64.0 / 2.0)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,161 @@
+//! Cluster topology: groups, workers, communicators (paper Fig. 3).
+//!
+//! The paper partitions ranks into `G` *nodes* (we say *groups* to avoid
+//! clashing with physical nodes), each holding `W` workers (GPU ranks)
+//! plus one communicator (a CPU rank acting as a local parameter
+//! server). The largest paper configuration is `G = 64, W = 4` →
+//! 256 workers + 64 communicators = 320 MPI ranks.
+//!
+//! Ranks are numbered worker-major: worker `w` of group `g` has global
+//! worker id `g * W + w`. Communicators have their own id space
+//! `0..G`. This fixes the **reduction order** everywhere: local reduces
+//! fold workers in ascending worker id, the global allreduce folds
+//! groups in ascending group id — the association the bitwise
+//! CSGD≡LSGD audit relies on (DESIGN.md §6).
+
+/// Identifies one worker rank (a "GPU" in the paper's testbed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct WorkerId(pub usize);
+
+/// Identifies one communicator rank (a "CPU core" in the paper).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GroupId(pub usize);
+
+/// Static description of the cluster layout.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    /// Number of groups (paper: compute nodes), `G`.
+    pub groups: usize,
+    /// Workers per group (paper: 4 GPUs per node), `W`.
+    pub workers_per_group: usize,
+}
+
+impl Topology {
+    /// Build and validate a topology. Errors on empty dimensions.
+    pub fn new(groups: usize, workers_per_group: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(groups > 0, "topology needs at least one group");
+        anyhow::ensure!(
+            workers_per_group > 0,
+            "topology needs at least one worker per group"
+        );
+        Ok(Self { groups, workers_per_group })
+    }
+
+    /// The paper's base layout: one node of four workers (§5.3.1).
+    pub fn paper_base() -> Self {
+        Self { groups: 1, workers_per_group: 4 }
+    }
+
+    /// The paper's largest layout: 64 nodes × 4 GPUs = 256 workers.
+    pub fn paper_max() -> Self {
+        Self { groups: 64, workers_per_group: 4 }
+    }
+
+    /// Total worker count `N = G·W` (the paper's "number of workers").
+    pub fn num_workers(&self) -> usize {
+        self.groups * self.workers_per_group
+    }
+
+    /// Total rank count including communicators (paper: "MPI nodes"),
+    /// e.g. 320 for the 256-worker case.
+    pub fn num_ranks(&self) -> usize {
+        self.num_workers() + self.groups
+    }
+
+    /// Group that owns a worker.
+    pub fn group_of(&self, w: WorkerId) -> GroupId {
+        debug_assert!(w.0 < self.num_workers());
+        GroupId(w.0 / self.workers_per_group)
+    }
+
+    /// Position of a worker inside its group (`0..W`).
+    pub fn local_index(&self, w: WorkerId) -> usize {
+        w.0 % self.workers_per_group
+    }
+
+    /// Workers of one group in **reduction order** (ascending id).
+    pub fn workers_of(&self, g: GroupId) -> impl Iterator<Item = WorkerId> + '_ {
+        debug_assert!(g.0 < self.groups);
+        let base = g.0 * self.workers_per_group;
+        (base..base + self.workers_per_group).map(WorkerId)
+    }
+
+    /// All workers in global reduction order.
+    pub fn all_workers(&self) -> impl Iterator<Item = WorkerId> + '_ {
+        (0..self.num_workers()).map(WorkerId)
+    }
+
+    /// All groups in global (allreduce) reduction order.
+    pub fn all_groups(&self) -> impl Iterator<Item = GroupId> + '_ {
+        (0..self.groups).map(GroupId)
+    }
+
+    /// Per-worker shard `M^i` byte/size arithmetic: given a global batch
+    /// of `global_batch` samples, the contiguous shard owned by `w`.
+    /// Requires `global_batch % N == 0` (the paper always uses equal
+    /// shards — |M| = |M^i|·N in §3).
+    pub fn shard_range(
+        &self,
+        w: WorkerId,
+        global_batch: usize,
+    ) -> anyhow::Result<std::ops::Range<usize>> {
+        let n = self.num_workers();
+        anyhow::ensure!(
+            global_batch % n == 0,
+            "global batch {global_batch} not divisible by {n} workers"
+        );
+        let per = global_batch / n;
+        Ok(w.0 * per..(w.0 + 1) * per)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_max_is_320_ranks() {
+        let t = Topology::paper_max();
+        assert_eq!(t.num_workers(), 256);
+        assert_eq!(t.num_ranks(), 320);
+    }
+
+    #[test]
+    fn group_assignment_is_contiguous() {
+        let t = Topology::new(3, 4).unwrap();
+        assert_eq!(t.group_of(WorkerId(0)), GroupId(0));
+        assert_eq!(t.group_of(WorkerId(3)), GroupId(0));
+        assert_eq!(t.group_of(WorkerId(4)), GroupId(1));
+        assert_eq!(t.group_of(WorkerId(11)), GroupId(2));
+        assert_eq!(t.local_index(WorkerId(11)), 3);
+    }
+
+    #[test]
+    fn workers_of_group_in_rank_order() {
+        let t = Topology::new(2, 3).unwrap();
+        let v: Vec<_> = t.workers_of(GroupId(1)).map(|w| w.0).collect();
+        assert_eq!(v, vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn shard_ranges_partition_the_batch() {
+        let t = Topology::new(2, 2).unwrap();
+        let mut covered = vec![];
+        for w in t.all_workers() {
+            covered.extend(t.shard_range(w, 16).unwrap());
+        }
+        assert_eq!(covered, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shard_requires_divisibility() {
+        let t = Topology::new(2, 2).unwrap();
+        assert!(t.shard_range(WorkerId(0), 10).is_err());
+    }
+
+    #[test]
+    fn rejects_empty_dims() {
+        assert!(Topology::new(0, 4).is_err());
+        assert!(Topology::new(4, 0).is_err());
+    }
+}

@@ -1,0 +1,189 @@
+//! Measurement harness (criterion stand-in) for `benches/*.rs`.
+//!
+//! Warmup + timed iterations with robust statistics (median, mean,
+//! p10/p90, MAD) and adaptive iteration counts targeting a wall-clock
+//! budget. Results print in a criterion-like one-line format and can
+//! be dumped as CSV for EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+/// Statistics over per-iteration samples (seconds).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub p10: f64,
+    pub p90: f64,
+    pub mad: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    fn from_samples(name: &str, mut s: Vec<f64>) -> Self {
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        let pct = |p: f64| s[((n - 1) as f64 * p).round() as usize];
+        let median = pct(0.5);
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let mut devs: Vec<f64> = s.iter().map(|x| (x - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Stats {
+            name: name.to_string(),
+            iters: n,
+            mean,
+            median,
+            p10: pct(0.1),
+            p90: pct(0.9),
+            mad: devs[(n - 1) / 2],
+            min: s[0],
+            max: s[n - 1],
+        }
+    }
+
+    /// Human-readable one-liner (criterion-style).
+    pub fn report(&self) -> String {
+        format!(
+            "{:<42} {:>10}  med {:>12}  mean {:>12}  [{} .. {}]  ±{}",
+            self.name,
+            format!("{}it", self.iters),
+            fmt_t(self.median),
+            fmt_t(self.mean),
+            fmt_t(self.p10),
+            fmt_t(self.p90),
+            fmt_t(self.mad),
+        )
+    }
+
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{},{}",
+            self.name, self.iters, self.mean, self.median, self.p10, self.p90, self.min, self.max
+        )
+    }
+}
+
+pub fn fmt_t(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3}s")
+    } else if secs >= 1e-3 {
+        format!("{:.3}ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3}µs", secs * 1e6)
+    } else {
+        format!("{:.1}ns", secs * 1e9)
+    }
+}
+
+/// The harness: register closures, it sizes iteration counts to the
+/// budget, prints reports, optionally accumulates CSV.
+pub struct Harness {
+    budget: Duration,
+    warmup: Duration,
+    pub results: Vec<Stats>,
+}
+
+impl Default for Harness {
+    fn default() -> Self {
+        Self::new(Duration::from_secs(2), Duration::from_millis(300))
+    }
+}
+
+impl Harness {
+    pub fn new(budget: Duration, warmup: Duration) -> Self {
+        Self { budget, warmup, results: Vec::new() }
+    }
+
+    /// Quick harness for CI-ish runs (smaller budget).
+    pub fn quick() -> Self {
+        Self::new(Duration::from_millis(600), Duration::from_millis(100))
+    }
+
+    /// Benchmark `f`, which should perform ONE iteration of the
+    /// operation under test and return something (kept alive to stop
+    /// the optimizer from deleting the work).
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Stats {
+        // warmup + calibration
+        let w0 = Instant::now();
+        let mut one = Duration::ZERO;
+        let mut warm_iters = 0u64;
+        // at least one warmup call; more only while inside the window
+        // (multi-second operations would otherwise spend 3× the budget
+        // warming up)
+        while warm_iters < 1 || w0.elapsed() < self.warmup {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            one = t.elapsed();
+            warm_iters += 1;
+        }
+        let est = one.max(Duration::from_nanos(50));
+        let iters = (self.budget.as_secs_f64() / est.as_secs_f64()).clamp(5.0, 10_000.0) as usize;
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let stats = Stats::from_samples(name, samples);
+        println!("{}", stats.report());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Write all results as CSV (header + rows).
+    pub fn csv(&self) -> String {
+        let mut s = String::from("name,iters,mean_s,median_s,p10_s,p90_s,min_s,max_s\n");
+        for r in &self.results {
+            s.push_str(&r.csv_row());
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_constant_samples() {
+        let s = Stats::from_samples("x", vec![1.0; 10]);
+        assert_eq!(s.median, 1.0);
+        assert_eq!(s.mean, 1.0);
+        assert_eq!(s.mad, 0.0);
+        assert_eq!(s.iters, 10);
+    }
+
+    #[test]
+    fn stats_percentiles_ordered() {
+        let s = Stats::from_samples("x", (1..=100).map(|i| i as f64).collect());
+        assert!(s.p10 < s.median && s.median < s.p90);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+    }
+
+    #[test]
+    fn harness_measures_something() {
+        let mut h = Harness::new(Duration::from_millis(50), Duration::from_millis(10));
+        let mut acc = 0u64;
+        h.bench("spin", || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert_eq!(h.results.len(), 1);
+        assert!(h.results[0].median > 0.0);
+        assert!(h.csv().lines().count() == 2);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(fmt_t(2.5), "2.500s");
+        assert_eq!(fmt_t(2.5e-3), "2.500ms");
+        assert_eq!(fmt_t(2.5e-6), "2.500µs");
+        assert_eq!(fmt_t(2.5e-9), "2.5ns");
+    }
+}

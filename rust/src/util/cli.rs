@@ -1,0 +1,163 @@
+//! Tiny CLI flag parser (clap stand-in).
+//!
+//! `--flag value`, `--flag=value`, bare `--switch` booleans, and
+//! positional arguments. Unknown flags are an error (typo defense);
+//! every accessor records the flags it saw so `finish()` can report
+//! leftovers.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    positional: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse raw arguments. `bool_switches` names flags that take no
+    /// value (everything else expects one).
+    pub fn parse(raw: &[String], bool_switches: &[&str]) -> Result<Self> {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if bool_switches.contains(&name) {
+                    a.switches.push(name.to_string());
+                } else {
+                    i += 1;
+                    let v = raw.get(i).with_context(|| format!("--{name} needs a value"))?;
+                    a.flags.insert(name.to_string(), v.clone());
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(a)
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.mark(key);
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.flags.get(key).cloned()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        self.mark(key);
+        match self.flags.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key}: not an integer: {v}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        self.mark(key);
+        match self.flags.get(key) {
+            Some(v) => {
+                if let Some(hex) = v.strip_prefix("0x") {
+                    u64::from_str_radix(hex, 16).with_context(|| format!("--{key}: bad hex"))
+                } else {
+                    v.parse().with_context(|| format!("--{key}: not an integer: {v}"))
+                }
+            }
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        self.mark(key);
+        match self.flags.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key}: not a float: {v}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn opt_f64(&self, key: &str) -> Result<Option<f64>> {
+        self.mark(key);
+        self.flags
+            .get(key)
+            .map(|v| v.parse().with_context(|| format!("--{key}: not a float: {v}")))
+            .transpose()
+    }
+
+    pub fn switch(&self, key: &str) -> bool {
+        self.mark(key);
+        self.switches.iter().any(|s| s == key)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Error on any flag the command never consumed (catches typos).
+    pub fn finish(&self) -> Result<()> {
+        let seen = self.consumed.borrow();
+        for k in self.flags.keys() {
+            if !seen.iter().any(|s| s == k) {
+                bail!("unknown flag --{k}");
+            }
+        }
+        for s in &self.switches {
+            if !seen.iter().any(|x| x == s) {
+                bail!("unknown switch --{s}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_flags_switches_positionals() {
+        let a = Args::parse(&raw("fig2 --groups 4 --algo=ring --paper-literal"), &["paper-literal"])
+            .unwrap();
+        assert_eq!(a.positional(), &["fig2".to_string()]);
+        assert_eq!(a.usize_or("groups", 0).unwrap(), 4);
+        assert_eq!(a.str_or("algo", ""), "ring");
+        assert!(a.switch("paper-literal"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let a = Args::parse(&raw("--tyop 3"), &[]).unwrap();
+        let _ = a.usize_or("typo", 1);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&raw("--steps"), &[]).is_err());
+    }
+
+    #[test]
+    fn defaults_and_hex() {
+        let a = Args::parse(&raw("--seed 0x5eed"), &[]).unwrap();
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 0x5eed);
+        assert_eq!(a.usize_or("steps", 50).unwrap(), 50);
+        assert_eq!(a.f64_or("io-latency", 0.25).unwrap(), 0.25);
+    }
+}

@@ -1,0 +1,190 @@
+//! TOML-subset config reader/writer.
+//!
+//! Supports what `configs/*.toml` actually uses: `[section]` and
+//! `[nested.section]` headers, `key = value` with string / bool /
+//! integer / float values, `#` comments, and blank lines. Values keep
+//! their section-qualified path (`optim.base_lr`). Arrays and inline
+//! tables are deliberately out of scope.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A flat `section.key → raw value` view of a TOML-subset document.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct KvConf {
+    map: BTreeMap<String, String>,
+}
+
+impl KvConf {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            map.insert(key, v.trim().to_string());
+        }
+        Ok(Self { map })
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.map.contains_key(key)
+    }
+
+    pub fn str(&self, key: &str) -> Result<String> {
+        let raw = self.map.get(key).with_context(|| format!("missing key {key}"))?;
+        Ok(unquote(raw))
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.map.get(key).map(|r| unquote(r)).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn f64(&self, key: &str) -> Result<f64> {
+        let raw = self.map.get(key).with_context(|| format!("missing key {key}"))?;
+        raw.parse().with_context(|| format!("{key}: not a float: {raw}"))
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.map.get(key) {
+            Some(raw) => raw.parse().with_context(|| format!("{key}: not a float: {raw}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.map.get(key) {
+            Some(raw) => raw.parse().with_context(|| format!("{key}: not an integer: {raw}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.map.get(key) {
+            Some(raw) => {
+                if let Some(hex) = raw.strip_prefix("0x") {
+                    u64::from_str_radix(hex, 16).with_context(|| format!("{key}: bad hex {raw}"))
+                } else {
+                    raw.parse().with_context(|| format!("{key}: not an integer: {raw}"))
+                }
+            }
+            None => Ok(default),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.map.get(key).map(|s| s.as_str()) {
+            Some("true") => Ok(true),
+            Some("false") => Ok(false),
+            Some(other) => bail!("{key}: not a bool: {other}"),
+            None => Ok(default),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' inside a quoted string is kept
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(raw: &str) -> String {
+    let t = raw.trim();
+    if t.len() >= 2 && t.starts_with('"') && t.ends_with('"') {
+        t[1..t.len() - 1].to_string()
+    } else {
+        t.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+# experiment
+algo = "lsgd"
+steps = 100
+
+[topology]
+groups = 4            # paper: nodes
+workers_per_group = 4
+
+[optim]
+base_lr = 0.1
+warmup_epochs = 5.0
+linear_scaling = true
+
+[data]
+seed = 0x5eed
+io_latency = 0.25
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = KvConf::parse(DOC).unwrap();
+        assert_eq!(c.str("algo").unwrap(), "lsgd");
+        assert_eq!(c.usize_or("steps", 0).unwrap(), 100);
+        assert_eq!(c.usize_or("topology.groups", 0).unwrap(), 4);
+        assert!((c.f64("optim.base_lr").unwrap() - 0.1).abs() < 1e-15);
+        assert!(c.bool_or("optim.linear_scaling", false).unwrap());
+        assert_eq!(c.u64_or("data.seed", 0).unwrap(), 0x5eed);
+        assert!((c.f64_or("data.io_latency", 0.0).unwrap() - 0.25).abs() < 1e-15);
+    }
+
+    #[test]
+    fn defaults_for_missing_keys() {
+        let c = KvConf::parse("").unwrap();
+        assert_eq!(c.usize_or("nope", 7).unwrap(), 7);
+        assert!(!c.bool_or("nope", false).unwrap());
+        assert!(c.str("nope").is_err());
+    }
+
+    #[test]
+    fn comments_inside_strings_kept() {
+        let c = KvConf::parse(r##"name = "a # b" # real comment"##).unwrap();
+        assert_eq!(c.str("name").unwrap(), "a # b");
+    }
+
+    #[test]
+    fn bad_lines_error() {
+        assert!(KvConf::parse("[unclosed").is_err());
+        assert!(KvConf::parse("keyvalue").is_err());
+        assert!(KvConf::parse("[]").is_err());
+        let c = KvConf::parse("x = notanumber").unwrap();
+        assert!(c.f64("x").is_err());
+    }
+}

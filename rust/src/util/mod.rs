@@ -1,0 +1,16 @@
+//! In-tree substrates replacing crates unavailable in this offline
+//! build environment (see Cargo.toml note):
+//!
+//! * [`json`]  — JSON parser + serializer (serde_json stand-in) for
+//!   `artifacts/manifest.json` and result emission;
+//! * [`kvconf`] — TOML-subset config reader/writer (toml stand-in);
+//! * [`cli`]   — declarative-ish flag parser (clap stand-in);
+//! * [`bench`] — measurement harness with warmup + robust stats
+//!   (criterion stand-in) used by every `benches/*.rs`;
+//! * [`prop`]  — seeded property-test runner (proptest stand-in).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod kvconf;
+pub mod prop;

@@ -1,0 +1,90 @@
+//! Seeded property-test runner (proptest stand-in).
+//!
+//! `run(cases, |rng| { … })` feeds a deterministic RNG to the property
+//! closure `cases` times; a failing case reports its seed so it can be
+//! replayed exactly. No shrinking — cases are kept small instead.
+
+use crate::data::Rng;
+
+/// Run `property` for `cases` deterministic random cases. Panics with
+/// the replay seed on the first failure.
+pub fn run(cases: u64, mut property: impl FnMut(&mut Rng)) {
+    for case in 0..cases {
+        let seed = 0xBADC0FFE ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut rng);
+        }));
+        if let Err(payload) = result {
+            eprintln!("property failed on case {case} (replay seed {seed:#x})");
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Helpers for generating structured values from the RNG.
+pub trait GenExt {
+    fn usize_in(&mut self, lo: usize, hi: usize) -> usize;
+    fn f32_in(&mut self, lo: f32, hi: f32) -> f32;
+    fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32>;
+    fn bool_(&mut self) -> bool;
+}
+
+impl GenExt for Rng {
+    fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + (self.below((hi - lo + 1) as u64) as usize)
+    }
+
+    fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (self.f64() as f32) * (hi - lo)
+    }
+
+    fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    fn bool_(&mut self) -> bool {
+        self.below(2) == 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut count = 0;
+        run(25, |_| count += 1);
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut a = Vec::new();
+        run(5, |rng| a.push(rng.next_u64()));
+        let mut b = Vec::new();
+        run(5, |rng| b.push(rng.next_u64()));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn failure_propagates() {
+        run(10, |rng| {
+            assert!(rng.usize_in(0, 9) < 5, "will fail eventually");
+        });
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        run(50, |rng| {
+            let x = rng.usize_in(3, 7);
+            assert!((3..=7).contains(&x));
+            let f = rng.f32_in(-1.0, 1.0);
+            assert!((-1.0..=1.0).contains(&f));
+            assert_eq!(rng.vec_f32(4, 0.0, 1.0).len(), 4);
+        });
+    }
+}

@@ -1,0 +1,178 @@
+//! Integration: the calibrated cluster model must land on the paper's
+//! quoted numbers (Figs. 2, 4, 5, 6) and the DES must agree with the
+//! closed forms at every sweep point. These tests freeze the figure
+//! *shape* so calibration regressions are caught.
+
+use lsgd::simnet::{self, des, ClusterModel};
+use lsgd::topology::Topology;
+
+fn topo(g: usize) -> Topology {
+    Topology::new(g, 4).unwrap()
+}
+
+fn eff_csgd(m: &ClusterModel, g: usize) -> f64 {
+    let base = simnet::step_time_csgd(m, &topo(1)).total;
+    100.0 * base / simnet::step_time_csgd(m, &topo(g)).total
+}
+
+fn eff_lsgd(m: &ClusterModel, g: usize) -> f64 {
+    let base = simnet::step_time_lsgd(m, &topo(1)).total;
+    100.0 * base / simnet::step_time_lsgd(m, &topo(g)).total
+}
+
+// ---------------------------------------------------------------- Fig. 6
+
+#[test]
+fn fig6_csgd_endpoint_98_7_at_8_workers() {
+    let m = ClusterModel::paper_k80();
+    let e = eff_csgd(&m, 2);
+    assert!((e - 98.7).abs() < 0.5, "CSGD @8 workers: {e:.1}% (paper: 98.7%)");
+}
+
+#[test]
+fn fig6_csgd_endpoint_63_8_at_256_workers() {
+    let m = ClusterModel::paper_k80();
+    let e = eff_csgd(&m, 64);
+    assert!((e - 63.8).abs() < 1.0, "CSGD @256 workers: {e:.1}% (paper: 63.8%)");
+}
+
+#[test]
+fn fig6_lsgd_endpoint_93_1_at_256_workers() {
+    let m = ClusterModel::paper_k80();
+    let e = eff_lsgd(&m, 64);
+    assert!((e - 93.1).abs() < 1.0, "LSGD @256 workers: {e:.1}% (paper: 93.1%)");
+}
+
+#[test]
+fn fig6_lsgd_perfect_through_32_workers() {
+    // paper: "perfect linear scalability up to 32 workers"
+    let m = ClusterModel::paper_k80();
+    for g in [2, 4, 8] {
+        let e = eff_lsgd(&m, g);
+        assert!(e > 99.5, "LSGD @{} workers: {e:.1}%", g * 4);
+    }
+}
+
+#[test]
+fn fig6_csgd_monotonically_decays() {
+    let m = ClusterModel::paper_k80();
+    let mut last = 100.1;
+    for g in [1, 2, 4, 8, 16, 32, 64] {
+        let e = eff_csgd(&m, g);
+        assert!(e < last + 1e-9, "not monotone at G={g}");
+        last = e;
+    }
+}
+
+// ---------------------------------------------------------------- Fig. 2
+
+#[test]
+fn fig2_comm_ratio_grows_superlinearly_past_64() {
+    // "the ratio of the Allreduce communication time to training time
+    //  per epoch linearly increases after 64 workers"
+    let m = ClusterModel::paper_k80();
+    let ratio = |g: usize| {
+        let s = simnet::step_time_csgd(&m, &topo(g));
+        s.global_allreduce / s.total
+    };
+    let r64 = ratio(16);
+    let r128 = ratio(32);
+    let r256 = ratio(64);
+    assert!(r128 > 1.5 * r64, "{r64} {r128}");
+    assert!(r256 > 1.5 * r128, "{r128} {r256}");
+    // α-dominated ring: allreduce *time* roughly doubles with workers
+    let t128 = simnet::step_time_csgd(&m, &topo(32)).global_allreduce;
+    let t256 = simnet::step_time_csgd(&m, &topo(64)).global_allreduce;
+    assert!((t256 / t128 - 2.0).abs() < 0.1, "α term not linear: {}", t256 / t128);
+}
+
+// ---------------------------------------------------------------- Fig. 4/5
+
+#[test]
+fn fig4_lsgd_throughput_near_linear() {
+    let m = ClusterModel::paper_k80();
+    let thr = |g: usize| {
+        let t = topo(g);
+        simnet::throughput(&m, &t, simnet::step_time_lsgd(&m, &t).total)
+    };
+    let t1 = thr(1);
+    assert!((thr(16) / t1 - 16.0).abs() < 0.2); // linear to 64 workers
+    let x64 = thr(64) / t1;
+    assert!(x64 > 59.0 && x64 < 64.0, "256-worker speedup {x64:.1} (paper ≈ 59.6×)");
+}
+
+#[test]
+fn fig5_crossover_between_8_and_16_workers() {
+    // paper Fig. 5: CSGD faster at 4 and 8 GPUs, LSGD wins beyond
+    let m = ClusterModel::paper_k80();
+    let ratio = |g: usize| {
+        simnet::step_time_csgd(&m, &topo(g)).total / simnet::step_time_lsgd(&m, &topo(g)).total
+    };
+    assert!(ratio(1) < 1.0, "LSGD should lose at 4 workers: {}", ratio(1));
+    assert!(ratio(2) < 1.0, "LSGD should lose at 8 workers: {}", ratio(2));
+    assert!(ratio(4) > 1.0, "LSGD should win at 16 workers: {}", ratio(4));
+    assert!(ratio(64) > 1.3, "LSGD should win big at 256: {}", ratio(64));
+}
+
+// ---------------------------------------------------------------- DES cross-check
+
+#[test]
+fn des_agrees_with_closed_forms_across_sweep() {
+    let m = ClusterModel::paper_k80();
+    for g in [1, 2, 4, 8, 16, 32, 64] {
+        let t = topo(g);
+        let (des_l, des_c, cf_l, cf_c) = des::validate_against_closed_form(&m, &t, 6);
+        assert!(
+            (des_c - cf_c.total).abs() / cf_c.total < 1e-9,
+            "CSGD G={g}: {des_c} vs {}",
+            cf_c.total
+        );
+        assert!(
+            (des_l - cf_l.total).abs() / cf_l.total < 1e-6,
+            "LSGD G={g}: {des_l} vs {}",
+            cf_l.total
+        );
+    }
+}
+
+#[test]
+fn des_overlap_accounting_bounded_by_io_and_comm() {
+    let m = ClusterModel::paper_k80();
+    let t = topo(64);
+    let steps = 5;
+    let r = des::run_lsgd(&m, &t, steps);
+    let s = simnet::step_time_lsgd(&m, &t);
+    let max_hidden = s.global_allreduce.min(m.t_io) * steps as f64;
+    assert!(r.hidden_comm <= max_hidden + 1e-9);
+    assert!(r.hidden_comm > 0.0);
+}
+
+// ---------------------------------------------------------------- ablations
+
+#[test]
+fn rhd_ablation_helps_csgd_latency_term() {
+    use lsgd::simnet::AllreduceAlgo;
+    let mut m = ClusterModel::paper_k80();
+    let ring = simnet::step_time_csgd(&m, &topo(64)).global_allreduce;
+    m.algo = AllreduceAlgo::RecursiveHalvingDoubling;
+    let rhd = simnet::step_time_csgd(&m, &topo(64)).global_allreduce;
+    // the paper's linear ratio growth disappears under RHD — the
+    // baseline's weakness is algorithmic, not fundamental
+    assert!(rhd < 0.2 * ring, "ring {ring} vs rhd {rhd}");
+}
+
+#[test]
+fn lsgd_advantage_shrinks_when_io_vanishes() {
+    // sanity on the mechanism: with no I/O window there is nothing to
+    // hide under, so LSGD's edge comes only from the smaller ring
+    let mut m = ClusterModel::paper_k80();
+    m.t_io = 0.0;
+    let c = simnet::step_time_csgd(&m, &topo(64)).total;
+    let l = simnet::step_time_lsgd(&m, &topo(64)).total;
+    assert!(l < c, "still wins via G-sized ring");
+    let gain_no_io = c / l;
+    let m2 = ClusterModel::paper_k80();
+    let gain_io = simnet::step_time_csgd(&m2, &topo(64)).total
+        / simnet::step_time_lsgd(&m2, &topo(64)).total;
+    assert!(gain_io > gain_no_io * 0.95, "io {gain_io} vs no-io {gain_no_io}");
+}

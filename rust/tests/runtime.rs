@@ -1,0 +1,203 @@
+//! Integration: the PJRT runtime against real tiny artifacts, and
+//! cross-layer consistency (HLO kernels vs host-side mirrors).
+
+use lsgd::collective;
+use lsgd::data::Rng;
+use lsgd::optim::HostSgd;
+use lsgd::runtime::Engine;
+use lsgd::sched::checksum;
+use lsgd::util::prop::{self, GenExt};
+
+fn engine() -> Engine {
+    Engine::load(std::path::Path::new("artifacts"), "tiny")
+        .expect("tiny artifacts missing — run `make artifacts`")
+}
+
+fn rand_vec(seed: u64, n: usize, scale: f32) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| (rng.f64() as f32 - 0.5) * scale).collect()
+}
+
+fn rand_tokens(seed: u64, n: usize, vocab: i32) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.below(vocab as u64) as i32).collect()
+}
+
+#[test]
+fn engine_loads_and_reports_shapes() {
+    let e = engine();
+    assert_eq!(e.param_count(), 134400);
+    assert_eq!(e.micro_batch(), 4);
+    assert_eq!(e.tokens_per_sample(), 33);
+    assert_eq!(e.platform(), "cpu");
+    let init = e.init_params().unwrap();
+    assert_eq!(init.len(), 134400);
+    assert!(init.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn grad_step_produces_finite_grad_and_sane_loss() {
+    let e = engine();
+    let w = e.init_params().unwrap();
+    let toks = rand_tokens(1, e.micro_batch() * e.tokens_per_sample(), 256);
+    let (g, loss) = e.grad_step(&w, &toks).unwrap();
+    assert_eq!(g.len(), w.len());
+    assert!(g.iter().all(|x| x.is_finite()));
+    // initial loss ≈ ln(vocab) = ln 256 ≈ 5.55
+    assert!((loss - 256.0_f32.ln()).abs() < 0.5, "loss {loss}");
+}
+
+#[test]
+fn grad_step_deterministic() {
+    let e = engine();
+    let w = e.init_params().unwrap();
+    let toks = rand_tokens(2, e.micro_batch() * e.tokens_per_sample(), 256);
+    let (g1, l1) = e.grad_step(&w, &toks).unwrap();
+    let (g2, l2) = e.grad_step(&w, &toks).unwrap();
+    assert_eq!(l1.to_bits(), l2.to_bits());
+    assert_eq!(checksum(&g1), checksum(&g2));
+}
+
+#[test]
+fn sgd_update_matches_host_mirror() {
+    let e = engine();
+    let p = e.param_count();
+    let w = rand_vec(3, p, 0.2);
+    let m = rand_vec(4, p, 0.1);
+    let g = rand_vec(5, p, 0.05);
+    let (w2, m2) = e.sgd_update(&w, &m, &g, 0.1).unwrap();
+
+    let mut hw = w.clone();
+    let mut hm = m.clone();
+    HostSgd::new(0.9, 1e-4).step(&mut hw, &mut hm, &g, 0.1);
+    let tol = |a: f32, b: f32| (a - b).abs() <= 1e-6 + 1e-5 * b.abs();
+    assert!(w2.iter().zip(&hw).all(|(a, b)| tol(*a, *b)), "w mismatch");
+    assert!(m2.iter().zip(&hm).all(|(a, b)| tol(*a, *b)), "m mismatch");
+}
+
+#[test]
+fn reduce2_matches_host_fold_bitwise() {
+    let e = engine();
+    let p = e.param_count();
+    let a = rand_vec(6, p, 1.0);
+    let b = rand_vec(7, p, 1.0);
+    let kernel = e.reduce2(&a, &b, 1.0).unwrap();
+    let host = collective::reduce_scaled(&[&a, &b], 1.0);
+    assert_eq!(checksum(&kernel), checksum(&host), "association differs");
+}
+
+#[test]
+fn reduce_fold_matches_host_fold_bitwise_for_any_fanin() {
+    let e = engine();
+    let p = e.param_count();
+    for k in [1usize, 2, 3, 4, 5, 7, 8] {
+        let bufs: Vec<Vec<f32>> = (0..k as u64).map(|i| rand_vec(10 + i, p, 1.0)).collect();
+        let refs: Vec<&[f32]> = bufs.iter().map(|v| v.as_slice()).collect();
+        let kernel = e.reduce_fold(&refs, 1.0).unwrap();
+        let host = collective::reduce_scaled(&refs, 1.0);
+        assert_eq!(checksum(&kernel), checksum(&host), "fan-in {k} differs");
+    }
+}
+
+#[test]
+fn reduce_fold_scale_applied_after_sum() {
+    let e = engine();
+    let p = e.param_count();
+    let bufs: Vec<Vec<f32>> = (0..3u64).map(|i| rand_vec(20 + i, p, 1.0)).collect();
+    let refs: Vec<&[f32]> = bufs.iter().map(|v| v.as_slice()).collect();
+    let scaled = e.reduce_fold(&refs, 0.25).unwrap();
+    let unscaled = e.reduce_fold(&refs, 1.0).unwrap();
+    for i in (0..p).step_by(997) {
+        assert_eq!((unscaled[i] * 0.25).to_bits(), scaled[i].to_bits());
+    }
+}
+
+#[test]
+fn eval_step_consistent_with_grad_step_loss() {
+    let e = engine();
+    let w = e.init_params().unwrap();
+    let toks = rand_tokens(8, e.micro_batch() * e.tokens_per_sample(), 256);
+    let (_, train_loss) = e.grad_step(&w, &toks).unwrap();
+    let (eval_loss, correct) = e.eval_step(&w, &toks).unwrap();
+    assert!((train_loss - eval_loss).abs() < 1e-4, "{train_loss} vs {eval_loss}");
+    let max_correct = (e.micro_batch() * (e.tokens_per_sample() - 1)) as i64;
+    assert!((0..=max_correct).contains(&correct));
+}
+
+#[test]
+fn wrong_sized_inputs_rejected() {
+    let e = engine();
+    let w = e.init_params().unwrap();
+    assert!(e.grad_step(&w[..10], &rand_tokens(0, 132, 256)).is_err());
+    assert!(e.grad_step(&w, &rand_tokens(0, 7, 256)).is_err());
+    assert!(e.reduce2(&w[..10], &w[..10], 1.0).is_err());
+    let empty: [&[f32]; 0] = [];
+    assert!(e.reduce_fold(&empty, 1.0).is_err());
+}
+
+// ---------------------------------------------------------------- properties
+
+#[test]
+fn prop_host_collectives_linear_in_scale() {
+    prop::run(25, |rng| {
+        let n = rng.usize_in(1, 300);
+        let k = rng.usize_in(1, 6);
+        let bufs: Vec<Vec<f32>> = (0..k).map(|_| rng.vec_f32(n, -2.0, 2.0)).collect();
+        let refs: Vec<&[f32]> = bufs.iter().map(|v| v.as_slice()).collect();
+        let one = collective::reduce_scaled(&refs, 1.0);
+        let half = collective::reduce_scaled(&refs, 0.5);
+        for i in 0..n {
+            assert_eq!((one[i] * 0.5).to_bits(), half[i].to_bits());
+        }
+    });
+}
+
+#[test]
+fn prop_ring_allreduce_close_to_fold_and_ranks_agree() {
+    prop::run(20, |rng| {
+        let n = rng.usize_in(1, 500);
+        let ranks = rng.usize_in(1, 8);
+        let mut bufs: Vec<Vec<f32>> = (0..ranks).map(|_| rng.vec_f32(n, -1.0, 1.0)).collect();
+        let refs: Vec<&[f32]> = bufs.iter().map(|v| v.as_slice()).collect();
+        let want = collective::flat_allreduce(&refs);
+        collective::ring_allreduce(&mut bufs, 1.0 / ranks as f32);
+        for r in 1..ranks {
+            assert_eq!(bufs[r], bufs[0]);
+        }
+        for i in 0..n {
+            assert!((bufs[0][i] - want[i]).abs() < 1e-5 * (1.0 + want[i].abs()));
+        }
+    });
+}
+
+#[test]
+fn prop_hierarchical_allreduce_matches_grouped_manual_sum() {
+    prop::run(20, |rng| {
+        let n = rng.usize_in(1, 200);
+        let groups = rng.usize_in(1, 4);
+        let per = rng.usize_in(1, 4);
+        let bufs: Vec<Vec<f32>> = (0..groups * per).map(|_| rng.vec_f32(n, -1.0, 1.0)).collect();
+        let grouped: Vec<Vec<&[f32]>> = (0..groups)
+            .map(|g| bufs[g * per..(g + 1) * per].iter().map(|v| v.as_slice()).collect())
+            .collect();
+        let got = collective::hierarchical_allreduce(&grouped, groups * per);
+        // manual: fold per group, then across groups, then scale
+        let mut acc: Option<Vec<f32>> = None;
+        for g in 0..groups {
+            let mut gs = bufs[g * per].clone();
+            for w in 1..per {
+                collective::add_assign(&mut gs, &bufs[g * per + w]);
+            }
+            acc = Some(match acc {
+                None => gs,
+                Some(mut a) => {
+                    collective::add_assign(&mut a, &gs);
+                    a
+                }
+            });
+        }
+        let mut want = acc.unwrap();
+        collective::scale(&mut want, 1.0 / (groups * per) as f32);
+        assert_eq!(got, want);
+    });
+}
