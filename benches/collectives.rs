@@ -35,7 +35,26 @@ fn main() {
     let n = 3_696_128;
     let bufs: Vec<Vec<f32>> = (0..4u64).map(|i| rand_vec(10 + i, n)).collect();
     let refs: Vec<&[f32]> = bufs.iter().map(|v| v.as_slice()).collect();
-    h.bench("reduce_scaled/4way/3.7M", || collective::reduce_scaled(&refs, 0.25));
+    let serial = h.bench("reduce_scaled/4way/3.7M", || collective::reduce_scaled(&refs, 0.25));
+    let serial_median = serial.median;
+
+    // chunk-parallel fold: same association per element, bitwise-equal
+    // output (the global fold of the thread-per-rank engine)
+    let cores = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1);
+    for threads in [2usize, 4, cores] {
+        let s = h.bench(&format!("reduce_scaled_par/4way/3.7M/{threads}t"), || {
+            collective::reduce_scaled_par(&refs, 0.25, threads)
+        });
+        println!(
+            "    → {:.2}× vs serial fold (bitwise-identical result)",
+            serial_median / s.median
+        );
+    }
+    assert_eq!(
+        collective::reduce_scaled_par(&refs, 0.25, cores),
+        collective::reduce_scaled(&refs, 0.25),
+        "chunk-parallel fold must be bitwise-identical"
+    );
 
     // hierarchical (LSGD) vs flat association at 8 workers
     let bufs8: Vec<Vec<f32>> = (0..8u64).map(|i| rand_vec(20 + i, n)).collect();

@@ -1,15 +1,21 @@
-//! Bench: the PJRT runtime hot path — grad_step / sgd_update /
-//! reduce / eval per preset (requires `make artifacts`).
+//! Bench: the runtime hot path — grad_step / sgd_update / reduce /
+//! eval per preset — plus the headline comparison: **serial vs
+//! thread-per-rank full training steps**.
 //!
-//! This is the end-to-end per-table bench for the *real* execution
-//! layer: every number here feeds the `scaling_sweep` calibration and
-//! EXPERIMENTS.md §Perf. The fused-update and reduce rows measure the
-//! L1 Pallas kernels through their AOT-lowered HLO.
+//! The serial engine executes every worker's compute phase back to
+//! back on one thread; the thread-per-rank engine runs one OS thread
+//! per worker and per communicator, so on a multi-core host the
+//! per-step wall-clock should drop roughly with the worker count
+//! (until memory bandwidth saturates) while the trajectory stays
+//! bitwise-identical (asserted here on the measured runs).
 //!
 //! Run: `cargo bench --bench runtime_step`
 
+use lsgd::config::{Algo, ExperimentConfig};
 use lsgd::data::Rng;
 use lsgd::runtime::Engine;
+use lsgd::sched::Trainer;
+use lsgd::topology::Topology;
 use lsgd::util::bench::Harness;
 
 fn rand_vec(seed: u64, n: usize) -> Vec<f32> {
@@ -57,14 +63,64 @@ fn bench_preset(h: &mut Harness, preset: &str) {
     h.bench(&format!("{preset}/eval_step"), || engine.eval_step(&w, &toks).unwrap());
 }
 
+/// The acceptance bench: full LSGD/CSGD steps, serial engine vs the
+/// thread-per-rank engine, same topology and data. Returns the two
+/// medians so main() can print the speedup.
+fn bench_engines(h: &mut Harness, preset: &str, groups: usize, wpg: usize, algo: Algo) {
+    let engine = Engine::host(preset).expect("host preset");
+    let steps = 4;
+    let mk_cfg = || {
+        let mut c = ExperimentConfig::default();
+        c.algo = algo;
+        c.topology = Topology::new(groups, wpg).unwrap();
+        c.steps = steps;
+        c.data.train_samples = 1024;
+        c.data.val_samples = 64;
+        c
+    };
+    let label = format!("{algo}/{groups}x{wpg}/{preset}");
+    let mut serial_sums = None;
+    let s = h.bench(&format!("step/serial/{label}"), || {
+        let mut t = Trainer::new(&engine, mk_cfg(), false).unwrap();
+        let r = t.run().unwrap();
+        serial_sums = Some(r.step_checksums.clone());
+        r.steps
+    });
+    let serial_step = s.median / steps as f64;
+    let mut par_sums = None;
+    let s = h.bench(&format!("step/thread-per-rank/{label}"), || {
+        let mut t = Trainer::new(&engine, mk_cfg(), false).unwrap();
+        let r = t.run_parallel().unwrap();
+        par_sums = Some(r.step_checksums.clone());
+        r.steps
+    });
+    let par_step = s.median / steps as f64;
+    assert_eq!(
+        serial_sums, par_sums,
+        "engines disagree — the determinism contract is broken"
+    );
+    println!(
+        "    → per-step: serial {:.2} ms, thread-per-rank {:.2} ms  ({:.2}× speedup, bitwise-identical)",
+        serial_step * 1e3,
+        par_step * 1e3,
+        serial_step / par_step
+    );
+}
+
 fn main() {
-    // quick budget: the base preset's grad_step runs ~6 s/iteration on
-    // this 1-core testbed; the default 2 s budget would still do 5
-    // iterations each but warmup×3 adds up across 15 rows.
     let mut h = Harness::quick();
     for preset in ["tiny", "small", "base"] {
         bench_preset(&mut h, preset);
     }
+
+    println!("\n# full steps: serial vs thread-per-rank (same data, same trajectory)");
+    let cores = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1);
+    println!("  ({cores} cpu threads available)");
+    bench_engines(&mut h, "small", 2, 2, Algo::Lsgd);
+    bench_engines(&mut h, "small", 2, 2, Algo::Csgd);
+    bench_engines(&mut h, "small", 2, 4, Algo::Lsgd);
+    bench_engines(&mut h, "base", 2, 2, Algo::Lsgd);
+
     std::fs::create_dir_all("bench_results").ok();
     std::fs::write("bench_results/runtime_step.csv", h.csv()).unwrap();
     println!("\n→ bench_results/runtime_step.csv");

@@ -16,7 +16,7 @@
 use anyhow::Result;
 use crate::config::{Algo, ExperimentConfig};
 use crate::runtime::Engine;
-use crate::sched::{LsgdOptions, RunResult, Trainer};
+use crate::sched::{ExecMode, LsgdOptions, RunOptions, RunResult, Trainer};
 
 /// Outcome of one audit comparison.
 #[derive(Debug, Clone)]
@@ -85,15 +85,29 @@ pub fn run_audit(
     base_cfg: &ExperimentConfig,
     paper_literal_division: bool,
 ) -> Result<(AuditReport, RunResult, RunResult)> {
+    run_audit_with(engine, base_cfg, paper_literal_division, ExecMode::Serial)
+}
+
+/// [`run_audit`] on an explicit execution engine — the parallel
+/// thread-per-rank engine must pass the same audit bitwise.
+pub fn run_audit_with(
+    engine: &Engine,
+    base_cfg: &ExperimentConfig,
+    paper_literal_division: bool,
+    mode: ExecMode,
+) -> Result<(AuditReport, RunResult, RunResult)> {
     let mut cfg_c = base_cfg.clone();
     cfg_c.algo = Algo::Csgd;
     let mut cfg_l = base_cfg.clone();
     cfg_l.algo = Algo::Lsgd;
 
     let mut tc = Trainer::new(engine, cfg_c, false)?;
-    let rc = tc.run()?;
+    let rc = tc.run_with(RunOptions { lsgd: LsgdOptions::default(), mode })?;
     let mut tl = Trainer::new(engine, cfg_l, false)?;
-    let rl = tl.run_with(LsgdOptions { divide_at_local_reduce: paper_literal_division })?;
+    let rl = tl.run_with(RunOptions {
+        lsgd: LsgdOptions { divide_at_local_reduce: paper_literal_division },
+        mode,
+    })?;
 
     Ok((compare(&rc, &rl), rc, rl))
 }

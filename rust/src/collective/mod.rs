@@ -14,6 +14,24 @@
 //! buffers with the same grouping, which is exactly the paper's "same
 //! mathematical formula" claim made checkable.
 //!
+//! ## Determinism under concurrency
+//!
+//! The thread-per-rank runtime ([`crate::sched::exec`]) parallelizes
+//! reductions **across elements, never across the fold**: a buffer is
+//! split into contiguous chunks, each chunk is folded over the ranks
+//! in ascending id order by one thread, and chunks are joined back in
+//! index order ([`reduce_scaled_par`], [`add_assign_par`]). Every
+//! element therefore experiences exactly the serial left-fold chain
+//! `((g0 + g1) + g2) + g3`, so the parallel result is **bitwise equal**
+//! to the serial one for any thread count (property-tested in
+//! `rust/tests/parallel.rs`). Two rules keep it that way:
+//!
+//! 1. thread joins are ordered (chunk index / rank id), never
+//!    first-come-first-served;
+//! 2. no atomics or reduction trees on the audited path — an atomic
+//!    f32 accumulation would reintroduce scheduling-dependent
+//!    association, which is precisely what the audit must exclude.
+//!
 //! The ring-allreduce implementation exists for the baseline/ablation
 //! benches (it is what NCCL/CSGD would run); it reassociates, so it is
 //! *not* used on the equivalence-audited path.
@@ -58,6 +76,61 @@ pub fn reduce_scaled(buffers: &[&[f32]], scale_by: f32) -> Vec<f32> {
     acc
 }
 
+/// Chunk-parallel `acc[i] += src[i]` over `threads` OS threads.
+///
+/// Elementwise adds touch disjoint ranges, so the result is trivially
+/// bitwise-identical to [`add_assign`] for any thread count.
+pub fn add_assign_par(acc: &mut [f32], src: &[f32], threads: usize) {
+    assert_eq!(acc.len(), src.len(), "collective buffer length mismatch");
+    let t = threads.max(1);
+    if t == 1 || acc.len() < 2 {
+        return add_assign(acc, src);
+    }
+    let chunk = acc.len().div_ceil(t).max(1);
+    std::thread::scope(|s| {
+        for (a, b) in acc.chunks_mut(chunk).zip(src.chunks(chunk)) {
+            s.spawn(move || add_assign(a, b));
+        }
+    });
+}
+
+/// Chunk-parallel [`reduce_scaled`]: the index space is split into
+/// `threads` contiguous chunks; each thread left-folds **all** buffers
+/// over its chunk in ascending rank order, and chunks are joined in
+/// index order. Each element sees exactly the serial fold chain, so
+/// the output is bitwise-identical to `reduce_scaled` for any thread
+/// count (see module docs, "Determinism under concurrency").
+pub fn reduce_scaled_par(buffers: &[&[f32]], scale_by: f32, threads: usize) -> Vec<f32> {
+    assert!(!buffers.is_empty(), "reduce over zero buffers");
+    let n = buffers[0].len();
+    assert!(
+        buffers.iter().all(|b| b.len() == n),
+        "collective buffer length mismatch"
+    );
+    let t = threads.max(1);
+    if t == 1 || n < 2 {
+        return reduce_scaled(buffers, scale_by);
+    }
+    let mut out = vec![0.0_f32; n];
+    let chunk = n.div_ceil(t).max(1);
+    std::thread::scope(|s| {
+        for (ci, dst) in out.chunks_mut(chunk).enumerate() {
+            let lo = ci * chunk;
+            s.spawn(move || {
+                let hi = lo + dst.len();
+                dst.copy_from_slice(&buffers[0][lo..hi]);
+                for b in &buffers[1..] {
+                    add_assign(dst, &b[lo..hi]);
+                }
+                if scale_by != 1.0 {
+                    scale(dst, scale_by);
+                }
+            });
+        }
+    });
+    out
+}
+
 /// Reduce-to-root (Alg. 3 line 6): fold worker buffers into `root`.
 /// `root` is overwritten with `scale_by * Σ buffers` (rank order).
 pub fn reduce_to_root(root: &mut [f32], buffers: &[&[f32]], scale_by: f32) {
@@ -96,6 +169,41 @@ pub fn hierarchical_allreduce(
         .collect();
     let refs: Vec<&[f32]> = group_sums.iter().map(|v| v.as_slice()).collect();
     reduce_scaled(&refs, 1.0 / num_workers as f32)
+}
+
+/// Concurrent two-layer reduction, mirroring the thread-per-rank
+/// engine's fold structure: one task per group folds its workers
+/// (ascending worker id), tasks are joined in ascending group id, and
+/// the cross-group fold runs chunk-parallel. Bitwise-identical to
+/// [`hierarchical_allreduce`] for any `threads` (property-tested).
+pub fn hierarchical_allreduce_par(
+    per_group: &[Vec<&[f32]>],
+    num_workers: usize,
+    threads: usize,
+) -> Vec<f32> {
+    assert!(!per_group.is_empty());
+    let group_sums: Vec<Vec<f32>> = if threads <= 1 {
+        per_group.iter().map(|bufs| reduce_scaled(bufs, 1.0)).collect()
+    } else {
+        // cap in-flight group folds at `threads` (batch by group id);
+        // joins stay in ascending group order — NOT completion order —
+        // so the batching is invisible to the numerics
+        let mut sums = Vec::with_capacity(per_group.len());
+        for batch in per_group.chunks(threads) {
+            std::thread::scope(|s| {
+                let handles: Vec<_> = batch
+                    .iter()
+                    .map(|bufs| s.spawn(move || reduce_scaled(bufs, 1.0)))
+                    .collect();
+                for h in handles {
+                    sums.push(h.join().expect("group fold panicked"));
+                }
+            });
+        }
+        sums
+    };
+    let refs: Vec<&[f32]> = group_sums.iter().map(|v| v.as_slice()).collect();
+    reduce_scaled_par(&refs, 1.0 / num_workers as f32, threads)
 }
 
 /// Flat rank-order allreduce: `1/N · (((g0+g1)+g2)+…)`. The naive
@@ -190,5 +298,45 @@ mod tests {
     fn mismatched_lengths_panic() {
         let mut a = vec![0.0; 3];
         add_assign(&mut a, &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn chunk_parallel_reduce_bitwise_equals_serial() {
+        for &(k, n) in &[(2usize, 1usize), (3, 7), (5, 1000), (4, 4096)] {
+            let bufs: Vec<Vec<f32>> = (0..k as u64).map(|i| mk(n, 40 + i)).collect();
+            let refs: Vec<&[f32]> = bufs.iter().map(|v| v.as_slice()).collect();
+            let want = reduce_scaled(&refs, 1.0 / k as f32);
+            for threads in [1usize, 2, 3, 8, 64] {
+                let got = reduce_scaled_par(&refs, 1.0 / k as f32, threads);
+                assert_eq!(got, want, "k={k} n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_parallel_add_assign_bitwise_equals_serial() {
+        let a0 = mk(3001, 50);
+        let b = mk(3001, 51);
+        let mut want = a0.clone();
+        add_assign(&mut want, &b);
+        for threads in [1usize, 2, 7, 32] {
+            let mut got = a0.clone();
+            add_assign_par(&mut got, &b, threads);
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn concurrent_hierarchical_bitwise_equals_serial() {
+        // 3 groups × 2 workers (non-power-of-two on purpose)
+        let g: Vec<Vec<f32>> = (0..6).map(|i| mk(777, 60 + i)).collect();
+        let grouped: Vec<Vec<&[f32]>> = (0..3)
+            .map(|gi| g[gi * 2..(gi + 1) * 2].iter().map(|v| v.as_slice()).collect())
+            .collect();
+        let want = hierarchical_allreduce(&grouped, 6);
+        for threads in [1usize, 2, 4] {
+            let got = hierarchical_allreduce_par(&grouped, 6, threads);
+            assert_eq!(got, want, "threads={threads}");
+        }
     }
 }

@@ -9,7 +9,9 @@
 //! lsgd info     [--artifacts artifacts]
 //! ```
 //!
-//! Training/audit need `make artifacts` first; the `bench` and
+//! The default build trains on the built-in host backend (no
+//! artifacts needed); with `--features pjrt` plus `make artifacts`,
+//! training/audit execute the AOT HLO instead. The `bench` and
 //! `simulate` subcommands run on the calibrated cluster model alone.
 
 use std::path::PathBuf;
@@ -19,8 +21,8 @@ use anyhow::{Context, Result};
 use lsgd::audit;
 use lsgd::config::{Algo, ExperimentConfig};
 use lsgd::metrics::{FigureSeries, ScalingRow};
-use lsgd::runtime::{Engine, Manifest};
-use lsgd::sched::Trainer;
+use lsgd::runtime::{host, Engine, Manifest};
+use lsgd::sched::{ExecMode, RunOptions, Trainer};
 use lsgd::simnet::{self, des, AllreduceAlgo, ClusterModel};
 use lsgd::topology::Topology;
 use lsgd::util::cli::Args;
@@ -31,10 +33,12 @@ lsgd — Layered SGD (Yu et al. 2019) reproduction launcher
 USAGE: lsgd <SUBCOMMAND> [flags]
 
 SUBCOMMANDS:
-  train     train with CSGD (Alg. 2) or LSGD (Alg. 3) on real HLO compute
+  train     train with CSGD (Alg. 2) or LSGD (Alg. 3)
             --algo csgd|lsgd --preset P --groups G --workers W --steps K
             --eval-every K --seed S --io-latency SECS --train-samples N
-            --dedup-replicas --config FILE --curve-out FILE
+            --dedup-replicas --parallel --config FILE --curve-out FILE
+            (--parallel = thread-per-rank engine: one OS thread per
+             worker and per communicator; bitwise-identical trajectory)
   audit     run CSGD and LSGD back-to-back, compare trajectories bitwise
             (same flags as train, plus --paper-literal)
   bench     regenerate a paper figure from the calibrated cluster model
@@ -72,7 +76,7 @@ fn main() {
     }
 }
 
-const TRAIN_SWITCHES: &[&str] = &["dedup-replicas", "paper-literal"];
+const TRAIN_SWITCHES: &[&str] = &["dedup-replicas", "paper-literal", "parallel"];
 
 /// Shared train/audit flag handling → an [`ExperimentConfig`].
 fn parse_train_config(a: &Args, algo: Algo) -> Result<ExperimentConfig> {
@@ -103,16 +107,18 @@ fn cmd_train(rest: &[String]) -> Result<()> {
     let cfg = parse_train_config(&a, algo)?;
     let curve_out = a.opt_str("curve-out");
     let dedup = a.switch("dedup-replicas");
+    let parallel = a.switch("parallel");
     a.finish()?;
 
     eprintln!(
-        "loading artifacts preset={} from {}…",
+        "loading preset={} (artifacts dir {})…",
         cfg.preset,
         cfg.artifacts_dir.display()
     );
     let engine = Engine::load(&cfg.artifacts_dir, &cfg.preset)?;
+    let mode = if parallel { ExecMode::ThreadPerRank } else { ExecMode::Serial };
     eprintln!(
-        "engine up: platform={}, params={} ({:.1} MB grads), micro_batch={}",
+        "engine up: platform={}, params={} ({:.1} MB grads), micro_batch={}, exec={mode:?}",
         engine.platform(),
         engine.param_count(),
         engine.manifest.grad_bytes() / 1e6,
@@ -120,7 +126,7 @@ fn cmd_train(rest: &[String]) -> Result<()> {
     );
     let mut trainer = Trainer::new(&engine, cfg.clone(), dedup)?;
     let t0 = std::time::Instant::now();
-    let result = trainer.run()?;
+    let result = trainer.run_with(RunOptions { mode, ..Default::default() })?;
     let wall = t0.elapsed().as_secs_f64();
 
     let n = cfg.topology.num_workers();
@@ -158,12 +164,14 @@ fn cmd_audit(rest: &[String]) -> Result<()> {
     let a = Args::parse(rest, TRAIN_SWITCHES)?;
     let cfg = parse_train_config(&a, Algo::Lsgd)?;
     let paper_literal = a.switch("paper-literal");
+    let parallel = a.switch("parallel");
     a.finish()?;
 
     let engine = Engine::load(&cfg.artifacts_dir, &cfg.preset)?;
-    let (report, rc, rl) = audit::run_audit(&engine, &cfg, paper_literal)?;
+    let mode = if parallel { ExecMode::ThreadPerRank } else { ExecMode::Serial };
+    let (report, rc, rl) = audit::run_audit_with(&engine, &cfg, paper_literal, mode)?;
     println!(
-        "audit over {} steps (division placement: {})",
+        "audit over {} steps (division placement: {}; engine: {mode:?})",
         report.steps,
         if paper_literal { "paper-literal (Alg. 3 line 6)" } else { "bitwise-aligned" }
     );
@@ -367,13 +375,25 @@ fn cmd_info(rest: &[String]) -> Result<()> {
                 );
             }
         }
-        Err(e) => println!("no artifacts: {e:#}"),
+        Err(e) => println!("no AOT artifacts ({e:#})"),
     }
-    let client = xla::PjRtClient::cpu()?;
+    println!("built-in host presets:");
+    for name in host::preset_names() {
+        let e = Engine::host(name)?;
+        println!(
+            "  {name}: {} params ({:.1} MB grads), micro_batch={}, d={} V={} S={}",
+            e.param_count(),
+            e.manifest.grad_bytes() / 1e6,
+            e.micro_batch(),
+            e.manifest.config.d_model,
+            e.manifest.config.vocab,
+            e.manifest.config.seq
+        );
+    }
     println!(
-        "PJRT platform: {} ({} devices)",
-        client.platform_name(),
-        client.device_count()
+        "default backend platform: {} ({} cpu threads available)",
+        Engine::host("tiny")?.platform(),
+        std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1)
     );
     Ok(())
 }

@@ -34,6 +34,18 @@ impl PhaseTimers {
         out
     }
 
+    /// Fold another timer set into this one (the thread-per-rank
+    /// runtime keeps one `PhaseTimers` per rank thread and merges them
+    /// at join time — totals add, counts add).
+    pub fn merge(&mut self, other: &PhaseTimers) {
+        for (name, secs) in &other.totals {
+            *self.totals.entry(name.clone()).or_default() += secs;
+        }
+        for (name, n) in &other.counts {
+            *self.counts.entry(name.clone()).or_default() += n;
+        }
+    }
+
     pub fn total(&self, name: &str) -> f64 {
         self.totals.get(name).copied().unwrap_or(0.0)
     }
@@ -192,6 +204,19 @@ mod tests {
         });
         assert_eq!(v, 42);
         assert!(t.total("work") >= 0.004);
+    }
+
+    #[test]
+    fn merge_adds_totals_and_counts() {
+        let mut a = PhaseTimers::new();
+        a.add("compute", 1.0);
+        let mut b = PhaseTimers::new();
+        b.add("compute", 2.0);
+        b.add("io", 0.5);
+        a.merge(&b);
+        assert_eq!(a.total("compute"), 3.0);
+        assert_eq!(a.mean("compute"), 1.5);
+        assert_eq!(a.total("io"), 0.5);
     }
 
     #[test]

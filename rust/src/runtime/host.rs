@@ -1,0 +1,389 @@
+//! Pure-Rust host backend: a tiny next-token LM with exact, orderable
+//! floating-point semantics.
+//!
+//! The default (offline) build has no XLA/PJRT, so the schedulers need
+//! a compute backend that exists entirely in this crate. The model is
+//! a one-layer bigram language model
+//!
+//! ```text
+//! logits(t) = embed[token_t] · W + b        (softmax cross-entropy
+//! loss      = mean_t  −log p(token_{t+1})    against the next token)
+//! ```
+//!
+//! with the flat parameter layout `[embed (V×D) | W (D×V) | b (V)]`.
+//! `embed` is seeded uniform(−0.5, 0.5), `W` and `b` start at zero, so
+//! the initial loss is exactly `ln V` (uniform logits) — the same
+//! sanity anchor the AOT transformer presets had.
+//!
+//! Determinism contract: every accumulation below is a fixed-order
+//! loop over (sample, position, feature). `grad_step` is a pure
+//! function of `(params, tokens)` — no interior mutability, no
+//! platform intrinsics beyond `f32::exp`/`f32::ln` (libm, same answer
+//! on every call site) — so any thread of the parallel runtime
+//! computes bit-identical gradients for the same worker shard. This is
+//! what lets [`crate::sched::exec`] fan workers out across OS threads
+//! without touching the §4.2 bitwise-equivalence audit.
+
+use anyhow::Result;
+
+use super::manifest::{ModelConfig, OptimizerBaked, ParamRow, PresetManifest};
+use crate::data::Rng;
+use crate::optim::HostSgd;
+
+/// Built-in preset dimensions: `(name, d_model)`. All presets share
+/// vocab 256, seq 32 (33 tokens/sample) and micro-batch 4 so corpora
+/// are interchangeable; only capacity varies.
+const PRESETS: &[(&str, usize)] = &[("tiny", 32), ("small", 128), ("base", 512)];
+
+/// Build the manifest for a built-in host preset (no artifacts dir
+/// involved — `artifacts` entries are labelled `builtin:`).
+pub fn preset_manifest(name: &str) -> Option<PresetManifest> {
+    let &(_, d) = PRESETS.iter().find(|(n, _)| *n == name)?;
+    let (vocab, seq, micro) = (256usize, 32usize, 4usize);
+    let params = vec![
+        ParamRow { name: "embed".into(), shape: vec![vocab, d], offset: 0, size: vocab * d },
+        ParamRow { name: "w_out".into(), shape: vec![d, vocab], offset: vocab * d, size: d * vocab },
+        ParamRow {
+            name: "b_out".into(),
+            shape: vec![vocab],
+            offset: 2 * vocab * d,
+            size: vocab,
+        },
+    ];
+    let mut artifacts = std::collections::BTreeMap::new();
+    for ep in ["grad_step", "sgd_update", "reduce2", "reduce4", "eval_step"] {
+        artifacts.insert(ep.to_string(), format!("builtin:{name}:{ep}"));
+    }
+    Some(PresetManifest {
+        config: ModelConfig {
+            name: name.to_string(),
+            layers: 1,
+            d_model: d,
+            heads: 1,
+            d_ff: 0,
+            vocab,
+            seq,
+        },
+        param_count: 2 * vocab * d + vocab,
+        micro_batch: micro,
+        tokens_per_sample: seq + 1,
+        artifacts,
+        init: format!("builtin:{name}:init"),
+        params,
+        optimizer: OptimizerBaked { momentum: 0.9, weight_decay: 1e-4 },
+    })
+}
+
+/// Names of the built-in presets (for CLI listings).
+pub fn preset_names() -> Vec<&'static str> {
+    PRESETS.iter().map(|(n, _)| *n).collect()
+}
+
+/// The host compute backend for one preset. Stateless after
+/// construction (all methods take `&self` and own their outputs), so
+/// it is `Send + Sync` and shareable across the thread-per-rank
+/// runtime without locks.
+#[derive(Debug, Clone)]
+pub struct HostModel {
+    d: usize,
+    vocab: usize,
+    /// tokens per sample = seq + 1
+    spl: usize,
+    micro: usize,
+    param_count: usize,
+    init: Vec<f32>,
+    sgd: HostSgd,
+}
+
+impl HostModel {
+    /// Build a preset's backend; errors on unknown names.
+    pub fn new(manifest: &PresetManifest) -> Result<Self> {
+        let d = manifest.config.d_model;
+        let vocab = manifest.config.vocab;
+        let param_count = manifest.param_count;
+        anyhow::ensure!(
+            param_count == 2 * vocab * d + vocab,
+            "host backend expects [embed|W|b] layout ({} params), manifest says {param_count}",
+            2 * vocab * d + vocab
+        );
+        // Deterministic init, seeded per preset: embed uniform(-0.5, 0.5),
+        // W and b zero (=> exact ln V initial loss).
+        let mut seed = 0xcbf29ce484222325_u64;
+        for b in manifest.config.name.bytes() {
+            seed ^= b as u64;
+            seed = seed.wrapping_mul(0x100000001b3);
+        }
+        let mut rng = Rng::new(seed);
+        let mut init = vec![0.0_f32; param_count];
+        for v in init[..vocab * d].iter_mut() {
+            *v = rng.f64() as f32 - 0.5;
+        }
+        Ok(Self {
+            d,
+            vocab,
+            spl: manifest.tokens_per_sample,
+            micro: manifest.micro_batch,
+            param_count,
+            init,
+            sgd: HostSgd::new(
+                manifest.optimizer.momentum as f32,
+                manifest.optimizer.weight_decay as f32,
+            ),
+        })
+    }
+
+    pub fn init_params(&self) -> Vec<f32> {
+        self.init.clone()
+    }
+
+    fn check_shapes(&self, params: &[f32], tokens: &[i32]) -> Result<()> {
+        anyhow::ensure!(
+            params.len() == self.param_count,
+            "params length {} != param_count {}",
+            params.len(),
+            self.param_count
+        );
+        anyhow::ensure!(
+            tokens.len() == self.micro * self.spl,
+            "token batch must be {}x{}, got {} elements",
+            self.micro,
+            self.spl,
+            tokens.len()
+        );
+        anyhow::ensure!(
+            tokens.iter().all(|&t| (t as usize) < self.vocab && t >= 0),
+            "token id out of vocab range"
+        );
+        Ok(())
+    }
+
+    /// Forward+backward over one micro-batch shard: (flat gradient,
+    /// mean loss). Fixed accumulation order — see module docs.
+    pub fn grad_step(&self, params: &[f32], tokens: &[i32]) -> Result<(Vec<f32>, f32)> {
+        self.check_shapes(params, tokens)?;
+        let (v, d, spl) = (self.vocab, self.d, self.spl);
+        let embed = &params[..v * d];
+        let w = &params[v * d..2 * v * d];
+        let b = &params[2 * v * d..];
+        let mut grad = vec![0.0_f32; self.param_count];
+        let n_preds = (self.micro * (spl - 1)) as f32;
+        let mut loss_sum = 0.0_f32;
+        let mut logits = vec![0.0_f32; v];
+        let mut dl = vec![0.0_f32; v];
+        for i in 0..self.micro {
+            let row = &tokens[i * spl..(i + 1) * spl];
+            for t in 0..spl - 1 {
+                let tok = row[t] as usize;
+                let tgt = row[t + 1] as usize;
+                let x = &embed[tok * d..(tok + 1) * d];
+                // logits = x·W + b
+                logits.copy_from_slice(b);
+                for (k, &xk) in x.iter().enumerate() {
+                    let wrow = &w[k * v..(k + 1) * v];
+                    for (l, &wv) in logits.iter_mut().zip(wrow.iter()) {
+                        *l += xk * wv;
+                    }
+                }
+                // softmax + cross-entropy
+                let m = logits.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+                let mut z = 0.0_f32;
+                for (e, &l) in dl.iter_mut().zip(logits.iter()) {
+                    *e = (l - m).exp();
+                    z += *e;
+                }
+                loss_sum += z.ln() - (logits[tgt] - m);
+                // dl = (softmax - onehot) / n_preds
+                for e in dl.iter_mut() {
+                    *e /= z * n_preds;
+                }
+                dl[tgt] -= 1.0 / n_preds;
+                // backward: b, W, embed — in that fixed order
+                {
+                    let gb = &mut grad[2 * v * d..];
+                    for (g, &e) in gb.iter_mut().zip(dl.iter()) {
+                        *g += e;
+                    }
+                }
+                {
+                    let gw = &mut grad[v * d..2 * v * d];
+                    for (k, &xk) in x.iter().enumerate() {
+                        let grow = &mut gw[k * v..(k + 1) * v];
+                        for (g, &e) in grow.iter_mut().zip(dl.iter()) {
+                            *g += xk * e;
+                        }
+                    }
+                }
+                {
+                    let ge = &mut grad[tok * d..(tok + 1) * d];
+                    for (k, g) in ge.iter_mut().enumerate() {
+                        let wrow = &w[k * v..(k + 1) * v];
+                        let mut acc = 0.0_f32;
+                        for (&wv, &e) in wrow.iter().zip(dl.iter()) {
+                            acc += wv * e;
+                        }
+                        *g += acc;
+                    }
+                }
+            }
+        }
+        Ok((grad, loss_sum / n_preds))
+    }
+
+    /// Fused SGD+momentum+weight-decay update (mirror of the L1
+    /// kernel's semantics via [`HostSgd`]).
+    pub fn sgd_update(
+        &self,
+        params: &[f32],
+        momentum: &[f32],
+        grad: &[f32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        anyhow::ensure!(
+            params.len() == self.param_count
+                && momentum.len() == self.param_count
+                && grad.len() == self.param_count,
+            "sgd_update buffer length mismatch"
+        );
+        let mut w = params.to_vec();
+        let mut m = momentum.to_vec();
+        self.sgd.step(&mut w, &mut m, grad, lr);
+        Ok((w, m))
+    }
+
+    /// Validation forward pass: (mean loss, top-1 correct count).
+    pub fn eval_step(&self, params: &[f32], tokens: &[i32]) -> Result<(f32, i64)> {
+        self.check_shapes(params, tokens)?;
+        let (v, d, spl) = (self.vocab, self.d, self.spl);
+        let embed = &params[..v * d];
+        let w = &params[v * d..2 * v * d];
+        let b = &params[2 * v * d..];
+        let n_preds = (self.micro * (spl - 1)) as f32;
+        let mut loss_sum = 0.0_f32;
+        let mut correct = 0_i64;
+        let mut logits = vec![0.0_f32; v];
+        for i in 0..self.micro {
+            let row = &tokens[i * spl..(i + 1) * spl];
+            for t in 0..spl - 1 {
+                let tok = row[t] as usize;
+                let tgt = row[t + 1] as usize;
+                let x = &embed[tok * d..(tok + 1) * d];
+                logits.copy_from_slice(b);
+                for (k, &xk) in x.iter().enumerate() {
+                    let wrow = &w[k * v..(k + 1) * v];
+                    for (l, &wv) in logits.iter_mut().zip(wrow.iter()) {
+                        *l += xk * wv;
+                    }
+                }
+                let m = logits.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+                let mut z = 0.0_f32;
+                let mut argmax = 0usize;
+                for (j, &l) in logits.iter().enumerate() {
+                    z += (l - m).exp();
+                    if l > logits[argmax] {
+                        argmax = j;
+                    }
+                }
+                loss_sum += z.ln() - (logits[tgt] - m);
+                if argmax == tgt {
+                    correct += 1;
+                }
+            }
+        }
+        Ok((loss_sum / n_preds, correct))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> HostModel {
+        HostModel::new(&preset_manifest("tiny").unwrap()).unwrap()
+    }
+
+    fn tokens(seed: u64, micro: usize, spl: usize, vocab: u64) -> Vec<i32> {
+        let mut rng = Rng::new(seed);
+        (0..micro * spl).map(|_| rng.below(vocab) as i32).collect()
+    }
+
+    #[test]
+    fn preset_manifests_validate() {
+        for name in preset_names() {
+            let m = preset_manifest(name).unwrap();
+            m.validate().unwrap();
+            assert_eq!(m.param_count, 2 * m.config.vocab * m.config.d_model + m.config.vocab);
+        }
+        assert!(preset_manifest("nope").is_none());
+    }
+
+    #[test]
+    fn init_loss_is_ln_vocab() {
+        let hm = model();
+        let p = hm.init_params();
+        let (_, loss) = hm.grad_step(&p, &tokens(1, 4, 33, 256)).unwrap();
+        assert!((loss - 256.0_f32.ln()).abs() < 1e-3, "loss {loss}");
+    }
+
+    #[test]
+    fn grad_step_is_pure() {
+        let hm = model();
+        let p = hm.init_params();
+        let t = tokens(2, 4, 33, 256);
+        let (g1, l1) = hm.grad_step(&p, &t).unwrap();
+        let (g2, l2) = hm.grad_step(&p, &t).unwrap();
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        // check d(loss)/d(param) for a few params against central
+        // differences on a shrunk model state
+        let hm = model();
+        let mut p = hm.init_params();
+        // move W off zero so embed grads are nonzero too
+        let mut rng = Rng::new(7);
+        for v in p.iter_mut() {
+            *v += (rng.f64() as f32 - 0.5) * 0.02;
+        }
+        let t = tokens(3, 4, 33, 256);
+        let (g, _) = hm.grad_step(&p, &t).unwrap();
+        let mut checked = 0;
+        for idx in [0usize, 5, 8192, 8192 + 33, 16640 - 1] {
+            let eps = 1e-2_f32;
+            let mut pp = p.clone();
+            pp[idx] += eps;
+            let (_, lp) = hm.grad_step(&pp, &t).unwrap();
+            pp[idx] = p[idx] - eps;
+            let (_, lm) = hm.grad_step(&pp, &t).unwrap();
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - g[idx]).abs() < 2e-3 + 0.05 * g[idx].abs(),
+                "param {idx}: finite-diff {fd} vs grad {}",
+                g[idx]
+            );
+            checked += 1;
+        }
+        assert_eq!(checked, 5);
+    }
+
+    #[test]
+    fn eval_loss_matches_grad_loss() {
+        let hm = model();
+        let p = hm.init_params();
+        let t = tokens(4, 4, 33, 256);
+        let (_, lg) = hm.grad_step(&p, &t).unwrap();
+        let (le, correct) = hm.eval_step(&p, &t).unwrap();
+        assert!((lg - le).abs() < 1e-5);
+        assert!((0..=(4 * 32) as i64).contains(&correct));
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let hm = model();
+        let p = hm.init_params();
+        assert!(hm.grad_step(&p[..10], &tokens(5, 4, 33, 256)).is_err());
+        assert!(hm.grad_step(&p, &tokens(5, 4, 7, 256)).is_err());
+        assert!(hm.grad_step(&p, &[300_i32; 4 * 33]).is_err());
+    }
+}

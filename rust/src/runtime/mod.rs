@@ -1,70 +1,87 @@
-//! PJRT runtime: load the AOT HLO-text artifacts and execute them.
+//! Execution runtime: the compute backend behind both schedulers.
 //!
-//! The only place the crate touches XLA. One [`Engine`] per model
-//! preset: it compiles each entrypoint **once** (all simulated workers
-//! share the executables — they run the identical floating-point
-//! program, which the bitwise-equivalence audit requires) and exposes
-//! typed wrappers that marshal flat `f32`/`i32` host buffers through
-//! `xla::Literal`s.
+//! One [`Engine`] per model preset. Two backends implement the same
+//! typed surface (`grad_step`, `sgd_update`, `reduce2`/`reduce4`/
+//! [`Engine::reduce_fold`], `eval_step`):
 //!
-//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): this
-//! image's xla_extension 0.5.1 rejects jax≥0.5 serialized protos
-//! (64-bit instruction ids), the text parser reassigns ids. See
-//! `python/compile/aot.py` and /opt/xla-example/README.md.
+//! * **host** (default) — the pure-Rust LM in [`host`]: no external
+//!   deps, fully deterministic, `Send + Sync`, so the thread-per-rank
+//!   parallel runtime ([`crate::sched::exec`]) can share one `&Engine`
+//!   across every worker thread without locks.
+//! * **pjrt** (`--features pjrt`) — the original XLA/PJRT path in
+//!   [`pjrt`]: loads the AOT HLO-text artifacts lowered by
+//!   `python/compile/aot.py` and executes them on the PJRT CPU client.
+//!   Requires vendoring the `xla` crate (see Cargo.toml); the offline
+//!   image this repo targets does not carry it.
+//!
+//! Both backends honour the determinism contract of
+//! [`crate::collective`]: reductions are rank-ordered left folds, so
+//! scheduler trajectories stay bitwise-comparable regardless of which
+//! backend (or how many threads) executed them.
 
+pub mod host;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 pub use manifest::{Manifest, ParamRow, PresetManifest};
 
 use std::path::Path;
 
 use anyhow::{Context, Result};
-use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
-/// Compiled executables + manifest for one model preset.
+enum Backend {
+    Host(host::HostModel),
+    #[cfg(feature = "pjrt")]
+    Pjrt(pjrt::PjrtBackend),
+}
+
+/// Compiled/instantiated executables + manifest for one model preset.
 pub struct Engine {
-    client: PjRtClient,
-    grad_step: PjRtLoadedExecutable,
-    sgd_update: PjRtLoadedExecutable,
-    reduce2: PjRtLoadedExecutable,
-    reduce4: PjRtLoadedExecutable,
-    eval_step: PjRtLoadedExecutable,
     /// Static shape/offset info for this preset.
     pub manifest: PresetManifest,
-    artifacts_dir: std::path::PathBuf,
+    backend: Backend,
 }
 
 impl Engine {
-    /// Load `manifest.json` from `artifacts_dir` and compile every
-    /// entrypoint of `preset` on the PJRT CPU client.
+    /// Load a preset. On the default build this is the built-in host
+    /// backend (`artifacts_dir` is unused — host presets are compiled
+    /// in). On a `pjrt` build the AOT artifacts are **required**: a
+    /// missing `manifest.json` is a hard error, not a silent fallback
+    /// to the (much smaller) host model — training the wrong model
+    /// quietly is worse than failing. Use [`Engine::host`] from a pjrt
+    /// build to opt into the host backend explicitly.
     pub fn load(artifacts_dir: &Path, preset: &str) -> Result<Self> {
-        let manifest = Manifest::load(artifacts_dir)?
-            .preset(preset)
-            .with_context(|| format!("preset {preset:?} not in manifest (run `make artifacts`)"))?;
-        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let compile = |name: &str| -> Result<PjRtLoadedExecutable> {
-            let file = manifest
-                .artifacts
-                .get(name)
-                .with_context(|| format!("artifact {name} missing from manifest"))?;
-            let path = artifacts_dir.join(file);
-            let proto = HloModuleProto::from_text_file(&path)
-                .with_context(|| format!("parsing {}", path.display()))?;
-            let comp = XlaComputation::from_proto(&proto);
-            client
-                .compile(&comp)
-                .with_context(|| format!("compiling {name}"))
-        };
-        Ok(Self {
-            grad_step: compile("grad_step")?,
-            sgd_update: compile("sgd_update")?,
-            reduce2: compile("reduce2")?,
-            reduce4: compile("reduce4")?,
-            eval_step: compile("eval_step")?,
-            client,
-            manifest,
-            artifacts_dir: artifacts_dir.to_path_buf(),
-        })
+        #[cfg(feature = "pjrt")]
+        {
+            anyhow::ensure!(
+                artifacts_dir.join("manifest.json").exists(),
+                "no manifest.json in {} — run `make artifacts`, or call Engine::host() \
+                 for the built-in backend",
+                artifacts_dir.display()
+            );
+            let manifest = Manifest::load(artifacts_dir)?
+                .preset(preset)
+                .with_context(|| format!("preset {preset:?} not in manifest"))?;
+            let backend = pjrt::PjrtBackend::new(artifacts_dir, &manifest)?;
+            Ok(Self { manifest, backend: Backend::Pjrt(backend) })
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let _ = artifacts_dir; // host presets are built in
+            Self::host(preset)
+        }
+    }
+
+    /// Build the pure-Rust host backend for a built-in preset
+    /// (`tiny` / `small` / `base`).
+    pub fn host(preset: &str) -> Result<Self> {
+        let manifest = host::preset_manifest(preset).with_context(|| {
+            format!("unknown host preset {preset:?}; available: {:?}", host::preset_names())
+        })?;
+        manifest.validate()?;
+        let model = host::HostModel::new(&manifest)?;
+        Ok(Self { manifest, backend: Backend::Host(model) })
     }
 
     /// Number of flat parameters for this preset.
@@ -72,7 +89,7 @@ impl Engine {
         self.manifest.param_count
     }
 
-    /// Per-worker micro-batch the artifacts were lowered for.
+    /// Per-worker micro-batch the preset is fixed to.
     pub fn micro_batch(&self) -> usize {
         self.manifest.micro_batch
     }
@@ -82,71 +99,35 @@ impl Engine {
         self.manifest.tokens_per_sample
     }
 
-    /// PJRT platform string (diagnostics).
+    /// Backend platform string (diagnostics).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match &self.backend {
+            Backend::Host(_) => "host-cpu".to_string(),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(b) => b.platform(),
+        }
     }
 
-    /// The seed-0 initial parameter vector emitted at AOT time.
+    /// The deterministic initial parameter vector for this preset.
     pub fn init_params(&self) -> Result<Vec<f32>> {
-        let path = self.artifacts_dir.join(&self.manifest.init);
-        let bytes = std::fs::read(&path)
-            .with_context(|| format!("reading {}", path.display()))?;
-        anyhow::ensure!(
-            bytes.len() == self.manifest.param_count * 4,
-            "init file size mismatch: {} bytes for {} params",
-            bytes.len(),
-            self.manifest.param_count
-        );
-        Ok(bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect())
-    }
-
-    // All executions go through `execute_b` over buffers this Engine
-    // uploads itself: the crate's literal-taking `execute` *leaks every
-    // input device buffer* (xla-0.1.6 xla_rs.cc `execute`:
-    // `buffer.release()` with no matching delete — ~payload×k bytes per
-    // call, OOM after ~100 training steps), and the literal staging
-    // copy is pure overhead anyway. See EXPERIMENTS.md §Perf.
-
-    fn upload_tokens(&self, tokens: &[i32]) -> Result<PjRtBuffer> {
-        let b = self.manifest.micro_batch;
-        let s1 = self.manifest.tokens_per_sample;
-        anyhow::ensure!(
-            tokens.len() == b * s1,
-            "token batch must be {b}x{s1}, got {} elements",
-            tokens.len()
-        );
-        Ok(self.client.buffer_from_host_buffer(tokens, &[b, s1], None)?)
-    }
-
-    fn upload_params(&self, v: &[f32], what: &str) -> Result<PjRtBuffer> {
-        anyhow::ensure!(
-            v.len() == self.manifest.param_count,
-            "{what} length {} != param_count {}",
-            v.len(),
-            self.manifest.param_count
-        );
-        Ok(self.client.buffer_from_host_buffer(v, &[v.len()], None)?)
-    }
-
-    fn upload_scalar(&self, v: f32) -> Result<PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(&[v], &[1], None)?)
+        match &self.backend {
+            Backend::Host(m) => Ok(m.init_params()),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(b) => b.init_params(),
+        }
     }
 
     /// Worker compute phase (Alg. 3 lines 3–5): gradient + mean loss
     /// over one micro-batch shard.
     pub fn grad_step(&self, params: &[f32], tokens: &[i32]) -> Result<(Vec<f32>, f32)> {
-        let p = self.upload_params(params, "params")?;
-        let t = self.upload_tokens(tokens)?;
-        let result = self.grad_step.execute_b(&[&p, &t])?[0][0].to_literal_sync()?;
-        let (grad, loss) = result.to_tuple2()?;
-        Ok((grad.to_vec::<f32>()?, loss.get_first_element::<f32>()?))
+        match &self.backend {
+            Backend::Host(m) => m.grad_step(params, tokens),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(b) => b.grad_step(params, tokens),
+        }
     }
 
-    /// Deferred fused update (Alg. 3 line 10) via the L1 Pallas kernel.
+    /// Deferred fused update (Alg. 3 line 10).
     pub fn sgd_update(
         &self,
         params: &[f32],
@@ -154,96 +135,68 @@ impl Engine {
         grad: &[f32],
         lr: f32,
     ) -> Result<(Vec<f32>, Vec<f32>)> {
-        let p = self.upload_params(params, "params")?;
-        let m = self.upload_params(momentum, "momentum")?;
-        let g = self.upload_params(grad, "grad")?;
-        let lr = self.upload_scalar(lr)?;
-        let result =
-            self.sgd_update.execute_b(&[&p, &m, &g, &lr])?[0][0].to_literal_sync()?;
-        let (w2, m2) = result.to_tuple2()?;
-        Ok((w2.to_vec::<f32>()?, m2.to_vec::<f32>()?))
+        match &self.backend {
+            Backend::Host(m) => m.sgd_update(params, momentum, grad, lr),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(b) => b.sgd_update(params, momentum, grad, lr),
+        }
     }
 
-    /// `scale · (a + b)` via the L1 reduce kernel (fixed association).
+    /// `scale · (a + b)` with the fixed left-fold association.
     pub fn reduce2(&self, a: &[f32], b: &[f32], scale: f32) -> Result<Vec<f32>> {
         let p = self.manifest.param_count;
         anyhow::ensure!(a.len() == p && b.len() == p, "reduce2 buffer length mismatch");
-        let mut stacked = Vec::with_capacity(2 * p);
-        stacked.extend_from_slice(a);
-        stacked.extend_from_slice(b);
-        let st = self.client.buffer_from_host_buffer(&stacked, &[2, p], None)?;
-        let sc = self.upload_scalar(scale)?;
-        let result = self.reduce2.execute_b(&[&st, &sc])?[0][0].to_literal_sync()?;
-        Ok(result.to_tuple1()?.to_vec::<f32>()?)
+        match &self.backend {
+            Backend::Host(_) => Ok(crate::collective::reduce_scaled(&[a, b], scale)),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(be) => be.reduce2(a, b, scale),
+        }
     }
 
-    /// `scale · (((a+b)+c)+d)` via the 4-way kernel.
+    /// `scale · (((a+b)+c)+d)` — the 4-way fold.
     pub fn reduce4(&self, bufs: [&[f32]; 4], scale: f32) -> Result<Vec<f32>> {
         let p = self.manifest.param_count;
-        let mut stacked = Vec::with_capacity(4 * p);
-        for b in bufs {
-            anyhow::ensure!(b.len() == p, "reduce4 buffer length mismatch");
-            stacked.extend_from_slice(b);
+        anyhow::ensure!(bufs.iter().all(|b| b.len() == p), "reduce4 buffer length mismatch");
+        match &self.backend {
+            Backend::Host(_) => Ok(crate::collective::reduce_scaled(&bufs, scale)),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(be) => be.reduce4(bufs, scale),
         }
-        let st = self.client.buffer_from_host_buffer(&stacked, &[4, p], None)?;
-        let sc = self.upload_scalar(scale)?;
-        let result = self.reduce4.execute_b(&[&st, &sc])?[0][0].to_literal_sync()?;
-        Ok(result.to_tuple1()?.to_vec::<f32>()?)
     }
 
-    /// Rank-order left fold of any fan-in, built from the 4/2-way
-    /// kernels. The association is identical to folding one buffer at
-    /// a time (kernel sums rows in index order), preserving the bitwise
-    /// contract (python/tests: `test_pairwise_fold_equals_flat_fold`).
+    /// Rank-order left fold of any fan-in. The association is
+    /// identical to folding one buffer at a time in index order —
+    /// the bitwise contract both schedulers and the parallel runtime
+    /// rely on (DESIGN.md §6).
     pub fn reduce_fold(&self, bufs: &[&[f32]], scale: f32) -> Result<Vec<f32>> {
         anyhow::ensure!(!bufs.is_empty(), "reduce over zero buffers");
-        if bufs.len() == 1 {
-            let mut out = bufs[0].to_vec();
-            if scale != 1.0 {
-                crate::collective::scale(&mut out, scale);
+        match &self.backend {
+            Backend::Host(_) => {
+                let len = bufs[0].len();
+                anyhow::ensure!(
+                    bufs.iter().all(|b| b.len() == len),
+                    "reduce_fold buffer length mismatch"
+                );
+                Ok(crate::collective::reduce_scaled(bufs, scale))
             }
-            return Ok(out);
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(be) => be.reduce_fold(bufs, scale),
         }
-        let mut i;
-        let mut acc = if bufs.len() >= 4 {
-            i = 4;
-            self.reduce4([bufs[0], bufs[1], bufs[2], bufs[3]], 1.0)?
-        } else {
-            i = 2;
-            self.reduce2(bufs[0], bufs[1], 1.0)?
-        };
-        while i < bufs.len() {
-            if bufs.len() - i >= 3 {
-                acc = self.reduce4([&acc, bufs[i], bufs[i + 1], bufs[i + 2]], 1.0)?;
-                i += 3;
-            } else {
-                acc = self.reduce2(&acc, bufs[i], 1.0)?;
-                i += 1;
-            }
-        }
-        if scale != 1.0 {
-            crate::collective::scale(&mut acc, scale);
-        }
-        Ok(acc)
     }
 
     /// Validation: (mean loss, top-1 correct count) on one batch.
     pub fn eval_step(&self, params: &[f32], tokens: &[i32]) -> Result<(f32, i64)> {
-        let p = self.upload_params(params, "params")?;
-        let t = self.upload_tokens(tokens)?;
-        let result = self.eval_step.execute_b(&[&p, &t])?[0][0].to_literal_sync()?;
-        let (loss, correct) = result.to_tuple2()?;
-        Ok((
-            loss.get_first_element::<f32>()?,
-            correct.get_first_element::<i32>()? as i64,
-        ))
+        match &self.backend {
+            Backend::Host(m) => m.eval_step(params, tokens),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(b) => b.eval_step(params, tokens),
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
-    // Engine tests that need artifacts live in rust/tests/runtime.rs
-    // (integration scope, after `make artifacts`). Here: pure helpers.
+    use super::*;
 
     #[test]
     fn f32_le_decode_matches() {
@@ -254,5 +207,18 @@ mod tests {
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
         assert_eq!(back, v);
+    }
+
+    #[test]
+    fn engine_is_shareable_across_threads() {
+        // the compile-time property the thread-per-rank runtime needs
+        fn assert_sync<T: Send + Sync>() {}
+        #[cfg(not(feature = "pjrt"))]
+        assert_sync::<Engine>();
+    }
+
+    #[test]
+    fn unknown_preset_rejected() {
+        assert!(Engine::host("nope").is_err());
     }
 }

@@ -1,0 +1,240 @@
+//! XLA/PJRT backend (feature `pjrt`): load the AOT HLO-text artifacts
+//! and execute them on the PJRT CPU client.
+//!
+//! The only place the crate touches XLA. Entry points are compiled
+//! **once** (all simulated workers share the executables — they run
+//! the identical floating-point program, which the bitwise-equivalence
+//! audit requires) and exposed as typed wrappers that marshal flat
+//! `f32`/`i32` host buffers.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): the
+//! targeted xla_extension 0.5.1 rejects jax≥0.5 serialized protos
+//! (64-bit instruction ids); the text parser reassigns ids. See
+//! `python/compile/aot.py`.
+//!
+//! ## Threading
+//!
+//! The `xla` crate's handles carry raw pointers without `Send`/`Sync`
+//! markers, but the underlying PJRT CPU client is thread-safe and all
+//! access here is serialized through one `Mutex` anyway. The unsafe
+//! marker impls below record exactly that argument; they exist so
+//! [`super::Engine`] stays `Sync` and the thread-per-rank runtime
+//! ([`crate::sched::exec`]) compiles identically under both backends.
+//! PJRT calls from parallel workers serialize on the lock (no compute
+//! overlap on this backend — the host backend is the parallel one).
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::PresetManifest;
+
+struct Inner {
+    client: PjRtClient,
+    grad_step: PjRtLoadedExecutable,
+    sgd_update: PjRtLoadedExecutable,
+    reduce2: PjRtLoadedExecutable,
+    reduce4: PjRtLoadedExecutable,
+    eval_step: PjRtLoadedExecutable,
+}
+
+/// Compiled executables for one preset, serialized behind a lock.
+pub struct PjrtBackend {
+    inner: Mutex<Inner>,
+    manifest: PresetManifest,
+    artifacts_dir: PathBuf,
+}
+
+// SAFETY: every use of the contained raw PJRT handles goes through the
+// Mutex (one executor at a time), and the PJRT CPU client itself is
+// documented thread-safe. See module docs.
+unsafe impl Send for PjrtBackend {}
+unsafe impl Sync for PjrtBackend {}
+
+impl PjrtBackend {
+    /// Compile every entrypoint of `manifest` on the PJRT CPU client.
+    pub fn new(artifacts_dir: &Path, manifest: &PresetManifest) -> Result<Self> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let compile = |name: &str| -> Result<PjRtLoadedExecutable> {
+            let file = manifest
+                .artifacts
+                .get(name)
+                .with_context(|| format!("artifact {name} missing from manifest"))?;
+            let path = artifacts_dir.join(file);
+            let proto = HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = XlaComputation::from_proto(&proto);
+            client.compile(&comp).with_context(|| format!("compiling {name}"))
+        };
+        let inner = Inner {
+            grad_step: compile("grad_step")?,
+            sgd_update: compile("sgd_update")?,
+            reduce2: compile("reduce2")?,
+            reduce4: compile("reduce4")?,
+            eval_step: compile("eval_step")?,
+            client,
+        };
+        Ok(Self {
+            inner: Mutex::new(inner),
+            manifest: manifest.clone(),
+            artifacts_dir: artifacts_dir.to_path_buf(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.inner.lock().unwrap().client.platform_name()
+    }
+
+    /// The seed-0 initial parameter vector emitted at AOT time.
+    pub fn init_params(&self) -> Result<Vec<f32>> {
+        let path = self.artifacts_dir.join(&self.manifest.init);
+        let bytes =
+            std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        anyhow::ensure!(
+            bytes.len() == self.manifest.param_count * 4,
+            "init file size mismatch: {} bytes for {} params",
+            bytes.len(),
+            self.manifest.param_count
+        );
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    // All executions go through `execute_b` over buffers this backend
+    // uploads itself: the crate's literal-taking `execute` leaks every
+    // input device buffer (xla-0.1.6 `execute`: `buffer.release()`
+    // with no matching delete), and the literal staging copy is pure
+    // overhead anyway.
+
+    fn upload_tokens(inner: &Inner, m: &PresetManifest, tokens: &[i32]) -> Result<PjRtBuffer> {
+        let b = m.micro_batch;
+        let s1 = m.tokens_per_sample;
+        anyhow::ensure!(
+            tokens.len() == b * s1,
+            "token batch must be {b}x{s1}, got {} elements",
+            tokens.len()
+        );
+        Ok(inner.client.buffer_from_host_buffer(tokens, &[b, s1], None)?)
+    }
+
+    fn upload_params(
+        inner: &Inner,
+        m: &PresetManifest,
+        v: &[f32],
+        what: &str,
+    ) -> Result<PjRtBuffer> {
+        anyhow::ensure!(
+            v.len() == m.param_count,
+            "{what} length {} != param_count {}",
+            v.len(),
+            m.param_count
+        );
+        Ok(inner.client.buffer_from_host_buffer(v, &[v.len()], None)?)
+    }
+
+    fn upload_scalar(inner: &Inner, v: f32) -> Result<PjRtBuffer> {
+        Ok(inner.client.buffer_from_host_buffer(&[v], &[1], None)?)
+    }
+
+    pub fn grad_step(&self, params: &[f32], tokens: &[i32]) -> Result<(Vec<f32>, f32)> {
+        let inner = self.inner.lock().unwrap();
+        let p = Self::upload_params(&inner, &self.manifest, params, "params")?;
+        let t = Self::upload_tokens(&inner, &self.manifest, tokens)?;
+        let result = inner.grad_step.execute_b(&[&p, &t])?[0][0].to_literal_sync()?;
+        let (grad, loss) = result.to_tuple2()?;
+        Ok((grad.to_vec::<f32>()?, loss.get_first_element::<f32>()?))
+    }
+
+    pub fn sgd_update(
+        &self,
+        params: &[f32],
+        momentum: &[f32],
+        grad: &[f32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let inner = self.inner.lock().unwrap();
+        let p = Self::upload_params(&inner, &self.manifest, params, "params")?;
+        let m = Self::upload_params(&inner, &self.manifest, momentum, "momentum")?;
+        let g = Self::upload_params(&inner, &self.manifest, grad, "grad")?;
+        let lr = Self::upload_scalar(&inner, lr)?;
+        let result = inner.sgd_update.execute_b(&[&p, &m, &g, &lr])?[0][0].to_literal_sync()?;
+        let (w2, m2) = result.to_tuple2()?;
+        Ok((w2.to_vec::<f32>()?, m2.to_vec::<f32>()?))
+    }
+
+    pub fn reduce2(&self, a: &[f32], b: &[f32], scale: f32) -> Result<Vec<f32>> {
+        let inner = self.inner.lock().unwrap();
+        let p = self.manifest.param_count;
+        let mut stacked = Vec::with_capacity(2 * p);
+        stacked.extend_from_slice(a);
+        stacked.extend_from_slice(b);
+        let st = inner.client.buffer_from_host_buffer(&stacked, &[2, p], None)?;
+        let sc = Self::upload_scalar(&inner, scale)?;
+        let result = inner.reduce2.execute_b(&[&st, &sc])?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    pub fn reduce4(&self, bufs: [&[f32]; 4], scale: f32) -> Result<Vec<f32>> {
+        let inner = self.inner.lock().unwrap();
+        let p = self.manifest.param_count;
+        let mut stacked = Vec::with_capacity(4 * p);
+        for b in bufs {
+            stacked.extend_from_slice(b);
+        }
+        let st = inner.client.buffer_from_host_buffer(&stacked, &[4, p], None)?;
+        let sc = Self::upload_scalar(&inner, scale)?;
+        let result = inner.reduce4.execute_b(&[&st, &sc])?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    /// Rank-order left fold of any fan-in, built from the 4/2-way
+    /// kernels. The association equals folding one buffer at a time
+    /// (the kernel sums rows in index order).
+    pub fn reduce_fold(&self, bufs: &[&[f32]], scale: f32) -> Result<Vec<f32>> {
+        anyhow::ensure!(!bufs.is_empty(), "reduce over zero buffers");
+        if bufs.len() == 1 {
+            let mut out = bufs[0].to_vec();
+            if scale != 1.0 {
+                crate::collective::scale(&mut out, scale);
+            }
+            return Ok(out);
+        }
+        let mut i;
+        let mut acc = if bufs.len() >= 4 {
+            i = 4;
+            self.reduce4([bufs[0], bufs[1], bufs[2], bufs[3]], 1.0)?
+        } else {
+            i = 2;
+            self.reduce2(bufs[0], bufs[1], 1.0)?
+        };
+        while i < bufs.len() {
+            if bufs.len() - i >= 3 {
+                acc = self.reduce4([&acc, bufs[i], bufs[i + 1], bufs[i + 2]], 1.0)?;
+                i += 3;
+            } else {
+                acc = self.reduce2(&acc, bufs[i], 1.0)?;
+                i += 1;
+            }
+        }
+        if scale != 1.0 {
+            crate::collective::scale(&mut acc, scale);
+        }
+        Ok(acc)
+    }
+
+    pub fn eval_step(&self, params: &[f32], tokens: &[i32]) -> Result<(f32, i64)> {
+        let inner = self.inner.lock().unwrap();
+        let p = Self::upload_params(&inner, &self.manifest, params, "params")?;
+        let t = Self::upload_tokens(&inner, &self.manifest, tokens)?;
+        let result = inner.eval_step.execute_b(&[&p, &t])?[0][0].to_literal_sync()?;
+        let (loss, correct) = result.to_tuple2()?;
+        Ok((
+            loss.get_first_element::<f32>()?,
+            correct.get_first_element::<i32>()? as i64,
+        ))
+    }
+}

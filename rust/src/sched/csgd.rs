@@ -5,11 +5,15 @@
 //! every worker applies the update *before the next iteration starts*
 //! (Alg. 2 line 8 — contrast with LSGD's deferred line 10).
 //!
-//! The allreduce goes through the L1 reduce kernel via
+//! The allreduce goes through the backend reduce kernel via
 //! [`crate::runtime::Engine::reduce_fold`], folding **group-wise then
 //! across groups** — the association real MPI reduce trees use and the
 //! one LSGD's two-layer reduction induces, so the two algorithms'
 //! trajectories stay bitwise-comparable (DESIGN.md §6).
+//!
+//! This is the serial reference engine; [`super::exec`] runs the same
+//! schedule with one OS thread per rank and must match it bitwise
+//! (same fold association, rank-ordered joins — see [`super`] docs).
 
 use anyhow::Result;
 

@@ -1,0 +1,366 @@
+//! Thread-per-rank parallel runtime for Algorithms 2 and 3.
+//!
+//! The serial schedulers ([`super::csgd`], [`super::lsgd`]) *simulate*
+//! the paper's decentralized ranks on one thread. This module runs
+//! them for real: **one OS thread per worker rank and one per
+//! communicator rank**, with mpsc channels as the Reduce / Broadcast
+//! edges of Fig. 3 and the calling thread acting as the communicators'
+//! global folder. Worker compute, group-local reduces of different
+//! groups, and next-batch I/O all overlap in wall-clock time —
+//! `hidden_io_secs` measures genuinely concurrent ranks rather than
+//! one scoped loader thread.
+//!
+//! ```text
+//! worker threads (N)         communicator threads (G)      main thread
+//! ───────────────────        ───────────────────────       ─────────────────
+//! grad_step(shard_t) ──────▶ slot by worker id
+//!                            fold asc. worker id   ──────▶ slot by group id
+//! load shard_{t+1}   ∥                                     fold asc. group id
+//!                                                          (chunk-parallel)
+//! update ◀────────────────── broadcast copies      ◀────── Arc to each comm
+//! ```
+//!
+//! ## Why the result is still bitwise-identical to the serial path
+//!
+//! Concurrency changes *when* things run, never *what is added to
+//! what, in which order*:
+//!
+//! * each communicator slots incoming gradients **by worker id** and
+//!   left-folds them in ascending id order — arrival order (a race) is
+//!   erased before any arithmetic happens;
+//! * the global folder does the same with group partials, so the
+//!   merged gradient is exactly `Σ_g (Σ_w g_{g,w})` in ascending id
+//!   order — the association [`crate::collective::hierarchical_allreduce`]
+//!   defines and both serial schedulers use;
+//! * the cross-group fold runs chunk-parallel
+//!   ([`crate::collective::reduce_scaled_par`]), which splits work by
+//!   *element index*, not by fold position — every element sees the
+//!   serial fold chain;
+//! * no atomics, no locks around accumulation: all numeric state moves
+//!   by message passing and is folded by exactly one thread.
+//!
+//! `rust/tests/parallel.rs` asserts the resulting step checksums are
+//! bitwise-equal to the serial schedulers', and property-tests the
+//! fold layer across random topologies and thread counts.
+//!
+//! ## Error handling
+//!
+//! Backend errors inside rank threads abort the run via panic; the
+//! channel web collapses (every peer's `recv` fails) and the scope
+//! re-raises the first panic. There is no partial-step recovery —
+//! synchronous SGD has no meaningful state between a failed collective
+//! and the next barrier anyway.
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::{checksum, evaluate_params, LsgdOptions, RunResult, Trainer};
+use crate::collective;
+use crate::config::Algo;
+use crate::metrics::PhaseTimers;
+use crate::metrics::TrainCurve;
+use crate::topology::WorkerId;
+
+/// Worker → communicator, once per step: the worker's gradient plus
+/// bookkeeping (shard loss; wall-clock of the *previous* step's
+/// overlapped prefetch, 0.0 if none ran).
+struct GradMsg {
+    local: usize,
+    grad: Vec<f32>,
+    loss: f32,
+    prev_io_secs: f64,
+}
+
+/// Communicator → global folder, once per step: the rank-ordered group
+/// partial plus forwarded per-worker losses (local-id order) and the
+/// group's max prefetch time from the previous step.
+struct PartialMsg {
+    group: usize,
+    partial: Vec<f32>,
+    losses: Vec<f32>,
+    prev_io_max: f64,
+}
+
+/// Worker 0 → result collector, once per step, after its deferred
+/// update: the trajectory checksum (and eval metrics when due).
+struct StepReport {
+    step: usize,
+    checksum: u64,
+    eval: Option<(f64, f64)>,
+}
+
+/// Run Algorithm 3 on the thread-per-rank runtime.
+pub fn run_lsgd(t: &mut Trainer, opts: LsgdOptions) -> Result<RunResult> {
+    run(t, Algo::Lsgd, opts)
+}
+
+/// Run Algorithm 2 on the thread-per-rank runtime.
+pub fn run_csgd(t: &mut Trainer) -> Result<RunResult> {
+    run(t, Algo::Csgd, LsgdOptions::default())
+}
+
+fn run(t: &mut Trainer, algo: Algo, opts: LsgdOptions) -> Result<RunResult> {
+    let topo = t.topo.clone();
+    let groups = topo.groups;
+    let wpg = topo.workers_per_group;
+    let n_workers = topo.num_workers();
+    anyhow::ensure!(
+        t.replicas.len() == n_workers,
+        "thread-per-rank execution owns one replica per worker thread; \
+         construct the Trainer with dedup_replicas = false"
+    );
+    let steps = t.cfg.steps;
+    let eval_every = t.cfg.eval_every;
+    let gb = t.global_batch();
+    let is_lsgd = algo == Algo::Lsgd;
+    let nf = n_workers as f32;
+    // Division placement mirrors the serial schedulers exactly
+    // (sched/mod.rs "Division placement"): scale once after the global
+    // fold by default, at each communicator for the paper-literal mode.
+    let (local_scale, global_scale) = if is_lsgd && opts.divide_at_local_reduce {
+        (1.0 / nf, 1.0)
+    } else {
+        (1.0, 1.0 / nf)
+    };
+    let fold_threads = std::thread::available_parallelism()
+        .map(|x| x.get())
+        .unwrap_or(1)
+        .min(8);
+
+    // Shared read-only context (the host backend is Sync — see
+    // runtime::Engine docs) and the per-worker mutable replicas.
+    let engine = t.engine;
+    let loader = &t.loader;
+    let lr = &t.lr;
+    let val_samples = t.cfg.data.val_samples;
+    let topo_ref = &topo;
+    let replicas = &mut t.replicas;
+
+    // Channel web (Fig. 3 edges). All built before the scope so each
+    // thread owns exactly its endpoints.
+    let mut grad_txs = Vec::with_capacity(groups);
+    let mut grad_rxs = Vec::with_capacity(groups);
+    for _ in 0..groups {
+        let (tx, rx) = channel::<GradMsg>();
+        grad_txs.push(tx);
+        grad_rxs.push(rx);
+    }
+    let (partial_tx, partial_rx) = channel::<PartialMsg>();
+    let mut bcast_txs = Vec::with_capacity(groups);
+    let mut bcast_rxs = Vec::with_capacity(groups);
+    for _ in 0..groups {
+        let (tx, rx) = channel::<Arc<Vec<f32>>>();
+        bcast_txs.push(tx);
+        bcast_rxs.push(rx);
+    }
+    let mut avg_txs = Vec::with_capacity(n_workers);
+    let mut avg_rxs = Vec::with_capacity(n_workers);
+    for _ in 0..n_workers {
+        let (tx, rx) = channel::<Vec<f32>>();
+        avg_txs.push(tx);
+        avg_rxs.push(rx);
+    }
+    let (report_tx, report_rx) = channel::<StepReport>();
+
+    let mut timers = PhaseTimers::new();
+    let mut curve = TrainCurve::new(if is_lsgd { "lsgd" } else { "csgd" });
+    let mut checksums = Vec::with_capacity(steps);
+    let mut hidden_io = 0.0_f64;
+
+    std::thread::scope(|s| {
+        // ---- communicator rank threads (one per group) --------------
+        let mut avg_txs_by_group: Vec<Vec<_>> = Vec::with_capacity(groups);
+        for chunk in avg_txs.chunks(wpg) {
+            avg_txs_by_group.push(chunk.to_vec());
+        }
+        let mut comm_handles = Vec::with_capacity(groups);
+        for (group, ((grad_rx, bcast_rx), my_avg_txs)) in
+            grad_rxs.into_iter().zip(bcast_rxs).zip(avg_txs_by_group).enumerate()
+        {
+            let my_partial_tx = partial_tx.clone();
+            comm_handles.push(s.spawn(move || -> PhaseTimers {
+                let mut tm = PhaseTimers::new();
+                for _ in 0..steps {
+                    let mut slots: Vec<Option<GradMsg>> = (0..wpg).map(|_| None).collect();
+                    for _ in 0..wpg {
+                        let m = grad_rx.recv().expect("worker channel closed");
+                        let local = m.local;
+                        slots[local] = Some(m);
+                    }
+                    // fold in ascending worker id — arrival order (the
+                    // race) is erased by the slotting above
+                    let msg = tm.time("local_reduce", || {
+                        let grads: Vec<&[f32]> = slots
+                            .iter()
+                            .map(|m| m.as_ref().unwrap().grad.as_slice())
+                            .collect();
+                        let partial = collective::reduce_scaled(&grads, local_scale);
+                        PartialMsg {
+                            group,
+                            partial,
+                            losses: slots.iter().map(|m| m.as_ref().unwrap().loss).collect(),
+                            prev_io_max: slots
+                                .iter()
+                                .map(|m| m.as_ref().unwrap().prev_io_secs)
+                                .fold(0.0_f64, f64::max),
+                        }
+                    });
+                    my_partial_tx.send(msg).expect("global folder gone");
+                    let avg = bcast_rx.recv().expect("global folder gone");
+                    // Broadcast (Alg. 3 line 9): one real copy per worker
+                    tm.time("broadcast", || {
+                        for tx in &my_avg_txs {
+                            tx.send(avg.as_ref().clone()).expect("worker gone");
+                        }
+                    });
+                }
+                tm
+            }));
+        }
+
+        // ---- worker rank threads (one per worker) -------------------
+        let mut worker_handles = Vec::with_capacity(n_workers);
+        for ((w, replica), avg_rx) in replicas.iter_mut().enumerate().zip(avg_rxs) {
+            let my_grad_tx = grad_txs[w / wpg].clone();
+            let my_report_tx = report_tx.clone();
+            worker_handles.push(s.spawn(move || -> PhaseTimers {
+                let mut tm = PhaseTimers::new();
+                let local = w % wpg;
+                // Alg. 3 line 1: the first mini-batch is drawn up front
+                let mut shard: Vec<i32> = if is_lsgd {
+                    tm.time("io", || loader.load_shard(topo_ref, WorkerId(w), 0, gb))
+                        .expect("initial shard load failed")
+                } else {
+                    Vec::new()
+                };
+                let mut prev_io = 0.0_f64;
+                for step in 0..steps {
+                    if !is_lsgd {
+                        // Alg. 2 has no overlap window: I/O is serial
+                        // with compute on every worker
+                        shard = tm
+                            .time("io", || loader.load_shard(topo_ref, WorkerId(w), step, gb))
+                            .expect("shard load failed");
+                    }
+                    let (grad, loss) = tm
+                        .time("compute", || engine.grad_step(&replica.params, &shard))
+                        .expect("grad_step failed");
+                    my_grad_tx
+                        .send(GradMsg { local, grad, loss, prev_io_secs: prev_io })
+                        .expect("communicator gone");
+                    prev_io = 0.0;
+                    if is_lsgd && step + 1 < steps {
+                        // Alg. 3 line 8's worker column: the next-batch
+                        // load runs WHILE the communicators allreduce
+                        let t0 = Instant::now();
+                        let next = loader
+                            .load_shard(topo_ref, WorkerId(w), step + 1, gb)
+                            .expect("prefetch failed");
+                        prev_io = t0.elapsed().as_secs_f64();
+                        tm.add("io_overlapped", prev_io);
+                        shard = next;
+                    }
+                    let avg = avg_rx.recv().expect("broadcast channel closed");
+                    let lr_t = lr.lr_at(step) as f32;
+                    let (w2, m2) = tm
+                        .time("update", || {
+                            engine.sgd_update(&replica.params, &replica.momentum, &avg, lr_t)
+                        })
+                        .expect("sgd_update failed");
+                    replica.params = w2;
+                    replica.momentum = m2;
+                    if w == 0 {
+                        let eval = if eval_every > 0 && (step + 1) % eval_every == 0 {
+                            Some(
+                                evaluate_params(engine, loader, val_samples, &replica.params)
+                                    .expect("eval failed"),
+                            )
+                        } else {
+                            None
+                        };
+                        my_report_tx
+                            .send(StepReport {
+                                step,
+                                checksum: checksum(&replica.params),
+                                eval,
+                            })
+                            .expect("result collector gone");
+                    }
+                }
+                tm
+            }));
+        }
+
+        // ---- global folder (this thread = the communicators' ring) --
+        let mut prev_comm = 0.0_f64;
+        for step in 0..steps {
+            let mut slots: Vec<Option<PartialMsg>> = (0..groups).map(|_| None).collect();
+            for _ in 0..groups {
+                let m = partial_rx.recv().expect("communicator channel closed");
+                let group = m.group;
+                slots[group] = Some(m);
+            }
+            // overlap accounting: the prefetch measured during step s
+            // arrives with step s+1's messages; pair it with step s's
+            // global-fold time (matches the serial min(t_io, t_comm))
+            let io_prev_max = slots
+                .iter()
+                .map(|m| m.as_ref().unwrap().prev_io_max)
+                .fold(0.0_f64, f64::max);
+            if step > 0 {
+                hidden_io += prev_comm.min(io_prev_max);
+            }
+            let t0 = Instant::now();
+            let merged = {
+                let refs: Vec<&[f32]> = slots
+                    .iter()
+                    .map(|m| m.as_ref().unwrap().partial.as_slice())
+                    .collect();
+                collective::reduce_scaled_par(&refs, global_scale, fold_threads)
+            };
+            prev_comm = t0.elapsed().as_secs_f64();
+            timers.add(if is_lsgd { "global_allreduce" } else { "allreduce" }, prev_comm);
+            let shared = Arc::new(merged);
+            for tx in &bcast_txs {
+                tx.send(shared.clone()).expect("communicator gone");
+            }
+            // mean loss in flat ascending worker order — identical f64
+            // summation order to the serial schedulers
+            let mut loss_sum = 0.0_f64;
+            for slot in &slots {
+                for &l in &slot.as_ref().unwrap().losses {
+                    loss_sum += l as f64;
+                }
+            }
+            let report = report_rx.recv().expect("worker 0 gone");
+            assert_eq!(report.step, step, "step report out of order");
+            checksums.push(report.checksum);
+            let lr_t = lr.lr_at(step) as f32;
+            curve.train.push((step, loss_sum / n_workers as f64, lr_t as f64));
+            if let Some((vl, va)) = report.eval {
+                curve.eval.push((step, vl, va));
+            }
+        }
+
+        // ---- deterministic joins: communicators then workers, by id -
+        for h in comm_handles {
+            timers.merge(&h.join().expect("communicator thread panicked"));
+        }
+        for h in worker_handles {
+            timers.merge(&h.join().expect("worker thread panicked"));
+        }
+    });
+
+    debug_assert!(t.replicas_identical(), "parallel replicas diverged");
+    Ok(RunResult {
+        curve,
+        timers,
+        step_checksums: checksums,
+        final_params: t.replica_of(0).params.clone(),
+        hidden_io_secs: if is_lsgd { hidden_io } else { 0.0 },
+        steps,
+    })
+}

@@ -12,12 +12,16 @@
 //! deferred update w_{t+1}
 //! ```
 //!
-//! The overlap is real wall-clock overlap in this implementation: the
-//! next-batch load (including the configured I/O latency) runs on a
-//! background thread while the main thread executes the communicator
-//! allreduce; [`RunResult::hidden_io_secs`] accumulates
-//! `min(t_io, t_allreduce)` per step — the quantity the paper's
-//! scalability argument rests on.
+//! This is the **serial reference engine**: ranks execute sequentially
+//! on the calling thread, with one exception — the next-batch load
+//! (including the configured I/O latency) runs on a scoped background
+//! thread while this thread executes the communicator allreduce, so
+//! the overlap is real wall-clock overlap and
+//! [`RunResult::hidden_io_secs`] accumulates `min(t_io, t_allreduce)`
+//! per step. The fully decentralized engine (every rank on its own
+//! thread) lives in [`super::exec`] and must reproduce this
+//! scheduler's trajectory bitwise — see the determinism rules in the
+//! [`super`] module docs before touching any fold below.
 
 use anyhow::Result;
 use std::time::Instant;

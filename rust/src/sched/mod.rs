@@ -22,15 +22,38 @@
 //!
 //! ## Execution model
 //!
-//! Workers advance in lockstep (synchronous SGD); on this single-core
-//! testbed their compute phases execute sequentially while the
-//! cluster-scale timing lives in [`crate::simnet`]. The LSGD overlap is
-//! still *real*: the next-batch load (with its configurable latency)
-//! runs on a background thread while the main thread executes the
-//! communicator allreduce, and [`RunResult::hidden_io_secs`] reports
-//! the wall-clock actually hidden.
+//! Two interchangeable engines run each schedule, selected by
+//! [`RunOptions::mode`]:
+//!
+//! * [`ExecMode::Serial`] — the audited reference: every rank's phase
+//!   executes sequentially on the calling thread (LSGD's next-batch
+//!   load still overlaps on one scoped loader thread).
+//! * [`ExecMode::ThreadPerRank`] — the decentralized engine in
+//!   [`exec`]: one OS thread per worker rank, one per communicator
+//!   rank, channels for the Reduce/Broadcast edges, and a
+//!   chunk-parallel rank-ordered global fold. Compute, local reduces
+//!   of different groups, and worker I/O genuinely overlap.
+//!
+//! ### Determinism contract under concurrency
+//!
+//! Both engines must produce **bitwise-identical** trajectories (this
+//! is asserted in `rust/tests/parallel.rs`). The rules that make that
+//! possible — and that any future engine must keep:
+//!
+//! 1. every reduction is a left fold in ascending rank id; concurrent
+//!    arrivals are slotted by id *before* any arithmetic, so arrival
+//!    races never reach the numerics;
+//! 2. intra-buffer parallelism only splits by element index
+//!    ([`crate::collective::reduce_scaled_par`]) — never by fold
+//!    position; joins happen in chunk/rank order, never completion
+//!    order;
+//! 3. no atomics on the audited path (an atomic f32 accumulator would
+//!    make the association scheduling-dependent);
+//! 4. loss aggregation sums per-worker f32 losses into one f64 in flat
+//!    ascending worker order on every engine.
 
 pub mod csgd;
+pub mod exec;
 pub mod lsgd;
 
 use anyhow::Result;
@@ -50,16 +73,41 @@ pub struct Replica {
 }
 
 /// Options specific to the LSGD schedule.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, Default)]
 pub struct LsgdOptions {
     /// Paper-literal Alg. 3 line 6 (divide by N at each communicator)
-    /// instead of the bitwise-aligned post-allreduce scale.
+    /// instead of the bitwise-aligned post-allreduce scale (off by
+    /// default).
     pub divide_at_local_reduce: bool,
 }
 
-impl Default for LsgdOptions {
-    fn default() -> Self {
-        Self { divide_at_local_reduce: false }
+/// Which execution engine runs the schedule (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// Audited single-thread reference implementation.
+    #[default]
+    Serial,
+    /// Thread-per-rank decentralized engine ([`exec`]): one OS thread
+    /// per worker and per communicator, channel-connected.
+    ThreadPerRank,
+}
+
+/// Full set of run options: algorithm-specific knobs + engine choice.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RunOptions {
+    pub lsgd: LsgdOptions,
+    pub mode: ExecMode,
+}
+
+impl RunOptions {
+    /// Serial engine with explicit LSGD options.
+    pub fn serial(lsgd: LsgdOptions) -> Self {
+        Self { lsgd, mode: ExecMode::Serial }
+    }
+
+    /// Thread-per-rank engine with default LSGD options.
+    pub fn parallel() -> Self {
+        Self { lsgd: LsgdOptions::default(), mode: ExecMode::ThreadPerRank }
     }
 }
 
@@ -89,6 +137,30 @@ pub fn checksum(v: &[f32]) -> u64 {
         }
     }
     h
+}
+
+/// Validation sweep over the held-out set for an explicit parameter
+/// vector: (mean loss, top-1 accuracy). Free function so worker-0's
+/// rank thread in the parallel engine can evaluate without borrowing
+/// the whole [`Trainer`].
+pub(crate) fn evaluate_params(
+    engine: &Engine,
+    loader: &Loader,
+    val_samples: usize,
+    params: &[f32],
+) -> Result<(f64, f64)> {
+    let micro = engine.micro_batch();
+    let batches = (val_samples / micro).max(1);
+    let preds_per_sample = (engine.tokens_per_sample() - 1) as i64;
+    let (mut loss_sum, mut correct, mut total) = (0.0_f64, 0_i64, 0_i64);
+    for b in 0..batches {
+        let tokens = loader.load_eval(micro, b);
+        let (loss, c) = engine.eval_step(params, &tokens)?;
+        loss_sum += loss as f64;
+        correct += c;
+        total += micro as i64 * preds_per_sample;
+    }
+    Ok((loss_sum / batches as f64, correct as f64 / total as f64))
 }
 
 /// Shared setup for both schedules.
@@ -154,32 +226,33 @@ impl<'e> Trainer<'e> {
     /// Run validation over the whole held-out set; returns
     /// (mean loss, top-1 accuracy).
     pub fn evaluate(&self) -> Result<(f64, f64)> {
-        let micro = self.engine.micro_batch();
-        let batches = (self.cfg.data.val_samples / micro).max(1);
-        let params = &self.replica_of(0).params;
-        let (mut loss_sum, mut correct, mut total) = (0.0_f64, 0_i64, 0_i64);
-        let preds_per_sample = (self.engine.tokens_per_sample() - 1) as i64;
-        for b in 0..batches {
-            let tokens = self.loader.load_eval(micro, b);
-            let (loss, c) = self.engine.eval_step(params, &tokens)?;
-            loss_sum += loss as f64;
-            correct += c;
-            total += micro as i64 * preds_per_sample;
-        }
-        Ok((loss_sum / batches as f64, correct as f64 / total as f64))
+        evaluate_params(
+            self.engine,
+            &self.loader,
+            self.cfg.data.val_samples,
+            &self.replica_of(0).params,
+        )
     }
 
-    /// Dispatch on the configured algorithm.
+    /// Dispatch on the configured algorithm (serial engine).
     pub fn run(&mut self) -> Result<RunResult> {
-        self.run_with(LsgdOptions::default())
+        self.run_with(RunOptions::default())
     }
 
-    /// Dispatch with explicit LSGD options (the paper-literal division
-    /// placement is only reachable from here / the audit).
-    pub fn run_with(&mut self, opts: LsgdOptions) -> Result<RunResult> {
-        match self.cfg.algo {
-            Algo::Csgd => csgd::run(self),
-            Algo::Lsgd => lsgd::run(self, opts),
+    /// Dispatch on the thread-per-rank engine (default LSGD options).
+    pub fn run_parallel(&mut self) -> Result<RunResult> {
+        self.run_with(RunOptions::parallel())
+    }
+
+    /// Dispatch with explicit options — engine choice plus the
+    /// paper-literal division placement (only reachable from here /
+    /// the audit).
+    pub fn run_with(&mut self, opts: RunOptions) -> Result<RunResult> {
+        match (self.cfg.algo, opts.mode) {
+            (Algo::Csgd, ExecMode::Serial) => csgd::run(self),
+            (Algo::Lsgd, ExecMode::Serial) => lsgd::run(self, opts.lsgd),
+            (Algo::Csgd, ExecMode::ThreadPerRank) => exec::run_csgd(self),
+            (Algo::Lsgd, ExecMode::ThreadPerRank) => exec::run_lsgd(self, opts.lsgd),
         }
     }
 

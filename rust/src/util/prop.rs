@@ -28,6 +28,13 @@ pub trait GenExt {
     fn f32_in(&mut self, lo: f32, hi: f32) -> f32;
     fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32>;
     fn bool_(&mut self) -> bool;
+    /// A random valid cluster shape `(groups, workers_per_group)` with
+    /// each dimension in `[1, max_g]` / `[1, max_w]`.
+    fn topology_shape(&mut self, max_g: usize, max_w: usize) -> (usize, usize);
+    /// One random gradient buffer per worker of a `(groups, wpg)`
+    /// topology, grouped in rank order — the shape every collective
+    /// property consumes.
+    fn grouped_buffers(&mut self, groups: usize, wpg: usize, len: usize) -> Vec<Vec<Vec<f32>>>;
 }
 
 impl GenExt for Rng {
@@ -46,6 +53,16 @@ impl GenExt for Rng {
 
     fn bool_(&mut self) -> bool {
         self.below(2) == 1
+    }
+
+    fn topology_shape(&mut self, max_g: usize, max_w: usize) -> (usize, usize) {
+        (self.usize_in(1, max_g), self.usize_in(1, max_w))
+    }
+
+    fn grouped_buffers(&mut self, groups: usize, wpg: usize, len: usize) -> Vec<Vec<Vec<f32>>> {
+        (0..groups)
+            .map(|_| (0..wpg).map(|_| self.vec_f32(len, -1.0, 1.0)).collect())
+            .collect()
     }
 }
 
@@ -85,6 +102,18 @@ mod tests {
             let f = rng.f32_in(-1.0, 1.0);
             assert!((-1.0..=1.0).contains(&f));
             assert_eq!(rng.vec_f32(4, 0.0, 1.0).len(), 4);
+        });
+    }
+
+    #[test]
+    fn topology_and_buffer_generators_shaped_right() {
+        run(25, |rng| {
+            let (g, w) = rng.topology_shape(4, 3);
+            assert!((1..=4).contains(&g) && (1..=3).contains(&w));
+            let bufs = rng.grouped_buffers(g, w, 17);
+            assert_eq!(bufs.len(), g);
+            assert!(bufs.iter().all(|grp| grp.len() == w));
+            assert!(bufs.iter().flatten().all(|b| b.len() == 17));
         });
     }
 }

@@ -1,5 +1,5 @@
-//! Integration: the paper's §4.2 equivalence claims over real HLO
-//! compute (requires `make artifacts` — tiny preset).
+//! Integration: the paper's §4.2 equivalence claims over the host
+//! backend's real compute (the `tiny` built-in preset).
 //!
 //! These are the repo's core correctness results:
 //!   1. CSGD ≡ LSGD parameter trajectories, bitwise (aligned division).
@@ -15,12 +15,11 @@
 use lsgd::audit::{self, compare};
 use lsgd::config::{Algo, ExperimentConfig};
 use lsgd::runtime::Engine;
-use lsgd::sched::{LsgdOptions, Trainer};
+use lsgd::sched::Trainer;
 use lsgd::topology::Topology;
 
 fn engine() -> Engine {
-    Engine::load(std::path::Path::new("artifacts"), "tiny")
-        .expect("tiny artifacts missing — run `make artifacts`")
+    Engine::host("tiny").expect("built-in tiny preset")
 }
 
 fn cfg(groups: usize, workers: usize, steps: usize) -> ExperimentConfig {
@@ -59,8 +58,8 @@ fn paper_literal_division_exact_for_pow2_n() {
 fn paper_literal_division_tolerance_for_non_pow2_n() {
     // N = 3 (three groups of one): 1/3 is inexact; pre-scaling at the
     // communicators reassociates rounding. Equivalence must hold to
-    // ~1e-5 relative but need NOT be bitwise — this is precisely the
-    // gap between the paper's real-arithmetic claim and f32.
+    // tolerance but need NOT be bitwise — this is precisely the gap
+    // between the paper's real-arithmetic claim and f32.
     let e = engine();
     let (report, _, _) = audit::run_audit(&e, &cfg(3, 1, 6), true).unwrap();
     assert!(
@@ -72,23 +71,21 @@ fn paper_literal_division_tolerance_for_non_pow2_n() {
 
 #[test]
 fn lsgd_trajectory_independent_of_grouping() {
-    // 4 workers as 2×2 vs 4×1: same N, same association (group sums in
-    // rank order), so LSGD must produce identical trajectories.
+    // 4 workers as 2×2 vs 4×1: same N, same data; associations are
+    // ((g0+g1)+(g2+g3)) vs (((g0+g1)+g2)+g3), so compare at tolerance
+    // and assert the batches were identical via loss@step0.
     let e = engine();
-    let mut t22 = Trainer::new(&e, { let mut c = cfg(2, 2, 6); c.algo = Algo::Lsgd; c }, false).unwrap();
+    let mut t22 =
+        Trainer::new(&e, { let mut c = cfg(2, 2, 6); c.algo = Algo::Lsgd; c }, false).unwrap();
     let r22 = t22.run().unwrap();
-    let mut t41 = Trainer::new(&e, { let mut c = cfg(4, 1, 6); c.algo = Algo::Lsgd; c }, false).unwrap();
+    let mut t41 =
+        Trainer::new(&e, { let mut c = cfg(4, 1, 6); c.algo = Algo::Lsgd; c }, false).unwrap();
     let r41 = t41.run().unwrap();
-    // NOTE: 2×2 folds ((g0+g1)+(g2+g3)) while 4×1 folds (((g0+g1)+g2)+g3):
-    // left-fold chains coincide here because reduce_fold left-folds the
-    // group partials in order — both reduce to the same chain over 4
-    // buffers only when group size is 1 or the fold is flat. Compare at
-    // tolerance, and assert the batches were identical via loss@step0.
     assert_eq!(r22.curve.train[0].1, r41.curve.train[0].1, "different data!");
     let rep = compare(&r22, &r41);
-    // reassociation drift compounds over steps; 6 steps stays ≲1e-3
+    // reassociation drift compounds over steps; 6 steps stays small
     assert!(rep.max_rel_diff < 5e-3, "{rep:?}");
-    assert!(rep.mean_loss_gap < 1e-5, "{rep:?}");
+    assert!(rep.mean_loss_gap < 1e-4, "{rep:?}");
 }
 
 #[test]
@@ -97,7 +94,7 @@ fn replicas_stay_identical_within_run() {
     let mut c = cfg(2, 2, 4);
     c.algo = Algo::Lsgd;
     let mut t = Trainer::new(&e, c, false).unwrap();
-    t.run_with(LsgdOptions::default()).unwrap();
+    t.run().unwrap();
     assert!(t.replicas_identical());
     assert_eq!(t.replicas.len(), 4);
 }
@@ -122,7 +119,10 @@ fn loss_decreases_under_both_algorithms() {
     for algo in [Algo::Csgd, Algo::Lsgd] {
         let mut c = cfg(1, 4, 12);
         c.algo = algo;
-        c.optim.linear_scaling = false; // keep lr at 0.1 for this tiny batch
+        // the host bigram LM wants a bigger step than the transformer
+        // presets did; keep it fixed across the batch sweep
+        c.optim.linear_scaling = false;
+        c.optim.base_lr = 1.0;
         let mut t = Trainer::new(&e, c, false).unwrap();
         let r = t.run().unwrap();
         let first = r.curve.train.first().unwrap().1;

@@ -114,7 +114,83 @@ fn fig5_crossover_between_8_and_16_workers() {
     assert!(ratio(64) > 1.3, "LSGD should win big at 256: {}", ratio(64));
 }
 
+// ---------------------------------------------------------------- golden lock
+//
+// Regression lock on `ClusterModel::paper_k80`: the calibration that
+// lands on the paper's quoted endpoints. The constants AND the derived
+// efficiency numbers are pinned so a refactor of simnet/cost.rs or a
+// "small" recalibration cannot silently drift the figures. If you
+// *intend* to recalibrate, update these goldens in the same commit and
+// say so in the message.
+
+#[test]
+fn golden_paper_k80_constants_are_pinned() {
+    let m = ClusterModel::paper_k80();
+    assert_eq!(m.intra.alpha, 8e-6);
+    assert_eq!(m.intra.beta, 9.0e9);
+    assert_eq!(m.inter.alpha, 2.0191e-3);
+    assert_eq!(m.inter.beta, 14.3e9);
+    assert_eq!(m.comm_inter.alpha, 5.3475e-3);
+    assert_eq!(m.comm_inter.beta, 14.3e9);
+    assert_eq!(m.t_compute, 1.23);
+    assert_eq!(m.t_io, 0.55);
+    assert_eq!(m.grad_bytes, 25.6e6 * 4.0);
+    assert_eq!(m.t_update, 0.012);
+    assert_eq!(m.local_batch, 64);
+}
+
+#[test]
+fn golden_figure_endpoints_are_pinned() {
+    // exact f64 values of the calibrated closed forms (paper quotes in
+    // parentheses); tolerance 1e-6 absolute in percent units
+    let m = ClusterModel::paper_k80();
+    let cases: [(f64, f64, &str); 3] = [
+        (eff_csgd(&m, 2), 98.70775772118525, "CSGD @ 8 workers (98.7%)"),
+        (eff_csgd(&m, 64), 63.79091575517931, "CSGD @ 256 workers (63.8%)"),
+        (eff_lsgd(&m, 64), 93.09963617946191, "LSGD @ 256 workers (93.1%)"),
+    ];
+    for (got, golden, what) in cases {
+        assert!(
+            (got - golden).abs() < 1e-6,
+            "{what}: calibration drifted — got {got}, golden {golden}"
+        );
+    }
+    // the paper's LSGD step-time anchor: the 64-communicator ring
+    // allreduce costs ≈ 0.688 s under the fitted fabric
+    let t_g = simnet::step_time_lsgd(&m, &topo(64)).global_allreduce;
+    assert!((t_g - 0.687882902097902).abs() < 1e-9, "t_g(64) = {t_g}");
+}
+
 // ---------------------------------------------------------------- DES cross-check
+
+#[test]
+fn des_closed_form_cross_validation_grid() {
+    // satellite: DES step times agree with the closed forms to <1e-9
+    // (relative) over a dense topology grid — every group count 1–64,
+    // several group widths, both allreduce algorithms.
+    use lsgd::simnet::AllreduceAlgo;
+    for algo in [AllreduceAlgo::Ring, AllreduceAlgo::RecursiveHalvingDoubling] {
+        let mut m = ClusterModel::paper_k80();
+        m.algo = algo;
+        for g in 1..=64usize {
+            for w in [1usize, 4] {
+                let t = Topology::new(g, w).unwrap();
+                let steps = 6;
+                let (des_l, des_c, cf_l, cf_c) = des::validate_against_closed_form(&m, &t, steps);
+                assert!(
+                    (des_c - cf_c.total).abs() / cf_c.total < 1e-9,
+                    "CSGD {algo:?} {g}x{w}: DES {des_c} vs closed {}",
+                    cf_c.total
+                );
+                assert!(
+                    (des_l - cf_l.total).abs() / cf_l.total < 1e-9,
+                    "LSGD {algo:?} {g}x{w}: DES {des_l} vs closed {}",
+                    cf_l.total
+                );
+            }
+        }
+    }
+}
 
 #[test]
 fn des_agrees_with_closed_forms_across_sweep() {

@@ -1,0 +1,180 @@
+//! Integration: the thread-per-rank parallel engine must be
+//! **bitwise-indistinguishable** from the serial reference — the
+//! determinism contract of `sched/exec.rs` made checkable end-to-end.
+//!
+//! Layers under test, bottom-up:
+//!   1. chunk-parallel folds vs serial folds (property, random
+//!      topologies and thread counts 1 / 2 / num_cpus);
+//!   2. full training runs: parallel step checksums == serial step
+//!      checksums for both algorithms and both division placements;
+//!   3. the §4.2 CSGD ≡ LSGD audit passes when *both* schedules run on
+//!      the parallel engine;
+//!   4. overlap accounting: LSGD on the parallel engine reports
+//!      genuinely hidden I/O when the loader has latency.
+
+use lsgd::collective;
+use lsgd::config::{Algo, ExperimentConfig};
+use lsgd::runtime::Engine;
+use lsgd::sched::{ExecMode, LsgdOptions, RunOptions, Trainer};
+use lsgd::topology::Topology;
+use lsgd::util::prop::{self, GenExt};
+
+fn engine() -> Engine {
+    Engine::host("tiny").expect("built-in tiny preset")
+}
+
+fn cfg(groups: usize, workers: usize, steps: usize, algo: Algo) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.algo = algo;
+    c.topology = Topology::new(groups, workers).unwrap();
+    c.steps = steps;
+    c.data.train_samples = 512;
+    c.data.val_samples = 64;
+    c
+}
+
+fn num_cpus() -> usize {
+    std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1)
+}
+
+/// Run the same experiment on both engines and require bitwise-equal
+/// trajectories: every per-step checksum and the final parameters.
+fn assert_engines_agree(c: &ExperimentConfig, lsgd_opts: LsgdOptions) {
+    let e = engine();
+    let mut serial = Trainer::new(&e, c.clone(), false).unwrap();
+    let rs = serial.run_with(RunOptions { lsgd: lsgd_opts, mode: ExecMode::Serial }).unwrap();
+    let mut par = Trainer::new(&e, c.clone(), false).unwrap();
+    let rp = par
+        .run_with(RunOptions { lsgd: lsgd_opts, mode: ExecMode::ThreadPerRank })
+        .unwrap();
+    assert_eq!(
+        rs.step_checksums, rp.step_checksums,
+        "parallel trajectory diverged from serial ({:?}, {} groups × {} workers)",
+        c.algo, c.topology.groups, c.topology.workers_per_group
+    );
+    assert_eq!(rs.final_params, rp.final_params, "final params differ");
+    // losses are reported through the same flat-order f64 sum
+    for (a, b) in rs.curve.train.iter().zip(rp.curve.train.iter()) {
+        assert_eq!(a.1.to_bits(), b.1.to_bits(), "loss differs at step {}", a.0);
+    }
+}
+
+// ---------------------------------------------------------- acceptance
+
+#[test]
+fn lsgd_parallel_bitwise_identical_to_serial_2x2() {
+    assert_engines_agree(&cfg(2, 2, 6, Algo::Lsgd), LsgdOptions::default());
+}
+
+#[test]
+fn lsgd_parallel_bitwise_identical_to_serial_4x2() {
+    assert_engines_agree(&cfg(4, 2, 4, Algo::Lsgd), LsgdOptions::default());
+}
+
+#[test]
+fn csgd_parallel_bitwise_identical_to_serial_2x2() {
+    assert_engines_agree(&cfg(2, 2, 6, Algo::Csgd), LsgdOptions::default());
+}
+
+#[test]
+fn csgd_parallel_bitwise_identical_to_serial_3x1() {
+    assert_engines_agree(&cfg(3, 1, 4, Algo::Csgd), LsgdOptions::default());
+}
+
+#[test]
+fn paper_literal_division_agrees_across_engines() {
+    assert_engines_agree(
+        &cfg(2, 2, 5, Algo::Lsgd),
+        LsgdOptions { divide_at_local_reduce: true },
+    );
+}
+
+#[test]
+fn single_rank_topology_runs_parallel() {
+    // degenerate 1×1: one worker thread, one communicator thread
+    assert_engines_agree(&cfg(1, 1, 3, Algo::Lsgd), LsgdOptions::default());
+}
+
+#[test]
+fn audit_passes_on_parallel_engine() {
+    let e = engine();
+    let c = cfg(2, 2, 6, Algo::Lsgd);
+    let (report, _, _) =
+        lsgd::audit::run_audit_with(&e, &c, false, ExecMode::ThreadPerRank).unwrap();
+    assert!(report.bitwise_identical(), "{report:?}");
+}
+
+#[test]
+fn eval_curves_match_across_engines() {
+    let e = engine();
+    let mut c = cfg(2, 2, 6, Algo::Lsgd);
+    c.eval_every = 2;
+    let mut serial = Trainer::new(&e, c.clone(), false).unwrap();
+    let rs = serial.run().unwrap();
+    let mut par = Trainer::new(&e, c, false).unwrap();
+    let rp = par.run_parallel().unwrap();
+    assert_eq!(rs.curve.eval.len(), 3);
+    for (a, b) in rs.curve.eval.iter().zip(rp.curve.eval.iter()) {
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1.to_bits(), b.1.to_bits(), "eval loss differs at step {}", a.0);
+        assert_eq!(a.2.to_bits(), b.2.to_bits(), "eval top1 differs at step {}", a.0);
+    }
+}
+
+#[test]
+fn parallel_lsgd_hides_io_under_the_allreduce() {
+    let e = engine();
+    let mut c = cfg(2, 2, 4, Algo::Lsgd);
+    c.data.io_latency = 0.005; // 5 ms loading window per shard
+    let mut t = Trainer::new(&e, c, false).unwrap();
+    let r = t.run_parallel().unwrap();
+    // prefetch ran concurrently with the global fold on every step but
+    // the last, so some wall-clock must have been hidden
+    assert!(r.hidden_io_secs > 0.0, "no overlap measured: {r:?}");
+    assert!(r.timers.total("io_overlapped") >= 0.005 * 3.0);
+}
+
+#[test]
+fn parallel_engine_requires_per_worker_replicas() {
+    let e = engine();
+    let mut t = Trainer::new(&e, cfg(2, 2, 2, Algo::Lsgd), true).unwrap();
+    assert!(t.run_parallel().is_err(), "dedup replicas must be rejected");
+}
+
+// ---------------------------------------------------------- properties
+
+#[test]
+fn prop_parallel_fold_bitwise_equals_serial_hierarchical() {
+    // satellite: random topologies × random buffers × thread counts
+    // 1, 2 and num_cpus — the parallel engine's merged gradient is the
+    // serial hierarchical_allreduce, bitwise.
+    let cpus = num_cpus();
+    prop::run(40, |rng| {
+        let (groups, wpg) = rng.topology_shape(5, 4);
+        let len = rng.usize_in(1, 600);
+        let bufs = rng.grouped_buffers(groups, wpg, len);
+        let grouped: Vec<Vec<&[f32]>> = bufs
+            .iter()
+            .map(|grp| grp.iter().map(|b| b.as_slice()).collect())
+            .collect();
+        let want = collective::hierarchical_allreduce(&grouped, groups * wpg);
+        for threads in [1usize, 2, cpus] {
+            let got = collective::hierarchical_allreduce_par(&grouped, groups * wpg, threads);
+            assert_eq!(
+                got, want,
+                "fold diverged: {groups}x{wpg}, len {len}, {threads} threads"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_parallel_engine_trajectory_matches_serial() {
+    // end-to-end property: random small topologies, 2 steps each,
+    // parallel == serial checksums for both algorithms
+    prop::run(6, |rng| {
+        let (groups, wpg) = rng.topology_shape(3, 2);
+        let algo = if rng.bool_() { Algo::Lsgd } else { Algo::Csgd };
+        assert_engines_agree(&cfg(groups, wpg, 2, algo), LsgdOptions::default());
+    });
+}

@@ -1,0 +1,250 @@
+//! Offline stand-in for the `anyhow` crate (this build environment has
+//! no crates.io registry — every dependency must live in-tree, see the
+//! workspace `Cargo.toml`).
+//!
+//! Implements the subset the repo uses, API-compatible so the crate
+//! can be swapped for real `anyhow` by flipping one path dependency:
+//!
+//! * [`Error`] — a context-chained error value (message + source chain);
+//! * [`Result<T>`] — `std::result::Result<T, Error>` alias;
+//! * [`Context`] — `.context(..)` / `.with_context(|| ..)` on both
+//!   `Result` and `Option`;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] macros (with and without a
+//!   message, inline format captures supported);
+//! * blanket `From<E: std::error::Error>` so `?` lifts std errors.
+//!
+//! Display follows anyhow's convention: `{}` prints the outermost
+//! message, `{:#}` prints the whole chain separated by `: `.
+
+use std::fmt;
+
+/// A context-chained error: the outermost message plus the chain of
+/// underlying causes (innermost last).
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, c: C) -> Self {
+        Error { msg: c.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Iterate the chain outermost→innermost (anyhow's `chain()`).
+    pub fn chain(&self) -> Chain<'_> {
+        Chain { next: Some(self) }
+    }
+
+    /// The innermost error in the chain (anyhow's `root_cause()`).
+    pub fn root_cause(&self) -> &Error {
+        let mut e = self;
+        while let Some(s) = &e.source {
+            e = s;
+        }
+        e
+    }
+}
+
+/// Iterator over an error's context chain.
+pub struct Chain<'a> {
+    next: Option<&'a Error>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a Error;
+
+    fn next(&mut self) -> Option<&'a Error> {
+        let e = self.next?;
+        self.next = e.source.as_deref();
+        Some(e)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            let mut s = self.source.as_deref();
+            while let Some(e) = s {
+                write!(f, ": {}", e.msg)?;
+                s = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if self.source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+            let mut s = self.source.as_deref();
+            while let Some(e) = s {
+                write!(f, "\n    {}", e.msg)?;
+                s = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+// The blanket lift std errors rely on for `?`. `Error` itself does not
+// implement `std::error::Error` (exactly like real anyhow), which is
+// what keeps this impl coherent next to `impl From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut out: Option<Error> = None;
+        for m in msgs.into_iter().rev() {
+            out = Some(Error { msg: m, source: out.map(Box::new) });
+        }
+        out.expect("at least one message")
+    }
+}
+
+/// `std::result::Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to the error arm of a `Result` or to a `None`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Early-return an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(msg: &str) -> Result<()> {
+        Err(Error::msg(msg.to_string()))
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e = fails("inner").context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+    }
+
+    #[test]
+    fn question_mark_lifts_std_errors() {
+        fn read() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/file")?)
+        }
+        assert!(read().is_err());
+    }
+
+    #[test]
+    fn ensure_without_message_names_the_condition() {
+        fn check(x: usize) -> Result<()> {
+            ensure!(x > 3);
+            Ok(())
+        }
+        let e = check(1).unwrap_err();
+        assert!(format!("{e}").contains("x > 3"), "{e}");
+        assert!(check(4).is_ok());
+    }
+
+    #[test]
+    fn ensure_and_bail_format_args() {
+        fn f(v: i32) -> Result<i32> {
+            ensure!(v >= 0, "negative input {v}");
+            if v > 10 {
+                bail!("too big: {}", v);
+            }
+            Ok(v)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert_eq!(format!("{}", f(-1).unwrap_err()), "negative input -1");
+        assert_eq!(format!("{}", f(11).unwrap_err()), "too big: 11");
+    }
+
+    #[test]
+    fn context_on_option() {
+        let x: Option<u32> = None;
+        let e = x.context("missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+        assert_eq!(Some(7).with_context(|| "unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn chain_and_root_cause() {
+        let e = fails("root").context("mid").context("top").unwrap_err();
+        let msgs: Vec<String> = e.chain().map(|x| format!("{x}")).collect();
+        assert_eq!(msgs, ["top", "mid", "root"]);
+        assert_eq!(format!("{}", e.root_cause()), "root");
+    }
+}
