@@ -4,10 +4,15 @@
 //! (ResNet-50 ≈ 25.6M f32 ≈ 102 MB).
 //!
 //! Run: `cargo bench --bench collectives`
+//!
+//! CI fast mode (`BENCH_SMOKE=1`) drops the 25.6M payload and uses the
+//! quick harness budget; results land in
+//! `bench_results/BENCH_collectives.json` and are checked against the
+//! ceilings in `benches/baseline.json` when `BENCH_BASELINE` is set.
 
 use lsgd::collective;
 use lsgd::data::Rng;
-use lsgd::util::bench::Harness;
+use lsgd::util::bench::{enforce_baseline_from_env, smoke_mode, Harness};
 
 fn rand_vec(seed: u64, n: usize) -> Vec<f32> {
     let mut rng = Rng::new(seed);
@@ -15,11 +20,17 @@ fn rand_vec(seed: u64, n: usize) -> Vec<f32> {
 }
 
 fn main() {
-    let mut h = Harness::default();
+    let smoke = smoke_mode();
+    let mut h = if smoke { Harness::quick() } else { Harness::default() };
     println!("# collectives — fixed-order reductions + ring baseline");
 
     // sizes: tiny model, small model, ResNet-50-sized (the paper's payload)
-    for &(label, n) in &[("134k", 134_400usize), ("3.7M", 3_696_128), ("25.6M", 25_600_000)] {
+    let sizes: &[(&str, usize)] = if smoke {
+        &[("134k", 134_400), ("3.7M", 3_696_128)]
+    } else {
+        &[("134k", 134_400), ("3.7M", 3_696_128), ("25.6M", 25_600_000)]
+    };
+    for &(label, n) in sizes {
         let a = rand_vec(1, n);
         let b = rand_vec(2, n);
         let mut acc = a.clone();
@@ -41,7 +52,10 @@ fn main() {
     // chunk-parallel fold: same association per element, bitwise-equal
     // output (the global fold of the thread-per-rank engine)
     let cores = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1);
-    for threads in [2usize, 4, cores] {
+    let mut thread_counts = vec![2usize, 4, cores];
+    thread_counts.sort_unstable();
+    thread_counts.dedup(); // cores may be 2 or 4 — avoid duplicate rows
+    for threads in thread_counts {
         let s = h.bench(&format!("reduce_scaled_par/4way/3.7M/{threads}t"), || {
             collective::reduce_scaled_par(&refs, 0.25, threads)
         });
@@ -88,4 +102,8 @@ fn main() {
     });
 
     println!("\n{}", h.csv());
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/BENCH_collectives.json", h.json()).unwrap();
+    println!("→ bench_results/BENCH_collectives.json");
+    enforce_baseline_from_env(&h.results);
 }

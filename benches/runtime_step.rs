@@ -10,13 +10,19 @@
 //! bitwise-identical (asserted here on the measured runs).
 //!
 //! Run: `cargo bench --bench runtime_step`
+//!
+//! CI runs this in fast mode (`BENCH_SMOKE=1`): fewer presets and
+//! topologies, quick harness budget. Results are always written to
+//! `bench_results/BENCH_runtime.json`; when `BENCH_BASELINE` names a
+//! baseline file (CI: `benches/baseline.json`), any bench whose median
+//! exceeds its baseline ceiling by >25 % fails the run.
 
 use lsgd::config::{Algo, ExperimentConfig};
 use lsgd::data::Rng;
 use lsgd::runtime::Engine;
 use lsgd::sched::Trainer;
 use lsgd::topology::Topology;
-use lsgd::util::bench::Harness;
+use lsgd::util::bench::{enforce_baseline_from_env, smoke_mode, Harness};
 
 fn rand_vec(seed: u64, n: usize) -> Vec<f32> {
     let mut rng = Rng::new(seed);
@@ -108,20 +114,29 @@ fn bench_engines(h: &mut Harness, preset: &str, groups: usize, wpg: usize, algo:
 }
 
 fn main() {
+    let smoke = smoke_mode();
     let mut h = Harness::quick();
-    for preset in ["tiny", "small", "base"] {
+    let presets: &[&str] = if smoke { &["tiny"] } else { &["tiny", "small", "base"] };
+    for preset in presets {
         bench_preset(&mut h, preset);
     }
 
     println!("\n# full steps: serial vs thread-per-rank (same data, same trajectory)");
     let cores = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1);
     println!("  ({cores} cpu threads available)");
-    bench_engines(&mut h, "small", 2, 2, Algo::Lsgd);
-    bench_engines(&mut h, "small", 2, 2, Algo::Csgd);
-    bench_engines(&mut h, "small", 2, 4, Algo::Lsgd);
-    bench_engines(&mut h, "base", 2, 2, Algo::Lsgd);
+    if smoke {
+        bench_engines(&mut h, "tiny", 2, 2, Algo::Lsgd);
+        bench_engines(&mut h, "tiny", 2, 2, Algo::Csgd);
+    } else {
+        bench_engines(&mut h, "small", 2, 2, Algo::Lsgd);
+        bench_engines(&mut h, "small", 2, 2, Algo::Csgd);
+        bench_engines(&mut h, "small", 2, 4, Algo::Lsgd);
+        bench_engines(&mut h, "base", 2, 2, Algo::Lsgd);
+    }
 
     std::fs::create_dir_all("bench_results").ok();
     std::fs::write("bench_results/runtime_step.csv", h.csv()).unwrap();
-    println!("\n→ bench_results/runtime_step.csv");
+    std::fs::write("bench_results/BENCH_runtime.json", h.json()).unwrap();
+    println!("\n→ bench_results/runtime_step.csv, bench_results/BENCH_runtime.json");
+    enforce_baseline_from_env(&h.results);
 }

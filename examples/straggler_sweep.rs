@@ -1,0 +1,125 @@
+//! Straggler sweep: the "LSGD degrades gracefully vs CSGD" curve.
+//!
+//! Part 1 sweeps straggler probability on the calibrated cluster model
+//! (DES, paper fabric): CSGD pays the slowest rank's compute AND I/O
+//! extension serially every step, while LSGD absorbs part of the I/O
+//! extension into its allreduce overlap window — so its absolute
+//! per-step straggler tax stays smaller and its throughput lead widens.
+//!
+//! Part 2 runs the *real* thread-per-rank engine with seeded injected
+//! delays and prints the measured phase accounting (injected straggle,
+//! communicator wait, hidden I/O).
+//!
+//! Part 3 demonstrates elastic fail-stop recovery: a worker dies
+//! mid-run, the survivors regroup and re-shard, and two identical runs
+//! produce bitwise-identical trajectories.
+//!
+//! ```bash
+//! cargo run --release --example straggler_sweep -- --steps 6
+//! ```
+
+use anyhow::Result;
+use lsgd::config::{Algo, ExperimentConfig};
+use lsgd::runtime::Engine;
+use lsgd::sched::{RunOptions, Trainer};
+use lsgd::simnet::{des, ClusterModel, PerturbConfig};
+use lsgd::topology::Topology;
+use lsgd::util::cli::Args;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let a = Args::parse(&argv, &[])?;
+    let groups = a.usize_or("groups", 64)?;
+    let workers = a.usize_or("workers", 4)?;
+    let steps = a.usize_or("steps", 6)?;
+    let factor = a.f64_or("factor", 2.0)?;
+    a.finish()?;
+
+    // -- Part 1: DES sweep on the paper's cluster ---------------------
+    let m = ClusterModel::paper_k80();
+    let topo = Topology::new(groups, workers)?;
+    let base_l = des::per_step(&des::run_lsgd(&m, &topo, steps), steps);
+    let base_c = des::per_step(&des::run_csgd(&m, &topo, steps), steps);
+    println!(
+        "== DES sweep: {groups}x{workers}, straggle factor {factor}x, {steps} steps/point =="
+    );
+    println!(
+        "{:>6} {:>10} {:>10} {:>10} {:>10} {:>8}",
+        "prob", "lsgd_s", "csgd_s", "tax_l", "tax_c", "l/c_thr"
+    );
+    let mut last = None;
+    for prob in [0.0, 0.05, 0.1, 0.2, 0.3, 0.5] {
+        let mut p = PerturbConfig::default();
+        p.straggle_prob = prob;
+        p.straggle_factor = factor;
+        let l = des::per_step(&des::run_lsgd_perturbed(&m, &topo, steps, &p)?, steps);
+        let c = des::per_step(&des::run_csgd_perturbed(&m, &topo, steps, &p)?, steps);
+        println!(
+            "{prob:>6.2} {l:>10.3} {c:>10.3} {:>10.3} {:>10.3} {:>8.3}",
+            l - base_l,
+            c - base_c,
+            c / l
+        );
+        last = Some((l - base_l, c - base_c));
+    }
+    let (tax_l, tax_c) = last.unwrap();
+    // structural guarantee: the LSGD critical chain pays its group's
+    // max scale and absorbs I/O into the overlap window, so its tax
+    // never exceeds CSGD's; at scale (t_g > t_io) it is strictly lower
+    assert!(
+        tax_l <= tax_c + 1e-9,
+        "LSGD's absolute straggler tax ({tax_l:.3}s) should undercut CSGD's ({tax_c:.3}s)"
+    );
+    println!("→ LSGD degrades gracefully: smaller absolute tax, widening throughput lead\n");
+
+    // -- Part 2: real engine, measured phase accounting ---------------
+    println!("== thread-per-rank engine: measured straggle accounting (2x2 tiny) ==");
+    let engine = Engine::host("tiny")?;
+    let mk_cfg = |algo: Algo| {
+        let mut c = ExperimentConfig::default();
+        c.algo = algo;
+        c.topology = Topology::new(2, 2).unwrap();
+        c.steps = 6;
+        c.data.train_samples = 512;
+        c.data.val_samples = 64;
+        c.data.io_latency = 0.004;
+        c
+    };
+    let mut p = PerturbConfig::default();
+    p.straggle_prob = 0.5;
+    p.straggle_factor = 4.0;
+    p.delay_unit = 0.004;
+    for algo in [Algo::Lsgd, Algo::Csgd] {
+        let mut t = Trainer::new(&engine, mk_cfg(algo), false)?;
+        let r = t.run_perturbed(RunOptions::parallel(), &p)?;
+        println!(
+            "  {algo}: injected {:.3}s, communicator wait {:.3}s, hidden I/O {:.3}s",
+            r.perturb.injected_total(),
+            r.perturb.wait_total(),
+            r.hidden_io_secs
+        );
+    }
+
+    // -- Part 3: fail-stop + elastic regroup, twice -------------------
+    println!("\n== fail-stop: worker 1 dies before step 3, survivors regroup ==");
+    let mut p = PerturbConfig::default();
+    p.parse_failures("1@3")?;
+    let run_once = || -> Result<(Vec<u64>, usize)> {
+        let mut t = Trainer::new(&engine, mk_cfg(Algo::Lsgd), false)?;
+        let r = t.run_perturbed(RunOptions::parallel(), &p)?;
+        for ev in &r.perturb.regroups {
+            println!(
+                "  regroup @step {}: removed {:?} → {} workers in {} groups (membership {:#018x})",
+                ev.step, ev.removed, ev.workers_after, ev.groups_after, ev.membership_checksum
+            );
+        }
+        Ok((r.step_checksums, r.perturb.regroups.len()))
+    };
+    let (sums_a, regroups) = run_once()?;
+    let (sums_b, _) = run_once()?;
+    assert_eq!(regroups, 1);
+    assert_eq!(sums_a, sums_b, "seeded fail-stop runs must be bitwise-identical");
+    println!("→ two identical runs, bitwise-equal trajectories across the regroup");
+    println!("straggler_sweep OK");
+    Ok(())
+}

@@ -1,6 +1,22 @@
 # Allow `pytest python/tests/` from the repo root: the `compile`
 # package is rooted at python/.
+import importlib.util
 import os
 import sys
 
 sys.path.insert(0, os.path.dirname(__file__))
+
+# Skip-if-no-deps guard: CI (and leaner dev boxes) may lack some of the
+# optional L1/L2 dependencies. Ignore exactly the modules whose imports
+# would fail, instead of erroring the whole collection.
+_OPTIONAL_DEPS = {
+    "tests/test_kernel.py": ("jax", "hypothesis"),
+    "tests/test_model.py": ("jax",),
+    "tests/test_aot.py": ("jax",),
+}
+
+collect_ignore = [
+    path
+    for path, mods in _OPTIONAL_DEPS.items()
+    if any(importlib.util.find_spec(m) is None for m in mods)
+]

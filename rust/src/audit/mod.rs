@@ -125,6 +125,7 @@ mod tests {
             step_checksums: sums,
             final_params: params,
             hidden_io_secs: 0.0,
+            perturb: Default::default(),
         }
     }
 

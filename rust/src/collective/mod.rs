@@ -64,6 +64,12 @@ pub fn scale(buf: &mut [f32], s: f32) {
 /// Fixed-order left-fold sum of `buffers` (ascending index = rank
 /// order), scaled by `scale_by`. The result equals the L1
 /// `grad_reduce` kernel bitwise for the same inputs.
+///
+/// Fan-in is a runtime value on purpose: after an elastic regroup
+/// ([`crate::topology::Membership`]) the same fold runs over the
+/// shrunken survivor set with `scale_by = 1/alive` — no separate
+/// "degraded" code path, so the post-regroup association is still a
+/// plain ascending-id left fold and stays bitwise-reproducible.
 pub fn reduce_scaled(buffers: &[&[f32]], scale_by: f32) -> Vec<f32> {
     assert!(!buffers.is_empty(), "reduce over zero buffers");
     let mut acc = buffers[0].to_vec();
@@ -298,6 +304,26 @@ mod tests {
     fn mismatched_lengths_panic() {
         let mut a = vec![0.0; 3];
         add_assign(&mut a, &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn scaled_fold_over_shrunken_group_drops_the_dead_rank() {
+        // elastic-regroup arithmetic: removing one buffer from the fold
+        // and rescaling by 1/(k−1) equals folding the survivors alone
+        let bufs: Vec<Vec<f32>> = (0..4).map(|i| mk(300, 70 + i)).collect();
+        let survivors: Vec<&[f32]> = [&bufs[0], &bufs[1], &bufs[3]]
+            .iter()
+            .map(|v| v.as_slice())
+            .collect();
+        let got = reduce_scaled(&survivors, 1.0 / 3.0);
+        let want: Vec<f32> = (0..300)
+            .map(|i| ((bufs[0][i] + bufs[1][i]) + bufs[3][i]) * (1.0 / 3.0f32))
+            .collect();
+        assert_eq!(got, want); // bitwise
+        // and the chunk-parallel fold agrees for any thread count
+        for threads in [1usize, 2, 5] {
+            assert_eq!(reduce_scaled_par(&survivors, 1.0 / 3.0, threads), want);
+        }
     }
 
     #[test]

@@ -201,6 +201,25 @@ impl Loader {
             .collect()
     }
 
+    /// An arbitrary contiguous slice of step `step`'s global batch,
+    /// flattened row-major — the elastic-membership loading path:
+    /// after a regroup, shard ranges come from
+    /// [`crate::topology::Membership::shard_range`] instead of the
+    /// static topology. For a full membership this returns exactly
+    /// what [`Loader::load_shard`] returns (same draw, same slice,
+    /// same latency window), which is what keeps the unperturbed
+    /// thread-per-rank trajectory bitwise-identical.
+    pub fn load_range(
+        &self,
+        step: usize,
+        global_batch: usize,
+        range: std::ops::Range<usize>,
+    ) -> Vec<i32> {
+        let all = self.partitioner.global_batch(step, global_batch);
+        self.simulate_io();
+        self.gather(&all[range])
+    }
+
     /// The whole global batch (sequential-SGD oracle path).
     pub fn load_global(&self, step: usize, global_batch: usize) -> Vec<i32> {
         let idx = self.partitioner.global_batch(step, global_batch);
@@ -297,6 +316,27 @@ mod tests {
         assert_eq!(global.len(), 8 * 17);
         // worker 0's shard is the head of the global batch
         assert_eq!(&global[..shard.len()], &shard[..]);
+    }
+
+    #[test]
+    fn load_range_matches_load_shard_on_full_membership() {
+        let corpus = Corpus::synthetic(256, 9, 64, 5);
+        let loader = Loader::new(corpus, 11, 0.0);
+        let topo = Topology::new(2, 2).unwrap();
+        for w in topo.all_workers() {
+            let range = topo.shard_range(w, 16).unwrap();
+            assert_eq!(
+                loader.load_range(3, 16, range),
+                loader.load_shard(&topo, w, 3, 16).unwrap()
+            );
+        }
+        // membership ranges after a removal still partition the batch
+        let memb = topo.remove_worker(WorkerId(1)).unwrap();
+        let mut all = vec![];
+        for w in memb.alive() {
+            all.extend(loader.load_range(3, 12, memb.shard_range(w, 12).unwrap()));
+        }
+        assert_eq!(all, loader.load_global(3, 12));
     }
 
     #[test]

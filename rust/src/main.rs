@@ -23,7 +23,7 @@ use lsgd::config::{Algo, ExperimentConfig};
 use lsgd::metrics::{FigureSeries, ScalingRow};
 use lsgd::runtime::{host, Engine, Manifest};
 use lsgd::sched::{ExecMode, RunOptions, Trainer};
-use lsgd::simnet::{self, des, AllreduceAlgo, ClusterModel};
+use lsgd::simnet::{self, des, AllreduceAlgo, ClusterModel, PerturbConfig};
 use lsgd::topology::Topology;
 use lsgd::util::cli::Args;
 
@@ -39,6 +39,12 @@ SUBCOMMANDS:
             --dedup-replicas --parallel --config FILE --curve-out FILE
             (--parallel = thread-per-rank engine: one OS thread per
              worker and per communicator; bitwise-identical trajectory)
+            perturbation (needs --parallel):
+            --stragglers P[xF]   straggle each rank w.p. P, slowdown F
+            --hetero H           permanent per-rank speed spread [0,H]
+            --fail W@S[,W@S..]   fail-stop worker W before step S
+                                 (elastic regroup: survivors re-shard)
+            --perturb-seed S --straggle-secs SECS (delay per 1x slowdown)
   audit     run CSGD and LSGD back-to-back, compare trajectories bitwise
             (same flags as train, plus --paper-literal)
   bench     regenerate a paper figure from the calibrated cluster model
@@ -46,9 +52,27 @@ SUBCOMMANDS:
             [--t-compute S] [--t-io S]
   simulate  discrete-event timeline at scale
             --algo csgd|lsgd --groups G --workers W --steps K
+            [--stragglers P[xF]] [--hetero H] [--fail W@S[,..]]
+            [--perturb-seed S]
   config    dump | check [--file FILE]
   info      [--artifacts DIR]
 ";
+
+/// Shared `--stragglers/--hetero/--fail/--perturb-seed/--straggle-secs`
+/// flag handling (train + simulate).
+fn parse_perturb(a: &Args) -> Result<PerturbConfig> {
+    let mut p = PerturbConfig::default();
+    if let Some(spec) = a.opt_str("stragglers") {
+        p.parse_stragglers(&spec)?;
+    }
+    p.hetero = a.f64_or("hetero", p.hetero)?;
+    if let Some(spec) = a.opt_str("fail") {
+        p.parse_failures(&spec)?;
+    }
+    p.seed = a.u64_or("perturb-seed", p.seed)?;
+    p.delay_unit = a.f64_or("straggle-secs", p.delay_unit)?;
+    Ok(p)
+}
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -108,6 +132,7 @@ fn cmd_train(rest: &[String]) -> Result<()> {
     let curve_out = a.opt_str("curve-out");
     let dedup = a.switch("dedup-replicas");
     let parallel = a.switch("parallel");
+    let perturb = parse_perturb(&a)?;
     a.finish()?;
 
     eprintln!(
@@ -126,7 +151,7 @@ fn cmd_train(rest: &[String]) -> Result<()> {
     );
     let mut trainer = Trainer::new(&engine, cfg.clone(), dedup)?;
     let t0 = std::time::Instant::now();
-    let result = trainer.run_with(RunOptions { mode, ..Default::default() })?;
+    let result = trainer.run_perturbed(RunOptions { mode, ..Default::default() }, &perturb)?;
     let wall = t0.elapsed().as_secs_f64();
 
     let n = cfg.topology.num_workers();
@@ -144,6 +169,19 @@ fn cmd_train(rest: &[String]) -> Result<()> {
     }
     if result.hidden_io_secs > 0.0 {
         println!("  I/O hidden under global allreduce: {:.3}s", result.hidden_io_secs);
+    }
+    if !perturb.is_noop() {
+        println!(
+            "perturbation: injected straggle {:.3}s, communicator wait {:.3}s",
+            result.perturb.injected_total(),
+            result.perturb.wait_total()
+        );
+        for ev in &result.perturb.regroups {
+            println!(
+                "  regroup @step {}: removed {:?} → {} workers in {} groups (membership {:#018x})",
+                ev.step, ev.removed, ev.workers_after, ev.groups_after, ev.membership_checksum
+            );
+        }
     }
     if let (Some((_, l0, _)), Some((_, l1, _))) =
         (result.curve.train.first(), result.curve.train.last())
@@ -304,13 +342,14 @@ fn cmd_simulate(rest: &[String]) -> Result<()> {
     let workers = a.usize_or("workers", 4)?;
     let steps = a.usize_or("steps", 3)?;
     let algo: Algo = a.str_or("algo", "lsgd").parse()?;
+    let perturb = parse_perturb(&a)?;
     a.finish()?;
 
     let m = ClusterModel::paper_k80();
     let topo = Topology::new(groups, workers)?;
     let r = match algo {
-        Algo::Lsgd => des::run_lsgd(&m, &topo, steps),
-        Algo::Csgd => des::run_csgd(&m, &topo, steps),
+        Algo::Lsgd => des::run_lsgd_perturbed(&m, &topo, steps, &perturb)?,
+        Algo::Csgd => des::run_csgd_perturbed(&m, &topo, steps, &perturb)?,
     };
     println!(
         "{algo} {groups}x{workers} steps={steps}: makespan={:.3}s per_step={:.3}s hidden_comm={:.3}s",
@@ -318,6 +357,17 @@ fn cmd_simulate(rest: &[String]) -> Result<()> {
         des::per_step(&r, steps),
         r.hidden_comm
     );
+    if !perturb.is_noop() {
+        let base = match algo {
+            Algo::Lsgd => des::run_lsgd(&m, &topo, steps),
+            Algo::Csgd => des::run_csgd(&m, &topo, steps),
+        };
+        println!(
+            "perturbation tax: {:+.3}s total ({:+.1}% per step vs unperturbed)",
+            r.makespan - base.makespan,
+            100.0 * (r.makespan / base.makespan - 1.0)
+        );
+    }
     // print the first step's timeline
     let mut spans: Vec<_> = r.spans.iter().filter(|s| s.step == 0).collect();
     spans.sort_by(|a, b| (a.start, &a.rank).partial_cmp(&(b.start, &b.rank)).unwrap());

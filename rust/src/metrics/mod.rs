@@ -78,6 +78,50 @@ impl PhaseTimers {
     }
 }
 
+/// One step-boundary membership change applied by the elastic fault
+/// path ([`crate::sched::exec`]): which ranks were removed, what
+/// survived, and the membership fingerprint
+/// ([`crate::topology::Membership::checksum`]) the determinism tests
+/// compare across reruns.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RegroupEvent {
+    /// First step executed under the new membership.
+    pub step: usize,
+    /// Original worker ids removed at this boundary (ascending).
+    pub removed: Vec<usize>,
+    pub groups_after: usize,
+    pub workers_after: usize,
+    /// Fingerprint of the post-rebalance membership.
+    pub membership_checksum: u64,
+}
+
+/// Straggler / fault accounting for one run of the thread-per-rank
+/// engine. Empty (all zero) for unperturbed or serial runs.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PerturbReport {
+    /// `(original worker id, total injected compute-delay seconds)` —
+    /// the seeded straggler schedule as actually applied, per rank.
+    pub injected_per_worker: Vec<(usize, f64)>,
+    /// `(group index at launch of the segment, total seconds the
+    /// group's communicator waited between its first and last worker
+    /// gradient per step)` — where straggling shows up on the wire.
+    pub wait_per_group: Vec<(usize, f64)>,
+    /// Membership changes, in step order.
+    pub regroups: Vec<RegroupEvent>,
+}
+
+impl PerturbReport {
+    /// Total injected delay across ranks (seconds).
+    pub fn injected_total(&self) -> f64 {
+        self.injected_per_worker.iter().map(|(_, s)| s).sum()
+    }
+
+    /// Total communicator straggle wait across groups (seconds).
+    pub fn wait_total(&self) -> f64 {
+        self.wait_per_group.iter().map(|(_, s)| s).sum()
+    }
+}
+
 /// One row of a figure table: everything needed to reprint the paper's
 /// series for a given worker count.
 #[derive(Debug, Clone)]
@@ -225,6 +269,17 @@ mod tests {
         assert_eq!(t.total("nope"), 0.0);
         assert_eq!(t.mean("nope"), 0.0);
         assert_eq!(t.fraction("nope"), 0.0);
+    }
+
+    #[test]
+    fn perturb_report_totals() {
+        let mut r = PerturbReport::default();
+        assert_eq!(r.injected_total(), 0.0);
+        assert_eq!(r.wait_total(), 0.0);
+        r.injected_per_worker = vec![(0, 1.0), (2, 0.5)];
+        r.wait_per_group = vec![(0, 0.25), (1, 0.25)];
+        assert_eq!(r.injected_total(), 1.5);
+        assert_eq!(r.wait_total(), 0.5);
     }
 
     #[test]

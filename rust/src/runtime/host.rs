@@ -108,11 +108,7 @@ impl HostModel {
         );
         // Deterministic init, seeded per preset: embed uniform(-0.5, 0.5),
         // W and b zero (=> exact ln V initial loss).
-        let mut seed = 0xcbf29ce484222325_u64;
-        for b in manifest.config.name.bytes() {
-            seed ^= b as u64;
-            seed = seed.wrapping_mul(0x100000001b3);
-        }
+        let seed = crate::util::fnv1a(manifest.config.name.bytes());
         let mut rng = Rng::new(seed);
         let mut init = vec![0.0_f32; param_count];
         for v in init[..vocab * d].iter_mut() {

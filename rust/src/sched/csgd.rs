@@ -67,5 +67,6 @@ pub fn run(t: &mut Trainer) -> Result<RunResult> {
         final_params: t.replica_of(0).params.clone(),
         hidden_io_secs: 0.0,
         steps: t.cfg.steps,
+        perturb: Default::default(),
     })
 }

@@ -1,4 +1,5 @@
-//! Thread-per-rank parallel runtime for Algorithms 2 and 3.
+//! Thread-per-rank parallel runtime for Algorithms 2 and 3, with
+//! straggler injection and elastic fail-stop recovery.
 //!
 //! The serial schedulers ([`super::csgd`], [`super::lsgd`]) *simulate*
 //! the paper's decentralized ranks on one thread. This module runs
@@ -11,14 +12,41 @@
 //! one scoped loader thread.
 //!
 //! ```text
-//! worker threads (N)         communicator threads (G)      main thread
+//! worker threads (alive)     communicator threads (G)      main thread
 //! ───────────────────        ───────────────────────       ─────────────────
 //! grad_step(shard_t) ──────▶ slot by worker id
-//!                            fold asc. worker id   ──────▶ slot by group id
+//! [straggle delay]           fold asc. worker id   ──────▶ slot by group id
 //! load shard_{t+1}   ∥                                     fold asc. group id
 //!                                                          (chunk-parallel)
 //! update ◀────────────────── broadcast copies      ◀────── Arc to each comm
 //! ```
+//!
+//! ## Perturbation (stragglers, heterogeneity, fail-stop)
+//!
+//! A [`PerturbConfig`] threads the [`crate::simnet::perturb`] model
+//! into the real runtime:
+//!
+//! * **injected delays** — each worker sleeps
+//!   [`PerturbConfig::injected_delay`] after its gradient is computed
+//!   (phase `injected_delay`, also totalled per rank in the run
+//!   report) and [`PerturbConfig::io_extension`] after each shard load
+//!   (phase `io_straggle`), so a "slow rank" is slow in real
+//!   wall-clock exactly where the DES says it is. Communicators
+//!   account the resulting first-to-last arrival gap as the
+//!   `straggle_wait` phase.
+//! * **fail-stop faults** — the run is split into *segments* at the
+//!   fault boundaries. Each segment runs the full channel web over the
+//!   current [`Membership`]; at a boundary all rank threads join (a
+//!   real synchronization point), the dead workers are removed, the
+//!   survivors are [`Membership::rebalance`]d into even groups, the
+//!   global batch shrinks to `alive × micro_batch`, and a
+//!   [`RegroupEvent`] is logged. Training then continues.
+//!
+//! Sleeps never touch the numerics, and membership only changes at
+//! segment boundaries, so a perturbed run is **bitwise-reproducible
+//! for a fixed seed** (asserted in `rust/tests/stragglers.rs`), and a
+//! run with a no-op config is bitwise-identical to the unperturbed
+//! engine (asserted in `rust/tests/parallel.rs`, unchanged).
 //!
 //! ## Why the result is still bitwise-identical to the serial path
 //!
@@ -31,7 +59,9 @@
 //! * the global folder does the same with group partials, so the
 //!   merged gradient is exactly `Σ_g (Σ_w g_{g,w})` in ascending id
 //!   order — the association [`crate::collective::hierarchical_allreduce`]
-//!   defines and both serial schedulers use;
+//!   defines and both serial schedulers use. After a regroup the same
+//!   rule holds over the survivor set: [`Membership`] keeps every
+//!   group an ascending run of original ids;
 //! * the cross-group fold runs chunk-parallel
 //!   ([`crate::collective::reduce_scaled_par`]), which splits work by
 //!   *element index*, not by fold position — every element sees the
@@ -39,17 +69,13 @@
 //! * no atomics, no locks around accumulation: all numeric state moves
 //!   by message passing and is folded by exactly one thread.
 //!
-//! `rust/tests/parallel.rs` asserts the resulting step checksums are
-//! bitwise-equal to the serial schedulers', and property-tests the
-//! fold layer across random topologies and thread counts.
-//!
 //! ## Error handling
 //!
 //! Backend errors inside rank threads abort the run via panic; the
 //! channel web collapses (every peer's `recv` fails) and the scope
-//! re-raises the first panic. There is no partial-step recovery —
-//! synchronous SGD has no meaningful state between a failed collective
-//! and the next barrier anyway.
+//! re-raises the first panic. Fail-stop faults are NOT panics — they
+//! are scheduled removals with clean segment handoff; there is no
+//! mid-collective recovery, matching synchronous SGD's semantics.
 
 use std::sync::mpsc::channel;
 use std::sync::Arc;
@@ -60,9 +86,10 @@ use anyhow::Result;
 use super::{checksum, evaluate_params, LsgdOptions, RunResult, Trainer};
 use crate::collective;
 use crate::config::Algo;
-use crate::metrics::PhaseTimers;
-use crate::metrics::TrainCurve;
-use crate::topology::WorkerId;
+use crate::metrics::{PerturbReport, PhaseTimers, RegroupEvent, TrainCurve};
+use crate::simnet::perturb::drive_segments;
+use crate::simnet::PerturbConfig;
+use crate::topology::{Membership, WorkerId};
 
 /// Worker → communicator, once per step: the worker's gradient plus
 /// bookkeeping (shard loss; wall-clock of the *previous* step's
@@ -84,8 +111,9 @@ struct PartialMsg {
     prev_io_max: f64,
 }
 
-/// Worker 0 → result collector, once per step, after its deferred
-/// update: the trajectory checksum (and eval metrics when due).
+/// Reporting rank → result collector, once per step, after its
+/// deferred update: the trajectory checksum (and eval metrics when
+/// due). The reporting rank is the lowest alive worker id.
 struct StepReport {
     step: usize,
     checksum: u64,
@@ -93,30 +121,127 @@ struct StepReport {
 }
 
 /// Run Algorithm 3 on the thread-per-rank runtime.
-pub fn run_lsgd(t: &mut Trainer, opts: LsgdOptions) -> Result<RunResult> {
-    run(t, Algo::Lsgd, opts)
+pub fn run_lsgd(t: &mut Trainer, opts: LsgdOptions, perturb: &PerturbConfig) -> Result<RunResult> {
+    run(t, Algo::Lsgd, opts, perturb)
 }
 
 /// Run Algorithm 2 on the thread-per-rank runtime.
-pub fn run_csgd(t: &mut Trainer) -> Result<RunResult> {
-    run(t, Algo::Csgd, LsgdOptions::default())
+pub fn run_csgd(t: &mut Trainer, perturb: &PerturbConfig) -> Result<RunResult> {
+    run(t, Algo::Csgd, LsgdOptions::default(), perturb)
 }
 
-fn run(t: &mut Trainer, algo: Algo, opts: LsgdOptions) -> Result<RunResult> {
+/// Cross-segment accumulators: one set for the whole run, appended to
+/// by each segment.
+struct Acc {
+    timers: PhaseTimers,
+    curve: TrainCurve,
+    checksums: Vec<u64>,
+    hidden_io: f64,
+    /// Injected straggle seconds per original worker id.
+    injected: Vec<f64>,
+    /// (group index within its segment's membership, wait seconds).
+    waits: Vec<(usize, f64)>,
+    regroups: Vec<RegroupEvent>,
+}
+
+fn run(
+    t: &mut Trainer,
+    algo: Algo,
+    opts: LsgdOptions,
+    perturb: &PerturbConfig,
+) -> Result<RunResult> {
     let topo = t.topo.clone();
-    let groups = topo.groups;
-    let wpg = topo.workers_per_group;
     let n_workers = topo.num_workers();
     anyhow::ensure!(
         t.replicas.len() == n_workers,
         "thread-per-rank execution owns one replica per worker thread; \
          construct the Trainer with dedup_replicas = false"
     );
+    perturb.validate(n_workers)?;
     let steps = t.cfg.steps;
-    let eval_every = t.cfg.eval_every;
-    let gb = t.global_batch();
     let is_lsgd = algo == Algo::Lsgd;
-    let nf = n_workers as f32;
+
+    let mut acc = Acc {
+        timers: PhaseTimers::new(),
+        curve: TrainCurve::new(if is_lsgd { "lsgd" } else { "csgd" }),
+        checksums: Vec::with_capacity(steps),
+        hidden_io: 0.0,
+        injected: vec![0.0; n_workers],
+        waits: Vec::new(),
+        regroups: Vec::new(),
+    };
+
+    // Segment loop: run fault-free stretches, regroup at boundaries —
+    // the same drive_segments the DES replays, so the fault semantics
+    // of the two execution worlds cannot drift apart.
+    let mut membership = Membership::full(&topo);
+    let regroups = drive_segments(perturb, &mut membership, steps, |memb, range| {
+        run_segment(t, algo, opts, perturb, memb, range, &mut acc)
+    })?;
+    acc.regroups = regroups;
+
+    let first_alive = membership.alive().next().expect("at least one survivor").0;
+    debug_assert!(alive_replicas_identical(t, &membership), "surviving replicas diverged");
+    Ok(RunResult {
+        curve: acc.curve,
+        timers: acc.timers,
+        step_checksums: acc.checksums,
+        final_params: t.replicas[first_alive].params.clone(),
+        hidden_io_secs: if is_lsgd { acc.hidden_io } else { 0.0 },
+        steps,
+        perturb: PerturbReport {
+            injected_per_worker: acc.injected.iter().copied().enumerate().collect(),
+            wait_per_group: acc.waits,
+            regroups: acc.regroups,
+        },
+    })
+}
+
+/// Injected-perturbation sleep (compute straggle / IO extension).
+fn sleep_secs(secs: f64) {
+    std::thread::sleep(std::time::Duration::from_secs_f64(secs));
+}
+
+/// The paper's "conserves all parameters" invariant, restricted to
+/// ranks that are still alive (dead replicas froze at their last step).
+fn alive_replicas_identical(t: &Trainer, memb: &Membership) -> bool {
+    let mut it = memb.alive();
+    let first = match it.next() {
+        Some(w) => &t.replicas[w.0],
+        None => return true,
+    };
+    it.all(|w| {
+        let r = &t.replicas[w.0];
+        r.params == first.params && r.momentum == first.momentum
+    })
+}
+
+/// One fault-free stretch: the full channel web over `memb`, running
+/// steps `range`. The global batch is `alive × micro_batch`, shards
+/// come from [`Membership::shard_range`], and every reduction folds in
+/// ascending original-id order — for a full membership this is
+/// bit-for-bit the pre-fault engine.
+#[allow(clippy::too_many_arguments)]
+fn run_segment(
+    t: &mut Trainer,
+    algo: Algo,
+    opts: LsgdOptions,
+    perturb: &PerturbConfig,
+    memb: &Membership,
+    range: std::ops::Range<usize>,
+    acc: &mut Acc,
+) -> Result<()> {
+    if range.is_empty() {
+        return Ok(());
+    }
+    let groups = memb.num_groups();
+    let sizes: Vec<usize> = (0..groups).map(|g| memb.group(g).len()).collect();
+    let n_alive = memb.num_workers();
+    let first_alive = memb.alive().next().expect("non-empty membership").0;
+    let eval_every = t.cfg.eval_every;
+    let gb = n_alive * t.engine.micro_batch();
+    let is_lsgd = algo == Algo::Lsgd;
+    let nf = n_alive as f32;
     // Division placement mirrors the serial schedulers exactly
     // (sched/mod.rs "Division placement"): scale once after the global
     // fold by default, at each communicator for the paper-literal mode.
@@ -129,6 +254,11 @@ fn run(t: &mut Trainer, algo: Algo, opts: LsgdOptions) -> Result<RunResult> {
         .map(|x| x.get())
         .unwrap_or(1)
         .min(8);
+    // only account communicator wait as "straggle" when something is
+    // actually injected — unperturbed runs keep their timer phases
+    // identical to the pre-fault engine (plain scheduler jitter is not
+    // a straggler signal)
+    let measure_wait = !perturb.is_noop();
 
     // Shared read-only context (the host backend is Sync — see
     // runtime::Engine docs) and the per-worker mutable replicas.
@@ -136,8 +266,16 @@ fn run(t: &mut Trainer, algo: Algo, opts: LsgdOptions) -> Result<RunResult> {
     let loader = &t.loader;
     let lr = &t.lr;
     let val_samples = t.cfg.data.val_samples;
-    let topo_ref = &topo;
+    let io_latency = t.cfg.data.io_latency;
     let replicas = &mut t.replicas;
+
+    // Per-alive-worker static context, in ascending original-id order.
+    let mut shard_ranges = Vec::with_capacity(n_alive);
+    let mut locations = Vec::with_capacity(n_alive);
+    for w in memb.alive() {
+        shard_ranges.push(memb.shard_range(w, gb)?);
+        locations.push(memb.locate(w).expect("alive worker has a slot"));
+    }
 
     // Channel web (Fig. 3 edges). All built before the scope so each
     // thread owns exactly its endpoints.
@@ -156,39 +294,58 @@ fn run(t: &mut Trainer, algo: Algo, opts: LsgdOptions) -> Result<RunResult> {
         bcast_txs.push(tx);
         bcast_rxs.push(rx);
     }
-    let mut avg_txs = Vec::with_capacity(n_workers);
-    let mut avg_rxs = Vec::with_capacity(n_workers);
-    for _ in 0..n_workers {
+    let mut avg_txs = Vec::with_capacity(n_alive);
+    let mut avg_rxs = Vec::with_capacity(n_alive);
+    for _ in 0..n_alive {
         let (tx, rx) = channel::<Vec<f32>>();
         avg_txs.push(tx);
         avg_rxs.push(rx);
     }
     let (report_tx, report_rx) = channel::<StepReport>();
 
-    let mut timers = PhaseTimers::new();
-    let mut curve = TrainCurve::new(if is_lsgd { "lsgd" } else { "csgd" });
-    let mut checksums = Vec::with_capacity(steps);
+    let seg_steps = range.len();
     let mut hidden_io = 0.0_f64;
 
     std::thread::scope(|s| {
         // ---- communicator rank threads (one per group) --------------
+        // avg channels are laid out in alive order, so group g's slice
+        // starts after the sizes of groups 0..g.
         let mut avg_txs_by_group: Vec<Vec<_>> = Vec::with_capacity(groups);
-        for chunk in avg_txs.chunks(wpg) {
-            avg_txs_by_group.push(chunk.to_vec());
+        {
+            let mut rest = avg_txs.as_slice();
+            for &sz in &sizes {
+                let (head, tail) = rest.split_at(sz);
+                avg_txs_by_group.push(head.to_vec());
+                rest = tail;
+            }
         }
         let mut comm_handles = Vec::with_capacity(groups);
         for (group, ((grad_rx, bcast_rx), my_avg_txs)) in
             grad_rxs.into_iter().zip(bcast_rxs).zip(avg_txs_by_group).enumerate()
         {
             let my_partial_tx = partial_tx.clone();
-            comm_handles.push(s.spawn(move || -> PhaseTimers {
+            let wpg = sizes[group];
+            comm_handles.push(s.spawn(move || -> (PhaseTimers, f64) {
                 let mut tm = PhaseTimers::new();
-                for _ in 0..steps {
+                let mut wait_total = 0.0_f64;
+                for _ in 0..seg_steps {
                     let mut slots: Vec<Option<GradMsg>> = (0..wpg).map(|_| None).collect();
+                    let mut first_arrival: Option<Instant> = None;
                     for _ in 0..wpg {
                         let m = grad_rx.recv().expect("worker channel closed");
+                        if first_arrival.is_none() {
+                            first_arrival = Some(Instant::now());
+                        }
                         let local = m.local;
                         slots[local] = Some(m);
+                    }
+                    // first-to-last arrival gap: where stragglers show
+                    // up on the communicator's timeline
+                    if measure_wait && wpg > 1 {
+                        let wait =
+                            first_arrival.expect("received at least one").elapsed().as_secs_f64();
+                        tm.add("straggle_wait", wait);
+                        wait_total += wait;
                     }
                     // fold in ascending worker id — arrival order (the
                     // race) is erased by the slotting above
@@ -217,48 +374,74 @@ fn run(t: &mut Trainer, algo: Algo, opts: LsgdOptions) -> Result<RunResult> {
                         }
                     });
                 }
-                tm
+                (tm, wait_total)
             }));
         }
 
-        // ---- worker rank threads (one per worker) -------------------
-        let mut worker_handles = Vec::with_capacity(n_workers);
-        for ((w, replica), avg_rx) in replicas.iter_mut().enumerate().zip(avg_rxs) {
-            let my_grad_tx = grad_txs[w / wpg].clone();
+        // ---- worker rank threads (one per alive worker) -------------
+        let mut worker_handles = Vec::with_capacity(n_alive);
+        for (pos, ((w, replica), avg_rx)) in replicas
+            .iter_mut()
+            .enumerate()
+            .filter(|(w, _)| memb.contains(WorkerId(*w)))
+            .zip(avg_rxs)
+            .enumerate()
+        {
+            let (gi, local) = locations[pos];
+            let my_range = shard_ranges[pos].clone();
+            let my_grad_tx = grad_txs[gi].clone();
             let my_report_tx = report_tx.clone();
-            worker_handles.push(s.spawn(move || -> PhaseTimers {
+            let seg = range.clone();
+            worker_handles.push(s.spawn(move || -> (PhaseTimers, f64) {
                 let mut tm = PhaseTimers::new();
-                let local = w % wpg;
+                let mut injected = 0.0_f64;
+                // slow-at-loading: sleep the IO extension, accounted as
+                // its own phase — NOT into `injected`, which the report
+                // documents as compute-delay-only (exact-schedule
+                // reconstruction must stay possible for any io_latency)
+                let slow_io = |tm: &mut PhaseTimers, secs: f64| {
+                    if secs > 0.0 {
+                        sleep_secs(secs);
+                        tm.add("io_straggle", secs);
+                    }
+                };
                 // Alg. 3 line 1: the first mini-batch is drawn up front
                 let mut shard: Vec<i32> = if is_lsgd {
-                    tm.time("io", || loader.load_shard(topo_ref, WorkerId(w), 0, gb))
-                        .expect("initial shard load failed")
+                    let sh = tm.time("io", || loader.load_range(seg.start, gb, my_range.clone()));
+                    slow_io(&mut tm, perturb.io_extension(w, seg.start, io_latency));
+                    sh
                 } else {
                     Vec::new()
                 };
                 let mut prev_io = 0.0_f64;
-                for step in 0..steps {
+                for step in seg.clone() {
                     if !is_lsgd {
                         // Alg. 2 has no overlap window: I/O is serial
                         // with compute on every worker
-                        shard = tm
-                            .time("io", || loader.load_shard(topo_ref, WorkerId(w), step, gb))
-                            .expect("shard load failed");
+                        shard = tm.time("io", || loader.load_range(step, gb, my_range.clone()));
+                        slow_io(&mut tm, perturb.io_extension(w, step, io_latency));
                     }
                     let (grad, loss) = tm
                         .time("compute", || engine.grad_step(&replica.params, &shard))
                         .expect("grad_step failed");
+                    // the straggler model: a slow rank holds its group's
+                    // reduce (and the global barrier) back right here
+                    let d = perturb.injected_delay(w, step);
+                    if d > 0.0 {
+                        sleep_secs(d);
+                        tm.add("injected_delay", d);
+                        injected += d;
+                    }
                     my_grad_tx
                         .send(GradMsg { local, grad, loss, prev_io_secs: prev_io })
                         .expect("communicator gone");
                     prev_io = 0.0;
-                    if is_lsgd && step + 1 < steps {
+                    if is_lsgd && step + 1 < seg.end {
                         // Alg. 3 line 8's worker column: the next-batch
                         // load runs WHILE the communicators allreduce
                         let t0 = Instant::now();
-                        let next = loader
-                            .load_shard(topo_ref, WorkerId(w), step + 1, gb)
-                            .expect("prefetch failed");
+                        let next = loader.load_range(step + 1, gb, my_range.clone());
+                        slow_io(&mut tm, perturb.io_extension(w, step, io_latency));
                         prev_io = t0.elapsed().as_secs_f64();
                         tm.add("io_overlapped", prev_io);
                         shard = next;
@@ -272,7 +455,7 @@ fn run(t: &mut Trainer, algo: Algo, opts: LsgdOptions) -> Result<RunResult> {
                         .expect("sgd_update failed");
                     replica.params = w2;
                     replica.momentum = m2;
-                    if w == 0 {
+                    if w == first_alive {
                         let eval = if eval_every > 0 && (step + 1) % eval_every == 0 {
                             Some(
                                 evaluate_params(engine, loader, val_samples, &replica.params)
@@ -290,13 +473,13 @@ fn run(t: &mut Trainer, algo: Algo, opts: LsgdOptions) -> Result<RunResult> {
                             .expect("result collector gone");
                     }
                 }
-                tm
+                (tm, injected)
             }));
         }
 
         // ---- global folder (this thread = the communicators' ring) --
         let mut prev_comm = 0.0_f64;
-        for step in 0..steps {
+        for (si, step) in range.clone().enumerate() {
             let mut slots: Vec<Option<PartialMsg>> = (0..groups).map(|_| None).collect();
             for _ in 0..groups {
                 let m = partial_rx.recv().expect("communicator channel closed");
@@ -310,7 +493,7 @@ fn run(t: &mut Trainer, algo: Algo, opts: LsgdOptions) -> Result<RunResult> {
                 .iter()
                 .map(|m| m.as_ref().unwrap().prev_io_max)
                 .fold(0.0_f64, f64::max);
-            if step > 0 {
+            if si > 0 {
                 hidden_io += prev_comm.min(io_prev_max);
             }
             let t0 = Instant::now();
@@ -322,7 +505,7 @@ fn run(t: &mut Trainer, algo: Algo, opts: LsgdOptions) -> Result<RunResult> {
                 collective::reduce_scaled_par(&refs, global_scale, fold_threads)
             };
             prev_comm = t0.elapsed().as_secs_f64();
-            timers.add(if is_lsgd { "global_allreduce" } else { "allreduce" }, prev_comm);
+            acc.timers.add(if is_lsgd { "global_allreduce" } else { "allreduce" }, prev_comm);
             let shared = Arc::new(merged);
             for tx in &bcast_txs {
                 tx.send(shared.clone()).expect("communicator gone");
@@ -335,32 +518,29 @@ fn run(t: &mut Trainer, algo: Algo, opts: LsgdOptions) -> Result<RunResult> {
                     loss_sum += l as f64;
                 }
             }
-            let report = report_rx.recv().expect("worker 0 gone");
+            let report = report_rx.recv().expect("reporting worker gone");
             assert_eq!(report.step, step, "step report out of order");
-            checksums.push(report.checksum);
+            acc.checksums.push(report.checksum);
             let lr_t = lr.lr_at(step) as f32;
-            curve.train.push((step, loss_sum / n_workers as f64, lr_t as f64));
+            acc.curve.train.push((step, loss_sum / n_alive as f64, lr_t as f64));
             if let Some((vl, va)) = report.eval {
-                curve.eval.push((step, vl, va));
+                acc.curve.eval.push((step, vl, va));
             }
         }
 
         // ---- deterministic joins: communicators then workers, by id -
-        for h in comm_handles {
-            timers.merge(&h.join().expect("communicator thread panicked"));
+        for (group, h) in comm_handles.into_iter().enumerate() {
+            let (tm, wait) = h.join().expect("communicator thread panicked");
+            acc.timers.merge(&tm);
+            acc.waits.push((group, wait));
         }
-        for h in worker_handles {
-            timers.merge(&h.join().expect("worker thread panicked"));
+        for (pos, h) in worker_handles.into_iter().enumerate() {
+            let (tm, injected) = h.join().expect("worker thread panicked");
+            acc.timers.merge(&tm);
+            acc.injected[memb.alive().nth(pos).expect("alive worker").0] += injected;
         }
     });
 
-    debug_assert!(t.replicas_identical(), "parallel replicas diverged");
-    Ok(RunResult {
-        curve,
-        timers,
-        step_checksums: checksums,
-        final_params: t.replica_of(0).params.clone(),
-        hidden_io_secs: if is_lsgd { hidden_io } else { 0.0 },
-        steps,
-    })
+    acc.hidden_io += hidden_io;
+    Ok(())
 }

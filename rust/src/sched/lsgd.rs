@@ -131,5 +131,6 @@ pub fn run(t: &mut Trainer, opts: LsgdOptions) -> Result<RunResult> {
         final_params: t.replica_of(0).params.clone(),
         hidden_io_secs: hidden_io,
         steps: t.cfg.steps,
+        perturb: Default::default(),
     })
 }

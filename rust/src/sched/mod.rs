@@ -60,9 +60,10 @@ use anyhow::Result;
 
 use crate::config::{Algo, ExperimentConfig};
 use crate::data::{Corpus, Loader};
-use crate::metrics::{PhaseTimers, TrainCurve};
+use crate::metrics::{PerturbReport, PhaseTimers, TrainCurve};
 use crate::optim::LrSchedule;
 use crate::runtime::Engine;
+use crate::simnet::PerturbConfig;
 use crate::topology::Topology;
 
 /// Per-worker replica state (parameters + momentum, flat f32).
@@ -125,18 +126,13 @@ pub struct RunResult {
     /// communicator allreduce (LSGD only; 0 for CSGD).
     pub hidden_io_secs: f64,
     pub steps: usize,
+    /// Straggler / fault accounting (empty for unperturbed runs).
+    pub perturb: PerturbReport,
 }
 
 /// FNV-1a over the bit patterns of a f32 slice (bitwise fingerprint).
 pub fn checksum(v: &[f32]) -> u64 {
-    let mut h: u64 = 0xcbf29ce484222325;
-    for x in v {
-        for b in x.to_bits().to_le_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x100000001b3);
-        }
-    }
-    h
+    crate::util::fnv1a(v.iter().flat_map(|x| x.to_bits().to_le_bytes()))
 }
 
 /// Validation sweep over the held-out set for an explicit parameter
@@ -246,13 +242,33 @@ impl<'e> Trainer<'e> {
 
     /// Dispatch with explicit options — engine choice plus the
     /// paper-literal division placement (only reachable from here /
-    /// the audit).
+    /// the audit). Unperturbed: see [`Trainer::run_perturbed`] for
+    /// straggler / fault injection.
     pub fn run_with(&mut self, opts: RunOptions) -> Result<RunResult> {
+        self.run_perturbed(opts, &PerturbConfig::default())
+    }
+
+    /// Dispatch with a perturbation profile (stragglers, per-rank
+    /// heterogeneity, fail-stop faults — [`crate::simnet::perturb`]).
+    /// Injection needs real concurrent ranks, so any non-noop profile
+    /// requires [`ExecMode::ThreadPerRank`]; the serial reference
+    /// engine stays the unperturbed audit baseline.
+    pub fn run_perturbed(
+        &mut self,
+        opts: RunOptions,
+        perturb: &PerturbConfig,
+    ) -> Result<RunResult> {
+        if opts.mode == ExecMode::Serial {
+            anyhow::ensure!(
+                perturb.is_noop(),
+                "straggler/fault injection requires the thread-per-rank engine (--parallel)"
+            );
+        }
         match (self.cfg.algo, opts.mode) {
             (Algo::Csgd, ExecMode::Serial) => csgd::run(self),
             (Algo::Lsgd, ExecMode::Serial) => lsgd::run(self, opts.lsgd),
-            (Algo::Csgd, ExecMode::ThreadPerRank) => exec::run_csgd(self),
-            (Algo::Lsgd, ExecMode::ThreadPerRank) => exec::run_lsgd(self, opts.lsgd),
+            (Algo::Csgd, ExecMode::ThreadPerRank) => exec::run_csgd(self, perturb),
+            (Algo::Lsgd, ExecMode::ThreadPerRank) => exec::run_lsgd(self, opts.lsgd, perturb),
         }
     }
 

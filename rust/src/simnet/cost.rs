@@ -30,6 +30,57 @@ impl Link {
     pub fn p2p(&self, n_bytes: f64) -> f64 {
         self.alpha + n_bytes / self.beta
     }
+
+    /// This link slowed down by factor `f ≥ 1`: startup latency grows
+    /// by `f`, bandwidth shrinks by `f` (how a congested or throttled
+    /// NIC degrades both terms).
+    pub fn scaled(self, f: f64) -> Link {
+        Link { alpha: self.alpha * f, beta: self.beta / f }
+    }
+}
+
+/// Per-rank link heterogeneity: rank `r` sees the base link scaled by
+/// `factors[r]`. A synchronous collective is paced by its **slowest
+/// participant**, so costing uses the max factor over the ranks that
+/// take part ([`LinkProfile::worst_of`]). `factors` shorter than a
+/// rank index means "unperturbed" (factor 1) — the homogeneous model
+/// is the empty profile.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkProfile {
+    pub base: Link,
+    pub factors: Vec<f64>,
+}
+
+impl LinkProfile {
+    /// Homogeneous profile: every rank sees `base` unscaled.
+    pub fn uniform(base: Link) -> Self {
+        Self { base, factors: Vec::new() }
+    }
+
+    /// Per-rank profile from explicit factors (index = rank id).
+    pub fn new(base: Link, factors: Vec<f64>) -> Self {
+        debug_assert!(factors.iter().all(|&f| f >= 1.0));
+        Self { base, factors }
+    }
+
+    fn factor_of(&self, rank: usize) -> f64 {
+        self.factors.get(rank).copied().unwrap_or(1.0)
+    }
+
+    /// The link one rank sees.
+    pub fn link_of(&self, rank: usize) -> Link {
+        self.base.scaled(self.factor_of(rank))
+    }
+
+    /// Effective link of a collective over `ranks`: the base scaled by
+    /// the slowest participant's factor (a barrier waits for the max).
+    pub fn worst_of(&self, ranks: impl IntoIterator<Item = usize>) -> Link {
+        let worst = ranks
+            .into_iter()
+            .map(|r| self.factor_of(r))
+            .fold(1.0_f64, f64::max);
+        self.base.scaled(worst)
+    }
 }
 
 fn log2_ceil(p: usize) -> f64 {
@@ -133,6 +184,27 @@ mod tests {
         let c1024 = allreduce_ring(L, 1024, big);
         assert!((c256 - 2.0 * big / L.beta).abs() / c256 < 0.05);
         assert!((c1024 - c256).abs() / c256 < 0.05);
+    }
+
+    #[test]
+    fn scaled_link_degrades_both_terms() {
+        let s = L.scaled(2.0);
+        assert!((s.alpha - 2.0 * L.alpha).abs() < 1e-18);
+        assert!((s.beta - L.beta / 2.0).abs() < 1e-3);
+        assert!((s.p2p(1e6) - (2.0 * L.alpha + 2.0 * 1e6 / L.beta)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn link_profile_collective_pays_slowest_participant() {
+        let p = LinkProfile::new(L, vec![1.0, 3.0, 1.5]);
+        assert_eq!(p.link_of(0), L);
+        assert_eq!(p.link_of(1), L.scaled(3.0));
+        assert_eq!(p.link_of(7), L, "out-of-profile ranks are unperturbed");
+        assert_eq!(p.worst_of([0, 2]), L.scaled(1.5));
+        assert_eq!(p.worst_of([0, 1, 2]), L.scaled(3.0));
+        // excluding the slow rank restores the base link
+        assert_eq!(p.worst_of([0]), L);
+        assert_eq!(LinkProfile::uniform(L).worst_of([0, 1, 2]), L);
     }
 
     #[test]

@@ -12,8 +12,10 @@
 //! `k × step_time_*().total` to float precision — if someone edits one
 //! model and not the other, the suite fails.
 
+use super::perturb::{drive_segments, PerturbConfig};
 use super::{cost, ClusterModel, StepBreakdown};
-use crate::topology::Topology;
+use crate::topology::{Membership, Topology};
+use anyhow::Result;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
@@ -227,6 +229,239 @@ fn try_broadcast(
     e.schedule(start + bcast, EventKind::BroadcastDone { group, step });
 }
 
+// --------------------------------------------------------------------
+// Perturbed replays: heterogeneity + stragglers + fail-stop faults
+// (the [`super::perturb`] model), at worker granularity. These share
+// the fault semantics of the real engine (`sched/exec.rs`): membership
+// changes happen at step boundaries, every rank re-synchronizes there
+// (the engine joins its rank threads), and survivors are rebalanced
+// into even groups before the next segment.
+
+/// Worst compute/IO scale across a membership group at one step — a
+/// group barrier (the local reduce) pays its slowest member.
+fn group_scale(p: &PerturbConfig, memb: &Membership, gi: usize, step: usize) -> f64 {
+    memb.group(gi)
+        .iter()
+        .map(|w| p.compute_scale(w.0, step))
+        .fold(1.0_f64, f64::max)
+}
+
+/// Per-group permanent link factors: a group's NIC is paced by its
+/// slowest member's node class.
+fn group_link_factors(p: &PerturbConfig, memb: &Membership) -> Vec<f64> {
+    (0..memb.num_groups())
+        .map(|gi| {
+            memb.group(gi)
+                .iter()
+                .map(|w| p.hetero_factor(w.0))
+                .fold(1.0_f64, f64::max)
+        })
+        .collect()
+}
+
+/// LSGD (Algorithm 3) under a perturbation profile: per-rank
+/// compute/IO speed factors, seeded stragglers, fail-stop faults with
+/// elastic regrouping. Reduces to [`run_lsgd`] when `p.is_noop()`.
+pub fn run_lsgd_perturbed(
+    m: &ClusterModel,
+    topo: &Topology,
+    steps: usize,
+    p: &PerturbConfig,
+) -> Result<DesResult> {
+    p.validate(topo.num_workers())?;
+    let mut memb = Membership::full(topo);
+    let mut spans = Vec::new();
+    let mut hidden = 0.0;
+    let mut t = 0.0;
+    drive_segments(p, &mut memb, steps, |memb, range| {
+        let (t2, h) = lsgd_segment(m, p, memb, range, t, &mut spans);
+        t = t2;
+        hidden += h;
+        Ok(())
+    })?;
+    Ok(DesResult { makespan: t, spans, hidden_comm: hidden })
+}
+
+/// One fault-free stretch of a perturbed LSGD run: the event loop of
+/// [`run_lsgd`], generalized to uneven groups, per-(group, step)
+/// compute/IO scales and hetero-scaled communicator links. All groups
+/// start the segment synchronized at `t0` (the engine's regroup
+/// barrier). Returns `(segment end time, hidden comm)`.
+fn lsgd_segment(
+    m: &ClusterModel,
+    p: &PerturbConfig,
+    memb: &Membership,
+    range: std::ops::Range<usize>,
+    t0: f64,
+    spans: &mut Vec<Span>,
+) -> (f64, f64) {
+    let g = memb.num_groups();
+    let nsteps = range.len();
+    if nsteps == 0 {
+        return (t0, 0.0);
+    }
+    let base = range.start;
+    let red: Vec<f64> = (0..g)
+        .map(|gi| cost::reduce_tree(m.intra, memb.group(gi).len() + 1, m.grad_bytes))
+        .collect();
+    let bc: Vec<f64> = (0..g)
+        .map(|gi| cost::broadcast_tree(m.intra, memb.group(gi).len() + 1, m.grad_bytes))
+        .collect();
+    let profile = cost::LinkProfile::new(m.comm_inter, group_link_factors(p, memb));
+    let t_g = m.algo.cost(profile.worst_of(0..g), g, m.grad_bytes);
+    let io_of = |gi: usize, step: usize| m.t_io * group_scale(p, memb, gi, step);
+    let comp_of = |gi: usize, step: usize| m.t_compute * group_scale(p, memb, gi, step);
+
+    let mut e = Engine::new();
+    let mut io_done_at = vec![vec![f64::NAN; g]; nsteps];
+    let mut bcast_scheduled = vec![vec![false; g]; nsteps];
+    let mut groups_reduced = vec![0usize; nsteps];
+    let mut global_done_at = vec![f64::NAN; nsteps];
+    let mut makespan: f64 = t0;
+    let mut hidden = 0.0;
+
+    for gi in 0..g {
+        let d = comp_of(gi, base);
+        e.span(format!("g{gi}/workers"), "compute", t0, t0 + d, base);
+        e.schedule(t0 + d, EventKind::ComputeDone { group: gi, step: base });
+    }
+
+    while let Some(ev) = e.queue.pop() {
+        let now = ev.at;
+        makespan = makespan.max(now);
+        match ev.kind {
+            EventKind::ComputeDone { group, step } => {
+                let r = red[group];
+                e.span(format!("g{group}/workers"), "reduce", now, now + r, step);
+                e.schedule(now + r, EventKind::ReduceDone { group, step });
+            }
+            EventKind::ReduceDone { group, step } => {
+                let io = io_of(group, step);
+                e.span(format!("g{group}/workers"), "io", now, now + io, step);
+                e.schedule(now + io, EventKind::IoDone { group, step });
+                let si = step - base;
+                groups_reduced[si] += 1;
+                if groups_reduced[si] == g {
+                    e.span("comms".into(), "global_allreduce", now, now + t_g, step);
+                    e.schedule(now + t_g, EventKind::GlobalDone { step });
+                    // hidden share: the allreduce runs inside every
+                    // group's IO window up to the shortest window
+                    let io_min = (0..g).map(|gi| io_of(gi, step)).fold(f64::INFINITY, f64::min);
+                    hidden += t_g.min(io_min);
+                }
+            }
+            EventKind::IoDone { group, step } => {
+                let si = step - base;
+                io_done_at[si][group] = now;
+                try_broadcast_at(
+                    &mut e,
+                    group,
+                    step,
+                    base,
+                    &global_done_at,
+                    &io_done_at,
+                    &mut bcast_scheduled,
+                    bc[group],
+                );
+            }
+            EventKind::GlobalDone { step } => {
+                global_done_at[step - base] = now;
+                for gi in 0..g {
+                    try_broadcast_at(
+                        &mut e,
+                        gi,
+                        step,
+                        base,
+                        &global_done_at,
+                        &io_done_at,
+                        &mut bcast_scheduled,
+                        bc[gi],
+                    );
+                }
+            }
+            EventKind::BroadcastDone { group, step } => {
+                e.span(format!("g{group}/workers"), "update", now, now + m.t_update, step);
+                e.schedule(now + m.t_update, EventKind::UpdateDone { group, step });
+            }
+            EventKind::UpdateDone { group, step } => {
+                if step + 1 < range.end {
+                    let d = comp_of(group, step + 1);
+                    e.span(format!("g{group}/workers"), "compute", now, now + d, step + 1);
+                    e.schedule(now + d, EventKind::ComputeDone { group, step: step + 1 });
+                }
+                makespan = makespan.max(now);
+            }
+        }
+    }
+
+    spans.append(&mut e.spans);
+    (makespan, hidden)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn try_broadcast_at(
+    e: &mut Engine,
+    group: usize,
+    step: usize,
+    base: usize,
+    global_done_at: &[f64],
+    io_done_at: &[Vec<f64>],
+    bcast_scheduled: &mut [Vec<bool>],
+    bcast: f64,
+) {
+    let si = step - base;
+    let gd = global_done_at[si];
+    let io = io_done_at[si][group];
+    if gd.is_nan() || io.is_nan() || bcast_scheduled[si][group] {
+        return;
+    }
+    bcast_scheduled[si][group] = true;
+    let start = gd.max(io);
+    e.span(format!("g{group}/workers"), "broadcast", start, start + bcast, step);
+    e.schedule(start + bcast, EventKind::BroadcastDone { group, step });
+}
+
+/// CSGD (Algorithm 2) under the same perturbation profile: the flat
+/// allreduce barrier pays the slowest alive rank's compute AND IO
+/// extension every step, plus a fabric paced by the slowest NIC.
+/// Reduces to [`run_csgd`] when `p.is_noop()`.
+pub fn run_csgd_perturbed(
+    m: &ClusterModel,
+    topo: &Topology,
+    steps: usize,
+    p: &PerturbConfig,
+) -> Result<DesResult> {
+    p.validate(topo.num_workers())?;
+    let mut memb = Membership::full(topo);
+    let mut e = Engine::new();
+    let mut t = 0.0;
+    drive_segments(p, &mut memb, steps, |memb, range| {
+        let n = memb.num_workers();
+        let fabric = if memb.num_groups() == 1 { m.intra } else { m.inter };
+        let factors: Vec<f64> = memb.alive().map(|w| p.hetero_factor(w.0)).collect();
+        let profile = cost::LinkProfile::new(fabric, factors);
+        let ar = m.algo.cost(profile.worst_of(0..n), n, m.grad_bytes);
+        for step in range {
+            let slowest = memb
+                .alive()
+                .map(|w| p.compute_scale(w.0, step))
+                .fold(1.0_f64, f64::max);
+            let io = m.t_io * slowest;
+            let comp = m.t_compute * slowest;
+            e.span("workers".into(), "io", t, t + io, step);
+            t += io;
+            e.span("workers".into(), "compute", t, t + comp, step);
+            t += comp;
+            e.span("workers".into(), "allreduce", t, t + ar, step);
+            t += ar;
+            e.span("workers".into(), "update", t, t + m.t_update, step);
+            t += m.t_update;
+        }
+        Ok(())
+    })?;
+    Ok(DesResult { makespan: t, spans: e.spans, hidden_comm: 0.0 })
+}
+
 /// Play `steps` CSGD iterations (Algorithm 2): io → compute → flat
 /// allreduce over all N workers → update, fully serialized.
 pub fn run_csgd(m: &ClusterModel, topo: &Topology, steps: usize) -> DesResult {
@@ -386,5 +621,111 @@ mod tests {
         let topo = Topology::new(64, 4).unwrap();
         let r = run_lsgd(&m, &topo, 5);
         assert!(r.hidden_comm > 0.0);
+    }
+
+    // ---------------------------------------------------- perturbation
+
+    #[test]
+    fn noop_perturbation_reduces_to_baseline() {
+        let m = ClusterModel::paper_k80();
+        let topo = Topology::new(8, 4).unwrap();
+        let p = PerturbConfig::default();
+        let l = run_lsgd_perturbed(&m, &topo, 5, &p).unwrap();
+        let base_l = run_lsgd(&m, &topo, 5);
+        assert!((l.makespan - base_l.makespan).abs() < 1e-9);
+        // baseline multiplies (hidden = x·steps), the perturbed path
+        // sums per step — identical to rounding, not to the bit
+        assert!((l.hidden_comm - base_l.hidden_comm).abs() < 1e-9);
+        let c = run_csgd_perturbed(&m, &topo, 5, &p).unwrap();
+        assert!((c.makespan - run_csgd(&m, &topo, 5).makespan).abs() < 1e-9);
+    }
+
+    #[test]
+    fn perturbed_runs_are_seed_deterministic() {
+        let m = ClusterModel::paper_k80();
+        let topo = Topology::new(8, 4).unwrap();
+        let mut p = PerturbConfig::default();
+        p.hetero = 0.3;
+        p.straggle_prob = 0.2;
+        p.parse_failures("5@3").unwrap();
+        let a = run_lsgd_perturbed(&m, &topo, 6, &p).unwrap();
+        let b = run_lsgd_perturbed(&m, &topo, 6, &p).unwrap();
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.spans, b.spans);
+    }
+
+    #[test]
+    fn stragglers_cost_lsgd_less_than_csgd_in_absolute_penalty() {
+        // The headline curve: CSGD pays the slowest rank's compute AND
+        // IO extension serially; LSGD absorbs part of the IO extension
+        // into its allreduce overlap window, so its absolute per-step
+        // straggler tax is strictly smaller at scale (t_g > t_io).
+        let m = ClusterModel::paper_k80();
+        let topo = Topology::new(64, 4).unwrap();
+        let steps = 6;
+        let mut p = PerturbConfig::default();
+        p.straggle_prob = 0.3;
+        p.straggle_factor = 2.0;
+        let pen_l = per_step(&run_lsgd_perturbed(&m, &topo, steps, &p).unwrap(), steps)
+            - per_step(&run_lsgd(&m, &topo, steps), steps);
+        let pen_c = per_step(&run_csgd_perturbed(&m, &topo, steps, &p).unwrap(), steps)
+            - per_step(&run_csgd(&m, &topo, steps), steps);
+        assert!(pen_l > 0.0 && pen_c > 0.0, "stragglers must cost something");
+        assert!(
+            pen_l < pen_c,
+            "LSGD straggler tax {pen_l} should undercut CSGD's {pen_c}"
+        );
+        // and LSGD stays faster outright under perturbation
+        assert!(
+            run_lsgd_perturbed(&m, &topo, steps, &p).unwrap().makespan
+                < run_csgd_perturbed(&m, &topo, steps, &p).unwrap().makespan
+        );
+    }
+
+    #[test]
+    fn heterogeneity_slows_both_schedules() {
+        let m = ClusterModel::paper_k80();
+        let topo = Topology::new(8, 4).unwrap();
+        let mut p = PerturbConfig::default();
+        p.hetero = 0.5;
+        let l = run_lsgd_perturbed(&m, &topo, 4, &p).unwrap().makespan;
+        let c = run_csgd_perturbed(&m, &topo, 4, &p).unwrap().makespan;
+        assert!(l > run_lsgd(&m, &topo, 4).makespan);
+        assert!(c > run_csgd(&m, &topo, 4).makespan);
+        // bounded by the amplitude: nothing slows more than (1 + h)×
+        assert!(l < 1.5 * run_lsgd(&m, &topo, 4).makespan + 1e-9);
+    }
+
+    #[test]
+    fn whole_group_failure_shrinks_the_allreduce() {
+        // at 64 groups the communicator allreduce EXCEEDS the I/O
+        // window (t_g > t_io), so losing a group genuinely shortens
+        // LSGD steps — at small G the allreduce is fully hidden and a
+        // group death would be makespan-neutral for LSGD
+        let m = ClusterModel::paper_k80();
+        let topo = Topology::new(64, 4).unwrap();
+        let steps = 8;
+        let mut p = PerturbConfig::default();
+        // group 63 (workers 252..256) dies entirely at step 3
+        p.parse_failures("252@3,253@3,254@3,255@3").unwrap();
+        let l = run_lsgd_perturbed(&m, &topo, steps, &p).unwrap();
+        assert!(l.makespan < run_lsgd(&m, &topo, steps).makespan);
+        let c = run_csgd_perturbed(&m, &topo, steps, &p).unwrap();
+        assert!(c.makespan < run_csgd(&m, &topo, steps).makespan);
+        // the trace still covers every step
+        for step in 0..steps {
+            assert!(l.spans.iter().any(|s| s.step == step && s.phase == "compute"));
+        }
+    }
+
+    #[test]
+    fn partial_group_failure_keeps_running() {
+        let m = ClusterModel::paper_k80();
+        let topo = Topology::new(2, 4).unwrap();
+        let mut p = PerturbConfig::default();
+        p.parse_failures("1@2").unwrap();
+        let r = run_lsgd_perturbed(&m, &topo, 5, &p).unwrap();
+        assert!(r.makespan > 0.0);
+        assert!(r.spans.iter().any(|s| s.step == 4 && s.phase == "update"));
     }
 }

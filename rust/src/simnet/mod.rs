@@ -13,7 +13,11 @@
 //!   update);
 //! * [`des`] — a discrete-event engine that replays the same schedules
 //!   event-by-event per rank and must agree with the closed forms
-//!   (cross-validated in tests).
+//!   (cross-validated in tests);
+//! * [`perturb`] — seeded straggler / heterogeneity / fail-stop
+//!   injection, shared with the real thread-per-rank engine
+//!   ([`crate::sched::exec`]) so simulated and measured perturbation
+//!   runs follow the same schedule.
 //!
 //! Calibration (`ClusterModel::paper_k80`) reproduces the paper's quoted
 //! endpoints — CSGD scaling efficiency 98.7 % @ 8 workers → 63.8 % @ 256;
@@ -21,8 +25,10 @@
 
 pub mod cost;
 pub mod des;
+pub mod perturb;
 
-pub use cost::{AllreduceAlgo, Link};
+pub use cost::{AllreduceAlgo, Link, LinkProfile};
+pub use perturb::{FailStop, PerturbConfig};
 
 use crate::topology::Topology;
 

@@ -1,0 +1,411 @@
+//! Straggler / heterogeneity / fail-stop perturbation model.
+//!
+//! LSGD's pitch is that subgroup-local synchronization hides the
+//! inter-group allreduce behind worker I/O (PAPER.md §3) — a claim
+//! whose value shows up only when ranks are *not* perfectly
+//! homogeneous. This module is the single source of truth for three
+//! perturbation families, applied **identically** by the analytic/DES
+//! simulator ([`super::des`]) and by the real thread-per-rank engine
+//! ([`crate::sched::exec`]):
+//!
+//! * **heterogeneity** — a permanent multiplicative speed factor per
+//!   rank (slow node classes, thermal throttling);
+//! * **stragglers** — transient per-(rank, step) slowdowns drawn from
+//!   a seeded hash, so the same seed produces the same straggler
+//!   schedule in the simulator and in a real run;
+//! * **fail-stop faults** — a rank dies at a step boundary and never
+//!   comes back; the runtime reacts with elastic regrouping
+//!   ([`crate::topology::Membership`]).
+//!
+//! Everything is a pure function of `(seed, rank, step)` — no global
+//! RNG state — which is what keeps perturbed runs bitwise-reproducible
+//! (the acceptance tests in `rust/tests/stragglers.rs` rerun a seeded
+//! fail-stop schedule twice and require identical checksums).
+
+use anyhow::{bail, Context, Result};
+
+use crate::metrics::RegroupEvent;
+use crate::topology::{Membership, WorkerId};
+
+/// A fail-stop fault: `worker` dies at the boundary *before* executing
+/// step `step` (so `step = 0` means the rank never participates).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FailStop {
+    /// Global worker id (original numbering; stable across regroups).
+    pub worker: usize,
+    /// First step the worker does NOT participate in.
+    pub step: usize,
+}
+
+impl std::str::FromStr for FailStop {
+    type Err = anyhow::Error;
+
+    /// Parse `WORKER@STEP`, e.g. `3@5`.
+    fn from_str(s: &str) -> Result<Self> {
+        let (w, st) = s
+            .split_once('@')
+            .with_context(|| format!("bad fail spec {s:?} (expected WORKER@STEP, e.g. 3@5)"))?;
+        let worker = w.trim().parse().with_context(|| format!("bad worker id in {s:?}"))?;
+        let step = st.trim().parse().with_context(|| format!("bad step in {s:?}"))?;
+        Ok(FailStop { worker, step })
+    }
+}
+
+/// Full perturbation description for one run. `Default` is a no-op
+/// (homogeneous, never-failing cluster — exactly the seed behaviour).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PerturbConfig {
+    /// Seed for the heterogeneity draw and the straggler schedule.
+    /// Independent from the data seed so the two can be varied apart.
+    pub seed: u64,
+    /// Heterogeneity amplitude `h ≥ 0`: rank `r`'s permanent compute
+    /// speed factor is `1 + h·u(r)` with `u(r) ∈ [0, 1)` hashed from
+    /// the seed. `0` = homogeneous.
+    pub hetero: f64,
+    /// Probability in `[0, 1]` that a given (rank, step) straggles.
+    pub straggle_prob: f64,
+    /// Multiplicative compute slowdown of a straggling rank (`≥ 1`).
+    pub straggle_factor: f64,
+    /// Fail-stop faults, applied at step boundaries.
+    pub failures: Vec<FailStop>,
+    /// The real engine's time unit: one unit of *extra* simulated
+    /// compute (a factor of 2 on a rank sleeps `delay_unit` seconds).
+    /// Keep small so tests stay fast; irrelevant to the DES, which
+    /// uses the cluster model's `t_compute` instead.
+    pub delay_unit: f64,
+}
+
+impl Default for PerturbConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0x57A6,
+            hetero: 0.0,
+            straggle_prob: 0.0,
+            straggle_factor: 3.0,
+            failures: Vec::new(),
+            delay_unit: 2e-3,
+        }
+    }
+}
+
+/// splitmix64-style avalanche over a composite key — the one hash both
+/// the DES and the engine derive every perturbation decision from.
+fn mix(seed: u64, a: u64, b: u64) -> u64 {
+    let mut z = seed
+        ^ a.wrapping_add(1).wrapping_mul(0x9e3779b97f4a7c15)
+        ^ b.wrapping_add(1).wrapping_mul(0xd1b54a32d192ed03);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// Uniform `[0, 1)` from a hash value.
+fn unit(h: u64) -> f64 {
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+impl PerturbConfig {
+    /// Parse the CLI's `--stragglers PROB[xFACTOR]` spec, e.g. `0.1`
+    /// or `0.1x4`.
+    pub fn parse_stragglers(&mut self, spec: &str) -> Result<()> {
+        let (p, f) = match spec.split_once('x') {
+            Some((p, f)) => (p, Some(f)),
+            None => (spec, None),
+        };
+        self.straggle_prob = p
+            .trim()
+            .parse()
+            .with_context(|| format!("bad straggler probability in {spec:?}"))?;
+        if let Some(f) = f {
+            self.straggle_factor = f
+                .trim()
+                .parse()
+                .with_context(|| format!("bad straggler factor in {spec:?}"))?;
+        }
+        ensure_valid_prob(self.straggle_prob)?;
+        anyhow::ensure!(
+            self.straggle_factor >= 1.0,
+            "straggler factor must be ≥ 1 (got {})",
+            self.straggle_factor
+        );
+        Ok(())
+    }
+
+    /// Parse the CLI's `--fail W@S[,W@S…]` spec, e.g. `3@5,7@9`.
+    pub fn parse_failures(&mut self, spec: &str) -> Result<()> {
+        for part in spec.split(',') {
+            self.failures.push(part.trim().parse()?);
+        }
+        Ok(())
+    }
+
+    /// True when this config perturbs nothing — the only form the
+    /// serial reference engine accepts.
+    pub fn is_noop(&self) -> bool {
+        self.hetero == 0.0 && self.straggle_prob == 0.0 && self.failures.is_empty()
+    }
+
+    /// Validate against a worker count: failure ids in range, no rank
+    /// failing twice, at least one survivor.
+    pub fn validate(&self, num_workers: usize) -> Result<()> {
+        anyhow::ensure!(self.hetero >= 0.0, "hetero amplitude must be ≥ 0");
+        ensure_valid_prob(self.straggle_prob)?;
+        anyhow::ensure!(self.straggle_factor >= 1.0, "straggler factor must be ≥ 1");
+        anyhow::ensure!(self.delay_unit >= 0.0, "delay unit must be ≥ 0");
+        let mut seen = vec![false; num_workers];
+        for f in &self.failures {
+            anyhow::ensure!(
+                f.worker < num_workers,
+                "fail spec names worker {} but the topology has {num_workers}",
+                f.worker
+            );
+            if seen[f.worker] {
+                bail!("worker {} fails twice", f.worker);
+            }
+            seen[f.worker] = true;
+        }
+        anyhow::ensure!(
+            self.failures.len() < num_workers,
+            "all {num_workers} workers fail — nothing left to run"
+        );
+        Ok(())
+    }
+
+    /// Permanent heterogeneity factor of a rank (`≥ 1`).
+    pub fn hetero_factor(&self, worker: usize) -> f64 {
+        1.0 + self.hetero * unit(mix(self.seed, worker as u64, u64::MAX))
+    }
+
+    /// Transient straggle factor of a (rank, step): `straggle_factor`
+    /// with probability `straggle_prob`, else `1`.
+    pub fn straggle(&self, worker: usize, step: usize) -> f64 {
+        if self.straggle_prob > 0.0
+            && unit(mix(self.seed, worker as u64, step as u64)) < self.straggle_prob
+        {
+            self.straggle_factor
+        } else {
+            1.0
+        }
+    }
+
+    /// Total compute-time multiplier of a (rank, step) — the quantity
+    /// both execution worlds scale by. Always `≥ 1`.
+    pub fn compute_scale(&self, worker: usize, step: usize) -> f64 {
+        self.hetero_factor(worker) * self.straggle(worker, step)
+    }
+
+    /// Extra wall-clock the real engine injects into worker `w` at
+    /// `step`: `delay_unit · (compute_scale − 1)` seconds.
+    pub fn injected_delay(&self, worker: usize, step: usize) -> f64 {
+        self.delay_unit * (self.compute_scale(worker, step) - 1.0)
+    }
+
+    /// Extra I/O latency of worker `w`'s shard load at `step`, given
+    /// the loader's configured base latency (a slow rank is slow at
+    /// loading too — the same multiplicative scale as compute).
+    pub fn io_extension(&self, worker: usize, step: usize, base_io_secs: f64) -> f64 {
+        base_io_secs * (self.compute_scale(worker, step) - 1.0)
+    }
+
+    /// Steps at which membership changes, ascending and deduplicated —
+    /// the segment boundaries of a perturbed run.
+    pub fn fail_steps(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.failures.iter().map(|f| f.step).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Workers that die at exactly `step`, ascending by id.
+    pub fn failures_at(&self, step: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .failures
+            .iter()
+            .filter(|f| f.step == step)
+            .map(|f| f.worker)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+fn ensure_valid_prob(p: f64) -> Result<()> {
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&p),
+        "straggler probability must be in [0, 1] (got {p})"
+    );
+    Ok(())
+}
+
+/// Split `0..steps` into fault-free segments at the fail-stop
+/// boundaries, applying removals + [`Membership::rebalance`] (and
+/// logging the membership change) as each boundary is crossed, then
+/// calling `segment(membership, step_range)` for every stretch.
+/// Returns the regroup events in step order.
+///
+/// This is the ONE implementation of the fault semantics: both the DES
+/// ([`super::des`]) and the thread-per-rank engine
+/// ([`crate::sched::exec`]) drive their runs through it, so the
+/// boundary rules (when a removal applies, remove-then-rebalance
+/// ordering, clamping past the run end) can never drift apart.
+pub fn drive_segments(
+    p: &PerturbConfig,
+    memb: &mut Membership,
+    steps: usize,
+    mut segment: impl FnMut(&Membership, std::ops::Range<usize>) -> Result<()>,
+) -> Result<Vec<RegroupEvent>> {
+    let fail_steps = p.fail_steps();
+    let mut events = Vec::new();
+    let mut fi = 0;
+    let mut start = 0;
+    while start < steps {
+        while fi < fail_steps.len() && fail_steps[fi] <= start {
+            let removed = p.failures_at(fail_steps[fi]);
+            for &w in &removed {
+                memb.remove_worker(WorkerId(w))?;
+            }
+            memb.rebalance();
+            // not printed here: the events are returned to the caller
+            // (the CLI reports them; tests compare them across reruns)
+            events.push(RegroupEvent {
+                step: start,
+                removed,
+                groups_after: memb.num_groups(),
+                workers_after: memb.num_workers(),
+                membership_checksum: memb.checksum(),
+            });
+            fi += 1;
+        }
+        let end = fail_steps.get(fi).map_or(steps, |&s| s.min(steps));
+        segment(memb, start..end)?;
+        start = end;
+    }
+    Ok(events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_noop() {
+        let p = PerturbConfig::default();
+        assert!(p.is_noop());
+        assert_eq!(p.compute_scale(0, 0), 1.0);
+        assert_eq!(p.injected_delay(3, 7), 0.0);
+        assert!(p.fail_steps().is_empty());
+        p.validate(4).unwrap();
+    }
+
+    #[test]
+    fn hetero_factor_deterministic_and_bounded() {
+        let mut p = PerturbConfig::default();
+        p.hetero = 0.5;
+        for w in 0..16 {
+            let f = p.hetero_factor(w);
+            assert!((1.0..1.5).contains(&f), "factor {f} out of range");
+            assert_eq!(f, p.hetero_factor(w), "not deterministic");
+        }
+        // not all equal (else it wouldn't be heterogeneity)
+        assert!((0..16).map(|w| p.hetero_factor(w)).any(|f| f != p.hetero_factor(0)));
+    }
+
+    #[test]
+    fn straggle_rate_tracks_probability() {
+        let mut p = PerturbConfig::default();
+        p.straggle_prob = 0.25;
+        p.straggle_factor = 4.0;
+        let mut hits = 0;
+        let total = 4000;
+        for step in 0..total {
+            if p.straggle(1, step) > 1.0 {
+                hits += 1;
+            }
+        }
+        let rate = hits as f64 / total as f64;
+        assert!((rate - 0.25).abs() < 0.05, "rate {rate}");
+    }
+
+    #[test]
+    fn straggle_schedule_is_seeded() {
+        let mut a = PerturbConfig::default();
+        a.straggle_prob = 0.3;
+        let mut b = a.clone();
+        for (w, s) in [(0usize, 0usize), (1, 5), (3, 17)] {
+            assert_eq!(a.straggle(w, s), b.straggle(w, s));
+        }
+        b.seed ^= 1;
+        // different seed ⇒ some (rank, step) decisions differ
+        assert!((0..200).any(|s| a.straggle(0, s) != b.straggle(0, s)));
+    }
+
+    #[test]
+    fn parse_straggler_specs() {
+        let mut p = PerturbConfig::default();
+        p.parse_stragglers("0.1").unwrap();
+        assert_eq!(p.straggle_prob, 0.1);
+        assert_eq!(p.straggle_factor, 3.0); // default factor kept
+        p.parse_stragglers("0.2x5").unwrap();
+        assert_eq!(p.straggle_prob, 0.2);
+        assert_eq!(p.straggle_factor, 5.0);
+        assert!(p.parse_stragglers("1.5").is_err());
+        assert!(p.parse_stragglers("0.1x0.5").is_err());
+        assert!(p.parse_stragglers("nope").is_err());
+    }
+
+    #[test]
+    fn parse_fail_specs() {
+        let mut p = PerturbConfig::default();
+        p.parse_failures("3@5,7@9").unwrap();
+        assert_eq!(
+            p.failures,
+            vec![FailStop { worker: 3, step: 5 }, FailStop { worker: 7, step: 9 }]
+        );
+        assert_eq!(p.fail_steps(), vec![5, 9]);
+        assert_eq!(p.failures_at(5), vec![3]);
+        assert!("3-5".parse::<FailStop>().is_err());
+        assert!("x@5".parse::<FailStop>().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_failures() {
+        let mut p = PerturbConfig::default();
+        p.parse_failures("9@1").unwrap();
+        assert!(p.validate(4).is_err(), "worker id out of range");
+        let mut p = PerturbConfig::default();
+        p.parse_failures("1@2,1@3").unwrap();
+        assert!(p.validate(4).is_err(), "same worker fails twice");
+        let mut p = PerturbConfig::default();
+        p.parse_failures("0@0,1@0").unwrap();
+        assert!(p.validate(2).is_err(), "everyone fails");
+        p.failures.pop();
+        p.validate(2).unwrap();
+    }
+
+    #[test]
+    fn drive_segments_splits_at_boundaries() {
+        let topo = crate::topology::Topology::new(2, 2).unwrap();
+        let mut p = PerturbConfig::default();
+        p.parse_failures("1@2").unwrap();
+        let mut memb = topo.membership();
+        let mut seen = Vec::new();
+        let events = drive_segments(&p, &mut memb, 5, |m, r| {
+            seen.push((m.num_workers(), r));
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(seen, vec![(4, 0..2), (3, 2..5)]);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].step, 2);
+        assert_eq!(events[0].removed, vec![1]);
+        assert_eq!(events[0].workers_after, 3);
+    }
+
+    #[test]
+    fn fail_steps_sorted_deduped() {
+        let mut p = PerturbConfig::default();
+        p.parse_failures("5@9,1@2,3@9").unwrap();
+        assert_eq!(p.fail_steps(), vec![2, 9]);
+        assert_eq!(p.failures_at(9), vec![3, 5]);
+    }
+}

@@ -13,6 +13,20 @@
 //! groups in ascending group id — the association the bitwise
 //! CSGD≡LSGD audit relies on (DESIGN.md §6).
 
+//!
+//! ## Elastic membership
+//!
+//! [`Topology`] is the *static* launch layout. [`Membership`] is the
+//! *live* view: which of the original worker ranks are still alive,
+//! and how they are grouped. It starts as the full topology and
+//! shrinks when fail-stop faults remove ranks
+//! ([`crate::simnet::perturb`]); [`Membership::rebalance`] re-shards
+//! the survivors into evenly-sized groups. Worker ids are **stable
+//! original ids** and every group holds an ascending run of them, so
+//! the reduction order ("fold in ascending id") survives any sequence
+//! of regroups — the property that keeps post-regroup steps
+//! bitwise-deterministic for a fixed seed.
+
 /// Identifies one worker rank (a "GPU" in the paper's testbed).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct WorkerId(pub usize);
@@ -107,7 +121,151 @@ impl Topology {
         let per = global_batch / n;
         Ok(w.0 * per..(w.0 + 1) * per)
     }
+
+    /// The full (nothing-failed-yet) elastic membership of this layout.
+    pub fn membership(&self) -> Membership {
+        Membership::full(self)
+    }
+
+    /// Elastic membership after removing one worker (convenience for
+    /// single-fault scenarios; chains via [`Membership::remove_worker`]
+    /// for multi-fault schedules).
+    pub fn remove_worker(&self, w: WorkerId) -> anyhow::Result<Membership> {
+        let mut m = self.membership();
+        m.remove_worker(w)?;
+        Ok(m)
+    }
 }
+
+/// Live cluster membership under fail-stop faults (module docs,
+/// "Elastic membership"). Each group is an ascending run of original
+/// worker ids; the concatenation of all groups is globally ascending.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Membership {
+    groups: Vec<Vec<WorkerId>>,
+}
+
+impl Membership {
+    /// Every worker of `topo` alive, grouped exactly as launched.
+    pub fn full(topo: &Topology) -> Self {
+        Self {
+            groups: topo
+                .all_groups()
+                .map(|g| topo.workers_of(g).collect())
+                .collect(),
+        }
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.groups.iter().map(|g| g.len()).sum()
+    }
+
+    /// Surviving workers of one group, in reduction (ascending) order.
+    pub fn group(&self, g: usize) -> &[WorkerId] {
+        &self.groups[g]
+    }
+
+    /// All groups, each in reduction order.
+    pub fn groups(&self) -> &[Vec<WorkerId>] {
+        &self.groups
+    }
+
+    /// All alive workers in global reduction order (ascending id —
+    /// guaranteed by the ascending-runs invariant).
+    pub fn alive(&self) -> impl Iterator<Item = WorkerId> + '_ {
+        self.groups.iter().flatten().copied()
+    }
+
+    pub fn contains(&self, w: WorkerId) -> bool {
+        self.locate(w).is_some()
+    }
+
+    /// `(group index, local slot)` of an alive worker.
+    pub fn locate(&self, w: WorkerId) -> Option<(usize, usize)> {
+        for (gi, g) in self.groups.iter().enumerate() {
+            if let Ok(li) = g.binary_search(&w) {
+                return Some((gi, li));
+            }
+        }
+        None
+    }
+
+    /// Fail-stop `w`: remove it from its group; a group left empty is
+    /// dropped entirely (its communicator has no one to serve).
+    pub fn remove_worker(&mut self, w: WorkerId) -> anyhow::Result<()> {
+        let (gi, li) = self
+            .locate(w)
+            .with_context(|| format!("worker {} is not alive", w.0))?;
+        self.groups[gi].remove(li);
+        if self.groups[gi].is_empty() {
+            self.groups.remove(gi);
+        }
+        anyhow::ensure!(!self.groups.is_empty(), "no workers left after removal");
+        Ok(())
+    }
+
+    /// Re-shard survivors into groups of as-equal-as-possible size
+    /// (sizes differ by at most one), preserving global ascending
+    /// order. The group count is kept at the current (post-removal)
+    /// count — a dead communicator is not resurrected.
+    pub fn rebalance(&mut self) {
+        let flat: Vec<WorkerId> = self.alive().collect();
+        let g = self.groups.len();
+        debug_assert!(g > 0 && !flat.is_empty());
+        let base = flat.len() / g;
+        let extra = flat.len() % g;
+        let mut out = Vec::with_capacity(g);
+        let mut i = 0;
+        for gi in 0..g {
+            let take = base + usize::from(gi < extra);
+            out.push(flat[i..i + take].to_vec());
+            i += take;
+        }
+        debug_assert_eq!(i, flat.len());
+        self.groups = out;
+    }
+
+    /// Contiguous shard of a `global_batch`-sample step owned by alive
+    /// worker `w` — the elastic counterpart of
+    /// [`Topology::shard_range`], keyed by the worker's *position*
+    /// among survivors so shards always partition the batch, even when
+    /// groups are uneven. Requires `global_batch % alive == 0`.
+    pub fn shard_range(
+        &self,
+        w: WorkerId,
+        global_batch: usize,
+    ) -> anyhow::Result<std::ops::Range<usize>> {
+        let n = self.num_workers();
+        anyhow::ensure!(
+            global_batch % n == 0,
+            "global batch {global_batch} not divisible by {n} alive workers"
+        );
+        let pos = self
+            .alive()
+            .position(|x| x == w)
+            .with_context(|| format!("worker {} is not alive", w.0))?;
+        let per = global_batch / n;
+        Ok(pos * per..(pos + 1) * per)
+    }
+
+    /// FNV-1a fingerprint of the membership structure (group count,
+    /// sizes, and every alive id) — logged with each regroup event and
+    /// compared across reruns in the determinism tests.
+    pub fn checksum(&self) -> u64 {
+        let mut words = vec![self.groups.len() as u64];
+        for g in &self.groups {
+            words.push(g.len() as u64);
+            words.extend(g.iter().map(|w| w.0 as u64));
+        }
+        crate::util::fnv1a(words.into_iter().flat_map(u64::to_le_bytes))
+    }
+}
+
+use anyhow::Context as _;
 
 #[cfg(test)]
 mod tests {
@@ -157,5 +315,104 @@ mod tests {
     fn rejects_empty_dims() {
         assert!(Topology::new(0, 4).is_err());
         assert!(Topology::new(4, 0).is_err());
+    }
+
+    #[test]
+    fn shard_range_uneven_worker_counts_partition() {
+        // worker counts that don't divide "round" batches: 3×5 = 15
+        // workers, 30 samples → 2 each, contiguous and exhaustive
+        let t = Topology::new(3, 5).unwrap();
+        let mut covered = vec![];
+        for w in t.all_workers() {
+            let r = t.shard_range(w, 30).unwrap();
+            assert_eq!(r.len(), 2);
+            covered.extend(r);
+        }
+        assert_eq!(covered, (0..30).collect::<Vec<_>>());
+        // non-divisible batches stay a hard error, not a silent trunc
+        assert!(t.shard_range(WorkerId(0), 31).is_err());
+        assert!(t.shard_range(WorkerId(0), 1).is_err());
+    }
+
+    #[test]
+    fn full_membership_mirrors_topology() {
+        let t = Topology::new(3, 4).unwrap();
+        let m = t.membership();
+        assert_eq!(m.num_groups(), 3);
+        assert_eq!(m.num_workers(), 12);
+        let alive: Vec<usize> = m.alive().map(|w| w.0).collect();
+        assert_eq!(alive, (0..12).collect::<Vec<_>>());
+        assert_eq!(
+            m.shard_range(WorkerId(5), 24).unwrap(),
+            t.shard_range(WorkerId(5), 24).unwrap()
+        );
+    }
+
+    #[test]
+    fn remove_worker_shrinks_and_drops_empty_groups() {
+        let t = Topology::new(2, 2).unwrap();
+        let mut m = t.membership();
+        m.remove_worker(WorkerId(1)).unwrap();
+        assert_eq!(m.num_workers(), 3);
+        assert_eq!(m.num_groups(), 2);
+        assert!(!m.contains(WorkerId(1)));
+        m.remove_worker(WorkerId(0)).unwrap();
+        // group 0 is now empty → dropped
+        assert_eq!(m.num_groups(), 1);
+        assert_eq!(m.group(0), &[WorkerId(2), WorkerId(3)]);
+        assert!(m.remove_worker(WorkerId(0)).is_err(), "already dead");
+    }
+
+    #[test]
+    fn rebalance_evens_groups_preserving_order() {
+        let t = Topology::new(2, 4).unwrap();
+        let mut m = t.membership();
+        m.remove_worker(WorkerId(6)).unwrap();
+        // sizes now 4 / 3 — rebalance keeps them (already ≤1 apart)
+        m.rebalance();
+        assert_eq!(m.group(0).len(), 4);
+        assert_eq!(m.group(1).len(), 3);
+        m.remove_worker(WorkerId(0)).unwrap();
+        m.remove_worker(WorkerId(1)).unwrap();
+        // sizes 2 / 3 → rebalance to 3 / 2, ascending run preserved
+        m.rebalance();
+        let alive: Vec<usize> = m.alive().map(|w| w.0).collect();
+        assert_eq!(alive, vec![2, 3, 4, 5, 7]);
+        assert_eq!(m.group(0), &[WorkerId(2), WorkerId(3), WorkerId(4)]);
+        assert_eq!(m.group(1), &[WorkerId(5), WorkerId(7)]);
+    }
+
+    #[test]
+    fn membership_shard_range_partitions_uneven_groups() {
+        let t = Topology::new(2, 4).unwrap();
+        let mut m = t.membership();
+        m.remove_worker(WorkerId(2)).unwrap();
+        m.rebalance(); // 7 alive: groups of 4 / 3
+        let mut covered = vec![];
+        for w in m.alive() {
+            covered.extend(m.shard_range(w, 14).unwrap());
+        }
+        assert_eq!(covered, (0..14).collect::<Vec<_>>());
+        // divisibility is against the ALIVE count, not the launch count
+        assert!(m.shard_range(WorkerId(0), 16).is_err());
+        assert!(m.shard_range(WorkerId(2), 14).is_err(), "dead worker");
+    }
+
+    #[test]
+    fn membership_checksum_stable_across_removal_order() {
+        let t = Topology::new(2, 3).unwrap();
+        let mut a = t.membership();
+        a.remove_worker(WorkerId(1)).unwrap();
+        a.remove_worker(WorkerId(4)).unwrap();
+        let mut b = t.membership();
+        b.remove_worker(WorkerId(4)).unwrap();
+        b.remove_worker(WorkerId(1)).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.checksum(), b.checksum());
+        // and the checksum actually reflects structure
+        assert_ne!(a.checksum(), t.membership().checksum());
+        let mut c = a.clone();
+        c.rebalance();
+        assert_eq!(a.checksum(), c.checksum(), "2/2 split is already balanced");
     }
 }

@@ -141,6 +141,99 @@ impl Harness {
         }
         s
     }
+
+    /// Serialize all results as JSON — the artifact CI's `bench-smoke`
+    /// job uploads (`BENCH_*.json`) and the schema
+    /// [`regressions_vs_baseline`] compares against.
+    pub fn json(&self) -> String {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+        let benches: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Json::Str(r.name.clone()));
+                m.insert("iters".to_string(), Json::Num(r.iters as f64));
+                m.insert("median_s".to_string(), Json::Num(r.median));
+                m.insert("mean_s".to_string(), Json::Num(r.mean));
+                m.insert("p10_s".to_string(), Json::Num(r.p10));
+                m.insert("p90_s".to_string(), Json::Num(r.p90));
+                m.insert("min_s".to_string(), Json::Num(r.min));
+                m.insert("max_s".to_string(), Json::Num(r.max));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("benches".to_string(), Json::Arr(benches));
+        Json::Obj(top).to_string()
+    }
+}
+
+/// True when CI asked for the fast bench path (`BENCH_SMOKE=1`). The
+/// value is compared, not just presence-tested, so `BENCH_SMOKE=0`
+/// still runs the full suite.
+pub fn smoke_mode() -> bool {
+    std::env::var("BENCH_SMOKE").as_deref() == Ok("1")
+}
+
+/// CI gate shared by the bench binaries: when `BENCH_BASELINE` names a
+/// baseline file, compare `results` against it at 25 % tolerance and
+/// exit(1) listing any regressions. No-op when the variable is unset.
+pub fn enforce_baseline_from_env(results: &[Stats]) {
+    let Ok(path) = std::env::var("BENCH_BASELINE") else {
+        return;
+    };
+    let baseline = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading baseline {path}: {e}"));
+    let regs =
+        regressions_vs_baseline(results, &baseline, 0.25).expect("malformed baseline json");
+    if !regs.is_empty() {
+        eprintln!("\nPERF REGRESSIONS vs {path} (>25% over ceiling):");
+        for r in &regs {
+            eprintln!("  {r}");
+        }
+        std::process::exit(1);
+    }
+    println!("no regressions vs {path} (25% tolerance)");
+}
+
+/// Compare measured medians against a committed baseline (same JSON
+/// schema as [`Harness::json`]). Returns one line per bench whose
+/// median exceeds `baseline_median × (1 + tolerance)` — e.g.
+/// `tolerance = 0.25` fails on a >25 % step-time regression. Benches
+/// present on only one side are skipped, so the baseline can track a
+/// stable subset and new benches don't need a baseline entry to land.
+/// Baseline medians are *ceilings* refreshed from CI artifacts (see
+/// `benches/baseline.json`), not laptop-local measurements.
+pub fn regressions_vs_baseline(
+    current: &[Stats],
+    baseline_json: &str,
+    tolerance: f64,
+) -> anyhow::Result<Vec<String>> {
+    let doc = crate::util::json::Json::parse(baseline_json)?;
+    let mut baseline = std::collections::BTreeMap::new();
+    for b in doc.get("benches")?.as_arr()? {
+        baseline.insert(
+            b.get("name")?.as_str()?.to_string(),
+            b.get("median_s")?.as_f64()?,
+        );
+    }
+    let mut out = Vec::new();
+    for s in current {
+        if let Some(&base) = baseline.get(&s.name) {
+            if s.median > base * (1.0 + tolerance) {
+                out.push(format!(
+                    "{}: median {} vs baseline {} (+{:.0}%)",
+                    s.name,
+                    fmt_t(s.median),
+                    fmt_t(base),
+                    100.0 * (s.median / base - 1.0)
+                ));
+            }
+        }
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -177,6 +270,38 @@ mod tests {
         assert_eq!(h.results.len(), 1);
         assert!(h.results[0].median > 0.0);
         assert!(h.csv().lines().count() == 2);
+    }
+
+    #[test]
+    fn json_roundtrips_and_carries_medians() {
+        let mut h = Harness::new(Duration::from_millis(30), Duration::from_millis(5));
+        h.bench("spin", || std::hint::black_box(17u64.wrapping_mul(31)));
+        let doc = crate::util::json::Json::parse(&h.json()).unwrap();
+        let benches = doc.get("benches").unwrap().as_arr().unwrap();
+        assert_eq!(benches.len(), 1);
+        assert_eq!(benches[0].get("name").unwrap().as_str().unwrap(), "spin");
+        assert!(benches[0].get("median_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn baseline_comparison_flags_only_real_regressions() {
+        let fast = Stats::from_samples("a", vec![0.010; 5]);
+        let slow = Stats::from_samples("b", vec![0.050; 5]);
+        let untracked = Stats::from_samples("c", vec![9.0; 5]);
+        let baseline = r#"{"benches": [
+            {"name": "a", "median_s": 0.010},
+            {"name": "b", "median_s": 0.020},
+            {"name": "unmeasured", "median_s": 0.001}
+        ]}"#;
+        let regs =
+            regressions_vs_baseline(&[fast, slow, untracked], baseline, 0.25).unwrap();
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].starts_with("b:"), "{regs:?}");
+        // within tolerance passes
+        let ok = Stats::from_samples("b", vec![0.024; 5]);
+        assert!(regressions_vs_baseline(&[ok], baseline, 0.25).unwrap().is_empty());
+        // malformed baseline is an error, not a silent pass
+        assert!(regressions_vs_baseline(&[], "{}", 0.25).is_err());
     }
 
     #[test]

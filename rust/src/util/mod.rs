@@ -14,3 +14,28 @@ pub mod cli;
 pub mod json;
 pub mod kvconf;
 pub mod prop;
+
+/// FNV-1a over a byte stream — the repo's single fingerprint
+/// primitive. Parameter checksums ([`crate::sched::checksum`]),
+/// membership fingerprints ([`crate::topology::Membership::checksum`])
+/// and the host backend's preset seed all feed it their own byte
+/// encodings, so the constants live in exactly one place.
+pub fn fnv1a(bytes: impl IntoIterator<Item = u8>) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // standard FNV-1a test vectors
+        assert_eq!(super::fnv1a([]), 0xcbf29ce484222325);
+        assert_eq!(super::fnv1a(*b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(super::fnv1a(*b"foobar"), 0x85944171f73967e8);
+    }
+}
