@@ -1,0 +1,67 @@
+//! Bench guard: elastic `Membership` lookups must stay sub-quadratic.
+//!
+//! PR 2's `shard_range` walked `alive().position()` — O(N) per worker,
+//! O(N²) for the per-step all-worker shard resolution — and `locate`
+//! linearly scanned the groups. Both are now binary searches over
+//! cached group-boundary offsets; these benches gate the whole-cluster
+//! lookup pattern (every alive worker resolves its shard, as the
+//! engine does each segment) so an accidental return to linear scans
+//! fails CI's `bench-smoke` ceilings in `benches/baseline.json` (only
+//! the 4096-worker rows are gated — at that size the quadratic path is
+//! tens of milliseconds, far past any machine-speed headroom).
+//!
+//! Run: `cargo bench --bench membership`
+
+use lsgd::topology::{Membership, Topology, WorkerId};
+use lsgd::util::bench::{enforce_baseline_from_env, smoke_mode, Harness};
+
+/// A realistic post-fault membership: a few scattered removals, then a
+/// rebalance (uneven ascending runs, offsets in play).
+fn membership(groups: usize, wpg: usize) -> Membership {
+    let topo = Topology::new(groups, wpg).unwrap();
+    let mut m = topo.membership();
+    for w in [1usize, 7, 13] {
+        m.remove_worker(WorkerId(w)).unwrap();
+    }
+    m.rebalance();
+    m
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    let mut h = if smoke { Harness::quick() } else { Harness::default() };
+    println!("# membership — elastic lookup hot path");
+
+    for &(groups, wpg) in &[(64usize, 4usize), (1024, 4)] {
+        let m = membership(groups, wpg);
+        let n = m.num_workers();
+        let gb = n * 8; // 8 samples per alive worker
+        let label = groups * wpg;
+        h.bench(&format!("membership/shard_range_all/{label}"), || {
+            let mut acc = 0usize;
+            for w in m.alive() {
+                acc += m.shard_range(w, gb).unwrap().start;
+            }
+            acc
+        });
+        h.bench(&format!("membership/locate_all/{label}"), || {
+            let mut acc = 0usize;
+            for w in m.alive() {
+                acc += m.locate(w).unwrap().1;
+            }
+            acc
+        });
+    }
+
+    // mutation cost at scale: build + scattered removals + rebalance
+    h.bench("membership/rebuild_remove_rebalance/4096", || {
+        let m = membership(1024, 4);
+        m.num_workers()
+    });
+
+    println!("\n{}", h.csv());
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/BENCH_membership.json", h.json()).unwrap();
+    println!("→ bench_results/BENCH_membership.json");
+    enforce_baseline_from_env(&h.results);
+}

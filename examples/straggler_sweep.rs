@@ -14,6 +14,15 @@
 //! mid-run, the survivors regroup and re-shard, and two identical runs
 //! produce bitwise-identical trajectories.
 //!
+//! Part 4 plots the *recovery curve* (DES): a whole group dies, the
+//! cluster runs degraded, then the group rejoins — per-step relative
+//! throughput dips and returns, for LSGD vs CSGD, and the final
+//! membership is bit-identical to the launch layout.
+//!
+//! Part 5 flips the perturbation to the communicator side: slow
+//! communicators tax LSGD's extra layer while CSGD (no communicators)
+//! is untouched — the trade the slow-worker parts 1–3 mirror.
+//!
 //! ```bash
 //! cargo run --release --example straggler_sweep -- --steps 6
 //! ```
@@ -120,6 +129,87 @@ fn main() -> Result<()> {
     assert_eq!(regroups, 1);
     assert_eq!(sums_a, sums_b, "seeded fail-stop runs must be bitwise-identical");
     println!("→ two identical runs, bitwise-equal trajectories across the regroup");
+
+    // -- Part 4: recovery curve — fail, run degraded, rejoin (DES) ----
+    anyhow::ensure!(groups >= 2, "the recovery curve needs at least 2 groups");
+    let steps4 = 10usize;
+    let (fail_at, rejoin_at) = (3usize, 7usize);
+    println!(
+        "\n== DES recovery curve: group {} dies @{fail_at}, rejoins @{rejoin_at} ({groups}x{workers}) ==",
+        groups - 1
+    );
+    let lo = (groups - 1) * workers;
+    let mut p = PerturbConfig::default();
+    let fails: Vec<String> = (lo..lo + workers).map(|w| format!("{w}@{fail_at}")).collect();
+    let rejoins: Vec<String> = (lo..lo + workers).map(|w| format!("{w}@{rejoin_at}")).collect();
+    p.parse_failures(&fails.join(","))?;
+    p.parse_rejoins(&rejoins.join(","))?;
+    let n_full = (groups * workers) as f64;
+    let alive_at = |s: usize| {
+        if (fail_at..rejoin_at).contains(&s) {
+            n_full - workers as f64
+        } else {
+            n_full
+        }
+    };
+    // per-step completion deltas from the trace; relative throughput =
+    // (alive/N) · (baseline step time / actual step time)
+    let step_ends = |r: &des::DesResult| -> Vec<f64> {
+        (0..steps4)
+            .map(|s| {
+                r.spans
+                    .iter()
+                    .filter(|x| x.step == s)
+                    .map(|x| x.end)
+                    .fold(0.0_f64, f64::max)
+            })
+            .collect()
+    };
+    let rl = des::run_lsgd_perturbed(&m, &topo, steps4, &p)?;
+    let rc = des::run_csgd_perturbed(&m, &topo, steps4, &p)?;
+    let base_dt_l = des::per_step(&des::run_lsgd(&m, &topo, steps4), steps4);
+    let base_dt_c = des::per_step(&des::run_csgd(&m, &topo, steps4), steps4);
+    let (el, ec) = (step_ends(&rl), step_ends(&rc));
+    println!("{:>6} {:>7} {:>10} {:>10}", "step", "alive", "lsgd_thr", "csgd_thr");
+    for s in 0..steps4 {
+        let dt = |ends: &[f64], base: f64| {
+            let d = if s == 0 { ends[0] } else { ends[s] - ends[s - 1] };
+            (alive_at(s) / n_full) * (base / d)
+        };
+        println!(
+            "{s:>6} {:>7} {:>10.3} {:>10.3}",
+            alive_at(s) as usize,
+            dt(&el, base_dt_l),
+            dt(&ec, base_dt_c)
+        );
+    }
+    for r in [&rl, &rc] {
+        assert_eq!(r.regroups.len(), 2);
+        assert_eq!(
+            r.regroups[1].membership_checksum,
+            topo.membership().checksum(),
+            "rejoin must restore the launch layout bit-for-bit"
+        );
+    }
+    println!("→ throughput dips while degraded, recovers after the rejoin;");
+    println!("  final membership identical to the launch layout (checksum match)");
+
+    // -- Part 5: slow communicators — LSGD's layer as the liability ---
+    let mut p = PerturbConfig::default();
+    p.comm_straggle_prob = 0.3;
+    p.comm_straggle_factor = 3.0;
+    let tax_l = des::per_step(&des::run_lsgd_perturbed(&m, &topo, steps, &p)?, steps)
+        - des::per_step(&des::run_lsgd(&m, &topo, steps), steps);
+    let tax_c = des::per_step(&des::run_csgd_perturbed(&m, &topo, steps, &p)?, steps)
+        - des::per_step(&des::run_csgd(&m, &topo, steps), steps);
+    println!("\n== slow communicators (p=0.3, 3x): per-step tax ==");
+    println!("  lsgd {tax_l:+.3}s   csgd {tax_c:+.3}s");
+    assert!(tax_l > 0.0, "slow communicators must cost LSGD something");
+    assert!(
+        tax_c.abs() < 1e-9,
+        "CSGD has no communicator layer to slow down (tax {tax_c})"
+    );
+    println!("→ the mirror regime: LSGD pays for its extra layer, CSGD doesn't");
     println!("straggler_sweep OK");
     Ok(())
 }

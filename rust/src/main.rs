@@ -42,8 +42,14 @@ SUBCOMMANDS:
             perturbation (needs --parallel):
             --stragglers P[xF]   straggle each rank w.p. P, slowdown F
             --hetero H           permanent per-rank speed spread [0,H]
+            --comm-stragglers P[xF]  straggle each group's communicator
+            --comm-hetero H      permanent per-communicator speed spread
+            --link-degrade G@S..ExF  group G's fabric runs Fx slower
+                                 for steps S..E (comma-separated)
             --fail W@S[,W@S..]   fail-stop worker W before step S
                                  (elastic regroup: survivors re-shard)
+            --rejoin W@S[,W@S..] failed worker W rejoins before step S
+                                 (elastic scale-up: groups resurrect)
             --perturb-seed S --straggle-secs SECS (delay per 1x slowdown)
   audit     run CSGD and LSGD back-to-back, compare trajectories bitwise
             (same flags as train, plus --paper-literal)
@@ -52,26 +58,53 @@ SUBCOMMANDS:
             [--t-compute S] [--t-io S]
   simulate  discrete-event timeline at scale
             --algo csgd|lsgd --groups G --workers W --steps K
-            [--stragglers P[xF]] [--hetero H] [--fail W@S[,..]]
-            [--perturb-seed S]
+            [--stragglers P[xF]] [--hetero H] [--comm-stragglers P[xF]]
+            [--comm-hetero H] [--link-degrade G@S..ExF]
+            [--fail W@S[,..]] [--rejoin W@S[,..]] [--perturb-seed S]
   config    dump | check [--file FILE]
   info      [--artifacts DIR]
 ";
 
-/// Shared `--stragglers/--hetero/--fail/--perturb-seed/--straggle-secs`
-/// flag handling (train + simulate).
+/// Shared perturbation flag handling (train + simulate):
+/// `--stragglers/--hetero/--comm-stragglers/--comm-hetero/
+/// --link-degrade/--fail/--rejoin/--perturb-seed/--straggle-secs`.
 fn parse_perturb(a: &Args) -> Result<PerturbConfig> {
     let mut p = PerturbConfig::default();
     if let Some(spec) = a.opt_str("stragglers") {
         p.parse_stragglers(&spec)?;
     }
     p.hetero = a.f64_or("hetero", p.hetero)?;
+    if let Some(spec) = a.opt_str("comm-stragglers") {
+        p.parse_comm_stragglers(&spec)?;
+    }
+    p.comm_hetero = a.f64_or("comm-hetero", p.comm_hetero)?;
+    if let Some(spec) = a.opt_str("link-degrade") {
+        p.parse_link_degrade(&spec)?;
+    }
     if let Some(spec) = a.opt_str("fail") {
         p.parse_failures(&spec)?;
+    }
+    if let Some(spec) = a.opt_str("rejoin") {
+        p.parse_rejoins(&spec)?;
     }
     p.seed = a.u64_or("perturb-seed", p.seed)?;
     p.delay_unit = a.f64_or("straggle-secs", p.delay_unit)?;
     Ok(p)
+}
+
+/// One `regroup @step …` report line (train + simulate).
+fn print_regroup(ev: &lsgd::metrics::RegroupEvent) {
+    println!(
+        "  regroup @step {} [{:?}]: removed {:?} rejoined {:?} → {} workers in {} groups \
+         (membership {:#018x})",
+        ev.step,
+        ev.kind,
+        ev.removed,
+        ev.rejoined,
+        ev.workers_after,
+        ev.groups_after,
+        ev.membership_checksum
+    );
 }
 
 fn main() {
@@ -172,15 +205,14 @@ fn cmd_train(rest: &[String]) -> Result<()> {
     }
     if !perturb.is_noop() {
         println!(
-            "perturbation: injected straggle {:.3}s, communicator wait {:.3}s",
+            "perturbation: injected straggle {:.3}s, communicator wait {:.3}s, \
+             injected communicator delay {:.3}s",
             result.perturb.injected_total(),
-            result.perturb.wait_total()
+            result.perturb.wait_total(),
+            result.perturb.comm_injected_total()
         );
         for ev in &result.perturb.regroups {
-            println!(
-                "  regroup @step {}: removed {:?} → {} workers in {} groups (membership {:#018x})",
-                ev.step, ev.removed, ev.workers_after, ev.groups_after, ev.membership_checksum
-            );
+            print_regroup(ev);
         }
     }
     if let (Some((_, l0, _)), Some((_, l1, _))) =
@@ -367,6 +399,9 @@ fn cmd_simulate(rest: &[String]) -> Result<()> {
             r.makespan - base.makespan,
             100.0 * (r.makespan / base.makespan - 1.0)
         );
+        for ev in &r.regroups {
+            print_regroup(ev);
+        }
     }
     // print the first step's timeline
     let mut spans: Vec<_> = r.spans.iter().filter(|s| s.step == 0).collect();

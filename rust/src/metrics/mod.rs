@@ -78,17 +78,34 @@ impl PhaseTimers {
     }
 }
 
+/// Direction of a membership change at one step boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RegroupKind {
+    /// Fail-stop: ranks removed, survivors rebalanced (the group count
+    /// may shrink but never grows).
+    Removal,
+    /// Elastic scale-up: previously failed ranks re-admitted, possibly
+    /// resurrecting a dropped group back toward the launch layout.
+    Rejoin,
+    /// Removals and rejoins applied at the same boundary.
+    Mixed,
+}
+
 /// One step-boundary membership change applied by the elastic fault
-/// path ([`crate::sched::exec`]): which ranks were removed, what
-/// survived, and the membership fingerprint
+/// path ([`crate::sched::exec`]): which ranks were removed or
+/// rejoined, what survived, and the membership fingerprint
 /// ([`crate::topology::Membership::checksum`]) the determinism tests
 /// compare across reruns.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RegroupEvent {
     /// First step executed under the new membership.
     pub step: usize,
+    /// Whether this boundary removed ranks, re-admitted them, or both.
+    pub kind: RegroupKind,
     /// Original worker ids removed at this boundary (ascending).
     pub removed: Vec<usize>,
+    /// Original worker ids re-admitted at this boundary (ascending).
+    pub rejoined: Vec<usize>,
     pub groups_after: usize,
     pub workers_after: usize,
     /// Fingerprint of the post-rebalance membership.
@@ -106,6 +123,11 @@ pub struct PerturbReport {
     /// group's communicator waited between its first and last worker
     /// gradient per step)` — where straggling shows up on the wire.
     pub wait_per_group: Vec<(usize, f64)>,
+    /// `(group index at launch of the segment, total injected
+    /// communicator-delay seconds)` — the slow-communicator /
+    /// degraded-link schedule as actually applied per communicator
+    /// rank ([`crate::simnet::perturb`]'s `comm_injected_delay`).
+    pub comm_injected_per_group: Vec<(usize, f64)>,
     /// Membership changes, in step order.
     pub regroups: Vec<RegroupEvent>,
 }
@@ -119,6 +141,11 @@ impl PerturbReport {
     /// Total communicator straggle wait across groups (seconds).
     pub fn wait_total(&self) -> f64 {
         self.wait_per_group.iter().map(|(_, s)| s).sum()
+    }
+
+    /// Total injected communicator delay across groups (seconds).
+    pub fn comm_injected_total(&self) -> f64 {
+        self.comm_injected_per_group.iter().map(|(_, s)| s).sum()
     }
 }
 
@@ -276,10 +303,13 @@ mod tests {
         let mut r = PerturbReport::default();
         assert_eq!(r.injected_total(), 0.0);
         assert_eq!(r.wait_total(), 0.0);
+        assert_eq!(r.comm_injected_total(), 0.0);
         r.injected_per_worker = vec![(0, 1.0), (2, 0.5)];
         r.wait_per_group = vec![(0, 0.25), (1, 0.25)];
+        r.comm_injected_per_group = vec![(0, 0.75), (1, 0.125)];
         assert_eq!(r.injected_total(), 1.5);
         assert_eq!(r.wait_total(), 0.5);
+        assert_eq!(r.comm_injected_total(), 0.875);
     }
 
     #[test]

@@ -34,12 +34,27 @@
 //!   wall-clock exactly where the DES says it is. Communicators
 //!   account the resulting first-to-last arrival gap as the
 //!   `straggle_wait` phase.
-//! * **fail-stop faults** — the run is split into *segments* at the
-//!   fault boundaries. Each segment runs the full channel web over the
-//!   current [`Membership`]; at a boundary all rank threads join (a
-//!   real synchronization point), the dead workers are removed, the
-//!   survivors are [`Membership::rebalance`]d into even groups, the
-//!   global batch shrinks to `alive × micro_batch`, and a
+//! * **communicator-side delays** — each communicator sleeps
+//!   [`PerturbConfig::comm_injected_delay`] (slow-communicator class /
+//!   stragglers plus any transient `--link-degrade` window covering
+//!   its group) after slotting its workers' gradients and before
+//!   forwarding the group partial, so a slow communicator holds the
+//!   global barrier back exactly where the DES says it does (phase
+//!   `comm_injected_delay`, totalled per group in the run report).
+//!   CSGD lanes pay only the link-window share
+//!   ([`PerturbConfig::link_injected_delay`]): CSGD has no
+//!   communicator layer, mirroring the DES's
+//!   [`crate::simnet::des::run_csgd_perturbed`].
+//! * **fail-stop faults and rejoins** — the run is split into
+//!   *segments* at the membership-change boundaries. Each segment runs
+//!   the full channel web over the current [`Membership`]; at a
+//!   boundary all rank threads join (a real synchronization point),
+//!   rejoining workers are re-admitted (their replica bootstrapped
+//!   from a survivor — the real-world "new rank fetches the current
+//!   model" broadcast — and their rank thread re-spawned with the next
+//!   segment), dead workers are removed, the survivors are rebalanced
+//!   ([`Membership::rebalance`], or toward the launch group count on
+//!   rejoin), the global batch becomes `alive × micro_batch`, and a
 //!   [`RegroupEvent`] is logged. Training then continues.
 //!
 //! Sleeps never touch the numerics, and membership only changes at
@@ -141,6 +156,9 @@ struct Acc {
     injected: Vec<f64>,
     /// (group index within its segment's membership, wait seconds).
     waits: Vec<(usize, f64)>,
+    /// (group index within its segment's membership, injected
+    /// communicator-delay seconds).
+    comm_injected: Vec<(usize, f64)>,
     regroups: Vec<RegroupEvent>,
 }
 
@@ -157,8 +175,8 @@ fn run(
         "thread-per-rank execution owns one replica per worker thread; \
          construct the Trainer with dedup_replicas = false"
     );
-    perturb.validate(n_workers)?;
     let steps = t.cfg.steps;
+    perturb.validate(&topo, steps)?;
     let is_lsgd = algo == Algo::Lsgd;
 
     let mut acc = Acc {
@@ -168,14 +186,34 @@ fn run(
         hidden_io: 0.0,
         injected: vec![0.0; n_workers],
         waits: Vec::new(),
+        comm_injected: Vec::new(),
         regroups: Vec::new(),
     };
 
-    // Segment loop: run fault-free stretches, regroup at boundaries —
-    // the same drive_segments the DES replays, so the fault semantics
-    // of the two execution worlds cannot drift apart.
+    // Segment loop: run membership-stable stretches, regroup at
+    // boundaries — the same drive_segments the DES replays, so the
+    // fault/recovery semantics of the two execution worlds cannot
+    // drift apart. `src_rank` tracks a worker whose replica holds the
+    // newest parameters (the lowest alive id of the previous segment):
+    // a rank rejoining at a boundary bootstraps its replica from it —
+    // even when that source itself dies at the same boundary, its
+    // frozen replica is still the latest state.
     let mut membership = Membership::full(&topo);
-    let regroups = drive_segments(perturb, &mut membership, steps, |memb, range| {
+    let mut src_rank = 0usize;
+    let regroups = drive_segments(perturb, &mut membership, steps, |memb, range, boundary| {
+        for ev in boundary {
+            for &w in &ev.rejoined {
+                if w != src_rank {
+                    let (params, momentum) = {
+                        let src = &t.replicas[src_rank];
+                        (src.params.clone(), src.momentum.clone())
+                    };
+                    t.replicas[w].params = params;
+                    t.replicas[w].momentum = momentum;
+                }
+            }
+        }
+        src_rank = memb.alive().next().expect("non-empty membership").0;
         run_segment(t, algo, opts, perturb, memb, range, &mut acc)
     })?;
     acc.regroups = regroups;
@@ -192,6 +230,7 @@ fn run(
         perturb: PerturbReport {
             injected_per_worker: acc.injected.iter().copied().enumerate().collect(),
             wait_per_group: acc.waits,
+            comm_injected_per_group: acc.comm_injected,
             regroups: acc.regroups,
         },
     })
@@ -270,9 +309,11 @@ fn run_segment(
     let replicas = &mut t.replicas;
 
     // Per-alive-worker static context, in ascending original-id order.
+    let mut alive_ids = Vec::with_capacity(n_alive);
     let mut shard_ranges = Vec::with_capacity(n_alive);
     let mut locations = Vec::with_capacity(n_alive);
     for w in memb.alive() {
+        alive_ids.push(w.0);
         shard_ranges.push(memb.shard_range(w, gb)?);
         locations.push(memb.locate(w).expect("alive worker has a slot"));
     }
@@ -303,7 +344,6 @@ fn run_segment(
     }
     let (report_tx, report_rx) = channel::<StepReport>();
 
-    let seg_steps = range.len();
     let mut hidden_io = 0.0_f64;
 
     std::thread::scope(|s| {
@@ -325,10 +365,12 @@ fn run_segment(
         {
             let my_partial_tx = partial_tx.clone();
             let wpg = sizes[group];
-            comm_handles.push(s.spawn(move || -> (PhaseTimers, f64) {
+            let seg = range.clone();
+            comm_handles.push(s.spawn(move || -> (PhaseTimers, f64, f64) {
                 let mut tm = PhaseTimers::new();
                 let mut wait_total = 0.0_f64;
-                for _ in 0..seg_steps {
+                let mut comm_injected = 0.0_f64;
+                for step in seg {
                     let mut slots: Vec<Option<GradMsg>> = (0..wpg).map(|_| None).collect();
                     let mut first_arrival: Option<Instant> = None;
                     for _ in 0..wpg {
@@ -346,6 +388,21 @@ fn run_segment(
                             first_arrival.expect("received at least one").elapsed().as_secs_f64();
                         tm.add("straggle_wait", wait);
                         wait_total += wait;
+                    }
+                    // the slow-communicator / degraded-link model: a
+                    // slow communicator holds its group partial — and
+                    // so the global barrier — back right here. CSGD
+                    // has no communicator layer, so its lanes pay only
+                    // the link-window share (exactly as in the DES)
+                    let d = if is_lsgd {
+                        perturb.comm_injected_delay(group, step)
+                    } else {
+                        perturb.link_injected_delay(group, step)
+                    };
+                    if d > 0.0 {
+                        sleep_secs(d);
+                        tm.add("comm_injected_delay", d);
+                        comm_injected += d;
                     }
                     // fold in ascending worker id — arrival order (the
                     // race) is erased by the slotting above
@@ -374,7 +431,7 @@ fn run_segment(
                         }
                     });
                 }
-                (tm, wait_total)
+                (tm, wait_total, comm_injected)
             }));
         }
 
@@ -530,14 +587,15 @@ fn run_segment(
 
         // ---- deterministic joins: communicators then workers, by id -
         for (group, h) in comm_handles.into_iter().enumerate() {
-            let (tm, wait) = h.join().expect("communicator thread panicked");
+            let (tm, wait, injected) = h.join().expect("communicator thread panicked");
             acc.timers.merge(&tm);
             acc.waits.push((group, wait));
+            acc.comm_injected.push((group, injected));
         }
         for (pos, h) in worker_handles.into_iter().enumerate() {
             let (tm, injected) = h.join().expect("worker thread panicked");
             acc.timers.merge(&tm);
-            acc.injected[memb.alive().nth(pos).expect("alive worker").0] += injected;
+            acc.injected[alive_ids[pos]] += injected;
         }
     });
 

@@ -39,49 +39,13 @@ impl Link {
     }
 }
 
-/// Per-rank link heterogeneity: rank `r` sees the base link scaled by
-/// `factors[r]`. A synchronous collective is paced by its **slowest
-/// participant**, so costing uses the max factor over the ranks that
-/// take part ([`LinkProfile::worst_of`]). `factors` shorter than a
-/// rank index means "unperturbed" (factor 1) — the homogeneous model
-/// is the empty profile.
-#[derive(Debug, Clone, PartialEq)]
-pub struct LinkProfile {
-    pub base: Link,
-    pub factors: Vec<f64>,
-}
-
-impl LinkProfile {
-    /// Homogeneous profile: every rank sees `base` unscaled.
-    pub fn uniform(base: Link) -> Self {
-        Self { base, factors: Vec::new() }
-    }
-
-    /// Per-rank profile from explicit factors (index = rank id).
-    pub fn new(base: Link, factors: Vec<f64>) -> Self {
-        debug_assert!(factors.iter().all(|&f| f >= 1.0));
-        Self { base, factors }
-    }
-
-    fn factor_of(&self, rank: usize) -> f64 {
-        self.factors.get(rank).copied().unwrap_or(1.0)
-    }
-
-    /// The link one rank sees.
-    pub fn link_of(&self, rank: usize) -> Link {
-        self.base.scaled(self.factor_of(rank))
-    }
-
-    /// Effective link of a collective over `ranks`: the base scaled by
-    /// the slowest participant's factor (a barrier waits for the max).
-    pub fn worst_of(&self, ranks: impl IntoIterator<Item = usize>) -> Link {
-        let worst = ranks
-            .into_iter()
-            .map(|r| self.factor_of(r))
-            .fold(1.0_f64, f64::max);
-        self.base.scaled(worst)
-    }
-}
+// Per-rank link heterogeneity is expressed as explicit worst-factor
+// folds at the call sites (a synchronous collective is paced by its
+// slowest participant, so the DES computes `max(factor)` over the
+// participants and applies [`Link::scaled`] once — see
+// `des::lsgd_segment` / `des::run_csgd_perturbed`). A `LinkProfile`
+// wrapper type used to live here; it lost its last production caller
+// when per-step communicator/link factors arrived and was removed.
 
 fn log2_ceil(p: usize) -> f64 {
     debug_assert!(p >= 1);
@@ -195,16 +159,17 @@ mod tests {
     }
 
     #[test]
-    fn link_profile_collective_pays_slowest_participant() {
-        let p = LinkProfile::new(L, vec![1.0, 3.0, 1.5]);
-        assert_eq!(p.link_of(0), L);
-        assert_eq!(p.link_of(1), L.scaled(3.0));
-        assert_eq!(p.link_of(7), L, "out-of-profile ranks are unperturbed");
-        assert_eq!(p.worst_of([0, 2]), L.scaled(1.5));
-        assert_eq!(p.worst_of([0, 1, 2]), L.scaled(3.0));
-        // excluding the slow rank restores the base link
-        assert_eq!(p.worst_of([0]), L);
-        assert_eq!(LinkProfile::uniform(L).worst_of([0, 1, 2]), L);
+    fn worst_factor_fold_pays_slowest_participant() {
+        // the call-site pattern that replaced LinkProfile: fold the
+        // participants' factors with max, scale the base link once
+        let worst = |factors: &[f64]| {
+            L.scaled(factors.iter().copied().fold(1.0_f64, f64::max))
+        };
+        assert_eq!(worst(&[1.0, 1.5]), L.scaled(1.5));
+        assert_eq!(worst(&[1.0, 3.0, 1.5]), L.scaled(3.0));
+        // no participant slower than baseline ⇒ the base link, exactly
+        assert_eq!(worst(&[]), L.scaled(1.0));
+        assert_eq!(worst(&[1.0]).p2p(1e6), L.scaled(1.0).p2p(1e6));
     }
 
     #[test]

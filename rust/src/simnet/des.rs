@@ -14,6 +14,7 @@
 
 use super::perturb::{drive_segments, PerturbConfig};
 use super::{cost, ClusterModel, StepBreakdown};
+use crate::metrics::RegroupEvent;
 use crate::topology::{Membership, Topology};
 use anyhow::Result;
 use std::cmp::Ordering;
@@ -74,6 +75,11 @@ pub struct DesResult {
     /// Seconds of inter-group allreduce hidden under worker I/O,
     /// summed over steps (the paper's overlap win, measured).
     pub hidden_comm: f64,
+    /// Membership changes applied by the perturbed replays, in step
+    /// order (empty for unperturbed runs). Identical — by shared
+    /// construction through [`drive_segments`] — to the schedule the
+    /// real engine logs for the same config.
+    pub regroups: Vec<RegroupEvent>,
 }
 
 struct Engine {
@@ -205,7 +211,7 @@ pub fn run_lsgd_jittered(
     // allreduce that ran inside the I/O window = min(t_io, t_g)
     let hidden = t_g.min(m.t_io) * steps as f64;
 
-    DesResult { makespan, spans: e.spans, hidden_comm: hidden }
+    DesResult { makespan, spans: e.spans, hidden_comm: hidden, regroups: Vec::new() }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -260,33 +266,36 @@ fn group_link_factors(p: &PerturbConfig, memb: &Membership) -> Vec<f64> {
 }
 
 /// LSGD (Algorithm 3) under a perturbation profile: per-rank
-/// compute/IO speed factors, seeded stragglers, fail-stop faults with
-/// elastic regrouping. Reduces to [`run_lsgd`] when `p.is_noop()`.
+/// compute/IO speed factors, seeded worker and communicator
+/// stragglers, transient link-degradation windows, fail-stop faults
+/// with elastic regrouping and rejoins. Reduces to [`run_lsgd`] when
+/// `p.is_noop()`.
 pub fn run_lsgd_perturbed(
     m: &ClusterModel,
     topo: &Topology,
     steps: usize,
     p: &PerturbConfig,
 ) -> Result<DesResult> {
-    p.validate(topo.num_workers())?;
+    p.validate(topo, steps)?;
     let mut memb = Membership::full(topo);
     let mut spans = Vec::new();
     let mut hidden = 0.0;
     let mut t = 0.0;
-    drive_segments(p, &mut memb, steps, |memb, range| {
+    let regroups = drive_segments(p, &mut memb, steps, |memb, range, _boundary| {
         let (t2, h) = lsgd_segment(m, p, memb, range, t, &mut spans);
         t = t2;
         hidden += h;
         Ok(())
     })?;
-    Ok(DesResult { makespan: t, spans, hidden_comm: hidden })
+    Ok(DesResult { makespan: t, spans, hidden_comm: hidden, regroups })
 }
 
-/// One fault-free stretch of a perturbed LSGD run: the event loop of
-/// [`run_lsgd`], generalized to uneven groups, per-(group, step)
-/// compute/IO scales and hetero-scaled communicator links. All groups
-/// start the segment synchronized at `t0` (the engine's regroup
-/// barrier). Returns `(segment end time, hidden comm)`.
+/// One membership-stable stretch of a perturbed LSGD run: the event
+/// loop of [`run_lsgd`], generalized to uneven groups, per-(group,
+/// step) compute/IO scales, communicator-class slowdowns and
+/// time-varying link factors. All groups start the segment
+/// synchronized at `t0` (the engine's regroup barrier). Returns
+/// `(segment end time, hidden comm)`.
 fn lsgd_segment(
     m: &ClusterModel,
     p: &PerturbConfig,
@@ -301,14 +310,25 @@ fn lsgd_segment(
         return (t0, 0.0);
     }
     let base = range.start;
-    let red: Vec<f64> = (0..g)
+    let red_base: Vec<f64> = (0..g)
         .map(|gi| cost::reduce_tree(m.intra, memb.group(gi).len() + 1, m.grad_bytes))
         .collect();
-    let bc: Vec<f64> = (0..g)
+    let bc_base: Vec<f64> = (0..g)
         .map(|gi| cost::broadcast_tree(m.intra, memb.group(gi).len() + 1, m.grad_bytes))
         .collect();
-    let profile = cost::LinkProfile::new(m.comm_inter, group_link_factors(p, memb));
-    let t_g = m.algo.cost(profile.worst_of(0..g), g, m.grad_bytes);
+    let wl = group_link_factors(p, memb);
+    // a slow communicator stretches its local reduce/broadcast AND its
+    // share of the global allreduce; transient link windows degrade
+    // only the inter-node fabric. The allreduce is a barrier over all
+    // communicators, so it pays the worst combined factor at the step.
+    let red_of = |gi: usize, step: usize| red_base[gi] * p.comm_scale(gi, step);
+    let bc_of = |gi: usize, step: usize| bc_base[gi] * p.comm_scale(gi, step);
+    let t_g_of = |step: usize| {
+        let worst = (0..g)
+            .map(|gi| wl[gi] * p.comm_scale(gi, step) * p.link_factor(gi, step))
+            .fold(1.0_f64, f64::max);
+        m.algo.cost(m.comm_inter.scaled(worst), g, m.grad_bytes)
+    };
     let io_of = |gi: usize, step: usize| m.t_io * group_scale(p, memb, gi, step);
     let comp_of = |gi: usize, step: usize| m.t_compute * group_scale(p, memb, gi, step);
 
@@ -331,7 +351,7 @@ fn lsgd_segment(
         makespan = makespan.max(now);
         match ev.kind {
             EventKind::ComputeDone { group, step } => {
-                let r = red[group];
+                let r = red_of(group, step);
                 e.span(format!("g{group}/workers"), "reduce", now, now + r, step);
                 e.schedule(now + r, EventKind::ReduceDone { group, step });
             }
@@ -342,6 +362,7 @@ fn lsgd_segment(
                 let si = step - base;
                 groups_reduced[si] += 1;
                 if groups_reduced[si] == g {
+                    let t_g = t_g_of(step);
                     e.span("comms".into(), "global_allreduce", now, now + t_g, step);
                     e.schedule(now + t_g, EventKind::GlobalDone { step });
                     // hidden share: the allreduce runs inside every
@@ -361,7 +382,7 @@ fn lsgd_segment(
                     &global_done_at,
                     &io_done_at,
                     &mut bcast_scheduled,
-                    bc[group],
+                    bc_of(group, step),
                 );
             }
             EventKind::GlobalDone { step } => {
@@ -375,7 +396,7 @@ fn lsgd_segment(
                         &global_done_at,
                         &io_done_at,
                         &mut bcast_scheduled,
-                        bc[gi],
+                        bc_of(gi, step),
                     );
                 }
             }
@@ -423,29 +444,36 @@ fn try_broadcast_at(
 
 /// CSGD (Algorithm 2) under the same perturbation profile: the flat
 /// allreduce barrier pays the slowest alive rank's compute AND IO
-/// extension every step, plus a fabric paced by the slowest NIC.
-/// Reduces to [`run_csgd`] when `p.is_noop()`.
+/// extension every step, plus a fabric paced by the slowest NIC —
+/// including any transient link-degradation window covering a group it
+/// crosses. Communicator-class perturbations do NOT apply: CSGD has no
+/// communicator layer, which is exactly the trade the
+/// slow-communicator profile probes. Reduces to [`run_csgd`] when
+/// `p.is_noop()`.
 pub fn run_csgd_perturbed(
     m: &ClusterModel,
     topo: &Topology,
     steps: usize,
     p: &PerturbConfig,
 ) -> Result<DesResult> {
-    p.validate(topo.num_workers())?;
+    p.validate(topo, steps)?;
     let mut memb = Membership::full(topo);
     let mut e = Engine::new();
     let mut t = 0.0;
-    drive_segments(p, &mut memb, steps, |memb, range| {
+    let regroups = drive_segments(p, &mut memb, steps, |memb, range, _boundary| {
         let n = memb.num_workers();
         let fabric = if memb.num_groups() == 1 { m.intra } else { m.inter };
-        let factors: Vec<f64> = memb.alive().map(|w| p.hetero_factor(w.0)).collect();
-        let profile = cost::LinkProfile::new(fabric, factors);
-        let ar = m.algo.cost(profile.worst_of(0..n), n, m.grad_bytes);
+        // static per-group NIC factor: the slowest member's node class
+        let wl = group_link_factors(p, memb);
         for step in range {
             let slowest = memb
                 .alive()
                 .map(|w| p.compute_scale(w.0, step))
                 .fold(1.0_f64, f64::max);
+            let worst_link = (0..memb.num_groups())
+                .map(|gi| wl[gi] * p.link_factor(gi, step))
+                .fold(1.0_f64, f64::max);
+            let ar = m.algo.cost(fabric.scaled(worst_link), n, m.grad_bytes);
             let io = m.t_io * slowest;
             let comp = m.t_compute * slowest;
             e.span("workers".into(), "io", t, t + io, step);
@@ -459,7 +487,7 @@ pub fn run_csgd_perturbed(
         }
         Ok(())
     })?;
-    Ok(DesResult { makespan: t, spans: e.spans, hidden_comm: 0.0 })
+    Ok(DesResult { makespan: t, spans: e.spans, hidden_comm: 0.0, regroups })
 }
 
 /// Play `steps` CSGD iterations (Algorithm 2): io → compute → flat
@@ -495,7 +523,7 @@ pub fn run_csgd_jittered(
         e.span("workers".into(), "update", t, t + m.t_update, step);
         t += m.t_update;
     }
-    DesResult { makespan: t, spans: e.spans, hidden_comm: 0.0 }
+    DesResult { makespan: t, spans: e.spans, hidden_comm: 0.0, regroups: Vec::new() }
 }
 
 /// Convenience: steady-state per-step time from a DES run.
@@ -727,5 +755,133 @@ mod tests {
         let r = run_lsgd_perturbed(&m, &topo, 5, &p).unwrap();
         assert!(r.makespan > 0.0);
         assert!(r.spans.iter().any(|s| s.step == 4 && s.phase == "update"));
+        assert_eq!(r.regroups.len(), 1, "DES result carries the regroup log");
+    }
+
+    #[test]
+    fn comm_stragglers_tax_lsgd_but_not_csgd() {
+        // the mirror image of the worker-straggler curve: CSGD has no
+        // communicator layer, so slow communicators cost it nothing,
+        // while LSGD's global allreduce (and local reduce/broadcast)
+        // pays the slowest communicator every step — the regime where
+        // delay-tolerant designs (DC-S3GD et al.) claim their edge
+        let m = ClusterModel::paper_k80();
+        let topo = Topology::new(8, 4).unwrap();
+        let steps = 5;
+        let mut p = PerturbConfig::default();
+        p.comm_straggle_prob = 0.4;
+        p.comm_straggle_factor = 3.0;
+        let l = run_lsgd_perturbed(&m, &topo, steps, &p).unwrap().makespan;
+        assert!(
+            l > run_lsgd(&m, &topo, steps).makespan,
+            "slow communicators must cost LSGD something"
+        );
+        let c = run_csgd_perturbed(&m, &topo, steps, &p).unwrap().makespan;
+        assert!((c - run_csgd(&m, &topo, steps).makespan).abs() < 1e-9);
+    }
+
+    #[test]
+    fn comm_hetero_slows_lsgd_within_bound() {
+        let m = ClusterModel::paper_k80();
+        let topo = Topology::new(64, 4).unwrap();
+        let mut p = PerturbConfig::default();
+        p.comm_hetero = 0.5;
+        let base = run_lsgd(&m, &topo, 4).makespan;
+        let l = run_lsgd_perturbed(&m, &topo, 4, &p).unwrap().makespan;
+        assert!(l > base);
+        // every communicator term stretches at most (1 + h)×
+        assert!(l < 1.5 * base + 1e-9);
+    }
+
+    #[test]
+    fn link_degradation_window_is_transient() {
+        // at 64 groups the communicator allreduce exceeds the I/O
+        // window, so a degraded fabric shows up in the makespan — but
+        // only during the window's steps
+        let m = ClusterModel::paper_k80();
+        let topo = Topology::new(64, 4).unwrap();
+        let steps = 6;
+        let base = run_lsgd(&m, &topo, steps).makespan;
+        let mut short = PerturbConfig::default();
+        short.parse_link_degrade("0@2..3x4").unwrap();
+        let mut long = PerturbConfig::default();
+        long.parse_link_degrade("0@2..6x4").unwrap();
+        let r_short = run_lsgd_perturbed(&m, &topo, steps, &short).unwrap().makespan;
+        let r_long = run_lsgd_perturbed(&m, &topo, steps, &long).unwrap().makespan;
+        assert!(r_short > base, "window must cost something");
+        assert!(r_long > r_short, "longer window must cost more");
+        // CSGD crosses the same fabric: it pays too
+        let c_base = run_csgd(&m, &topo, steps).makespan;
+        let c = run_csgd_perturbed(&m, &topo, steps, &short).unwrap().makespan;
+        assert!(c > c_base);
+    }
+
+    #[test]
+    fn link_window_is_positional_under_regroups() {
+        // a window names a communicator SLOT (membership group index),
+        // not a worker set: while removals shrink the cluster below
+        // that slot the window is inert, and it bites again once a
+        // rejoin resurrects the slot (LinkWindow docs pin this)
+        let m = ClusterModel::paper_k80();
+        let topo = Topology::new(2, 4).unwrap();
+        let steps = 6;
+        // group 1 dies for steps 2..4, then fully returns
+        let mut kill = PerturbConfig::default();
+        kill.parse_failures("4@2,5@2,6@2,7@2").unwrap();
+        kill.parse_rejoins("4@4,5@4,6@4,7@4").unwrap();
+        // same schedule + a slot-1 window covering ONLY the shrunken
+        // stretch: no slot-1 communicator exists then, so it's a no-op
+        let mut inert = kill.clone();
+        inert.parse_link_degrade("1@2..4x50").unwrap();
+        let a = run_lsgd_perturbed(&m, &topo, steps, &kill).unwrap();
+        let b = run_lsgd_perturbed(&m, &topo, steps, &inert).unwrap();
+        assert!((a.makespan - b.makespan).abs() < 1e-9, "window on a dead slot is inert");
+        // the same window extended past the rejoin must cost something
+        let mut biting = kill.clone();
+        biting.parse_link_degrade("1@2..6x50").unwrap();
+        let c = run_lsgd_perturbed(&m, &topo, steps, &biting).unwrap();
+        assert!(c.makespan > a.makespan, "resurrected slot pays its window again");
+    }
+
+    #[test]
+    fn rejoin_restores_membership_and_is_deterministic() {
+        let m = ClusterModel::paper_k80();
+        let topo = Topology::new(8, 4).unwrap();
+        let steps = 9;
+        let mut p = PerturbConfig::default();
+        // all of group 7 dies at step 3 and returns at step 6
+        p.parse_failures("28@3,29@3,30@3,31@3").unwrap();
+        p.parse_rejoins("28@6,29@6,30@6,31@6").unwrap();
+        let a = run_lsgd_perturbed(&m, &topo, steps, &p).unwrap();
+        assert_eq!(a.regroups.len(), 2);
+        assert_eq!(a.regroups[0].kind, crate::metrics::RegroupKind::Removal);
+        assert_eq!(a.regroups[0].groups_after, 7, "dropped group");
+        assert_eq!(a.regroups[1].kind, crate::metrics::RegroupKind::Rejoin);
+        assert_eq!(a.regroups[1].rejoined, vec![28, 29, 30, 31]);
+        assert_eq!(a.regroups[1].groups_after, 8, "group resurrected");
+        assert_eq!(a.regroups[1].workers_after, 32);
+        assert_eq!(
+            a.regroups[1].membership_checksum,
+            Membership::full(&topo).checksum(),
+            "launch layout fully restored"
+        );
+        // deterministic replay, including the regroup log
+        let b = run_lsgd_perturbed(&m, &topo, steps, &p).unwrap();
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.regroups, b.regroups);
+        // every step still traced, through both boundaries
+        for step in 0..steps {
+            assert!(a.spans.iter().any(|s| s.step == step && s.phase == "compute"));
+        }
+    }
+
+    #[test]
+    fn out_of_range_specs_error_in_both_schedules() {
+        let m = ClusterModel::paper_k80();
+        let topo = Topology::new(2, 4).unwrap();
+        let mut p = PerturbConfig::default();
+        p.parse_failures("3@500").unwrap();
+        assert!(run_lsgd_perturbed(&m, &topo, 100, &p).is_err());
+        assert!(run_csgd_perturbed(&m, &topo, 100, &p).is_err());
     }
 }

@@ -14,10 +14,11 @@
 //! * [`des`] — a discrete-event engine that replays the same schedules
 //!   event-by-event per rank and must agree with the closed forms
 //!   (cross-validated in tests);
-//! * [`perturb`] — seeded straggler / heterogeneity / fail-stop
-//!   injection, shared with the real thread-per-rank engine
-//!   ([`crate::sched::exec`]) so simulated and measured perturbation
-//!   runs follow the same schedule.
+//! * [`perturb`] — seeded straggler / heterogeneity / fail-stop /
+//!   rejoin injection (worker- and communicator-class, plus transient
+//!   link-degradation windows), shared with the real thread-per-rank
+//!   engine ([`crate::sched::exec`]) so simulated and measured
+//!   perturbation runs follow the same schedule.
 //!
 //! Calibration (`ClusterModel::paper_k80`) reproduces the paper's quoted
 //! endpoints — CSGD scaling efficiency 98.7 % @ 8 workers → 63.8 % @ 256;
@@ -27,8 +28,8 @@ pub mod cost;
 pub mod des;
 pub mod perturb;
 
-pub use cost::{AllreduceAlgo, Link, LinkProfile};
-pub use perturb::{FailStop, PerturbConfig};
+pub use cost::{AllreduceAlgo, Link};
+pub use perturb::{FailStop, LinkWindow, PerturbConfig, Rejoin};
 
 use crate::topology::Topology;
 

@@ -1,9 +1,9 @@
-//! Straggler / heterogeneity / fail-stop perturbation model.
+//! Straggler / heterogeneity / fail-stop / rejoin perturbation model.
 //!
 //! LSGD's pitch is that subgroup-local synchronization hides the
 //! inter-group allreduce behind worker I/O (PAPER.md §3) — a claim
 //! whose value shows up only when ranks are *not* perfectly
-//! homogeneous. This module is the single source of truth for three
+//! homogeneous. This module is the single source of truth for the
 //! perturbation families, applied **identically** by the analytic/DES
 //! simulator ([`super::des`]) and by the real thread-per-rank engine
 //! ([`crate::sched::exec`]):
@@ -13,19 +13,52 @@
 //! * **stragglers** — transient per-(rank, step) slowdowns drawn from
 //!   a seeded hash, so the same seed produces the same straggler
 //!   schedule in the simulator and in a real run;
-//! * **fail-stop faults** — a rank dies at a step boundary and never
-//!   comes back; the runtime reacts with elastic regrouping
-//!   ([`crate::topology::Membership`]).
+//! * **communicator perturbations** — a permanent speed class and
+//!   transient stragglers for the *communicator* ranks, per group
+//!   (domain-separated from the worker draws): the regime where the
+//!   extra communication layer is LSGD's liability, not its shield;
+//! * **link degradation** — explicit transient windows
+//!   `(group, step range, factor)` during which a group's inter-node
+//!   fabric runs slower (congestion, failing NIC, rerouted traffic);
+//! * **fail-stop faults** — a rank dies at a step boundary; the
+//!   runtime reacts with elastic regrouping
+//!   ([`crate::topology::Membership`]);
+//! * **rejoins** — a previously failed rank comes back at a later
+//!   boundary (elastic scale-up), possibly resurrecting a dropped
+//!   group.
 //!
-//! Everything is a pure function of `(seed, rank, step)` — no global
-//! RNG state — which is what keeps perturbed runs bitwise-reproducible
-//! (the acceptance tests in `rust/tests/stragglers.rs` rerun a seeded
-//! fail-stop schedule twice and require identical checksums).
+//! Everything is a pure function of `(seed, domain, id, step)` — no
+//! global RNG state — which is what keeps perturbed runs
+//! bitwise-reproducible (the acceptance tests in
+//! `rust/tests/stragglers.rs` rerun a seeded fail/rejoin schedule
+//! twice and require identical checksums).
 
 use anyhow::{bail, Context, Result};
 
-use crate::metrics::RegroupEvent;
-use crate::topology::{Membership, WorkerId};
+use crate::metrics::{RegroupEvent, RegroupKind};
+use crate::topology::{Membership, Topology, WorkerId};
+
+/// Domain tags separating the seeded draw families. Every hash input
+/// leads with one of these, so draws for different subsystems can
+/// never collide. (The old scheme marked the hetero draw with the
+/// sentinel `b = u64::MAX`, which the mixer's `wrapping_add(1)`
+/// collapsed to a zero term — silently degrading it to a two-term hash
+/// that a future `(worker, step)` family could have collided with.)
+pub mod domain {
+    /// Permanent per-worker node class (compute + I/O speed).
+    pub const WORKER_CLASS: u64 = 1;
+    /// Transient per-(worker, step) compute straggle.
+    pub const WORKER_COMPUTE: u64 = 2;
+    /// Reserved: I/O-specific per-(worker, step) draws.
+    pub const WORKER_IO: u64 = 3;
+    /// Permanent per-group communicator class.
+    pub const COMM_CLASS: u64 = 4;
+    /// Transient per-(group, step) communicator straggle.
+    pub const COMM_STRAGGLE: u64 = 5;
+    /// Reserved: seeded link-jitter draws (the explicit
+    /// `--link-degrade` windows need no randomness).
+    pub const LINK: u64 = 6;
+}
 
 /// A fail-stop fault: `worker` dies at the boundary *before* executing
 /// step `step` (so `step = 0` means the rank never participates).
@@ -37,17 +70,93 @@ pub struct FailStop {
     pub step: usize,
 }
 
+/// An elastic recovery addition: a previously failed `worker` rejoins
+/// at the boundary *before* executing step `step`, re-entering the
+/// membership (and possibly resurrecting a dropped group) after
+/// receiving the current model from a survivor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Rejoin {
+    /// Global worker id (original numbering; must fail earlier).
+    pub worker: usize,
+    /// First step the worker participates in again.
+    pub step: usize,
+}
+
+/// Shared `WORKER@STEP` spec parsing for fail and rejoin specs.
+fn parse_worker_at_step(s: &str) -> Result<(usize, usize)> {
+    let (w, st) = s
+        .split_once('@')
+        .with_context(|| format!("bad spec {s:?} (expected WORKER@STEP, e.g. 3@5)"))?;
+    let worker = w.trim().parse().with_context(|| format!("bad worker id in {s:?}"))?;
+    let step = st.trim().parse().with_context(|| format!("bad step in {s:?}"))?;
+    Ok((worker, step))
+}
+
 impl std::str::FromStr for FailStop {
     type Err = anyhow::Error;
 
     /// Parse `WORKER@STEP`, e.g. `3@5`.
     fn from_str(s: &str) -> Result<Self> {
-        let (w, st) = s
-            .split_once('@')
-            .with_context(|| format!("bad fail spec {s:?} (expected WORKER@STEP, e.g. 3@5)"))?;
-        let worker = w.trim().parse().with_context(|| format!("bad worker id in {s:?}"))?;
-        let step = st.trim().parse().with_context(|| format!("bad step in {s:?}"))?;
+        let (worker, step) = parse_worker_at_step(s)?;
         Ok(FailStop { worker, step })
+    }
+}
+
+impl std::str::FromStr for Rejoin {
+    type Err = anyhow::Error;
+
+    /// Parse `WORKER@STEP`, e.g. `3@8`.
+    fn from_str(s: &str) -> Result<Self> {
+        let (worker, step) = parse_worker_at_step(s)?;
+        Ok(Rejoin { worker, step })
+    }
+}
+
+/// A transient link-degradation window: group `group`'s inter-node
+/// fabric runs `factor`× slower (startup latency grows, bandwidth
+/// shrinks — [`super::cost::Link::scaled`]) for every step in `steps`.
+///
+/// `group` names a **communicator slot** (current-membership group
+/// index), not a set of worker ids: a degraded fabric is positional
+/// infrastructure (the g-th node's NIC / rack switch), and it stays
+/// degraded no matter which workers a regroup re-shards onto it.
+/// Consequently, after removals shrink the cluster below `group + 1`
+/// groups, the window is inert for the shrunken stretch (that slot has
+/// no communicator) and takes effect again if a rejoin resurrects it.
+/// Validation bounds `group` against the launch topology — the
+/// per-segment group count is schedule-dependent and can't be checked
+/// statically.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkWindow {
+    /// Communicator slot (membership group index) whose fabric
+    /// degrades.
+    pub group: usize,
+    /// Steps the window covers (half-open).
+    pub steps: std::ops::Range<usize>,
+    /// Slowdown factor `≥ 1`.
+    pub factor: f64,
+}
+
+impl std::str::FromStr for LinkWindow {
+    type Err = anyhow::Error;
+
+    /// Parse `GROUP@START..ENDxFACTOR`, e.g. `1@3..8x2.5`.
+    fn from_str(s: &str) -> Result<Self> {
+        let (g, rest) = s.split_once('@').with_context(|| {
+            format!("bad link window {s:?} (expected GROUP@START..ENDxFACTOR, e.g. 1@3..8x2.5)")
+        })?;
+        let (range, factor) = rest
+            .split_once('x')
+            .with_context(|| format!("bad link window {s:?} (missing xFACTOR)"))?;
+        let (a, b) = range
+            .split_once("..")
+            .with_context(|| format!("bad step range in {s:?} (expected START..END)"))?;
+        Ok(LinkWindow {
+            group: g.trim().parse().with_context(|| format!("bad group id in {s:?}"))?,
+            steps: a.trim().parse().with_context(|| format!("bad window start in {s:?}"))?
+                ..b.trim().parse().with_context(|| format!("bad window end in {s:?}"))?,
+            factor: factor.trim().parse().with_context(|| format!("bad factor in {s:?}"))?,
+        })
     }
 }
 
@@ -55,7 +164,7 @@ impl std::str::FromStr for FailStop {
 /// (homogeneous, never-failing cluster — exactly the seed behaviour).
 #[derive(Debug, Clone, PartialEq)]
 pub struct PerturbConfig {
-    /// Seed for the heterogeneity draw and the straggler schedule.
+    /// Seed for the heterogeneity draws and the straggler schedules.
     /// Independent from the data seed so the two can be varied apart.
     pub seed: u64,
     /// Heterogeneity amplitude `h ≥ 0`: rank `r`'s permanent compute
@@ -66,8 +175,21 @@ pub struct PerturbConfig {
     pub straggle_prob: f64,
     /// Multiplicative compute slowdown of a straggling rank (`≥ 1`).
     pub straggle_factor: f64,
+    /// Communicator heterogeneity amplitude `≥ 0`: group `g`'s
+    /// communicator runs at `1 + h·u(g)`, hashed in its own domain.
+    pub comm_hetero: f64,
+    /// Probability in `[0, 1]` that a (group, step) communicator
+    /// straggles.
+    pub comm_straggle_prob: f64,
+    /// Multiplicative slowdown of a straggling communicator (`≥ 1`).
+    pub comm_straggle_factor: f64,
+    /// Transient link-degradation windows (explicit, not drawn).
+    pub link_windows: Vec<LinkWindow>,
     /// Fail-stop faults, applied at step boundaries.
     pub failures: Vec<FailStop>,
+    /// Elastic rejoins, applied at step boundaries (before removals
+    /// sharing the boundary, so the cluster never transits empty).
+    pub rejoins: Vec<Rejoin>,
     /// The real engine's time unit: one unit of *extra* simulated
     /// compute (a factor of 2 on a rank sleeps `delay_unit` seconds).
     /// Keep small so tests stay fast; irrelevant to the DES, which
@@ -82,16 +204,24 @@ impl Default for PerturbConfig {
             hetero: 0.0,
             straggle_prob: 0.0,
             straggle_factor: 3.0,
+            comm_hetero: 0.0,
+            comm_straggle_prob: 0.0,
+            comm_straggle_factor: 3.0,
+            link_windows: Vec::new(),
             failures: Vec::new(),
+            rejoins: Vec::new(),
             delay_unit: 2e-3,
         }
     }
 }
 
-/// splitmix64-style avalanche over a composite key — the one hash both
-/// the DES and the engine derive every perturbation decision from.
-fn mix(seed: u64, a: u64, b: u64) -> u64 {
+/// splitmix64-style avalanche over a domain-tagged composite key — the
+/// one hash both the DES and the engine derive every perturbation
+/// decision from. `dom` is one of the [`domain`] tags; `a`/`b` are the
+/// family's own indices (worker or group id, step or 0).
+fn mix(seed: u64, dom: u64, a: u64, b: u64) -> u64 {
     let mut z = seed
+        ^ dom.wrapping_mul(0xa0761d6478bd642f)
         ^ a.wrapping_add(1).wrapping_mul(0x9e3779b97f4a7c15)
         ^ b.wrapping_add(1).wrapping_mul(0xd1b54a32d192ed03);
     z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
@@ -104,29 +234,58 @@ fn unit(h: u64) -> f64 {
     (h >> 11) as f64 / (1u64 << 53) as f64
 }
 
+/// Shared `PROB[xFACTOR]` spec parsing for worker and communicator
+/// straggler flags.
+fn parse_prob_factor(spec: &str) -> Result<(f64, Option<f64>)> {
+    let (p, f) = match spec.split_once('x') {
+        Some((p, f)) => (p, Some(f)),
+        None => (spec, None),
+    };
+    let prob = p
+        .trim()
+        .parse()
+        .with_context(|| format!("bad straggler probability in {spec:?}"))?;
+    let factor = f
+        .map(|f| {
+            f.trim()
+                .parse()
+                .with_context(|| format!("bad straggler factor in {spec:?}"))
+        })
+        .transpose()?;
+    Ok((prob, factor))
+}
+
 impl PerturbConfig {
     /// Parse the CLI's `--stragglers PROB[xFACTOR]` spec, e.g. `0.1`
     /// or `0.1x4`.
     pub fn parse_stragglers(&mut self, spec: &str) -> Result<()> {
-        let (p, f) = match spec.split_once('x') {
-            Some((p, f)) => (p, Some(f)),
-            None => (spec, None),
-        };
-        self.straggle_prob = p
-            .trim()
-            .parse()
-            .with_context(|| format!("bad straggler probability in {spec:?}"))?;
-        if let Some(f) = f {
-            self.straggle_factor = f
-                .trim()
-                .parse()
-                .with_context(|| format!("bad straggler factor in {spec:?}"))?;
+        let (prob, factor) = parse_prob_factor(spec)?;
+        self.straggle_prob = prob;
+        if let Some(f) = factor {
+            self.straggle_factor = f;
         }
         ensure_valid_prob(self.straggle_prob)?;
         anyhow::ensure!(
             self.straggle_factor >= 1.0,
             "straggler factor must be ≥ 1 (got {})",
             self.straggle_factor
+        );
+        Ok(())
+    }
+
+    /// Parse the CLI's `--comm-stragglers PROB[xFACTOR]` spec — the
+    /// communicator-rank counterpart of `--stragglers`.
+    pub fn parse_comm_stragglers(&mut self, spec: &str) -> Result<()> {
+        let (prob, factor) = parse_prob_factor(spec)?;
+        self.comm_straggle_prob = prob;
+        if let Some(f) = factor {
+            self.comm_straggle_factor = f;
+        }
+        ensure_valid_prob(self.comm_straggle_prob)?;
+        anyhow::ensure!(
+            self.comm_straggle_factor >= 1.0,
+            "communicator straggler factor must be ≥ 1 (got {})",
+            self.comm_straggle_factor
         );
         Ok(())
     }
@@ -139,48 +298,153 @@ impl PerturbConfig {
         Ok(())
     }
 
+    /// Parse the CLI's `--rejoin W@S[,W@S…]` spec, e.g. `3@12`.
+    pub fn parse_rejoins(&mut self, spec: &str) -> Result<()> {
+        for part in spec.split(',') {
+            self.rejoins.push(part.trim().parse()?);
+        }
+        Ok(())
+    }
+
+    /// Parse the CLI's `--link-degrade G@S..ExF[,…]` spec, e.g.
+    /// `1@3..8x2.5`.
+    pub fn parse_link_degrade(&mut self, spec: &str) -> Result<()> {
+        for part in spec.split(',') {
+            self.link_windows.push(part.trim().parse()?);
+        }
+        Ok(())
+    }
+
     /// True when this config perturbs nothing — the only form the
     /// serial reference engine accepts.
     pub fn is_noop(&self) -> bool {
-        self.hetero == 0.0 && self.straggle_prob == 0.0 && self.failures.is_empty()
+        self.hetero == 0.0
+            && self.straggle_prob == 0.0
+            && self.comm_hetero == 0.0
+            && self.comm_straggle_prob == 0.0
+            && self.link_windows.is_empty()
+            && self.failures.is_empty()
+            && self.rejoins.is_empty()
     }
 
-    /// Validate against a worker count: failure ids in range, no rank
-    /// failing twice, at least one survivor.
-    pub fn validate(&self, num_workers: usize) -> Result<()> {
+    /// Validate against the launch topology and the run length:
+    /// worker/group ids in range, no rank failing or rejoining twice,
+    /// every rejoin preceded by a failure, at least one survivor at
+    /// every boundary — and every spec inside `0..steps`, because a
+    /// spec past the run end would be a silent no-op in
+    /// [`drive_segments`] (`--fail 3@500` on a 100-step run must be a
+    /// hard error, not a quietly fault-free run).
+    pub fn validate(&self, topo: &Topology, steps: usize) -> Result<()> {
+        let num_workers = topo.num_workers();
         anyhow::ensure!(self.hetero >= 0.0, "hetero amplitude must be ≥ 0");
+        anyhow::ensure!(self.comm_hetero >= 0.0, "communicator hetero amplitude must be ≥ 0");
         ensure_valid_prob(self.straggle_prob)?;
+        ensure_valid_prob(self.comm_straggle_prob)?;
         anyhow::ensure!(self.straggle_factor >= 1.0, "straggler factor must be ≥ 1");
+        anyhow::ensure!(
+            self.comm_straggle_factor >= 1.0,
+            "communicator straggler factor must be ≥ 1"
+        );
         anyhow::ensure!(self.delay_unit >= 0.0, "delay unit must be ≥ 0");
-        let mut seen = vec![false; num_workers];
+        for lw in &self.link_windows {
+            anyhow::ensure!(
+                lw.factor >= 1.0,
+                "link degrade factor must be ≥ 1 (got {})",
+                lw.factor
+            );
+            anyhow::ensure!(
+                lw.group < topo.groups,
+                "link window names group {} but the topology has {} groups",
+                lw.group,
+                topo.groups
+            );
+            anyhow::ensure!(
+                lw.steps.start < lw.steps.end,
+                "empty link window {}..{}",
+                lw.steps.start,
+                lw.steps.end
+            );
+            anyhow::ensure!(
+                lw.steps.start < steps,
+                "link window {}..{} starts past the run end ({steps} steps) — it would never apply",
+                lw.steps.start,
+                lw.steps.end
+            );
+        }
         for f in &self.failures {
             anyhow::ensure!(
                 f.worker < num_workers,
                 "fail spec names worker {} but the topology has {num_workers}",
                 f.worker
             );
-            if seen[f.worker] {
+            anyhow::ensure!(
+                f.step < steps,
+                "fail spec {}@{} is past the run end ({steps} steps) — it would never apply",
+                f.worker,
+                f.step
+            );
+        }
+        for r in &self.rejoins {
+            anyhow::ensure!(
+                r.worker < num_workers,
+                "rejoin spec names worker {} but the topology has {num_workers}",
+                r.worker
+            );
+            anyhow::ensure!(
+                r.step < steps,
+                "rejoin spec {}@{} is past the run end ({steps} steps) — it would never apply",
+                r.worker,
+                r.step
+            );
+            match self.failures.iter().find(|f| f.worker == r.worker) {
+                Some(f) => anyhow::ensure!(
+                    f.step < r.step,
+                    "worker {} rejoins at step {} but fails only at step {} — a rank must fail \
+                     strictly before it can rejoin",
+                    r.worker,
+                    r.step,
+                    f.step
+                ),
+                None => bail!("worker {} rejoins at step {} but never fails", r.worker, r.step),
+            }
+        }
+        let mut failed = vec![false; num_workers];
+        for f in &self.failures {
+            if failed[f.worker] {
                 bail!("worker {} fails twice", f.worker);
             }
-            seen[f.worker] = true;
+            failed[f.worker] = true;
         }
-        anyhow::ensure!(
-            self.failures.len() < num_workers,
-            "all {num_workers} workers fail — nothing left to run"
-        );
+        let mut rejoined = vec![false; num_workers];
+        for r in &self.rejoins {
+            if rejoined[r.worker] {
+                bail!("worker {} rejoins twice", r.worker);
+            }
+            rejoined[r.worker] = true;
+        }
+        // liveness replay over the boundaries: rejoins apply before
+        // removals at a shared boundary (see drive_segments), so the
+        // cluster must stay non-empty throughout
+        let mut alive = num_workers;
+        for s in self.change_steps() {
+            alive += self.rejoins_at(s).len();
+            alive -= self.failures_at(s).len();
+            anyhow::ensure!(alive > 0, "no workers left alive entering step {s}");
+        }
         Ok(())
     }
 
-    /// Permanent heterogeneity factor of a rank (`≥ 1`).
+    /// Permanent heterogeneity factor of a worker rank (`≥ 1`).
     pub fn hetero_factor(&self, worker: usize) -> f64 {
-        1.0 + self.hetero * unit(mix(self.seed, worker as u64, u64::MAX))
+        1.0 + self.hetero * unit(mix(self.seed, domain::WORKER_CLASS, worker as u64, 0))
     }
 
     /// Transient straggle factor of a (rank, step): `straggle_factor`
     /// with probability `straggle_prob`, else `1`.
     pub fn straggle(&self, worker: usize, step: usize) -> f64 {
         if self.straggle_prob > 0.0
-            && unit(mix(self.seed, worker as u64, step as u64)) < self.straggle_prob
+            && unit(mix(self.seed, domain::WORKER_COMPUTE, worker as u64, step as u64))
+                < self.straggle_prob
         {
             self.straggle_factor
         } else {
@@ -194,10 +458,72 @@ impl PerturbConfig {
         self.hetero_factor(worker) * self.straggle(worker, step)
     }
 
+    /// Permanent heterogeneity factor of a group's communicator rank
+    /// (`≥ 1`), drawn in its own domain so worker and communicator
+    /// classes are independent.
+    pub fn comm_hetero_factor(&self, group: usize) -> f64 {
+        1.0 + self.comm_hetero * unit(mix(self.seed, domain::COMM_CLASS, group as u64, 0))
+    }
+
+    /// Transient communicator straggle factor of a (group, step).
+    pub fn comm_straggle(&self, group: usize, step: usize) -> f64 {
+        if self.comm_straggle_prob > 0.0
+            && unit(mix(self.seed, domain::COMM_STRAGGLE, group as u64, step as u64))
+                < self.comm_straggle_prob
+        {
+            self.comm_straggle_factor
+        } else {
+            1.0
+        }
+    }
+
+    /// Total communicator-side time multiplier of a (group, step):
+    /// scales the group's local reduce/broadcast and its share of the
+    /// global allreduce in the DES. Always `≥ 1`. Group indices are
+    /// *current-membership* indices, so the draw stream follows the
+    /// regrouped cluster deterministically.
+    pub fn comm_scale(&self, group: usize, step: usize) -> f64 {
+        self.comm_hetero_factor(group) * self.comm_straggle(group, step)
+    }
+
+    /// Transient link degradation of a communicator slot's inter-node
+    /// fabric at one step: the product of every matching
+    /// `--link-degrade` window factor (overlapping windows compound).
+    /// `1` outside all windows. `group` is a current-membership index
+    /// (see [`LinkWindow`] for the positional semantics under
+    /// regroups).
+    pub fn link_factor(&self, group: usize, step: usize) -> f64 {
+        self.link_windows
+            .iter()
+            .filter(|w| w.group == group && w.steps.contains(&step))
+            .map(|w| w.factor)
+            .product()
+    }
+
     /// Extra wall-clock the real engine injects into worker `w` at
     /// `step`: `delay_unit · (compute_scale − 1)` seconds.
     pub fn injected_delay(&self, worker: usize, step: usize) -> f64 {
         self.delay_unit * (self.compute_scale(worker, step) - 1.0)
+    }
+
+    /// Extra wall-clock the real engine injects into group `g`'s
+    /// communicator at `step` for LSGD: the communicator-class
+    /// slowdown plus the group's degraded-link windows, each at
+    /// `delay_unit` per 1× of slowdown. The two terms add (rather than
+    /// multiply) so the exact schedule stays reconstructible term by
+    /// term.
+    pub fn comm_injected_delay(&self, group: usize, step: usize) -> f64 {
+        self.delay_unit * (self.comm_scale(group, step) - 1.0)
+            + self.link_injected_delay(group, step)
+    }
+
+    /// The link-window share of the injected delay alone — what a
+    /// CSGD run's group-`g` lane pays at `step`: CSGD crosses the same
+    /// degraded fabric but has no communicator layer, so the
+    /// communicator-class term does not apply to it (mirroring the DES
+    /// in [`super::des::run_csgd_perturbed`]).
+    pub fn link_injected_delay(&self, group: usize, step: usize) -> f64 {
+        self.delay_unit * (self.link_factor(group, step) - 1.0)
     }
 
     /// Extra I/O latency of worker `w`'s shard load at `step`, given
@@ -207,10 +533,24 @@ impl PerturbConfig {
         base_io_secs * (self.compute_scale(worker, step) - 1.0)
     }
 
-    /// Steps at which membership changes, ascending and deduplicated —
-    /// the segment boundaries of a perturbed run.
+    /// Steps at which ranks fail, ascending and deduplicated.
     pub fn fail_steps(&self) -> Vec<usize> {
         let mut v: Vec<usize> = self.failures.iter().map(|f| f.step).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Steps at which membership changes — failures *or* rejoins —
+    /// ascending and deduplicated: the segment boundaries of a
+    /// perturbed run.
+    pub fn change_steps(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .failures
+            .iter()
+            .map(|f| f.step)
+            .chain(self.rejoins.iter().map(|r| r.step))
+            .collect();
         v.sort_unstable();
         v.dedup();
         v
@@ -227,6 +567,18 @@ impl PerturbConfig {
         v.sort_unstable();
         v
     }
+
+    /// Workers that rejoin at exactly `step`, ascending by id.
+    pub fn rejoins_at(&self, step: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .rejoins
+            .iter()
+            .filter(|r| r.step == step)
+            .map(|r| r.worker)
+            .collect();
+        v.sort_unstable();
+        v
+    }
 }
 
 fn ensure_valid_prob(p: f64) -> Result<()> {
@@ -237,47 +589,76 @@ fn ensure_valid_prob(p: f64) -> Result<()> {
     Ok(())
 }
 
-/// Split `0..steps` into fault-free segments at the fail-stop
-/// boundaries, applying removals + [`Membership::rebalance`] (and
-/// logging the membership change) as each boundary is crossed, then
-/// calling `segment(membership, step_range)` for every stretch.
-/// Returns the regroup events in step order.
+/// Split `0..steps` into membership-stable segments at the fail-stop
+/// and rejoin boundaries, applying rejoins ([`Membership::add_worker`]
+/// + [`Membership::rebalance_to`] toward the launch group count) and
+/// removals (+ [`Membership::rebalance`]) as each boundary is crossed,
+/// then calling `segment(membership, step_range, boundary_events)` for
+/// every stretch (`boundary_events` holds the regroups applied at this
+/// segment's opening boundary — empty when no boundary precedes it;
+/// note a `--fail W@0` spec hands the first segment a non-empty
+/// Removal slice. The engine uses the slice to bootstrap rejoined
+/// replicas). Returns all regroup events in step order.
 ///
-/// This is the ONE implementation of the fault semantics: both the DES
-/// ([`super::des`]) and the thread-per-rank engine
+/// At a shared boundary rejoins apply before removals, so the cluster
+/// never transits through emptiness; a boundary with rejoins restores
+/// the group count toward the launch layout (resurrecting dropped
+/// communicators), while a removal-only boundary keeps the shrunken
+/// count — a dead communicator is only replaced when capacity
+/// actually returns.
+///
+/// This is the ONE implementation of the fault/recovery semantics:
+/// both the DES ([`super::des`]) and the thread-per-rank engine
 /// ([`crate::sched::exec`]) drive their runs through it, so the
-/// boundary rules (when a removal applies, remove-then-rebalance
-/// ordering, clamping past the run end) can never drift apart.
+/// boundary rules (ordering, rebalance targets, event logging) can
+/// never drift apart.
 pub fn drive_segments(
     p: &PerturbConfig,
     memb: &mut Membership,
     steps: usize,
-    mut segment: impl FnMut(&Membership, std::ops::Range<usize>) -> Result<()>,
+    mut segment: impl FnMut(&Membership, std::ops::Range<usize>, &[RegroupEvent]) -> Result<()>,
 ) -> Result<Vec<RegroupEvent>> {
-    let fail_steps = p.fail_steps();
-    let mut events = Vec::new();
-    let mut fi = 0;
+    let change_steps = p.change_steps();
+    let mut events: Vec<RegroupEvent> = Vec::new();
+    let mut ci = 0;
     let mut start = 0;
     while start < steps {
-        while fi < fail_steps.len() && fail_steps[fi] <= start {
-            let removed = p.failures_at(fail_steps[fi]);
+        let first_event = events.len();
+        while ci < change_steps.len() && change_steps[ci] <= start {
+            let s = change_steps[ci];
+            let rejoined = p.rejoins_at(s);
+            let removed = p.failures_at(s);
+            for &w in &rejoined {
+                memb.add_worker(WorkerId(w))?;
+            }
             for &w in &removed {
                 memb.remove_worker(WorkerId(w))?;
             }
-            memb.rebalance();
+            if rejoined.is_empty() {
+                memb.rebalance();
+            } else {
+                memb.rebalance_to(memb.launch_groups());
+            }
+            let kind = match (removed.is_empty(), rejoined.is_empty()) {
+                (false, true) => RegroupKind::Removal,
+                (true, false) => RegroupKind::Rejoin,
+                _ => RegroupKind::Mixed,
+            };
             // not printed here: the events are returned to the caller
             // (the CLI reports them; tests compare them across reruns)
             events.push(RegroupEvent {
                 step: start,
+                kind,
                 removed,
+                rejoined,
                 groups_after: memb.num_groups(),
                 workers_after: memb.num_workers(),
                 membership_checksum: memb.checksum(),
             });
-            fi += 1;
+            ci += 1;
         }
-        let end = fail_steps.get(fi).map_or(steps, |&s| s.min(steps));
-        segment(memb, start..end)?;
+        let end = change_steps.get(ci).map_or(steps, |&s| s.min(steps));
+        segment(memb, start..end, &events[first_event..])?;
         start = end;
     }
     Ok(events)
@@ -287,14 +668,22 @@ pub fn drive_segments(
 mod tests {
     use super::*;
 
+    fn topo22() -> Topology {
+        Topology::new(2, 2).unwrap()
+    }
+
     #[test]
     fn default_is_noop() {
         let p = PerturbConfig::default();
         assert!(p.is_noop());
         assert_eq!(p.compute_scale(0, 0), 1.0);
+        assert_eq!(p.comm_scale(0, 0), 1.0);
+        assert_eq!(p.link_factor(0, 0), 1.0);
         assert_eq!(p.injected_delay(3, 7), 0.0);
+        assert_eq!(p.comm_injected_delay(1, 7), 0.0);
         assert!(p.fail_steps().is_empty());
-        p.validate(4).unwrap();
+        assert!(p.change_steps().is_empty());
+        p.validate(&topo22(), 10).unwrap();
     }
 
     #[test]
@@ -308,6 +697,18 @@ mod tests {
         }
         // not all equal (else it wouldn't be heterogeneity)
         assert!((0..16).map(|w| p.hetero_factor(w)).any(|f| f != p.hetero_factor(0)));
+    }
+
+    #[test]
+    fn comm_hetero_factor_deterministic_and_bounded() {
+        let mut p = PerturbConfig::default();
+        p.comm_hetero = 0.5;
+        for g in 0..8 {
+            let f = p.comm_hetero_factor(g);
+            assert!((1.0..1.5).contains(&f), "factor {f} out of range");
+            assert_eq!(f, p.comm_hetero_factor(g), "not deterministic");
+        }
+        assert!((0..8).map(|g| p.comm_hetero_factor(g)).any(|f| f != p.comm_hetero_factor(0)));
     }
 
     #[test]
@@ -340,6 +741,27 @@ mod tests {
     }
 
     #[test]
+    fn draw_domains_are_separated() {
+        // worker and communicator straggle streams share (id, step)
+        // inputs but live in different domains — they must not be the
+        // same stream (the old u64::MAX sentinel made such collisions
+        // possible)
+        let mut p = PerturbConfig::default();
+        p.straggle_prob = 0.5;
+        p.comm_straggle_prob = 0.5;
+        let differs = (0..4usize).any(|id| {
+            (0..50usize)
+                .any(|s| (p.straggle(id, s) > 1.0) != (p.comm_straggle(id, s) > 1.0))
+        });
+        assert!(differs, "worker and communicator draws collapsed to one stream");
+        // same for the permanent class draws
+        let mut p = PerturbConfig::default();
+        p.hetero = 0.5;
+        p.comm_hetero = 0.5;
+        assert!((0..8usize).any(|id| p.hetero_factor(id) != p.comm_hetero_factor(id)));
+    }
+
+    #[test]
     fn parse_straggler_specs() {
         let mut p = PerturbConfig::default();
         p.parse_stragglers("0.1").unwrap();
@@ -351,6 +773,17 @@ mod tests {
         assert!(p.parse_stragglers("1.5").is_err());
         assert!(p.parse_stragglers("0.1x0.5").is_err());
         assert!(p.parse_stragglers("nope").is_err());
+    }
+
+    #[test]
+    fn parse_comm_straggler_specs() {
+        let mut p = PerturbConfig::default();
+        p.parse_comm_stragglers("0.2x4").unwrap();
+        assert_eq!(p.comm_straggle_prob, 0.2);
+        assert_eq!(p.comm_straggle_factor, 4.0);
+        assert_eq!(p.straggle_prob, 0.0, "worker prob untouched");
+        assert!(p.parse_comm_stragglers("2").is_err());
+        assert!(p.parse_comm_stragglers("0.1x0.2").is_err());
     }
 
     #[test]
@@ -368,37 +801,225 @@ mod tests {
     }
 
     #[test]
+    fn parse_rejoin_and_link_specs() {
+        let mut p = PerturbConfig::default();
+        p.parse_rejoins("3@12,1@7").unwrap();
+        assert_eq!(
+            p.rejoins,
+            vec![Rejoin { worker: 3, step: 12 }, Rejoin { worker: 1, step: 7 }]
+        );
+        assert_eq!(p.rejoins_at(7), vec![1]);
+        assert!("3".parse::<Rejoin>().is_err());
+        p.parse_link_degrade("1@3..8x2.5,0@0..2x4").unwrap();
+        assert_eq!(
+            p.link_windows,
+            vec![
+                LinkWindow { group: 1, steps: 3..8, factor: 2.5 },
+                LinkWindow { group: 0, steps: 0..2, factor: 4.0 },
+            ]
+        );
+        assert!("1@3..x2".parse::<LinkWindow>().is_err());
+        assert!("1@3-8x2".parse::<LinkWindow>().is_err());
+        assert!("1@3..8".parse::<LinkWindow>().is_err());
+    }
+
+    #[test]
+    fn link_factor_windows_compound() {
+        let mut p = PerturbConfig::default();
+        p.parse_link_degrade("0@2..5x2,0@4..6x3,1@0..9x5").unwrap();
+        assert_eq!(p.link_factor(0, 1), 1.0);
+        assert_eq!(p.link_factor(0, 2), 2.0);
+        assert_eq!(p.link_factor(0, 4), 6.0, "overlap compounds");
+        assert_eq!(p.link_factor(0, 5), 3.0);
+        assert_eq!(p.link_factor(1, 3), 5.0);
+        assert_eq!(p.link_factor(2, 3), 1.0, "other groups untouched");
+    }
+
+    #[test]
+    fn change_steps_merges_failures_and_rejoins() {
+        let mut p = PerturbConfig::default();
+        p.parse_failures("0@2,3@6").unwrap();
+        p.parse_rejoins("0@6,3@9").unwrap();
+        assert_eq!(p.fail_steps(), vec![2, 6]);
+        assert_eq!(p.change_steps(), vec![2, 6, 9]);
+        assert_eq!(p.failures_at(6), vec![3]);
+        assert_eq!(p.rejoins_at(6), vec![0]);
+    }
+
+    #[test]
     fn validate_rejects_bad_failures() {
         let mut p = PerturbConfig::default();
         p.parse_failures("9@1").unwrap();
-        assert!(p.validate(4).is_err(), "worker id out of range");
+        assert!(p.validate(&topo22(), 10).is_err(), "worker id out of range");
         let mut p = PerturbConfig::default();
         p.parse_failures("1@2,1@3").unwrap();
-        assert!(p.validate(4).is_err(), "same worker fails twice");
+        assert!(p.validate(&topo22(), 10).is_err(), "same worker fails twice");
+        let two = Topology::new(2, 1).unwrap();
         let mut p = PerturbConfig::default();
         p.parse_failures("0@0,1@0").unwrap();
-        assert!(p.validate(2).is_err(), "everyone fails");
+        assert!(p.validate(&two, 10).is_err(), "everyone fails");
         p.failures.pop();
-        p.validate(2).unwrap();
+        p.validate(&two, 10).unwrap();
+        // staggered total loss is just as dead as a simultaneous one
+        let mut p = PerturbConfig::default();
+        p.parse_failures("0@1,1@3").unwrap();
+        assert!(p.validate(&two, 10).is_err(), "everyone fails eventually");
+    }
+
+    #[test]
+    fn validate_rejects_specs_past_the_run_end() {
+        // the silent-no-op bug: --fail 3@500 on a 100-step run
+        let mut p = PerturbConfig::default();
+        p.parse_failures("3@500").unwrap();
+        assert!(p.validate(&topo22(), 100).is_err());
+        // the boundary case: step == steps never executes either
+        let mut p = PerturbConfig::default();
+        p.parse_failures("3@100").unwrap();
+        assert!(p.validate(&topo22(), 100).is_err());
+        let mut p = PerturbConfig::default();
+        p.parse_failures("3@99").unwrap();
+        p.validate(&topo22(), 100).unwrap();
+        // same rule for rejoins and link windows
+        let mut p = PerturbConfig::default();
+        p.parse_failures("3@5").unwrap();
+        p.parse_rejoins("3@100").unwrap();
+        assert!(p.validate(&topo22(), 100).is_err());
+        let mut p = PerturbConfig::default();
+        p.parse_link_degrade("0@100..110x2").unwrap();
+        assert!(p.validate(&topo22(), 100).is_err());
+        let mut p = PerturbConfig::default();
+        p.parse_link_degrade("0@90..110x2").unwrap();
+        p.validate(&topo22(), 100).unwrap(); // starts inside: clamps
+    }
+
+    #[test]
+    fn validate_rejects_bad_rejoins() {
+        // rejoin of a worker that never fails
+        let mut p = PerturbConfig::default();
+        p.parse_rejoins("1@5").unwrap();
+        assert!(p.validate(&topo22(), 10).is_err());
+        // rejoin at/before the failure step
+        let mut p = PerturbConfig::default();
+        p.parse_failures("1@5").unwrap();
+        p.parse_rejoins("1@5").unwrap();
+        assert!(p.validate(&topo22(), 10).is_err());
+        let mut p = PerturbConfig::default();
+        p.parse_failures("1@5").unwrap();
+        p.parse_rejoins("1@3").unwrap();
+        assert!(p.validate(&topo22(), 10).is_err());
+        // rejoining twice
+        let mut p = PerturbConfig::default();
+        p.parse_failures("1@2").unwrap();
+        p.parse_rejoins("1@4,1@6").unwrap();
+        assert!(p.validate(&topo22(), 10).is_err());
+        // the good case
+        let mut p = PerturbConfig::default();
+        p.parse_failures("1@2").unwrap();
+        p.parse_rejoins("1@4").unwrap();
+        p.validate(&topo22(), 10).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_link_windows() {
+        let mut p = PerturbConfig::default();
+        p.parse_link_degrade("7@1..3x2").unwrap();
+        assert!(p.validate(&topo22(), 10).is_err(), "group out of range");
+        let mut p = PerturbConfig::default();
+        p.parse_link_degrade("0@3..3x2").unwrap();
+        assert!(p.validate(&topo22(), 10).is_err(), "empty window");
+        let mut p = PerturbConfig::default();
+        p.parse_link_degrade("0@1..3x0.5").unwrap();
+        assert!(p.validate(&topo22(), 10).is_err(), "factor below 1");
+        let mut p = PerturbConfig::default();
+        p.parse_link_degrade("1@1..3x2").unwrap();
+        p.validate(&topo22(), 10).unwrap();
     }
 
     #[test]
     fn drive_segments_splits_at_boundaries() {
-        let topo = crate::topology::Topology::new(2, 2).unwrap();
+        let topo = topo22();
         let mut p = PerturbConfig::default();
         p.parse_failures("1@2").unwrap();
         let mut memb = topo.membership();
         let mut seen = Vec::new();
-        let events = drive_segments(&p, &mut memb, 5, |m, r| {
+        let events = drive_segments(&p, &mut memb, 5, |m, r, evs| {
+            seen.push((m.num_workers(), r, evs.len()));
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(seen, vec![(4, 0..2, 0), (3, 2..5, 1)]);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].step, 2);
+        assert_eq!(events[0].kind, RegroupKind::Removal);
+        assert_eq!(events[0].removed, vec![1]);
+        assert!(events[0].rejoined.is_empty());
+        assert_eq!(events[0].workers_after, 3);
+    }
+
+    #[test]
+    fn drive_segments_rejoin_resurrects_dropped_group() {
+        let topo = topo22();
+        let mut p = PerturbConfig::default();
+        p.parse_failures("2@1,3@1").unwrap();
+        p.parse_rejoins("2@3").unwrap();
+        p.validate(&topo, 5).unwrap();
+        let mut memb = topo.membership();
+        let mut seen = Vec::new();
+        let events = drive_segments(&p, &mut memb, 5, |m, r, _| {
+            seen.push((m.num_workers(), m.num_groups(), r));
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(seen, vec![(4, 2, 0..1), (2, 1, 1..3), (3, 2, 3..5)]);
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].kind, RegroupKind::Removal);
+        assert_eq!(events[0].removed, vec![2, 3]);
+        assert_eq!(events[0].groups_after, 1);
+        assert_eq!(events[1].kind, RegroupKind::Rejoin);
+        assert_eq!(events[1].rejoined, vec![2]);
+        assert_eq!(events[1].groups_after, 2, "dropped group resurrected");
+        assert_eq!(events[1].workers_after, 3);
+    }
+
+    #[test]
+    fn drive_segments_fail_and_rejoin_share_a_boundary() {
+        let topo = topo22();
+        let mut p = PerturbConfig::default();
+        p.parse_failures("0@1,3@3").unwrap();
+        p.parse_rejoins("0@3").unwrap();
+        p.validate(&topo, 5).unwrap();
+        let mut memb = topo.membership();
+        let mut boundary_counts = Vec::new();
+        let events = drive_segments(&p, &mut memb, 5, |m, _r, evs| {
+            boundary_counts.push((m.num_workers(), evs.len()));
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(boundary_counts, vec![(4, 0), (3, 1), (3, 1)]);
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[1].step, 3);
+        assert_eq!(events[1].kind, RegroupKind::Mixed);
+        assert_eq!(events[1].removed, vec![3]);
+        assert_eq!(events[1].rejoined, vec![0]);
+        assert_eq!(events[1].workers_after, 3);
+        let alive: Vec<usize> = memb.alive().map(|w| w.0).collect();
+        assert_eq!(alive, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn drive_segments_failure_at_step_zero() {
+        let topo = topo22();
+        let mut p = PerturbConfig::default();
+        p.parse_failures("0@0").unwrap();
+        let mut memb = topo.membership();
+        let mut seen = Vec::new();
+        let events = drive_segments(&p, &mut memb, 3, |m, r, _| {
             seen.push((m.num_workers(), r));
             Ok(())
         })
         .unwrap();
-        assert_eq!(seen, vec![(4, 0..2), (3, 2..5)]);
-        assert_eq!(events.len(), 1);
-        assert_eq!(events[0].step, 2);
-        assert_eq!(events[0].removed, vec![1]);
-        assert_eq!(events[0].workers_after, 3);
+        assert_eq!(seen, vec![(3, 0..3)]);
+        assert_eq!(events[0].step, 0);
     }
 
     #[test]

@@ -18,14 +18,21 @@
 //!
 //! [`Topology`] is the *static* launch layout. [`Membership`] is the
 //! *live* view: which of the original worker ranks are still alive,
-//! and how they are grouped. It starts as the full topology and
-//! shrinks when fail-stop faults remove ranks
-//! ([`crate::simnet::perturb`]); [`Membership::rebalance`] re-shards
-//! the survivors into evenly-sized groups. Worker ids are **stable
-//! original ids** and every group holds an ascending run of them, so
-//! the reduction order ("fold in ascending id") survives any sequence
-//! of regroups — the property that keeps post-regroup steps
-//! bitwise-deterministic for a fixed seed.
+//! and how they are grouped. It starts as the full topology, shrinks
+//! when fail-stop faults remove ranks ([`crate::simnet::perturb`]),
+//! and grows again when a previously failed rank rejoins
+//! ([`Membership::add_worker`] — elastic scale-up). After each change
+//! [`Membership::rebalance`] / [`Membership::rebalance_to`] re-shard
+//! the survivors into evenly-sized groups; a rejoin may resurrect a
+//! group that was dropped when it emptied, back up to the launch group
+//! count. Worker ids are **stable original ids** and every group holds
+//! an ascending run of them, so the reduction order ("fold in
+//! ascending id") survives any sequence of regroups — the property
+//! that keeps post-regroup steps bitwise-deterministic for a fixed
+//! seed. Lookups (`locate`, `position`, `shard_range`) binary-search
+//! the runs over cached group-boundary offsets, so the per-step
+//! all-worker shard resolution is O(N log N), not O(N²) (guarded by
+//! `benches/membership.rs`).
 
 /// Identifies one worker rank (a "GPU" in the paper's testbed).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -137,23 +144,53 @@ impl Topology {
     }
 }
 
-/// Live cluster membership under fail-stop faults (module docs,
-/// "Elastic membership"). Each group is an ascending run of original
-/// worker ids; the concatenation of all groups is globally ascending.
+/// Live cluster membership under fail-stop faults and elastic rejoins
+/// (module docs, "Elastic membership"). Each group is a non-empty
+/// ascending run of original worker ids; the concatenation of all
+/// groups is globally ascending.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Membership {
     groups: Vec<Vec<WorkerId>>,
+    /// Prefix sums of group sizes: `offsets[gi]` = alive workers in
+    /// groups `0..gi`. Rebuilt on every mutation; turns the per-worker
+    /// position/shard lookup into a binary search instead of an O(N)
+    /// scan over `alive()`.
+    offsets: Vec<usize>,
+    /// Group count of the launch topology — the ceiling elastic
+    /// scale-up ([`Membership::rebalance_to`]) restores toward when a
+    /// rank rejoins.
+    launch_groups: usize,
 }
 
 impl Membership {
     /// Every worker of `topo` alive, grouped exactly as launched.
     pub fn full(topo: &Topology) -> Self {
-        Self {
+        let mut m = Self {
             groups: topo
                 .all_groups()
                 .map(|g| topo.workers_of(g).collect())
                 .collect(),
+            offsets: Vec::new(),
+            launch_groups: topo.groups,
+        };
+        m.reindex();
+        m
+    }
+
+    /// Rebuild the cached group-boundary prefix sums. Called after
+    /// every structural mutation.
+    fn reindex(&mut self) {
+        self.offsets.clear();
+        let mut acc = 0;
+        for g in &self.groups {
+            self.offsets.push(acc);
+            acc += g.len();
         }
+    }
+
+    /// Group count of the launch topology this membership started from.
+    pub fn launch_groups(&self) -> usize {
+        self.launch_groups
     }
 
     pub fn num_groups(&self) -> usize {
@@ -184,14 +221,23 @@ impl Membership {
         self.locate(w).is_some()
     }
 
-    /// `(group index, local slot)` of an alive worker.
+    /// `(group index, local slot)` of an alive worker. Every group is a
+    /// non-empty ascending run and the concatenation is globally
+    /// ascending, so the owning group (if any) is the first one whose
+    /// last element is `≥ w` — a binary search over groups, then a
+    /// binary search inside the run: O(log G + log W) per lookup.
     pub fn locate(&self, w: WorkerId) -> Option<(usize, usize)> {
-        for (gi, g) in self.groups.iter().enumerate() {
-            if let Ok(li) = g.binary_search(&w) {
-                return Some((gi, li));
-            }
-        }
-        None
+        let gi = self
+            .groups
+            .partition_point(|g| *g.last().expect("groups are never empty") < w);
+        let g = self.groups.get(gi)?;
+        g.binary_search(&w).ok().map(|li| (gi, li))
+    }
+
+    /// Index of an alive worker in the global reduction order (its rank
+    /// among survivors), via the cached group-boundary offsets.
+    pub fn position(&self, w: WorkerId) -> Option<usize> {
+        self.locate(w).map(|(gi, li)| self.offsets[gi] + li)
     }
 
     /// Fail-stop `w`: remove it from its group; a group left empty is
@@ -204,18 +250,49 @@ impl Membership {
         if self.groups[gi].is_empty() {
             self.groups.remove(gi);
         }
+        self.reindex();
         anyhow::ensure!(!self.groups.is_empty(), "no workers left after removal");
+        Ok(())
+    }
+
+    /// Elastic scale-up: re-admit original worker id `w` (a recovered
+    /// or replaced rank), preserving the ascending-run invariant — the
+    /// worker joins the existing group whose run brackets its id.
+    /// Group-*count* changes are the caller's call: rejoin boundaries
+    /// follow up with [`Membership::rebalance_to`] toward the launch
+    /// layout, which may resurrect a dropped group.
+    pub fn add_worker(&mut self, w: WorkerId) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.contains(w), "worker {} is already alive", w.0);
+        let gi = self
+            .groups
+            .partition_point(|g| *g.last().expect("groups are never empty") < w)
+            .min(self.groups.len() - 1);
+        let li = self.groups[gi]
+            .binary_search(&w)
+            .expect_err("worker known to be absent");
+        self.groups[gi].insert(li, w);
+        self.reindex();
         Ok(())
     }
 
     /// Re-shard survivors into groups of as-equal-as-possible size
     /// (sizes differ by at most one), preserving global ascending
     /// order. The group count is kept at the current (post-removal)
-    /// count — a dead communicator is not resurrected.
+    /// count — a dead communicator is not resurrected by a *removal*
+    /// boundary (rejoin boundaries use [`Membership::rebalance_to`]).
     pub fn rebalance(&mut self) {
+        self.rebalance_to(self.groups.len());
+    }
+
+    /// Re-shard survivors into `target_groups` evenly sized ascending
+    /// runs (clamped to the alive count, so no group is empty). The
+    /// elastic rejoin path passes [`Membership::launch_groups`] here:
+    /// scale-up resurrects communicators back toward the launch layout,
+    /// while plain fail-stop rebalancing keeps the shrunken count.
+    pub fn rebalance_to(&mut self, target_groups: usize) {
         let flat: Vec<WorkerId> = self.alive().collect();
-        let g = self.groups.len();
-        debug_assert!(g > 0 && !flat.is_empty());
+        debug_assert!(!flat.is_empty());
+        let g = target_groups.clamp(1, flat.len());
         let base = flat.len() / g;
         let extra = flat.len() % g;
         let mut out = Vec::with_capacity(g);
@@ -227,6 +304,7 @@ impl Membership {
         }
         debug_assert_eq!(i, flat.len());
         self.groups = out;
+        self.reindex();
     }
 
     /// Contiguous shard of a `global_batch`-sample step owned by alive
@@ -245,8 +323,7 @@ impl Membership {
             "global batch {global_batch} not divisible by {n} alive workers"
         );
         let pos = self
-            .alive()
-            .position(|x| x == w)
+            .position(w)
             .with_context(|| format!("worker {} is not alive", w.0))?;
         let per = global_batch / n;
         Ok(pos * per..(pos + 1) * per)
@@ -396,6 +473,81 @@ mod tests {
         // divisibility is against the ALIVE count, not the launch count
         assert!(m.shard_range(WorkerId(0), 16).is_err());
         assert!(m.shard_range(WorkerId(2), 14).is_err(), "dead worker");
+    }
+
+    #[test]
+    fn add_worker_restores_after_removal() {
+        let t = Topology::new(2, 2).unwrap();
+        let mut m = t.membership();
+        m.remove_worker(WorkerId(1)).unwrap();
+        m.rebalance();
+        m.add_worker(WorkerId(1)).unwrap();
+        m.rebalance_to(m.launch_groups());
+        assert_eq!(m, t.membership());
+        assert_eq!(m.checksum(), t.membership().checksum());
+        assert!(m.add_worker(WorkerId(1)).is_err(), "already alive");
+    }
+
+    #[test]
+    fn add_worker_keeps_ascending_runs() {
+        let t = Topology::new(2, 3).unwrap();
+        let mut m = t.membership();
+        for w in [0, 2, 5] {
+            m.remove_worker(WorkerId(w)).unwrap();
+        }
+        m.rebalance();
+        // re-admit in arbitrary order: front, middle, back of runs
+        m.add_worker(WorkerId(5)).unwrap();
+        m.add_worker(WorkerId(0)).unwrap();
+        m.add_worker(WorkerId(2)).unwrap();
+        let alive: Vec<usize> = m.alive().map(|w| w.0).collect();
+        assert_eq!(alive, (0..6).collect::<Vec<_>>());
+        for g in m.groups() {
+            assert!(g.windows(2).all(|p| p[0] < p[1]), "non-ascending run {g:?}");
+        }
+    }
+
+    #[test]
+    fn rebalance_to_resurrects_dropped_group() {
+        let t = Topology::new(2, 2).unwrap();
+        let mut m = t.membership();
+        // group 1 dies entirely → dropped
+        m.remove_worker(WorkerId(2)).unwrap();
+        m.remove_worker(WorkerId(3)).unwrap();
+        m.rebalance();
+        assert_eq!(m.num_groups(), 1);
+        // one of its workers rejoins → the launch group count returns
+        m.add_worker(WorkerId(2)).unwrap();
+        m.rebalance_to(m.launch_groups());
+        assert_eq!(m.num_groups(), 2);
+        assert_eq!(m.group(0), &[WorkerId(0), WorkerId(1)]);
+        assert_eq!(m.group(1), &[WorkerId(2)]);
+        // the target is clamped to the alive count — no empty groups
+        let mut lone = t.membership();
+        for w in [0, 1, 2] {
+            lone.remove_worker(WorkerId(w)).unwrap();
+        }
+        lone.rebalance_to(2);
+        assert_eq!(lone.num_groups(), 1);
+    }
+
+    #[test]
+    fn position_matches_alive_order_across_mutations() {
+        let t = Topology::new(3, 4).unwrap();
+        let mut m = t.membership();
+        for w in [1, 6, 7, 8] {
+            m.remove_worker(WorkerId(w)).unwrap();
+        }
+        m.rebalance();
+        m.add_worker(WorkerId(6)).unwrap();
+        m.rebalance_to(m.launch_groups());
+        for (want, w) in m.alive().enumerate() {
+            assert_eq!(m.position(w), Some(want), "worker {}", w.0);
+            let (gi, li) = m.locate(w).unwrap();
+            assert_eq!(m.group(gi)[li], w);
+        }
+        assert_eq!(m.position(WorkerId(1)), None, "dead worker");
+        assert_eq!(m.position(WorkerId(99)), None, "never existed");
     }
 
     #[test]

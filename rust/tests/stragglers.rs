@@ -1,5 +1,5 @@
 //! Integration: straggler injection, heterogeneity and elastic
-//! fail-stop recovery — the perturbation subsystem end-to-end.
+//! fail-stop/rejoin recovery — the perturbation subsystem end-to-end.
 //!
 //! Acceptance (ISSUE 2):
 //!  (a) the DES predicts LSGD degrades less than CSGD under a
@@ -12,8 +12,18 @@
 //!      completes, and two identical runs produce bitwise-identical
 //!      trajectories and regroup logs (`rust/tests/parallel.rs`, the
 //!      unperturbed determinism suite, is unchanged).
+//!
+//! Acceptance (ISSUE 3):
+//!  (c) a seeded run with removals AND rejoins is bitwise-reproducible
+//!      across reruns (checksums + RegroupEvent log identical), the
+//!      DES and the real engine agree on the regroup schedule, and
+//!      out-of-range fail/rejoin specs are hard errors;
+//!  (d) communicator-side injected delays match the seeded schedule
+//!      exactly, and slow communicators tax LSGD while leaving CSGD's
+//!      DES prediction untouched.
 
 use lsgd::config::{Algo, ExperimentConfig};
+use lsgd::metrics::RegroupKind;
 use lsgd::runtime::Engine;
 use lsgd::sched::{ExecMode, RunOptions, Trainer};
 use lsgd::simnet::{des, ClusterModel, PerturbConfig};
@@ -89,14 +99,77 @@ fn engine_injected_delays_match_seeded_schedule_exactly() {
         assert_eq!(got, want, "worker {w}: injected {got} != schedule {want}");
     }
     assert!(r.perturb.injected_total() > 0.0, "seed produced no stragglers");
-    // stragglers surface as communicator wait: with this seed several
-    // group-steps have exactly one slow member (90 ms spread each)
+    // stragglers surface as communicator wait: per group-step the
+    // first-to-last arrival gap is at least the injected-delay spread
+    // between the group's two members (assert half of it, leaving
+    // headroom for scheduler noise on the fast side)
+    let mut spread = 0.0_f64;
+    for s in 0..steps {
+        for (a, b) in [(0usize, 1usize), (2, 3)] {
+            spread += (p.injected_delay(a, s) - p.injected_delay(b, s)).abs();
+        }
+    }
+    assert!(spread > 0.0, "seed produced no discordant group-steps");
     assert!(
-        r.perturb.wait_total() >= 0.2,
-        "straggle wait {} too small for the seeded schedule",
+        r.perturb.wait_total() >= 0.5 * spread,
+        "straggle wait {} too small for the seeded spread {spread}",
         r.perturb.wait_total()
     );
     assert!(r.timers.total("straggle_wait") >= r.perturb.wait_total() - 1e-9);
+}
+
+#[test]
+fn engine_comm_injected_delays_match_seeded_schedule_exactly() {
+    // acceptance (d): the communicator-side schedule — slow-comm
+    // stragglers plus a link-degradation window — is applied to the
+    // bit, per group, reconstructible from the model alone
+    let steps = 6;
+    let mut p = PerturbConfig::default();
+    p.comm_straggle_prob = 0.5;
+    p.comm_straggle_factor = 3.0;
+    p.delay_unit = 0.02;
+    p.parse_link_degrade("0@1..3x2").unwrap();
+    let r = run(&cfg(2, 2, steps, Algo::Lsgd), &p);
+    assert_eq!(r.perturb.comm_injected_per_group.len(), 2);
+    let mut want_total = 0.0_f64;
+    for &(g, got) in &r.perturb.comm_injected_per_group {
+        let mut want = 0.0_f64;
+        for s in 0..steps {
+            let d = p.comm_injected_delay(g, s);
+            if d > 0.0 {
+                want += d;
+            }
+        }
+        assert_eq!(got, want, "group {g}: comm injected {got} != schedule {want}");
+        want_total += want;
+    }
+    assert!(want_total > 0.0, "seed produced no communicator perturbations");
+    assert_eq!(r.timers.total("comm_injected_delay"), want_total);
+    // and the schedule is reproducible
+    let b = run(&cfg(2, 2, steps, Algo::Lsgd), &p);
+    assert_eq!(r.perturb.comm_injected_per_group, b.perturb.comm_injected_per_group);
+    assert_eq!(r.step_checksums, b.step_checksums, "sleeps never touch numerics");
+}
+
+#[test]
+fn engine_csgd_pays_link_windows_but_not_comm_classes() {
+    // the two execution worlds must agree on the mirror regime: CSGD
+    // has no communicator layer, so pure comm-class perturbations
+    // inject nothing into its lanes (the DES predicts zero tax), while
+    // link-degradation windows — shared infrastructure — still bite
+    let steps = 6;
+    let mut p = PerturbConfig::default();
+    p.comm_straggle_prob = 0.5;
+    p.comm_straggle_factor = 3.0;
+    p.comm_hetero = 0.5;
+    p.delay_unit = 0.01;
+    let r = run(&cfg(2, 2, steps, Algo::Csgd), &p);
+    assert_eq!(r.perturb.comm_injected_total(), 0.0, "no communicator layer in CSGD");
+    p.parse_link_degrade("0@1..4x2").unwrap();
+    let r = run(&cfg(2, 2, steps, Algo::Csgd), &p);
+    let want: f64 = (0..steps).map(|s| p.link_injected_delay(0, s)).sum();
+    assert!(want > 0.0);
+    assert_eq!(r.perturb.comm_injected_total(), want, "exactly the link share");
 }
 
 #[test]
@@ -204,6 +277,160 @@ fn stragglers_and_faults_compose_deterministically() {
     p2.seed ^= 0xDEAD;
     let d = run(&c, &p2);
     assert_eq!(a.step_checksums, d.step_checksums);
+}
+
+// ------------------------------------------------------ acceptance (c)
+
+#[test]
+fn rejoin_after_failure_reproduces_bitwise_and_restores_layout() {
+    let steps = 6;
+    let mut p = PerturbConfig::default();
+    p.parse_failures("1@2").unwrap();
+    p.parse_rejoins("1@4").unwrap();
+    let c = cfg(2, 2, steps, Algo::Lsgd);
+    let a = run(&c, &p);
+    let b = run(&c, &p);
+
+    assert_eq!(a.step_checksums.len(), steps);
+    assert_eq!(a.curve.train.len(), steps);
+    assert_eq!(a.perturb.regroups.len(), 2);
+    let rm = &a.perturb.regroups[0];
+    assert_eq!((rm.step, rm.kind), (2, RegroupKind::Removal));
+    assert_eq!(rm.removed, vec![1]);
+    assert_eq!(rm.workers_after, 3);
+    let rj = &a.perturb.regroups[1];
+    assert_eq!((rj.step, rj.kind), (4, RegroupKind::Rejoin));
+    assert_eq!(rj.rejoined, vec![1]);
+    assert_eq!(rj.workers_after, 4);
+    assert_eq!(rj.groups_after, 2);
+    // the rejoin restores the exact launch layout
+    assert_eq!(
+        rj.membership_checksum,
+        Topology::new(2, 2).unwrap().membership().checksum()
+    );
+
+    // bitwise reproducibility across BOTH boundaries
+    assert_eq!(a.step_checksums, b.step_checksums);
+    assert_eq!(a.final_params, b.final_params);
+    assert_eq!(a.perturb.regroups, b.perturb.regroups);
+    for (x, y) in a.curve.train.iter().zip(b.curve.train.iter()) {
+        assert_eq!(x.1.to_bits(), y.1.to_bits(), "loss differs at step {}", x.0);
+    }
+}
+
+#[test]
+fn failure_and_rejoin_at_same_boundary() {
+    let steps = 5;
+    let mut p = PerturbConfig::default();
+    p.parse_failures("0@1,3@3").unwrap();
+    p.parse_rejoins("0@3").unwrap();
+    let c = cfg(2, 2, steps, Algo::Lsgd);
+    let a = run(&c, &p);
+    assert_eq!(a.step_checksums.len(), steps);
+    assert_eq!(a.perturb.regroups.len(), 2);
+    let mixed = &a.perturb.regroups[1];
+    assert_eq!((mixed.step, mixed.kind), (3, RegroupKind::Mixed));
+    assert_eq!(mixed.removed, vec![3]);
+    assert_eq!(mixed.rejoined, vec![0]);
+    assert_eq!(mixed.workers_after, 3);
+    let b = run(&c, &p);
+    assert_eq!(a.step_checksums, b.step_checksums);
+    assert_eq!(a.perturb.regroups, b.perturb.regroups);
+}
+
+#[test]
+fn rejoin_into_previously_dropped_group_resurrects_it() {
+    // all of group 1 dies; one member later returns — the communicator
+    // comes back with it (CSGD path: drive_segments is shared, so the
+    // same schedule applies)
+    let steps = 5;
+    let mut p = PerturbConfig::default();
+    p.parse_failures("2@1,3@1").unwrap();
+    p.parse_rejoins("2@3").unwrap();
+    let c = cfg(2, 2, steps, Algo::Csgd);
+    let a = run(&c, &p);
+    assert_eq!(a.step_checksums.len(), steps);
+    assert_eq!(a.perturb.regroups.len(), 2);
+    assert_eq!(a.perturb.regroups[0].groups_after, 1, "emptied group dropped");
+    let rj = &a.perturb.regroups[1];
+    assert_eq!(rj.kind, RegroupKind::Rejoin);
+    assert_eq!(rj.rejoined, vec![2]);
+    assert_eq!(rj.groups_after, 2, "dropped group resurrected");
+    assert_eq!(rj.workers_after, 3);
+    let b = run(&c, &p);
+    assert_eq!(a.step_checksums, b.step_checksums);
+    assert_eq!(a.final_params, b.final_params);
+}
+
+#[test]
+fn des_and_engine_agree_on_the_regroup_schedule() {
+    // the single-driver guarantee made observable: the DES replay and
+    // the real engine log identical RegroupEvent sequences (steps,
+    // kinds, membership checksums) for the same config
+    let steps = 8;
+    let mut p = PerturbConfig::default();
+    p.parse_failures("1@2,2@5").unwrap();
+    p.parse_rejoins("1@5").unwrap();
+    let r = run(&cfg(2, 2, steps, Algo::Lsgd), &p);
+    let m = ClusterModel::paper_k80();
+    let topo = Topology::new(2, 2).unwrap();
+    let d = des::run_lsgd_perturbed(&m, &topo, steps, &p).unwrap();
+    assert_eq!(r.perturb.regroups, d.regroups);
+    let dc = des::run_csgd_perturbed(&m, &topo, steps, &p).unwrap();
+    assert_eq!(r.perturb.regroups, dc.regroups);
+}
+
+#[test]
+fn stragglers_comm_stragglers_and_rejoins_compose_deterministically() {
+    let mut p = PerturbConfig::default();
+    p.straggle_prob = 0.4;
+    p.straggle_factor = 3.0;
+    p.comm_straggle_prob = 0.4;
+    p.comm_straggle_factor = 2.0;
+    p.delay_unit = 0.002;
+    p.hetero = 0.5;
+    p.comm_hetero = 0.5;
+    p.parse_failures("3@2").unwrap();
+    p.parse_rejoins("3@4").unwrap();
+    let c = cfg(2, 2, 6, Algo::Lsgd);
+    let a = run(&c, &p);
+    let b = run(&c, &p);
+    assert_eq!(a.step_checksums, b.step_checksums);
+    assert_eq!(a.perturb.injected_per_worker, b.perturb.injected_per_worker);
+    assert_eq!(a.perturb.comm_injected_per_group, b.perturb.comm_injected_per_group);
+    assert_eq!(a.perturb.regroups, b.perturb.regroups);
+    // a different perturbation seed changes the delay schedule but not
+    // the trajectory (sleeps never touch the numerics; same membership)
+    let mut p2 = p.clone();
+    p2.seed ^= 0xDEAD;
+    let d = run(&c, &p2);
+    assert_eq!(a.step_checksums, d.step_checksums);
+}
+
+#[test]
+fn out_of_range_fail_and_rejoin_specs_are_hard_errors() {
+    let e = engine();
+    // fail past the run end: the old silent-no-op bug
+    let mut p = PerturbConfig::default();
+    p.parse_failures("1@500").unwrap();
+    let mut t = Trainer::new(&e, cfg(2, 2, 3, Algo::Lsgd), false).unwrap();
+    assert!(t.run_perturbed(RunOptions::parallel(), &p).is_err());
+    // fail exactly at the run end never applies either
+    let mut p = PerturbConfig::default();
+    p.parse_failures("1@3").unwrap();
+    let mut t = Trainer::new(&e, cfg(2, 2, 3, Algo::Lsgd), false).unwrap();
+    assert!(t.run_perturbed(RunOptions::parallel(), &p).is_err());
+    // rejoin past the run end
+    let mut p = PerturbConfig::default();
+    p.parse_failures("1@1").unwrap();
+    p.parse_rejoins("1@500").unwrap();
+    let mut t = Trainer::new(&e, cfg(2, 2, 3, Algo::Lsgd), false).unwrap();
+    assert!(t.run_perturbed(RunOptions::parallel(), &p).is_err());
+    // rejoin of a never-failed worker
+    let mut p = PerturbConfig::default();
+    p.parse_rejoins("1@2").unwrap();
+    let mut t = Trainer::new(&e, cfg(2, 2, 3, Algo::Lsgd), false).unwrap();
+    assert!(t.run_perturbed(RunOptions::parallel(), &p).is_err());
 }
 
 #[test]
