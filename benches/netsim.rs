@@ -1,0 +1,93 @@
+//! Bench guard: packet-level network emulation must stay cheap enough
+//! to price every collective of a DES step at message granularity.
+//!
+//! The hot path is `net::sim_rounds` — one completion event and a
+//! seeded hash per (sub-)message when jitter is on. The flat 256-rank
+//! ring is the worst case the repo simulates today (~130k messages per
+//! step); the `*_packet_step` rows replay whole DES steps so a
+//! regression in the event loop, the draw path, or the per-phase
+//! accounting shows up where it is actually paid. Ceilings live in
+//! `benches/baseline.json` and are enforced by CI's `bench-smoke` job.
+//!
+//! Run: `cargo bench --bench netsim`
+
+use lsgd::simnet::{des, net, AllreduceAlgo, ClusterModel, NetConfig, NetModel, PerturbConfig};
+use lsgd::topology::Topology;
+use lsgd::util::bench::{enforce_baseline_from_env, smoke_mode, Harness};
+
+fn packet(jitter: f64) -> NetConfig {
+    NetConfig { model: NetModel::Packet, jitter, reorder: 0.05, chunk: 1 }
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    let mut h = if smoke { Harness::quick() } else { Harness::default() };
+    println!("# netsim — packet-level collective emulation hot path");
+
+    let m = ClusterModel::paper_k80();
+    let cfg = packet(0.2);
+    let seed = 0x57A6u64;
+
+    // single collectives, jittered: ~8k messages (ring/64), ~1k (rhd),
+    // ~130k (flat ring over 256 workers)
+    h.bench("netsim/ring_allreduce/64r/102MB", || {
+        let mut acc = net::NetAcc::default();
+        net::allreduce(
+            AllreduceAlgo::Ring,
+            m.comm_inter,
+            64,
+            m.grad_bytes,
+            &cfg,
+            seed,
+            net::Phase::GlobalAllreduce,
+            0,
+            &mut acc,
+        )
+    });
+    h.bench("netsim/rhd_allreduce/64r/102MB", || {
+        let mut acc = net::NetAcc::default();
+        net::allreduce(
+            AllreduceAlgo::RecursiveHalvingDoubling,
+            m.comm_inter,
+            64,
+            m.grad_bytes,
+            &cfg,
+            seed,
+            net::Phase::GlobalAllreduce,
+            0,
+            &mut acc,
+        )
+    });
+    h.bench("netsim/flat_ring/256r/102MB", || {
+        let mut acc = net::NetAcc::default();
+        net::allreduce(
+            AllreduceAlgo::Ring,
+            m.inter,
+            256,
+            m.grad_bytes,
+            &cfg,
+            seed,
+            net::Phase::FlatAllreduce,
+            0,
+            &mut acc,
+        )
+    });
+
+    // whole DES steps at the paper's scale, every collective priced at
+    // message granularity
+    let topo = Topology::new(64, 4).unwrap();
+    let mut p = PerturbConfig::default();
+    p.net = packet(0.2);
+    h.bench("netsim/lsgd_packet_step/64x4x3", || {
+        des::run_lsgd_perturbed(&m, &topo, 3, &p).unwrap().makespan
+    });
+    h.bench("netsim/csgd_packet_step/64x4x3", || {
+        des::run_csgd_perturbed(&m, &topo, 3, &p).unwrap().makespan
+    });
+
+    println!("\n{}", h.csv());
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/BENCH_netsim.json", h.json()).unwrap();
+    println!("→ bench_results/BENCH_netsim.json");
+    enforce_baseline_from_env(&h.results);
+}

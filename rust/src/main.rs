@@ -50,6 +50,11 @@ SUBCOMMANDS:
                                  (elastic regroup: survivors re-shard)
             --rejoin W@S[,W@S..] failed worker W rejoins before step S
                                  (elastic scale-up: groups resurrect)
+            --net-model closed|packet  price collectives with the α+β
+                                 closed forms or per-message emulation
+            --net-jitter J       per-message delay tail amplitude
+            --net-reorder R      per-message reorder probability
+            --net-chunk C        sub-messages per transfer (serialization)
             --perturb-seed S --straggle-secs SECS (delay per 1x slowdown)
   audit     run CSGD and LSGD back-to-back, compare trajectories bitwise
             (same flags as train, plus --paper-literal)
@@ -61,13 +66,18 @@ SUBCOMMANDS:
             [--stragglers P[xF]] [--hetero H] [--comm-stragglers P[xF]]
             [--comm-hetero H] [--link-degrade G@S..ExF]
             [--fail W@S[,..]] [--rejoin W@S[,..]] [--perturb-seed S]
+            [--net-model closed|packet] [--net-jitter J]
+            [--net-reorder R] [--net-chunk C]
   config    dump | check [--file FILE]
   info      [--artifacts DIR]
 ";
 
 /// Shared perturbation flag handling (train + simulate):
 /// `--stragglers/--hetero/--comm-stragglers/--comm-hetero/
-/// --link-degrade/--fail/--rejoin/--perturb-seed/--straggle-secs`.
+/// --link-degrade/--fail/--rejoin/--perturb-seed/--straggle-secs`,
+/// plus the packet-level network emulation family
+/// `--net-model/--net-jitter/--net-reorder/--net-chunk` (per-message
+/// draws share `--perturb-seed`).
 fn parse_perturb(a: &Args) -> Result<PerturbConfig> {
     let mut p = PerturbConfig::default();
     if let Some(spec) = a.opt_str("stragglers") {
@@ -87,9 +97,25 @@ fn parse_perturb(a: &Args) -> Result<PerturbConfig> {
     if let Some(spec) = a.opt_str("rejoin") {
         p.parse_rejoins(&spec)?;
     }
+    if let Some(model) = a.opt_str("net-model") {
+        p.net.model = model.parse()?;
+    }
+    p.net.jitter = a.f64_or("net-jitter", p.net.jitter)?;
+    p.net.reorder = a.f64_or("net-reorder", p.net.reorder)?;
+    p.net.chunk = a.usize_or("net-chunk", p.net.chunk)?;
     p.seed = a.u64_or("perturb-seed", p.seed)?;
     p.delay_unit = a.f64_or("straggle-secs", p.delay_unit)?;
     Ok(p)
+}
+
+/// One `net[phase] …` report line (train + simulate).
+fn print_net_stats(stats: &[lsgd::metrics::NetPhaseStats]) {
+    for n in stats {
+        println!(
+            "  net[{}]: {} msgs ({} reordered), excess delay {:.4}s total, {:.5}s worst message",
+            n.phase, n.messages, n.reordered, n.delay_total, n.delay_max
+        );
+    }
 }
 
 /// One `regroup @step …` report line (train + simulate).
@@ -214,6 +240,7 @@ fn cmd_train(rest: &[String]) -> Result<()> {
         for ev in &result.perturb.regroups {
             print_regroup(ev);
         }
+        print_net_stats(&result.perturb.net);
     }
     if let (Some((_, l0, _)), Some((_, l1, _))) =
         (result.curve.train.first(), result.curve.train.last())
@@ -402,6 +429,7 @@ fn cmd_simulate(rest: &[String]) -> Result<()> {
         for ev in &r.regroups {
             print_regroup(ev);
         }
+        print_net_stats(&r.net);
     }
     // print the first step's timeline
     let mut spans: Vec<_> = r.spans.iter().filter(|s| s.step == 0).collect();

@@ -112,6 +112,28 @@ pub struct RegroupEvent {
     pub membership_checksum: u64,
 }
 
+/// Per-phase message accounting of the packet-level network emulator
+/// ([`crate::simnet::net`]): how many messages a phase's collectives
+/// moved, how many were reordered, and the jitter-excess delay they
+/// accumulated — `delay_max` is the tail (worst single message). In
+/// the DES the delays are simulated-cluster seconds; in the real
+/// engine they are injected wall-clock seconds (`delay_unit`-scaled),
+/// matching the rest of the perturbation accounting.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct NetPhaseStats {
+    /// Phase name: `local_reduce`, `global_allreduce`, `broadcast`
+    /// (LSGD) or `allreduce` (CSGD).
+    pub phase: String,
+    /// Messages simulated / emulated in this phase.
+    pub messages: u64,
+    /// Messages delivered out of order (one slot late).
+    pub reordered: u64,
+    /// Total excess delay over the jitter-free schedule (seconds).
+    pub delay_total: f64,
+    /// Worst single-message excess delay (seconds) — the tail.
+    pub delay_max: f64,
+}
+
 /// Straggler / fault accounting for one run of the thread-per-rank
 /// engine. Empty (all zero) for unperturbed or serial runs.
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -130,6 +152,9 @@ pub struct PerturbReport {
     pub comm_injected_per_group: Vec<(usize, f64)>,
     /// Membership changes, in step order.
     pub regroups: Vec<RegroupEvent>,
+    /// Packet-level network emulation accounting, one entry per phase
+    /// (empty when the closed-form model is active).
+    pub net: Vec<NetPhaseStats>,
 }
 
 impl PerturbReport {
@@ -146,6 +171,11 @@ impl PerturbReport {
     /// Total injected communicator delay across groups (seconds).
     pub fn comm_injected_total(&self) -> f64 {
         self.comm_injected_per_group.iter().map(|(_, s)| s).sum()
+    }
+
+    /// Total packet-level excess delay across phases (seconds).
+    pub fn net_delay_total(&self) -> f64 {
+        self.net.iter().map(|n| n.delay_total).sum()
     }
 }
 
@@ -310,6 +340,14 @@ mod tests {
         assert_eq!(r.injected_total(), 1.5);
         assert_eq!(r.wait_total(), 0.5);
         assert_eq!(r.comm_injected_total(), 0.875);
+        assert_eq!(r.net_delay_total(), 0.0);
+        let net_phase = |phase: &str, delay_total: f64| NetPhaseStats {
+            phase: phase.into(),
+            delay_total,
+            ..Default::default()
+        };
+        r.net = vec![net_phase("global_allreduce", 0.5), net_phase("local_reduce", 0.25)];
+        assert_eq!(r.net_delay_total(), 0.75);
     }
 
     #[test]

@@ -45,6 +45,16 @@
 //!   ([`PerturbConfig::link_injected_delay`]): CSGD has no
 //!   communicator layer, mirroring the DES's
 //!   [`crate::simnet::des::run_csgd_perturbed`].
+//! * **packet-level network delays** — with `--net-model packet` each
+//!   lane of the global fold additionally sleeps
+//!   [`PerturbConfig::net_injected_delay`]: `delay_unit` per 1× of
+//!   per-message slowdown over the messages that lane sends in the
+//!   collective's ring schedule ([`crate::simnet::net::lane_excess`]),
+//!   plus one unit per reordered message. The draws live in the
+//!   `perturb::domain::NET` hash domain and — for LSGD — share the
+//!   DES global-allreduce key stream, so the engine and the simulator
+//!   delay the *same messages* (phase `net_injected_delay`, per-phase
+//!   totals in [`crate::metrics::PerturbReport::net`]).
 //! * **fail-stop faults and rejoins** — the run is split into
 //!   *segments* at the membership-change boundaries. Each segment runs
 //!   the full channel web over the current [`Membership`]; at a
@@ -101,7 +111,8 @@ use anyhow::Result;
 use super::{checksum, evaluate_params, LsgdOptions, RunResult, Trainer};
 use crate::collective;
 use crate::config::Algo;
-use crate::metrics::{PerturbReport, PhaseTimers, RegroupEvent, TrainCurve};
+use crate::metrics::{NetPhaseStats, PerturbReport, PhaseTimers, RegroupEvent, TrainCurve};
+use crate::simnet::net;
 use crate::simnet::perturb::drive_segments;
 use crate::simnet::PerturbConfig;
 use crate::topology::{Membership, WorkerId};
@@ -160,6 +171,9 @@ struct Acc {
     /// communicator-delay seconds).
     comm_injected: Vec<(usize, f64)>,
     regroups: Vec<RegroupEvent>,
+    /// Packet-level emulation totals across lanes and segments
+    /// (injected wall-clock seconds; `phase` filled at report time).
+    net: NetPhaseStats,
 }
 
 fn run(
@@ -188,6 +202,7 @@ fn run(
         waits: Vec::new(),
         comm_injected: Vec::new(),
         regroups: Vec::new(),
+        net: NetPhaseStats::default(),
     };
 
     // Segment loop: run membership-stable stretches, regroup at
@@ -232,6 +247,14 @@ fn run(
             wait_per_group: acc.waits,
             comm_injected_per_group: acc.comm_injected,
             regroups: acc.regroups,
+            net: if perturb.net.is_packet() {
+                vec![NetPhaseStats {
+                    phase: (if is_lsgd { "global_allreduce" } else { "allreduce" }).to_string(),
+                    ..acc.net
+                }]
+            } else {
+                Vec::new()
+            },
         },
     })
 }
@@ -298,6 +321,14 @@ fn run_segment(
     // identical to the pre-fault engine (plain scheduler jitter is not
     // a straggler signal)
     let measure_wait = !perturb.is_noop();
+    // packet-level emulation lane phase: LSGD lanes share the DES's
+    // global-allreduce draw stream key-for-key; CSGD has no
+    // communicator layer, so its lane emulation draws the flat-
+    // allreduce stream at lane granularity. The lane schedule follows
+    // the configured allreduce algorithm, as the DES replay does.
+    let net_phase =
+        if is_lsgd { net::Phase::GlobalAllreduce } else { net::Phase::FlatAllreduce };
+    let net_algo = t.cfg.cluster.algo;
 
     // Shared read-only context (the host backend is Sync — see
     // runtime::Engine docs) and the per-worker mutable replicas.
@@ -366,10 +397,11 @@ fn run_segment(
             let my_partial_tx = partial_tx.clone();
             let wpg = sizes[group];
             let seg = range.clone();
-            comm_handles.push(s.spawn(move || -> (PhaseTimers, f64, f64) {
+            comm_handles.push(s.spawn(move || -> (PhaseTimers, f64, f64, NetPhaseStats) {
                 let mut tm = PhaseTimers::new();
                 let mut wait_total = 0.0_f64;
                 let mut comm_injected = 0.0_f64;
+                let mut net_tot = NetPhaseStats::default();
                 for step in seg {
                     let mut slots: Vec<Option<GradMsg>> = (0..wpg).map(|_| None).collect();
                     let mut first_arrival: Option<Instant> = None;
@@ -404,6 +436,25 @@ fn run_segment(
                         tm.add("comm_injected_delay", d);
                         comm_injected += d;
                     }
+                    // packet-level network emulation: this lane sleeps
+                    // the delay_unit-scaled excess of its own sends in
+                    // the global collective's message schedule — the
+                    // same seeded per-message draws the DES replays
+                    if perturb.net.is_packet() {
+                        let ex = net::lane_excess(
+                            &perturb.net, perturb.seed, net_algo, net_phase, step, groups, group,
+                        );
+                        let nd = perturb.delay_unit * ex.units;
+                        net_tot.messages += ex.messages;
+                        net_tot.reordered += ex.reordered;
+                        net_tot.delay_total += nd;
+                        net_tot.delay_max =
+                            net_tot.delay_max.max(perturb.delay_unit * ex.max_units);
+                        if nd > 0.0 {
+                            sleep_secs(nd);
+                            tm.add("net_injected_delay", nd);
+                        }
+                    }
                     // fold in ascending worker id — arrival order (the
                     // race) is erased by the slotting above
                     let msg = tm.time("local_reduce", || {
@@ -431,7 +482,7 @@ fn run_segment(
                         }
                     });
                 }
-                (tm, wait_total, comm_injected)
+                (tm, wait_total, comm_injected, net_tot)
             }));
         }
 
@@ -587,10 +638,14 @@ fn run_segment(
 
         // ---- deterministic joins: communicators then workers, by id -
         for (group, h) in comm_handles.into_iter().enumerate() {
-            let (tm, wait, injected) = h.join().expect("communicator thread panicked");
+            let (tm, wait, injected, nt) = h.join().expect("communicator thread panicked");
             acc.timers.merge(&tm);
             acc.waits.push((group, wait));
             acc.comm_injected.push((group, injected));
+            acc.net.messages += nt.messages;
+            acc.net.reordered += nt.reordered;
+            acc.net.delay_total += nt.delay_total;
+            acc.net.delay_max = acc.net.delay_max.max(nt.delay_max);
         }
         for (pos, h) in worker_handles.into_iter().enumerate() {
             let (tm, injected) = h.join().expect("worker thread panicked");

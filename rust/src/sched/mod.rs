@@ -261,7 +261,7 @@ impl<'e> Trainer<'e> {
         if opts.mode == ExecMode::Serial {
             anyhow::ensure!(
                 perturb.is_noop(),
-                "straggler/fault injection requires the thread-per-rank engine (--parallel)"
+                "straggler/fault/network injection requires the thread-per-rank engine (--parallel)"
             );
         }
         match (self.cfg.algo, opts.mode) {

@@ -47,7 +47,7 @@ impl Link {
 // wrapper type used to live here; it lost its last production caller
 // when per-step communicator/link factors arrived and was removed.
 
-fn log2_ceil(p: usize) -> f64 {
+pub(crate) fn log2_ceil(p: usize) -> f64 {
     debug_assert!(p >= 1);
     (usize::BITS - (p - 1).leading_zeros()) as f64
 }

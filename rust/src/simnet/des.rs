@@ -12,9 +12,10 @@
 //! `k × step_time_*().total` to float precision — if someone edits one
 //! model and not the other, the suite fails.
 
+use super::net::{self, NetAcc, NetConfig, Phase};
 use super::perturb::{drive_segments, PerturbConfig};
 use super::{cost, ClusterModel, StepBreakdown};
-use crate::metrics::RegroupEvent;
+use crate::metrics::{NetPhaseStats, RegroupEvent};
 use crate::topology::{Membership, Topology};
 use anyhow::Result;
 use std::cmp::Ordering;
@@ -80,6 +81,10 @@ pub struct DesResult {
     /// construction through [`drive_segments`] — to the schedule the
     /// real engine logs for the same config.
     pub regroups: Vec<RegroupEvent>,
+    /// Per-phase message counts and tail latencies of the packet-level
+    /// network replay ([`super::net`]); empty under the closed-form
+    /// model.
+    pub net: Vec<NetPhaseStats>,
 }
 
 struct Engine {
@@ -211,7 +216,13 @@ pub fn run_lsgd_jittered(
     // allreduce that ran inside the I/O window = min(t_io, t_g)
     let hidden = t_g.min(m.t_io) * steps as f64;
 
-    DesResult { makespan, spans: e.spans, hidden_comm: hidden, regroups: Vec::new() }
+    DesResult {
+        makespan,
+        spans: e.spans,
+        hidden_comm: hidden,
+        regroups: Vec::new(),
+        net: Vec::new(),
+    }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -279,15 +290,132 @@ pub fn run_lsgd_perturbed(
     p.validate(topo, steps)?;
     let mut memb = Membership::full(topo);
     let mut spans = Vec::new();
+    let mut netacc = NetAcc::default();
     let mut hidden = 0.0;
     let mut t = 0.0;
     let regroups = drive_segments(p, &mut memb, steps, |memb, range, _boundary| {
-        let (t2, h) = lsgd_segment(m, p, memb, range, t, &mut spans);
+        let (t2, h) = lsgd_segment(m, p, memb, range, t, &mut spans, &mut netacc);
         t = t2;
         hidden += h;
         Ok(())
     })?;
-    Ok(DesResult { makespan: t, spans, hidden_comm: hidden, regroups })
+    Ok(DesResult { makespan: t, spans, hidden_comm: hidden, regroups, net: netacc.into_report() })
+}
+
+/// The [`super::net::NetModel`] switch on [`run_lsgd`]: replay the
+/// LSGD schedule with the given network model (packet-level message
+/// emulation or closed form), no other perturbations. With a
+/// jitter-free packet config this reproduces [`run_lsgd`] to `< 1e-9`
+/// (the netsim convergence suite pins it).
+pub fn run_lsgd_net(
+    m: &ClusterModel,
+    topo: &Topology,
+    steps: usize,
+    netcfg: &NetConfig,
+    seed: u64,
+) -> Result<DesResult> {
+    let mut p = PerturbConfig::default();
+    p.net = netcfg.clone();
+    p.seed = seed;
+    run_lsgd_perturbed(m, topo, steps, &p)
+}
+
+/// The [`super::net::NetModel`] switch on [`run_csgd`] (see
+/// [`run_lsgd_net`]).
+pub fn run_csgd_net(
+    m: &ClusterModel,
+    topo: &Topology,
+    steps: usize,
+    netcfg: &NetConfig,
+    seed: u64,
+) -> Result<DesResult> {
+    let mut p = PerturbConfig::default();
+    p.net = netcfg.clone();
+    p.seed = seed;
+    run_csgd_perturbed(m, topo, steps, &p)
+}
+
+/// Per-segment collective pricing. Closed form: the precomputed α–β
+/// bases scaled by the perturbation factors. Packet
+/// ([`super::net::NetModel::Packet`]): a full message-level replay
+/// over the factor-scaled link — communicator classes and link
+/// windows scale *per-message* delays, never the aggregate cost, so
+/// the two models remain exchangeable under perturbation. A slow
+/// communicator stretches its local reduce/broadcast AND its share of
+/// the global allreduce; transient link windows degrade only the
+/// inter-node fabric. The allreduce is a barrier over all
+/// communicators, so it pays the worst combined factor at the step.
+struct SegCosts<'a> {
+    m: &'a ClusterModel,
+    p: &'a PerturbConfig,
+    /// Workers per group (packet schedules span `size + 1` ranks:
+    /// the workers plus their communicator).
+    sizes: Vec<usize>,
+    red_base: Vec<f64>,
+    bc_base: Vec<f64>,
+    /// Per-group permanent link factors (slowest member's node class).
+    wl: Vec<f64>,
+    g: usize,
+}
+
+impl SegCosts<'_> {
+    fn reduce(&self, acc: &mut NetAcc, gi: usize, step: usize) -> f64 {
+        let f = self.p.comm_scale(gi, step);
+        if self.p.net.is_packet() {
+            net::reduce_tree(
+                self.m.intra.scaled(f),
+                self.sizes[gi] + 1,
+                self.m.grad_bytes,
+                &self.p.net,
+                self.p.seed,
+                gi,
+                step,
+                acc,
+            )
+        } else {
+            self.red_base[gi] * f
+        }
+    }
+
+    fn bcast(&self, acc: &mut NetAcc, gi: usize, step: usize) -> f64 {
+        let f = self.p.comm_scale(gi, step);
+        if self.p.net.is_packet() {
+            net::broadcast_tree(
+                self.m.intra.scaled(f),
+                self.sizes[gi] + 1,
+                self.m.grad_bytes,
+                &self.p.net,
+                self.p.seed,
+                gi,
+                step,
+                acc,
+            )
+        } else {
+            self.bc_base[gi] * f
+        }
+    }
+
+    fn global(&self, acc: &mut NetAcc, step: usize) -> f64 {
+        let worst = (0..self.g)
+            .map(|gi| self.wl[gi] * self.p.comm_scale(gi, step) * self.p.link_factor(gi, step))
+            .fold(1.0_f64, f64::max);
+        let link = self.m.comm_inter.scaled(worst);
+        if self.p.net.is_packet() {
+            net::allreduce(
+                self.m.algo,
+                link,
+                self.g,
+                self.m.grad_bytes,
+                &self.p.net,
+                self.p.seed,
+                Phase::GlobalAllreduce,
+                step,
+                acc,
+            )
+        } else {
+            self.m.algo.cost(link, self.g, self.m.grad_bytes)
+        }
+    }
 }
 
 /// One membership-stable stretch of a perturbed LSGD run: the event
@@ -303,6 +431,7 @@ fn lsgd_segment(
     range: std::ops::Range<usize>,
     t0: f64,
     spans: &mut Vec<Span>,
+    netacc: &mut NetAcc,
 ) -> (f64, f64) {
     let g = memb.num_groups();
     let nsteps = range.len();
@@ -310,24 +439,21 @@ fn lsgd_segment(
         return (t0, 0.0);
     }
     let base = range.start;
-    let red_base: Vec<f64> = (0..g)
-        .map(|gi| cost::reduce_tree(m.intra, memb.group(gi).len() + 1, m.grad_bytes))
-        .collect();
-    let bc_base: Vec<f64> = (0..g)
-        .map(|gi| cost::broadcast_tree(m.intra, memb.group(gi).len() + 1, m.grad_bytes))
-        .collect();
-    let wl = group_link_factors(p, memb);
-    // a slow communicator stretches its local reduce/broadcast AND its
-    // share of the global allreduce; transient link windows degrade
-    // only the inter-node fabric. The allreduce is a barrier over all
-    // communicators, so it pays the worst combined factor at the step.
-    let red_of = |gi: usize, step: usize| red_base[gi] * p.comm_scale(gi, step);
-    let bc_of = |gi: usize, step: usize| bc_base[gi] * p.comm_scale(gi, step);
-    let t_g_of = |step: usize| {
-        let worst = (0..g)
-            .map(|gi| wl[gi] * p.comm_scale(gi, step) * p.link_factor(gi, step))
-            .fold(1.0_f64, f64::max);
-        m.algo.cost(m.comm_inter.scaled(worst), g, m.grad_bytes)
+    let sizes: Vec<usize> = (0..g).map(|gi| memb.group(gi).len()).collect();
+    let costs = SegCosts {
+        m,
+        p,
+        red_base: sizes
+            .iter()
+            .map(|&w| cost::reduce_tree(m.intra, w + 1, m.grad_bytes))
+            .collect(),
+        bc_base: sizes
+            .iter()
+            .map(|&w| cost::broadcast_tree(m.intra, w + 1, m.grad_bytes))
+            .collect(),
+        sizes,
+        wl: group_link_factors(p, memb),
+        g,
     };
     let io_of = |gi: usize, step: usize| m.t_io * group_scale(p, memb, gi, step);
     let comp_of = |gi: usize, step: usize| m.t_compute * group_scale(p, memb, gi, step);
@@ -351,7 +477,7 @@ fn lsgd_segment(
         makespan = makespan.max(now);
         match ev.kind {
             EventKind::ComputeDone { group, step } => {
-                let r = red_of(group, step);
+                let r = costs.reduce(netacc, group, step);
                 e.span(format!("g{group}/workers"), "reduce", now, now + r, step);
                 e.schedule(now + r, EventKind::ReduceDone { group, step });
             }
@@ -362,7 +488,7 @@ fn lsgd_segment(
                 let si = step - base;
                 groups_reduced[si] += 1;
                 if groups_reduced[si] == g {
-                    let t_g = t_g_of(step);
+                    let t_g = costs.global(netacc, step);
                     e.span("comms".into(), "global_allreduce", now, now + t_g, step);
                     e.schedule(now + t_g, EventKind::GlobalDone { step });
                     // hidden share: the allreduce runs inside every
@@ -382,7 +508,8 @@ fn lsgd_segment(
                     &global_done_at,
                     &io_done_at,
                     &mut bcast_scheduled,
-                    bc_of(group, step),
+                    &costs,
+                    netacc,
                 );
             }
             EventKind::GlobalDone { step } => {
@@ -396,7 +523,8 @@ fn lsgd_segment(
                         &global_done_at,
                         &io_done_at,
                         &mut bcast_scheduled,
-                        bc_of(gi, step),
+                        &costs,
+                        netacc,
                     );
                 }
             }
@@ -428,7 +556,8 @@ fn try_broadcast_at(
     global_done_at: &[f64],
     io_done_at: &[Vec<f64>],
     bcast_scheduled: &mut [Vec<bool>],
-    bcast: f64,
+    costs: &SegCosts<'_>,
+    netacc: &mut NetAcc,
 ) {
     let si = step - base;
     let gd = global_done_at[si];
@@ -437,6 +566,9 @@ fn try_broadcast_at(
         return;
     }
     bcast_scheduled[si][group] = true;
+    // priced only on the scheduling path, so the packet replay counts
+    // each broadcast's messages exactly once
+    let bcast = costs.bcast(netacc, group, step);
     let start = gd.max(io);
     e.span(format!("g{group}/workers"), "broadcast", start, start + bcast, step);
     e.schedule(start + bcast, EventKind::BroadcastDone { group, step });
@@ -459,6 +591,7 @@ pub fn run_csgd_perturbed(
     p.validate(topo, steps)?;
     let mut memb = Membership::full(topo);
     let mut e = Engine::new();
+    let mut netacc = NetAcc::default();
     let mut t = 0.0;
     let regroups = drive_segments(p, &mut memb, steps, |memb, range, _boundary| {
         let n = memb.num_workers();
@@ -473,7 +606,24 @@ pub fn run_csgd_perturbed(
             let worst_link = (0..memb.num_groups())
                 .map(|gi| wl[gi] * p.link_factor(gi, step))
                 .fold(1.0_f64, f64::max);
-            let ar = m.algo.cost(fabric.scaled(worst_link), n, m.grad_bytes);
+            // link windows scale the fabric handed to the replay, so
+            // under the packet model they stretch every message of the
+            // step, not one aggregate number
+            let ar = if p.net.is_packet() {
+                net::allreduce(
+                    m.algo,
+                    fabric.scaled(worst_link),
+                    n,
+                    m.grad_bytes,
+                    &p.net,
+                    p.seed,
+                    Phase::FlatAllreduce,
+                    step,
+                    &mut netacc,
+                )
+            } else {
+                m.algo.cost(fabric.scaled(worst_link), n, m.grad_bytes)
+            };
             let io = m.t_io * slowest;
             let comp = m.t_compute * slowest;
             e.span("workers".into(), "io", t, t + io, step);
@@ -487,7 +637,13 @@ pub fn run_csgd_perturbed(
         }
         Ok(())
     })?;
-    Ok(DesResult { makespan: t, spans: e.spans, hidden_comm: 0.0, regroups })
+    Ok(DesResult {
+        makespan: t,
+        spans: e.spans,
+        hidden_comm: 0.0,
+        regroups,
+        net: netacc.into_report(),
+    })
 }
 
 /// Play `steps` CSGD iterations (Algorithm 2): io → compute → flat
@@ -523,7 +679,13 @@ pub fn run_csgd_jittered(
         e.span("workers".into(), "update", t, t + m.t_update, step);
         t += m.t_update;
     }
-    DesResult { makespan: t, spans: e.spans, hidden_comm: 0.0, regroups: Vec::new() }
+    DesResult {
+        makespan: t,
+        spans: e.spans,
+        hidden_comm: 0.0,
+        regroups: Vec::new(),
+        net: Vec::new(),
+    }
 }
 
 /// Convenience: steady-state per-step time from a DES run.

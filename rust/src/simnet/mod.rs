@@ -14,6 +14,12 @@
 //! * [`des`] — a discrete-event engine that replays the same schedules
 //!   event-by-event per rank and must agree with the closed forms
 //!   (cross-validated in tests);
+//! * [`net`] — packet-level network emulation: each collective
+//!   expanded into its actual per-round message schedule and replayed
+//!   as individual events with seeded per-message jitter, bounded
+//!   reordering and chunk serialization (`NetModel::{ClosedForm,
+//!   Packet}` switches both DES paths; jitter-free packet replays
+//!   reproduce the closed forms to `< 1e-9`);
 //! * [`perturb`] — seeded straggler / heterogeneity / fail-stop /
 //!   rejoin injection (worker- and communicator-class, plus transient
 //!   link-degradation windows), shared with the real thread-per-rank
@@ -26,9 +32,11 @@
 
 pub mod cost;
 pub mod des;
+pub mod net;
 pub mod perturb;
 
 pub use cost::{AllreduceAlgo, Link};
+pub use net::{NetConfig, NetModel};
 pub use perturb::{FailStop, LinkWindow, PerturbConfig, Rejoin};
 
 use crate::topology::Topology;

@@ -58,6 +58,10 @@ pub mod domain {
     /// Reserved: seeded link-jitter draws (the explicit
     /// `--link-degrade` windows need no randomness).
     pub const LINK: u64 = 6;
+    /// Per-message delay draws of the packet-level network emulator
+    /// ([`super::net`]). A fresh domain, so enabling `--net-jitter`
+    /// can never shift the worker/communicator/link schedules above.
+    pub const NET: u64 = 7;
 }
 
 /// A fail-stop fault: `worker` dies at the boundary *before* executing
@@ -190,6 +194,11 @@ pub struct PerturbConfig {
     /// Elastic rejoins, applied at step boundaries (before removals
     /// sharing the boundary, so the cluster never transits empty).
     pub rejoins: Vec<Rejoin>,
+    /// Network model for the collectives: closed-form α–β (default) or
+    /// packet-level message emulation ([`super::net`]), with its
+    /// jitter/reorder/chunk knobs. Per-message draws use the
+    /// [`domain::NET`] tag and this config's `seed`.
+    pub net: super::net::NetConfig,
     /// The real engine's time unit: one unit of *extra* simulated
     /// compute (a factor of 2 on a rank sleeps `delay_unit` seconds).
     /// Keep small so tests stay fast; irrelevant to the DES, which
@@ -210,6 +219,7 @@ impl Default for PerturbConfig {
             link_windows: Vec::new(),
             failures: Vec::new(),
             rejoins: Vec::new(),
+            net: super::net::NetConfig::default(),
             delay_unit: 2e-3,
         }
     }
@@ -219,7 +229,7 @@ impl Default for PerturbConfig {
 /// one hash both the DES and the engine derive every perturbation
 /// decision from. `dom` is one of the [`domain`] tags; `a`/`b` are the
 /// family's own indices (worker or group id, step or 0).
-fn mix(seed: u64, dom: u64, a: u64, b: u64) -> u64 {
+pub(crate) fn mix(seed: u64, dom: u64, a: u64, b: u64) -> u64 {
     let mut z = seed
         ^ dom.wrapping_mul(0xa0761d6478bd642f)
         ^ a.wrapping_add(1).wrapping_mul(0x9e3779b97f4a7c15)
@@ -230,7 +240,7 @@ fn mix(seed: u64, dom: u64, a: u64, b: u64) -> u64 {
 }
 
 /// Uniform `[0, 1)` from a hash value.
-fn unit(h: u64) -> f64 {
+pub(crate) fn unit(h: u64) -> f64 {
     (h >> 11) as f64 / (1u64 << 53) as f64
 }
 
@@ -316,7 +326,9 @@ impl PerturbConfig {
     }
 
     /// True when this config perturbs nothing — the only form the
-    /// serial reference engine accepts.
+    /// serial reference engine accepts. Packet-level network emulation
+    /// counts as a perturbation: it changes the DES's collective
+    /// replay and injects delays into the real engine.
     pub fn is_noop(&self) -> bool {
         self.hetero == 0.0
             && self.straggle_prob == 0.0
@@ -325,6 +337,7 @@ impl PerturbConfig {
             && self.link_windows.is_empty()
             && self.failures.is_empty()
             && self.rejoins.is_empty()
+            && !self.net.is_packet()
     }
 
     /// Validate against the launch topology and the run length:
@@ -346,6 +359,7 @@ impl PerturbConfig {
             "communicator straggler factor must be ≥ 1"
         );
         anyhow::ensure!(self.delay_unit >= 0.0, "delay unit must be ≥ 0");
+        self.net.validate()?;
         for lw in &self.link_windows {
             anyhow::ensure!(
                 lw.factor >= 1.0,
@@ -524,6 +538,30 @@ impl PerturbConfig {
     /// in [`super::des::run_csgd_perturbed`]).
     pub fn link_injected_delay(&self, group: usize, step: usize) -> f64 {
         self.delay_unit * (self.link_factor(group, step) - 1.0)
+    }
+
+    /// Extra wall-clock the real engine injects into lane `group` of
+    /// the global fold at `step` when packet-level network emulation
+    /// is on: `delay_unit` per 1× of per-message slowdown, summed over
+    /// the messages that lane sends in the configured `algo`'s
+    /// schedule for a `groups`-lane collective, plus one `delay_unit`
+    /// per reordered message ([`super::net::lane_excess`]). The draws
+    /// share the NET domain — and, for LSGD, the exact key stream — of
+    /// the DES's global-allreduce message schedule. Zero for the
+    /// closed-form model.
+    pub fn net_injected_delay(
+        &self,
+        group: usize,
+        step: usize,
+        groups: usize,
+        algo: super::cost::AllreduceAlgo,
+        phase: super::net::Phase,
+    ) -> f64 {
+        if !self.net.is_packet() {
+            return 0.0;
+        }
+        let ex = super::net::lane_excess(&self.net, self.seed, algo, phase, step, groups, group);
+        self.delay_unit * ex.units
     }
 
     /// Extra I/O latency of worker `w`'s shard load at `step`, given

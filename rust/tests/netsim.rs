@@ -1,0 +1,307 @@
+//! Integration: packet-level network emulation, cross-validated
+//! against the closed-form collective model.
+//!
+//! Acceptance (ISSUE 4):
+//!  (a) convergence — with jitter = 0, reorder = 0, chunk = 1 the
+//!      packet-level ring / recursive-halving-doubling / tree replays
+//!      equal the closed-form `cost.rs` formulas to < 1e-9 over the
+//!      whole (p ∈ 1..64, n_bytes, algo) grid, and the full packet DES
+//!      reproduces the closed-form DES makespans for both schedules;
+//!  (b) determinism — packet schedules are bitwise-reproducible per
+//!      `--perturb-seed`, and the NET-domain message draws never shift
+//!      the existing worker/communicator/link schedules;
+//!  (c) ordering — a larger jitter tail never shortens a simulated
+//!      step, and LSGD's packet-level degradation stays below CSGD's
+//!      under the same jitter (the DES tax-ordering claim survives
+//!      message granularity).
+
+use lsgd::simnet::{
+    cost, des, net, AllreduceAlgo, ClusterModel, Link, NetConfig, NetModel, PerturbConfig,
+};
+use lsgd::topology::Topology;
+
+const SEED: u64 = 0x57A6;
+
+fn packet(jitter: f64, reorder: f64, chunk: usize) -> NetConfig {
+    NetConfig { model: NetModel::Packet, jitter, reorder, chunk }
+}
+
+// ------------------------------------------------------ acceptance (a)
+
+#[test]
+fn packet_collectives_match_closed_forms_over_the_grid() {
+    let cfg = packet(0.0, 0.0, 1);
+    let links = [
+        Link { alpha: 2.0191e-3, beta: 14.3e9 }, // the paper's worker fabric
+        Link { alpha: 8e-6, beta: 9.0e9 },       // intra-node
+    ];
+    for link in links {
+        for p in 1..=64usize {
+            for n in [8.0, 1e6, 102.4e6] {
+                let mut acc = net::NetAcc::default();
+                let ring = net::allreduce(
+                    AllreduceAlgo::Ring,
+                    link,
+                    p,
+                    n,
+                    &cfg,
+                    SEED,
+                    net::Phase::FlatAllreduce,
+                    0,
+                    &mut acc,
+                );
+                assert!(
+                    (ring - cost::allreduce_ring(link, p, n)).abs() < 1e-9,
+                    "ring p={p} n={n}: packet {ring} vs closed {}",
+                    cost::allreduce_ring(link, p, n)
+                );
+                let rhd = net::allreduce(
+                    AllreduceAlgo::RecursiveHalvingDoubling,
+                    link,
+                    p,
+                    n,
+                    &cfg,
+                    SEED,
+                    net::Phase::GlobalAllreduce,
+                    0,
+                    &mut acc,
+                );
+                assert!(
+                    (rhd - cost::allreduce_rhd(link, p, n)).abs() < 1e-9,
+                    "rhd p={p} n={n}: packet {rhd} vs closed {}",
+                    cost::allreduce_rhd(link, p, n)
+                );
+                let red = net::reduce_tree(link, p, n, &cfg, SEED, 0, 0, &mut acc);
+                assert!(
+                    (red - cost::reduce_tree(link, p, n)).abs() < 1e-9,
+                    "tree reduce p={p} n={n}: packet {red} vs closed {}",
+                    cost::reduce_tree(link, p, n)
+                );
+                let bc = net::broadcast_tree(link, p, n, &cfg, SEED, 0, 0, &mut acc);
+                assert!(
+                    (bc - cost::broadcast_tree(link, p, n)).abs() < 1e-9,
+                    "tree broadcast p={p} n={n}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn zero_jitter_packet_des_matches_closed_form_des() {
+    let m = ClusterModel::paper_k80();
+    let cfg = packet(0.0, 0.0, 1);
+    let steps = 6;
+    for g in [1, 2, 8, 64] {
+        let topo = Topology::new(g, 4).unwrap();
+        let base_l = des::run_lsgd(&m, &topo, steps);
+        let pkt_l = des::run_lsgd_net(&m, &topo, steps, &cfg, SEED).unwrap();
+        assert!(
+            (pkt_l.makespan - base_l.makespan).abs() < 1e-9,
+            "G={g}: packet LSGD {} vs closed {}",
+            pkt_l.makespan,
+            base_l.makespan
+        );
+        assert!((pkt_l.hidden_comm - base_l.hidden_comm).abs() < 1e-9);
+        let base_c = des::run_csgd(&m, &topo, steps);
+        let pkt_c = des::run_csgd_net(&m, &topo, steps, &cfg, SEED).unwrap();
+        assert!(
+            (pkt_c.makespan - base_c.makespan).abs() < 1e-9,
+            "G={g}: packet CSGD {} vs closed {}",
+            pkt_c.makespan,
+            base_c.makespan
+        );
+    }
+}
+
+#[test]
+fn packet_des_surfaces_per_phase_message_counts() {
+    let m = ClusterModel::paper_k80();
+    let (g, w, steps) = (4usize, 4usize, 3usize);
+    let topo = Topology::new(g, w).unwrap();
+    let cfg = packet(0.3, 0.05, 1);
+    let r = des::run_lsgd_net(&m, &topo, steps, &cfg, SEED).unwrap();
+    let by_name = |name: &str| {
+        r.net
+            .iter()
+            .find(|s| s.phase == name)
+            .unwrap_or_else(|| panic!("missing net phase {name}: {:?}", r.net))
+    };
+    // a binomial tree over w+1 ranks moves w payloads, once per group
+    // per step; the ring global allreduce moves 2(G−1)·G chunks per
+    // step
+    assert_eq!(by_name("local_reduce").messages, (steps * g * w) as u64);
+    assert_eq!(by_name("broadcast").messages, (steps * g * w) as u64);
+    assert_eq!(by_name("global_allreduce").messages, (steps * 2 * (g - 1) * g) as u64);
+    assert!(by_name("global_allreduce").delay_total > 0.0, "jitter must accumulate excess");
+    assert!(by_name("global_allreduce").delay_max > 0.0);
+    assert!(by_name("global_allreduce").delay_max <= by_name("global_allreduce").delay_total);
+    // CSGD: one flat collective over all N workers
+    let n = topo.num_workers();
+    let rc = des::run_csgd_net(&m, &topo, steps, &cfg, SEED).unwrap();
+    assert_eq!(rc.net.len(), 1);
+    assert_eq!(rc.net[0].phase, "allreduce");
+    assert_eq!(rc.net[0].messages, (steps * 2 * (n - 1) * n) as u64);
+    // closed-form runs surface nothing
+    assert!(des::run_lsgd(&m, &topo, steps).net.is_empty());
+}
+
+// ------------------------------------------------------ acceptance (b)
+
+#[test]
+fn packet_schedules_are_bitwise_reproducible_per_seed() {
+    let m = ClusterModel::paper_k80();
+    let topo = Topology::new(8, 4).unwrap();
+    let steps = 5;
+    let mut p = PerturbConfig::default();
+    p.net = packet(0.4, 0.1, 2);
+    let a = des::run_lsgd_perturbed(&m, &topo, steps, &p).unwrap();
+    let b = des::run_lsgd_perturbed(&m, &topo, steps, &p).unwrap();
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+    assert_eq!(a.spans, b.spans);
+    assert_eq!(a.net, b.net);
+    let ca = des::run_csgd_perturbed(&m, &topo, steps, &p).unwrap();
+    let cb = des::run_csgd_perturbed(&m, &topo, steps, &p).unwrap();
+    assert_eq!(ca.makespan.to_bits(), cb.makespan.to_bits());
+    assert_eq!(ca.net, cb.net);
+    // a different seed draws a different message schedule
+    let mut p2 = p.clone();
+    p2.seed ^= 0xBEEF;
+    let c = des::run_lsgd_perturbed(&m, &topo, steps, &p2).unwrap();
+    assert_ne!(a.makespan.to_bits(), c.makespan.to_bits());
+}
+
+#[test]
+fn net_draws_do_not_shift_existing_perturbation_schedules() {
+    // the NET domain tag isolates message draws: the same seed's
+    // worker/communicator/link factors are identical whether or not
+    // packet jitter is enabled
+    let mut without = PerturbConfig::default();
+    without.hetero = 0.4;
+    without.straggle_prob = 0.3;
+    without.comm_straggle_prob = 0.3;
+    without.parse_link_degrade("0@1..3x2").unwrap();
+    let mut with = without.clone();
+    with.net = packet(0.8, 0.2, 1);
+    for w in 0..16usize {
+        for s in 0..20usize {
+            assert_eq!(without.compute_scale(w, s), with.compute_scale(w, s));
+            assert_eq!(without.comm_scale(w % 4, s), with.comm_scale(w % 4, s));
+            assert_eq!(without.link_factor(w % 4, s), with.link_factor(w % 4, s));
+        }
+    }
+    // observable end-to-end: a fail/rejoin schedule regroups at the
+    // same boundaries with the same membership fingerprints
+    let m = ClusterModel::paper_k80();
+    let topo = Topology::new(2, 4).unwrap();
+    let mut fail_only = PerturbConfig::default();
+    fail_only.parse_failures("5@2").unwrap();
+    fail_only.parse_rejoins("5@4").unwrap();
+    let mut fail_net = fail_only.clone();
+    fail_net.net = packet(0.8, 0.2, 1);
+    let a = des::run_lsgd_perturbed(&m, &topo, 6, &fail_only).unwrap();
+    let b = des::run_lsgd_perturbed(&m, &topo, 6, &fail_net).unwrap();
+    assert_eq!(a.regroups, b.regroups, "message draws shifted the regroup schedule");
+}
+
+#[test]
+fn invalid_net_configs_are_hard_errors() {
+    let m = ClusterModel::paper_k80();
+    let topo = Topology::new(2, 4).unwrap();
+    for bad in [
+        NetConfig { model: NetModel::Packet, jitter: -0.5, reorder: 0.0, chunk: 1 },
+        NetConfig { model: NetModel::Packet, jitter: 0.0, reorder: 1.5, chunk: 1 },
+        NetConfig { model: NetModel::Packet, jitter: 0.0, reorder: 0.0, chunk: 0 },
+        // jitter without --net-model packet: a silent no-op otherwise
+        NetConfig { model: NetModel::ClosedForm, jitter: 0.5, reorder: 0.0, chunk: 1 },
+    ] {
+        assert!(des::run_lsgd_net(&m, &topo, 3, &bad, SEED).is_err(), "{bad:?}");
+        assert!(des::run_csgd_net(&m, &topo, 3, &bad, SEED).is_err(), "{bad:?}");
+    }
+}
+
+// ------------------------------------------------------ acceptance (c)
+
+#[test]
+fn jitter_tail_never_shortens_a_step() {
+    let m = ClusterModel::paper_k80();
+    let topo = Topology::new(16, 4).unwrap();
+    let steps = 4;
+    let mut last_l = des::per_step(&des::run_lsgd(&m, &topo, steps), steps);
+    let mut last_c = des::per_step(&des::run_csgd(&m, &topo, steps), steps);
+    for jitter in [0.0, 0.1, 0.3, 0.6, 1.0] {
+        let cfg = packet(jitter, 0.0, 1);
+        let l = des::per_step(&des::run_lsgd_net(&m, &topo, steps, &cfg, SEED).unwrap(), steps);
+        let c = des::per_step(&des::run_csgd_net(&m, &topo, steps, &cfg, SEED).unwrap(), steps);
+        assert!(l >= last_l - 1e-9, "LSGD step shrank: jitter {jitter}, {l} < {last_l}");
+        assert!(c >= last_c - 1e-9, "CSGD step shrank: jitter {jitter}, {c} < {last_c}");
+        last_l = l;
+        last_c = c;
+    }
+    // and a real tail costs something
+    assert!(last_l > des::per_step(&des::run_lsgd(&m, &topo, steps), steps));
+    assert!(last_c > des::per_step(&des::run_csgd(&m, &topo, steps), steps));
+}
+
+#[test]
+fn lsgd_packet_degradation_stays_below_csgds() {
+    // message-granularity version of the DES tax-ordering claim: the
+    // flat CSGD collective runs ~8× the rounds of the communicator
+    // ring, so the same per-message tail hits it harder every step
+    let m = ClusterModel::paper_k80();
+    let topo = Topology::new(64, 4).unwrap();
+    let steps = 4;
+    let cfg = packet(0.5, 0.0, 1);
+    let tax_l = des::per_step(&des::run_lsgd_net(&m, &topo, steps, &cfg, SEED).unwrap(), steps)
+        - des::per_step(&des::run_lsgd(&m, &topo, steps), steps);
+    let tax_c = des::per_step(&des::run_csgd_net(&m, &topo, steps, &cfg, SEED).unwrap(), steps)
+        - des::per_step(&des::run_csgd(&m, &topo, steps), steps);
+    assert!(tax_l > 0.0 && tax_c > 0.0, "jitter must cost both schedules");
+    assert!(
+        tax_l < tax_c,
+        "LSGD packet tax {tax_l} should undercut CSGD's {tax_c}"
+    );
+}
+
+#[test]
+fn reordering_and_chunking_stretch_the_makespan() {
+    let m = ClusterModel::paper_k80();
+    let topo = Topology::new(8, 4).unwrap();
+    let steps = 4;
+    let base = des::run_lsgd_net(&m, &topo, steps, &packet(0.0, 0.0, 1), SEED)
+        .unwrap()
+        .makespan;
+    let reordered = des::run_lsgd_net(&m, &topo, steps, &packet(0.0, 0.3, 1), SEED).unwrap();
+    assert!(reordered.makespan > base, "reordering must delay deliveries");
+    assert!(reordered.net.iter().any(|s| s.reordered > 0));
+    let chunked = des::run_lsgd_net(&m, &topo, steps, &packet(0.0, 0.0, 4), SEED)
+        .unwrap()
+        .makespan;
+    assert!(chunked > base, "chunk serialization pays one extra α per sub-message");
+}
+
+#[test]
+fn perturbation_factors_scale_per_message_delays() {
+    // a slow communicator class stretches every message of its group's
+    // collectives — packet and closed form agree on the aggregate when
+    // jitter is off, so the factor provably acted on the messages
+    let m = ClusterModel::paper_k80();
+    let topo = Topology::new(8, 4).unwrap();
+    let steps = 4;
+    let mut closed = PerturbConfig::default();
+    closed.comm_hetero = 0.5;
+    closed.parse_link_degrade("1@1..3x3").unwrap();
+    let mut pkt = closed.clone();
+    pkt.net = packet(0.0, 0.0, 1);
+    let a = des::run_lsgd_perturbed(&m, &topo, steps, &closed).unwrap();
+    let b = des::run_lsgd_perturbed(&m, &topo, steps, &pkt).unwrap();
+    assert!(
+        (a.makespan - b.makespan).abs() < 1e-9,
+        "factor-scaled packet replay {} vs scaled closed form {}",
+        b.makespan,
+        a.makespan
+    );
+    let ca = des::run_csgd_perturbed(&m, &topo, steps, &closed).unwrap();
+    let cb = des::run_csgd_perturbed(&m, &topo, steps, &pkt).unwrap();
+    assert!((ca.makespan - cb.makespan).abs() < 1e-9);
+}

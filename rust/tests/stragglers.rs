@@ -21,12 +21,20 @@
 //!  (d) communicator-side injected delays match the seeded schedule
 //!      exactly, and slow communicators tax LSGD while leaving CSGD's
 //!      DES prediction untouched.
+//!
+//! Acceptance (ISSUE 4):
+//!  (e) packet-level net emulation on the real engine applies the
+//!      seeded per-message schedule exactly (injected totals and
+//!      message counts reconstructible from the model alone), stays
+//!      bitwise-reproducible, and — because the draws live in their
+//!      own `perturb::domain::NET` tag — never shifts the existing
+//!      worker/communicator/link schedules.
 
 use lsgd::config::{Algo, ExperimentConfig};
 use lsgd::metrics::RegroupKind;
 use lsgd::runtime::Engine;
 use lsgd::sched::{ExecMode, RunOptions, Trainer};
-use lsgd::simnet::{des, ClusterModel, PerturbConfig};
+use lsgd::simnet::{des, net, AllreduceAlgo, ClusterModel, NetModel, PerturbConfig};
 use lsgd::topology::{Topology, WorkerId};
 
 fn engine() -> Engine {
@@ -431,6 +439,101 @@ fn out_of_range_fail_and_rejoin_specs_are_hard_errors() {
     p.parse_rejoins("1@2").unwrap();
     let mut t = Trainer::new(&e, cfg(2, 2, 3, Algo::Lsgd), false).unwrap();
     assert!(t.run_perturbed(RunOptions::parallel(), &p).is_err());
+}
+
+// ------------------------------------------------------ acceptance (e)
+
+#[test]
+fn engine_net_injected_delays_match_seeded_schedule_exactly() {
+    // the packet emulation applies the exact per-lane schedule the
+    // model prescribes: the injected totals, message counts and
+    // reorder counts are all reconstructible from PerturbConfig alone
+    let steps = 5;
+    let (groups, workers) = (2usize, 2usize);
+    let mut p = PerturbConfig::default();
+    p.net.model = NetModel::Packet;
+    p.net.jitter = 0.6;
+    p.net.reorder = 0.2;
+    p.delay_unit = 0.002;
+    let c = cfg(groups, workers, steps, Algo::Lsgd);
+    let r = run(&c, &p);
+    let mut want = 0.0_f64;
+    let mut want_msgs = 0u64;
+    let mut want_reordered = 0u64;
+    // the engine's lane schedule follows the configured allreduce
+    // algorithm (ExperimentConfig::default is the paper's ring)
+    let algo = AllreduceAlgo::Ring;
+    for g in 0..groups {
+        let mut lane = 0.0_f64;
+        for s in 0..steps {
+            lane += p.net_injected_delay(g, s, groups, algo, net::Phase::GlobalAllreduce);
+            let ex =
+                net::lane_excess(&p.net, p.seed, algo, net::Phase::GlobalAllreduce, s, groups, g);
+            want_msgs += ex.messages;
+            want_reordered += ex.reordered;
+        }
+        want += lane;
+    }
+    assert!(want > 0.0, "seed produced no per-message delays");
+    assert_eq!(r.timers.total("net_injected_delay"), want);
+    assert_eq!(r.perturb.net.len(), 1);
+    let stats = &r.perturb.net[0];
+    assert_eq!(stats.phase, "global_allreduce");
+    // each of the G lanes sends 2(G−1) messages per step
+    assert_eq!(stats.messages, (steps * groups * 2 * (groups - 1)) as u64);
+    assert_eq!(stats.messages, want_msgs);
+    assert_eq!(stats.reordered, want_reordered);
+    assert_eq!(stats.delay_total, want);
+    assert!(stats.delay_max > 0.0 && stats.delay_max <= stats.delay_total);
+    // bitwise reproducibility of the whole run
+    let b = run(&c, &p);
+    assert_eq!(r.step_checksums, b.step_checksums, "sleeps never touch numerics");
+    assert_eq!(r.perturb.net, b.perturb.net);
+    // CSGD lanes emulate the flat collective (no communicator layer)
+    let rc = run(&cfg(groups, workers, steps, Algo::Csgd), &p);
+    assert_eq!(rc.perturb.net.len(), 1);
+    assert_eq!(rc.perturb.net[0].phase, "allreduce");
+    assert!(rc.perturb.net[0].delay_total > 0.0);
+}
+
+#[test]
+fn net_jitter_does_not_shift_existing_engine_schedules() {
+    // domain separation end-to-end: enabling packet jitter must leave
+    // the seeded worker-straggle and communicator schedules — and the
+    // trajectory — untouched (NET is its own draw domain)
+    let steps = 5;
+    let mut without = PerturbConfig::default();
+    without.straggle_prob = 0.4;
+    without.straggle_factor = 3.0;
+    without.comm_straggle_prob = 0.4;
+    without.comm_straggle_factor = 2.0;
+    without.hetero = 0.3;
+    without.delay_unit = 0.002;
+    let mut with = without.clone();
+    with.net.model = NetModel::Packet;
+    with.net.jitter = 0.8;
+    with.net.reorder = 0.3;
+    let c = cfg(2, 2, steps, Algo::Lsgd);
+    let a = run(&c, &without);
+    let b = run(&c, &with);
+    assert_eq!(a.perturb.injected_per_worker, b.perturb.injected_per_worker);
+    assert_eq!(a.perturb.comm_injected_per_group, b.perturb.comm_injected_per_group);
+    assert_eq!(a.step_checksums, b.step_checksums);
+    assert!(a.perturb.net.is_empty(), "closed-form run must report no messages");
+    assert!(b.perturb.net[0].delay_total > 0.0, "packet run must inject something");
+}
+
+#[test]
+fn serial_engine_rejects_net_emulation() {
+    let e = engine();
+    let mut p = PerturbConfig::default();
+    p.net.model = NetModel::Packet;
+    let mut t = Trainer::new(&e, cfg(2, 2, 2, Algo::Lsgd), false).unwrap();
+    let r = t.run_perturbed(
+        RunOptions { lsgd: Default::default(), mode: ExecMode::Serial },
+        &p,
+    );
+    assert!(r.is_err(), "serial engine must reject packet-level emulation");
 }
 
 #[test]
