@@ -1,0 +1,73 @@
+//! Bench guard: shared-fabric contention pricing must stay cheap
+//! enough to fair-share every round of a packet DES step.
+//!
+//! Two hot paths: `fabric::max_min_rates` (the water-filling solve —
+//! called once per replayed round) and the routed DES steps, where the
+//! 256-rank flat ring is the worst case (510 rounds × 256 flows ×
+//! progressive filling each). The `*_2tier_step` rows replay whole DES
+//! steps contended (oversub 2) so a regression in the allocator, the
+//! route builders, or the per-round `run_flows` loop shows up where it
+//! is actually paid — contrast with the uncontended `netsim/*_step`
+//! rows, which replay the same schedules on private links. Ceilings
+//! live in `benches/baseline.json`, enforced by CI's `bench-smoke`
+//! job.
+//!
+//! Run: `cargo bench --bench fabric`
+
+use lsgd::simnet::{
+    des, fabric, ClusterModel, FabricConfig, FabricModel, NetConfig, NetModel, PerturbConfig,
+};
+use lsgd::topology::Topology;
+use lsgd::util::bench::{enforce_baseline_from_env, smoke_mode, Harness};
+
+fn two_tier(oversub: f64) -> FabricConfig {
+    FabricConfig { model: FabricModel::TwoTier, oversub }
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    let mut h = if smoke { Harness::quick() } else { Harness::default() };
+    println!("# fabric — shared-fabric contention hot path");
+
+    let m = ClusterModel::paper_k80();
+    let topo = Topology::new(64, 4).unwrap();
+
+    // allocator throughput: one max–min solve of the 256-rank flat
+    // ring's flow set over the 64-group graph (the per-round cost of
+    // the contended CSGD replay)
+    let sizes = vec![4usize; 64];
+    let fab = fabric::Fabric::two_tier(&sizes, 2.0);
+    let flows = fab.flat_allreduce_flows(&sizes, 1.0);
+    let routes: Vec<Vec<usize>> = flows.iter().map(|f| f.route.clone()).collect();
+    h.bench("fabric/maxmin/64g_256flows", || {
+        fabric::max_min_rates(fab.caps(), &routes)
+    });
+
+    // contended closed-form DES steps (oversub 2): the LSGD row routes
+    // the communicator ring, the CSGD row the full 256-rank flat ring
+    let fabcfg = two_tier(2.0);
+    h.bench("fabric/lsgd_2tier_step/64x4x3", || {
+        des::run_lsgd_fabric(&m, &topo, 3, &fabcfg).unwrap().makespan
+    });
+    h.bench("fabric/csgd_2tier_step/64x4x3", || {
+        des::run_csgd_fabric(&m, &topo, 3, &fabcfg).unwrap().makespan
+    });
+
+    // contended packet steps: fair-sharing plus the seeded per-message
+    // draws — the uncontended twins live in benches/netsim.rs
+    let mut p = PerturbConfig::default();
+    p.net = NetConfig { model: NetModel::Packet, jitter: 0.2, reorder: 0.05, chunk: 1 };
+    p.fabric = two_tier(2.0);
+    h.bench("fabric/lsgd_packet_2tier_step/64x4x3", || {
+        des::run_lsgd_perturbed(&m, &topo, 3, &p).unwrap().makespan
+    });
+    h.bench("fabric/csgd_packet_2tier_step/64x4x3", || {
+        des::run_csgd_perturbed(&m, &topo, 3, &p).unwrap().makespan
+    });
+
+    println!("\n{}", h.csv());
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/BENCH_fabric.json", h.json()).unwrap();
+    println!("→ bench_results/BENCH_fabric.json");
+    enforce_baseline_from_env(&h.results);
+}

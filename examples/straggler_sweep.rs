@@ -1,34 +1,29 @@
 //! Straggler sweep: the "LSGD degrades gracefully vs CSGD" curve.
 //!
-//! Part 1 sweeps straggler probability on the calibrated cluster model
-//! (DES, paper fabric): CSGD pays the slowest rank's compute AND I/O
-//! extension serially every step, while LSGD absorbs part of the I/O
-//! extension into its allreduce overlap window — so its absolute
-//! per-step straggler tax stays smaller and its throughput lead widens.
+//! The sweep is a table of parts, each a self-contained demo over the
+//! shared context (calibrated cluster model, topology, engine):
 //!
-//! Part 2 runs the *real* thread-per-rank engine with seeded injected
-//! delays and prints the measured phase accounting (injected straggle,
-//! communicator wait, hidden I/O).
-//!
-//! Part 3 demonstrates elastic fail-stop recovery: a worker dies
-//! mid-run, the survivors regroup and re-shard, and two identical runs
-//! produce bitwise-identical trajectories.
-//!
-//! Part 4 plots the *recovery curve* (DES): a whole group dies, the
-//! cluster runs degraded, then the group rejoins — per-step relative
-//! throughput dips and returns, for LSGD vs CSGD, and the final
-//! membership is bit-identical to the launch layout.
-//!
-//! Part 5 flips the perturbation to the communicator side: slow
-//! communicators tax LSGD's extra layer while CSGD (no communicators)
-//! is untouched — the trade the slow-worker parts 1–3 mirror.
-//!
-//! Part 6 swaps the α+β closed forms for packet-level message
-//! emulation (`--net-model packet`) and sweeps the per-message jitter
-//! tail: at jitter 0 the two models agree to float precision, and the
-//! growing gap shows where aggregate cost formulas stop being
-//! trustworthy — per-round max-of-p tails that no mean-rate α+β term
-//! can see.
+//! 1. **DES straggler sweep** — CSGD pays the slowest rank's compute
+//!    AND I/O extension serially every step, while LSGD absorbs part
+//!    of the I/O extension into its allreduce overlap window.
+//! 2. **Real engine accounting** — the thread-per-rank engine with
+//!    seeded injected delays: measured injected straggle, communicator
+//!    wait, hidden I/O.
+//! 3. **Fail-stop** — a worker dies mid-run, survivors regroup, and
+//!    two identical runs produce bitwise-identical trajectories.
+//! 4. **Recovery curve** (DES) — a whole group dies, the cluster runs
+//!    degraded, the group rejoins; relative throughput dips and
+//!    returns, final membership bit-identical to launch.
+//! 5. **Slow communicators** — the mirror regime: LSGD's extra layer
+//!    pays, CSGD (no communicators) is untouched.
+//! 6. **Packet emulation vs α+β** — at jitter 0 the message replay IS
+//!    the closed form; the growing gap is the per-round tail no
+//!    mean-rate α+β term can see.
+//! 7. **Spine oversubscription** (shared fabric, `--fabric 2tier`) —
+//!    step time vs oversubscription factor for LSGD vs CSGD, with the
+//!    spine-saturation knee (`oversub ≈ t_io / t_g`) annotated: below
+//!    it LSGD's overlap window still hides the stretched spine, above
+//!    it the fabric surfaces in every step.
 //!
 //! ```bash
 //! cargo run --release --example straggler_sweep -- --steps 6
@@ -38,9 +33,46 @@ use anyhow::Result;
 use lsgd::config::{Algo, ExperimentConfig};
 use lsgd::runtime::Engine;
 use lsgd::sched::{RunOptions, Trainer};
-use lsgd::simnet::{des, ClusterModel, NetModel, PerturbConfig};
+use lsgd::simnet::{self, des, ClusterModel, FabricConfig, FabricModel, NetModel, PerturbConfig};
 use lsgd::topology::Topology;
 use lsgd::util::cli::Args;
+
+/// Shared inputs every part reads.
+struct Ctx {
+    m: ClusterModel,
+    topo: Topology,
+    groups: usize,
+    workers: usize,
+    steps: usize,
+    factor: f64,
+    engine: Engine,
+}
+
+impl Ctx {
+    /// The tiny 2x2 config the real-engine parts train on.
+    fn engine_cfg(&self, algo: Algo) -> ExperimentConfig {
+        let mut c = ExperimentConfig::default();
+        c.algo = algo;
+        c.topology = Topology::new(2, 2).unwrap();
+        c.steps = 6;
+        c.data.train_samples = 512;
+        c.data.val_samples = 64;
+        c.data.io_latency = 0.004;
+        c
+    }
+}
+
+/// The sweep's parts: title + driver, table-driven so adding a part is
+/// one row, not another hand-numbered block.
+const PARTS: &[(&str, fn(&Ctx) -> Result<()>)] = &[
+    ("DES straggler sweep: workers", part1_worker_stragglers),
+    ("thread-per-rank engine: measured straggle accounting (2x2 tiny)", part2_engine),
+    ("fail-stop: worker 1 dies before step 3, survivors regroup", part3_failstop),
+    ("DES recovery curve: fail, run degraded, rejoin", part4_recovery),
+    ("slow communicators: LSGD's extra layer as the liability", part5_comm),
+    ("packet-level network emulation vs the α+β closed forms", part6_packet),
+    ("step time vs spine oversubscription: the shared-fabric knee", part7_oversub),
+];
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -51,13 +83,30 @@ fn main() -> Result<()> {
     let factor = a.f64_or("factor", 2.0)?;
     a.finish()?;
 
-    // -- Part 1: DES sweep on the paper's cluster ---------------------
-    let m = ClusterModel::paper_k80();
-    let topo = Topology::new(groups, workers)?;
-    let base_l = des::per_step(&des::run_lsgd(&m, &topo, steps), steps);
-    let base_c = des::per_step(&des::run_csgd(&m, &topo, steps), steps);
+    let ctx = Ctx {
+        m: ClusterModel::paper_k80(),
+        topo: Topology::new(groups, workers)?,
+        groups,
+        workers,
+        steps,
+        factor,
+        engine: Engine::host("tiny")?,
+    };
+    for (i, (title, run_part)) in PARTS.iter().enumerate() {
+        println!("== Part {}: {title} ==", i + 1);
+        run_part(&ctx)?;
+        println!();
+    }
+    println!("straggler_sweep OK");
+    Ok(())
+}
+
+fn part1_worker_stragglers(c: &Ctx) -> Result<()> {
+    let base_l = des::per_step(&des::run_lsgd(&c.m, &c.topo, c.steps), c.steps);
+    let base_c = des::per_step(&des::run_csgd(&c.m, &c.topo, c.steps), c.steps);
     println!(
-        "== DES sweep: {groups}x{workers}, straggle factor {factor}x, {steps} steps/point =="
+        "  {}x{}, straggle factor {}x, {} steps/point",
+        c.groups, c.workers, c.factor, c.steps
     );
     println!(
         "{:>6} {:>10} {:>10} {:>10} {:>10} {:>8}",
@@ -67,16 +116,16 @@ fn main() -> Result<()> {
     for prob in [0.0, 0.05, 0.1, 0.2, 0.3, 0.5] {
         let mut p = PerturbConfig::default();
         p.straggle_prob = prob;
-        p.straggle_factor = factor;
-        let l = des::per_step(&des::run_lsgd_perturbed(&m, &topo, steps, &p)?, steps);
-        let c = des::per_step(&des::run_csgd_perturbed(&m, &topo, steps, &p)?, steps);
+        p.straggle_factor = c.factor;
+        let l = des::per_step(&des::run_lsgd_perturbed(&c.m, &c.topo, c.steps, &p)?, c.steps);
+        let cs = des::per_step(&des::run_csgd_perturbed(&c.m, &c.topo, c.steps, &p)?, c.steps);
         println!(
-            "{prob:>6.2} {l:>10.3} {c:>10.3} {:>10.3} {:>10.3} {:>8.3}",
+            "{prob:>6.2} {l:>10.3} {cs:>10.3} {:>10.3} {:>10.3} {:>8.3}",
             l - base_l,
-            c - base_c,
-            c / l
+            cs - base_c,
+            cs / l
         );
-        last = Some((l - base_l, c - base_c));
+        last = Some((l - base_l, cs - base_c));
     }
     let (tax_l, tax_c) = last.unwrap();
     // structural guarantee: the LSGD critical chain pays its group's
@@ -86,27 +135,17 @@ fn main() -> Result<()> {
         tax_l <= tax_c + 1e-9,
         "LSGD's absolute straggler tax ({tax_l:.3}s) should undercut CSGD's ({tax_c:.3}s)"
     );
-    println!("→ LSGD degrades gracefully: smaller absolute tax, widening throughput lead\n");
+    println!("→ LSGD degrades gracefully: smaller absolute tax, widening throughput lead");
+    Ok(())
+}
 
-    // -- Part 2: real engine, measured phase accounting ---------------
-    println!("== thread-per-rank engine: measured straggle accounting (2x2 tiny) ==");
-    let engine = Engine::host("tiny")?;
-    let mk_cfg = |algo: Algo| {
-        let mut c = ExperimentConfig::default();
-        c.algo = algo;
-        c.topology = Topology::new(2, 2).unwrap();
-        c.steps = 6;
-        c.data.train_samples = 512;
-        c.data.val_samples = 64;
-        c.data.io_latency = 0.004;
-        c
-    };
+fn part2_engine(c: &Ctx) -> Result<()> {
     let mut p = PerturbConfig::default();
     p.straggle_prob = 0.5;
     p.straggle_factor = 4.0;
     p.delay_unit = 0.004;
     for algo in [Algo::Lsgd, Algo::Csgd] {
-        let mut t = Trainer::new(&engine, mk_cfg(algo), false)?;
+        let mut t = Trainer::new(&c.engine, c.engine_cfg(algo), false)?;
         let r = t.run_perturbed(RunOptions::parallel(), &p)?;
         println!(
             "  {algo}: injected {:.3}s, communicator wait {:.3}s, hidden I/O {:.3}s",
@@ -115,13 +154,14 @@ fn main() -> Result<()> {
             r.hidden_io_secs
         );
     }
+    Ok(())
+}
 
-    // -- Part 3: fail-stop + elastic regroup, twice -------------------
-    println!("\n== fail-stop: worker 1 dies before step 3, survivors regroup ==");
+fn part3_failstop(c: &Ctx) -> Result<()> {
     let mut p = PerturbConfig::default();
     p.parse_failures("1@3")?;
     let run_once = || -> Result<(Vec<u64>, usize)> {
-        let mut t = Trainer::new(&engine, mk_cfg(Algo::Lsgd), false)?;
+        let mut t = Trainer::new(&c.engine, c.engine_cfg(Algo::Lsgd), false)?;
         let r = t.run_perturbed(RunOptions::parallel(), &p)?;
         for ev in &r.perturb.regroups {
             println!(
@@ -136,25 +176,30 @@ fn main() -> Result<()> {
     assert_eq!(regroups, 1);
     assert_eq!(sums_a, sums_b, "seeded fail-stop runs must be bitwise-identical");
     println!("→ two identical runs, bitwise-equal trajectories across the regroup");
+    Ok(())
+}
 
-    // -- Part 4: recovery curve — fail, run degraded, rejoin (DES) ----
-    anyhow::ensure!(groups >= 2, "the recovery curve needs at least 2 groups");
+fn part4_recovery(c: &Ctx) -> Result<()> {
+    anyhow::ensure!(c.groups >= 2, "the recovery curve needs at least 2 groups");
     let steps4 = 10usize;
     let (fail_at, rejoin_at) = (3usize, 7usize);
     println!(
-        "\n== DES recovery curve: group {} dies @{fail_at}, rejoins @{rejoin_at} ({groups}x{workers}) ==",
-        groups - 1
+        "  group {} dies @{fail_at}, rejoins @{rejoin_at} ({}x{})",
+        c.groups - 1,
+        c.groups,
+        c.workers
     );
-    let lo = (groups - 1) * workers;
+    let lo = (c.groups - 1) * c.workers;
     let mut p = PerturbConfig::default();
-    let fails: Vec<String> = (lo..lo + workers).map(|w| format!("{w}@{fail_at}")).collect();
-    let rejoins: Vec<String> = (lo..lo + workers).map(|w| format!("{w}@{rejoin_at}")).collect();
+    let fails: Vec<String> = (lo..lo + c.workers).map(|w| format!("{w}@{fail_at}")).collect();
+    let rejoins: Vec<String> =
+        (lo..lo + c.workers).map(|w| format!("{w}@{rejoin_at}")).collect();
     p.parse_failures(&fails.join(","))?;
     p.parse_rejoins(&rejoins.join(","))?;
-    let n_full = (groups * workers) as f64;
+    let n_full = (c.groups * c.workers) as f64;
     let alive_at = |s: usize| {
         if (fail_at..rejoin_at).contains(&s) {
-            n_full - workers as f64
+            n_full - c.workers as f64
         } else {
             n_full
         }
@@ -172,10 +217,10 @@ fn main() -> Result<()> {
             })
             .collect()
     };
-    let rl = des::run_lsgd_perturbed(&m, &topo, steps4, &p)?;
-    let rc = des::run_csgd_perturbed(&m, &topo, steps4, &p)?;
-    let base_dt_l = des::per_step(&des::run_lsgd(&m, &topo, steps4), steps4);
-    let base_dt_c = des::per_step(&des::run_csgd(&m, &topo, steps4), steps4);
+    let rl = des::run_lsgd_perturbed(&c.m, &c.topo, steps4, &p)?;
+    let rc = des::run_csgd_perturbed(&c.m, &c.topo, steps4, &p)?;
+    let base_dt_l = des::per_step(&des::run_lsgd(&c.m, &c.topo, steps4), steps4);
+    let base_dt_c = des::per_step(&des::run_csgd(&c.m, &c.topo, steps4), steps4);
     let (el, ec) = (step_ends(&rl), step_ends(&rc));
     println!("{:>6} {:>7} {:>10} {:>10}", "step", "alive", "lsgd_thr", "csgd_thr");
     for s in 0..steps4 {
@@ -194,22 +239,24 @@ fn main() -> Result<()> {
         assert_eq!(r.regroups.len(), 2);
         assert_eq!(
             r.regroups[1].membership_checksum,
-            topo.membership().checksum(),
+            c.topo.membership().checksum(),
             "rejoin must restore the launch layout bit-for-bit"
         );
     }
     println!("→ throughput dips while degraded, recovers after the rejoin;");
     println!("  final membership identical to the launch layout (checksum match)");
+    Ok(())
+}
 
-    // -- Part 5: slow communicators — LSGD's layer as the liability ---
+fn part5_comm(c: &Ctx) -> Result<()> {
     let mut p = PerturbConfig::default();
     p.comm_straggle_prob = 0.3;
     p.comm_straggle_factor = 3.0;
-    let tax_l = des::per_step(&des::run_lsgd_perturbed(&m, &topo, steps, &p)?, steps)
-        - des::per_step(&des::run_lsgd(&m, &topo, steps), steps);
-    let tax_c = des::per_step(&des::run_csgd_perturbed(&m, &topo, steps, &p)?, steps)
-        - des::per_step(&des::run_csgd(&m, &topo, steps), steps);
-    println!("\n== slow communicators (p=0.3, 3x): per-step tax ==");
+    let tax_l = des::per_step(&des::run_lsgd_perturbed(&c.m, &c.topo, c.steps, &p)?, c.steps)
+        - des::per_step(&des::run_lsgd(&c.m, &c.topo, c.steps), c.steps);
+    let tax_c = des::per_step(&des::run_csgd_perturbed(&c.m, &c.topo, c.steps, &p)?, c.steps)
+        - des::per_step(&des::run_csgd(&c.m, &c.topo, c.steps), c.steps);
+    println!("  slow communicators (p=0.3, 3x): per-step tax");
     println!("  lsgd {tax_l:+.3}s   csgd {tax_c:+.3}s");
     assert!(tax_l > 0.0, "slow communicators must cost LSGD something");
     assert!(
@@ -217,11 +264,13 @@ fn main() -> Result<()> {
         "CSGD has no communicator layer to slow down (tax {tax_c})"
     );
     println!("→ the mirror regime: LSGD pays for its extra layer, CSGD doesn't");
+    Ok(())
+}
 
-    // -- Part 6: packet-level emulation vs the α+β closed forms -------
-    println!(
-        "\n== packet-level network emulation: per-step time vs per-message jitter ({groups}x{workers}) =="
-    );
+fn part6_packet(c: &Ctx) -> Result<()> {
+    let base_l = des::per_step(&des::run_lsgd(&c.m, &c.topo, c.steps), c.steps);
+    let base_c = des::per_step(&des::run_csgd(&c.m, &c.topo, c.steps), c.steps);
+    println!("  per-step time vs per-message jitter ({}x{})", c.groups, c.workers);
     println!(
         "{:>8} {:>10} {:>10} {:>9} {:>10} {:>10} {:>9}",
         "jitter", "lsgd_ab", "lsgd_pkt", "drift_l%", "csgd_ab", "csgd_pkt", "drift_c%"
@@ -232,24 +281,27 @@ fn main() -> Result<()> {
         let mut p = PerturbConfig::default();
         p.net.model = NetModel::Packet;
         p.net.jitter = jitter;
-        let l = des::per_step(&des::run_lsgd_perturbed(&m, &topo, steps, &p)?, steps);
-        let c = des::per_step(&des::run_csgd_perturbed(&m, &topo, steps, &p)?, steps);
+        let l = des::per_step(&des::run_lsgd_perturbed(&c.m, &c.topo, c.steps, &p)?, c.steps);
+        let cs = des::per_step(&des::run_csgd_perturbed(&c.m, &c.topo, c.steps, &p)?, c.steps);
         last_tax_l = l - base_l;
-        last_tax_c = c - base_c;
+        last_tax_c = cs - base_c;
         println!(
-            "{jitter:>8.2} {base_l:>10.3} {l:>10.3} {:>8.2}% {base_c:>10.3} {c:>10.3} {:>8.2}%",
+            "{jitter:>8.2} {base_l:>10.3} {l:>10.3} {:>8.2}% {base_c:>10.3} {cs:>10.3} {:>8.2}%",
             100.0 * last_tax_l / base_l,
             100.0 * last_tax_c / base_c
         );
         if jitter == 0.0 {
             // convergence: the message replay IS the closed form here
             assert!(
-                (l - base_l).abs() < 1e-6 && (c - base_c).abs() < 1e-6,
+                (l - base_l).abs() < 1e-6 && (cs - base_c).abs() < 1e-6,
                 "zero-jitter packet model must reproduce the α+β forms"
             );
         }
-        assert!(l >= prev_l - 1e-9 && c >= prev_c - 1e-9, "jitter tail must not shorten steps");
-        (prev_l, prev_c) = (l, c);
+        assert!(
+            l >= prev_l - 1e-9 && cs >= prev_c - 1e-9,
+            "jitter tail must not shorten steps"
+        );
+        (prev_l, prev_c) = (l, cs);
     }
     // the flat collective runs ~8x the rounds of the communicator
     // ring, so the same per-message tail degrades CSGD harder — and
@@ -262,6 +314,55 @@ fn main() -> Result<()> {
     println!("  underprices synchronous rounds once per-message jitter is real — the");
     println!("  packet model is the trustworthy one there (and LSGD's fewer rounds");
     println!("  keep its absolute tax below CSGD's)");
-    println!("straggler_sweep OK");
+    Ok(())
+}
+
+fn part7_oversub(c: &Ctx) -> Result<()> {
+    // fixed 16×4 topology: there t_g < t_io, so the spine-saturation
+    // knee (oversub ≈ t_io / t_g) sits inside the sweep instead of at
+    // its left edge
+    let topo = Topology::new(16, 4)?;
+    let steps = c.steps.max(3);
+    let base_l = des::per_step(&des::run_lsgd(&c.m, &topo, steps), steps);
+    let base_c = des::per_step(&des::run_csgd(&c.m, &topo, steps), steps);
+    let t_g = simnet::step_time_lsgd(&c.m, &topo).global_allreduce;
+    let knee = c.m.t_io / t_g;
+    println!(
+        "  16x4, LSGD hides the spine while oversub × t_g < t_io: knee ≈ {knee:.2} \
+         (t_g {t_g:.3}s, t_io {:.3}s)",
+        c.m.t_io
+    );
+    println!(
+        "{:>8} {:>10} {:>10} {:>10} {:>10}",
+        "oversub", "lsgd_s", "csgd_s", "tax_l", "tax_c"
+    );
+    let mut prev_l = 0.0_f64;
+    for oversub in [1.0, 1.5, 2.0, 3.0, 4.0, 6.0, 8.0] {
+        let fab = FabricConfig { model: FabricModel::TwoTier, oversub };
+        let l = des::per_step(&des::run_lsgd_fabric(&c.m, &topo, steps, &fab)?, steps);
+        let cs = des::per_step(&des::run_csgd_fabric(&c.m, &topo, steps, &fab)?, steps);
+        let marker = if oversub > knee { "   <- spine exposed" } else { "" };
+        println!(
+            "{oversub:>8.1} {l:>10.3} {cs:>10.3} {:>10.3} {:>10.3}{marker}",
+            l - base_l,
+            cs - base_c
+        );
+        assert!(l >= prev_l - 1e-9, "step time must be monotone in oversubscription");
+        prev_l = l;
+        assert!(
+            l - base_l <= cs - base_c + 1e-9,
+            "LSGD's contention tax must not exceed CSGD's"
+        );
+        if oversub < knee {
+            assert!(
+                (l - base_l).abs() < 1e-6,
+                "below the knee the overlap window hides the stretched spine (tax {})",
+                l - base_l
+            );
+        }
+    }
+    println!("→ LSGD is flat until the knee, then the spine surfaces in every step;");
+    println!("  CSGD pays the stretch from oversub 1 on — \"when does LSGD's overlap");
+    println!("  stop hiding the spine\" has a number now, and it is t_io / t_g");
     Ok(())
 }

@@ -55,6 +55,10 @@ SUBCOMMANDS:
             --net-jitter J       per-message delay tail amplitude
             --net-reorder R      per-message reorder probability
             --net-chunk C        sub-messages per transfer (serialization)
+            --fabric flat|2tier[:oversub]  route collectives over private
+                                 links (default, bit-identical to the
+                                 pre-fabric model) or a shared two-tier
+                                 graph with max-min fair-share contention
             --perturb-seed S --straggle-secs SECS (delay per 1x slowdown)
   audit     run CSGD and LSGD back-to-back, compare trajectories bitwise
             (same flags as train, plus --paper-literal)
@@ -68,6 +72,7 @@ SUBCOMMANDS:
             [--fail W@S[,..]] [--rejoin W@S[,..]] [--perturb-seed S]
             [--net-model closed|packet] [--net-jitter J]
             [--net-reorder R] [--net-chunk C]
+            [--fabric flat|2tier[:oversub]]
   config    dump | check [--file FILE]
   info      [--artifacts DIR]
 ";
@@ -103,18 +108,52 @@ fn parse_perturb(a: &Args) -> Result<PerturbConfig> {
     p.net.jitter = a.f64_or("net-jitter", p.net.jitter)?;
     p.net.reorder = a.f64_or("net-reorder", p.net.reorder)?;
     p.net.chunk = a.usize_or("net-chunk", p.net.chunk)?;
+    if let Some(spec) = a.opt_str("fabric") {
+        p.fabric = spec.parse()?;
+    }
     p.seed = a.u64_or("perturb-seed", p.seed)?;
     p.delay_unit = a.f64_or("straggle-secs", p.delay_unit)?;
     Ok(p)
 }
 
-/// One `net[phase] …` report line (train + simulate).
+/// Busiest-first `fabric[link] …` report lines (simulate).
+fn print_fabric_stats(links: &[lsgd::metrics::LinkStats]) {
+    let mut sorted: Vec<&lsgd::metrics::LinkStats> = links.iter().collect();
+    sorted.sort_by(|a, b| {
+        b.utilization
+            .partial_cmp(&a.utilization)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.link.cmp(&b.link))
+    });
+    for l in sorted.iter().take(8) {
+        println!(
+            "  fabric[{}]: busy {:.3}s, utilization {:.1}%",
+            l.link,
+            l.busy_secs,
+            100.0 * l.utilization
+        );
+    }
+    if sorted.len() > 8 {
+        println!("  fabric: … {} more links", sorted.len() - 8);
+    }
+}
+
+/// One `net[phase] …` report line (train + simulate). Fabric-routed
+/// phases append their fair-share contention next to the jitter
+/// excess.
 fn print_net_stats(stats: &[lsgd::metrics::NetPhaseStats]) {
     for n in stats {
-        println!(
+        let mut line = format!(
             "  net[{}]: {} msgs ({} reordered), excess delay {:.4}s total, {:.5}s worst message",
             n.phase, n.messages, n.reordered, n.delay_total, n.delay_max
         );
+        if n.worst_flow_slowdown > 0.0 {
+            line.push_str(&format!(
+                ", contention {:.4}s (worst flow ×{:.2})",
+                n.contention_delay, n.worst_flow_slowdown
+            ));
+        }
+        println!("{line}");
     }
 }
 
@@ -237,6 +276,17 @@ fn cmd_train(rest: &[String]) -> Result<()> {
             result.perturb.wait_total(),
             result.perturb.comm_injected_total()
         );
+        // one report entry per (segment, lane): regroups re-spawn the
+        // lanes, so the entry count is NOT the group count — report the
+        // configured fabric, not a stretch inferred from it
+        if !result.perturb.fabric_injected_per_group.is_empty() {
+            println!(
+                "  fabric contention: injected {:.3}s over {} lane-segments (2tier, oversub {:.2})",
+                result.perturb.fabric_injected_total(),
+                result.perturb.fabric_injected_per_group.len(),
+                perturb.fabric.oversub
+            );
+        }
         for ev in &result.perturb.regroups {
             print_regroup(ev);
         }
@@ -430,6 +480,7 @@ fn cmd_simulate(rest: &[String]) -> Result<()> {
             print_regroup(ev);
         }
         print_net_stats(&r.net);
+        print_fabric_stats(&r.fabric);
     }
     // print the first step's timeline
     let mut spans: Vec<_> = r.spans.iter().filter(|s| s.step == 0).collect();

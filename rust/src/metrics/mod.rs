@@ -132,6 +132,32 @@ pub struct NetPhaseStats {
     pub delay_total: f64,
     /// Worst single-message excess delay (seconds) — the tail.
     pub delay_max: f64,
+    /// Total excess attributable to shared-fabric contention
+    /// ([`crate::simnet::fabric`]): fair-share time minus private-link
+    /// time, summed over the phase's flows. `0` under the flat fabric
+    /// — contention is accounted separately from jitter
+    /// (`delay_total`), so each knob's tax stays reconstructible.
+    pub contention_delay: f64,
+    /// Worst fair-share slowdown any of the phase's flows saw
+    /// (`finish / service`; `≥ 1` once a fabric run happened, `0`
+    /// when none did).
+    pub worst_flow_slowdown: f64,
+}
+
+/// Per-link utilization of a shared-fabric run
+/// ([`crate::simnet::fabric::Fabric`]): how many seconds of
+/// capacity-normalized work the link carried, and the busy fraction of
+/// the run's makespan. Surfaced by [`crate::simnet::des::DesResult`]
+/// for `--fabric 2tier` replays — the spine row is where the
+/// oversubscription knee shows up.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LinkStats {
+    /// Link label (`spine`, `up[g]`, `down[g]`, `nic_out[g.s]`, …).
+    pub link: String,
+    /// Carried work divided by capacity (seconds busy).
+    pub busy_secs: f64,
+    /// `busy_secs / makespan`, capped at 1.
+    pub utilization: f64,
 }
 
 /// Straggler / fault accounting for one run of the thread-per-rank
@@ -155,6 +181,11 @@ pub struct PerturbReport {
     /// Packet-level network emulation accounting, one entry per phase
     /// (empty when the closed-form model is active).
     pub net: Vec<NetPhaseStats>,
+    /// `(group index, total injected fabric-contention delay seconds)`
+    /// — the deterministic two-tier fair-share schedule
+    /// ([`crate::simnet::perturb::PerturbConfig::fabric_injected_delay`])
+    /// as applied per global-fold lane. Empty under the flat fabric.
+    pub fabric_injected_per_group: Vec<(usize, f64)>,
 }
 
 impl PerturbReport {
@@ -176,6 +207,11 @@ impl PerturbReport {
     /// Total packet-level excess delay across phases (seconds).
     pub fn net_delay_total(&self) -> f64 {
         self.net.iter().map(|n| n.delay_total).sum()
+    }
+
+    /// Total injected fabric-contention delay across lanes (seconds).
+    pub fn fabric_injected_total(&self) -> f64 {
+        self.fabric_injected_per_group.iter().map(|(_, s)| s).sum()
     }
 }
 
@@ -348,6 +384,9 @@ mod tests {
         };
         r.net = vec![net_phase("global_allreduce", 0.5), net_phase("local_reduce", 0.25)];
         assert_eq!(r.net_delay_total(), 0.75);
+        assert_eq!(r.fabric_injected_total(), 0.0);
+        r.fabric_injected_per_group = vec![(0, 0.5), (1, 0.25)];
+        assert_eq!(r.fabric_injected_total(), 0.75);
     }
 
     #[test]

@@ -55,6 +55,16 @@
 //!   DES global-allreduce key stream, so the engine and the simulator
 //!   delay the *same messages* (phase `net_injected_delay`, per-phase
 //!   totals in [`crate::metrics::PerturbReport::net`]).
+//! * **shared-fabric contention** — with `--fabric 2tier[:oversub]`
+//!   each global-fold lane additionally sleeps
+//!   [`PerturbConfig::fabric_injected_delay`]: the deterministic
+//!   max–min fair-share stretch every spine-crossing lane pays in the
+//!   DES's routed replay ([`crate::simnet::fabric`]), at `delay_unit`
+//!   per 1× of slowdown per message slot. No seeded draws are
+//!   consumed, so enabling the fabric can never shift the
+//!   worker/communicator/link/NET schedules (phase
+//!   `fabric_injected_delay`, per-lane totals in
+//!   [`crate::metrics::PerturbReport::fabric_injected_per_group`]).
 //! * **fail-stop faults and rejoins** — the run is split into
 //!   *segments* at the membership-change boundaries. Each segment runs
 //!   the full channel web over the current [`Membership`]; at a
@@ -170,6 +180,10 @@ struct Acc {
     /// (group index within its segment's membership, injected
     /// communicator-delay seconds).
     comm_injected: Vec<(usize, f64)>,
+    /// (group index within its segment's membership, injected
+    /// shared-fabric contention seconds) — the deterministic two-tier
+    /// fair-share schedule, per global-fold lane.
+    fabric_injected: Vec<(usize, f64)>,
     regroups: Vec<RegroupEvent>,
     /// Packet-level emulation totals across lanes and segments
     /// (injected wall-clock seconds; `phase` filled at report time).
@@ -201,6 +215,7 @@ fn run(
         injected: vec![0.0; n_workers],
         waits: Vec::new(),
         comm_injected: Vec::new(),
+        fabric_injected: Vec::new(),
         regroups: Vec::new(),
         net: NetPhaseStats::default(),
     };
@@ -246,6 +261,11 @@ fn run(
             injected_per_worker: acc.injected.iter().copied().enumerate().collect(),
             wait_per_group: acc.waits,
             comm_injected_per_group: acc.comm_injected,
+            fabric_injected_per_group: if perturb.fabric.is_flat() {
+                Vec::new()
+            } else {
+                acc.fabric_injected
+            },
             regroups: acc.regroups,
             net: if perturb.net.is_packet() {
                 vec![NetPhaseStats {
@@ -397,10 +417,11 @@ fn run_segment(
             let my_partial_tx = partial_tx.clone();
             let wpg = sizes[group];
             let seg = range.clone();
-            comm_handles.push(s.spawn(move || -> (PhaseTimers, f64, f64, NetPhaseStats) {
+            comm_handles.push(s.spawn(move || -> (PhaseTimers, f64, f64, f64, NetPhaseStats) {
                 let mut tm = PhaseTimers::new();
                 let mut wait_total = 0.0_f64;
                 let mut comm_injected = 0.0_f64;
+                let mut fabric_injected = 0.0_f64;
                 let mut net_tot = NetPhaseStats::default();
                 for step in seg {
                     let mut slots: Vec<Option<GradMsg>> = (0..wpg).map(|_| None).collect();
@@ -455,6 +476,17 @@ fn run_segment(
                             tm.add("net_injected_delay", nd);
                         }
                     }
+                    // shared-fabric contention: under the two-tier
+                    // graph every lane of the global fold crosses its
+                    // uplink and the spine; sleep the deterministic
+                    // fair-share excess of this lane's sends — no
+                    // seeded draws, so no hash schedule can shift
+                    let fd = perturb.fabric_injected_delay(group, groups, net_algo);
+                    if fd > 0.0 {
+                        sleep_secs(fd);
+                        tm.add("fabric_injected_delay", fd);
+                        fabric_injected += fd;
+                    }
                     // fold in ascending worker id — arrival order (the
                     // race) is erased by the slotting above
                     let msg = tm.time("local_reduce", || {
@@ -482,7 +514,7 @@ fn run_segment(
                         }
                     });
                 }
-                (tm, wait_total, comm_injected, net_tot)
+                (tm, wait_total, comm_injected, fabric_injected, net_tot)
             }));
         }
 
@@ -638,10 +670,12 @@ fn run_segment(
 
         // ---- deterministic joins: communicators then workers, by id -
         for (group, h) in comm_handles.into_iter().enumerate() {
-            let (tm, wait, injected, nt) = h.join().expect("communicator thread panicked");
+            let (tm, wait, injected, fabinj, nt) =
+                h.join().expect("communicator thread panicked");
             acc.timers.merge(&tm);
             acc.waits.push((group, wait));
             acc.comm_injected.push((group, injected));
+            acc.fabric_injected.push((group, fabinj));
             acc.net.messages += nt.messages;
             acc.net.reordered += nt.reordered;
             acc.net.delay_total += nt.delay_total;

@@ -12,10 +12,11 @@
 //! `k × step_time_*().total` to float precision — if someone edits one
 //! model and not the other, the suite fails.
 
+use super::fabric::{Fabric, FabricConfig};
 use super::net::{self, NetAcc, NetConfig, Phase};
 use super::perturb::{drive_segments, PerturbConfig};
 use super::{cost, ClusterModel, StepBreakdown};
-use crate::metrics::{NetPhaseStats, RegroupEvent};
+use crate::metrics::{LinkStats, NetPhaseStats, RegroupEvent};
 use crate::topology::{Membership, Topology};
 use anyhow::Result;
 use std::cmp::Ordering;
@@ -83,8 +84,13 @@ pub struct DesResult {
     pub regroups: Vec<RegroupEvent>,
     /// Per-phase message counts and tail latencies of the packet-level
     /// network replay ([`super::net`]); empty under the closed-form
-    /// model.
+    /// model. Fabric-routed runs additionally carry per-phase
+    /// `contention_delay` / `worst_flow_slowdown`.
     pub net: Vec<NetPhaseStats>,
+    /// Per-link utilization of the shared-fabric replay
+    /// ([`super::fabric`]); empty under the flat (private-link)
+    /// fabric.
+    pub fabric: Vec<LinkStats>,
 }
 
 struct Engine {
@@ -222,6 +228,7 @@ pub fn run_lsgd_jittered(
         hidden_comm: hidden,
         regroups: Vec::new(),
         net: Vec::new(),
+        fabric: Vec::new(),
     }
 }
 
@@ -299,7 +306,15 @@ pub fn run_lsgd_perturbed(
         hidden += h;
         Ok(())
     })?;
-    Ok(DesResult { makespan: t, spans, hidden_comm: hidden, regroups, net: netacc.into_report() })
+    let fabric = netacc.fabric_report(t);
+    Ok(DesResult {
+        makespan: t,
+        spans,
+        hidden_comm: hidden,
+        regroups,
+        net: netacc.into_report(),
+        fabric,
+    })
 }
 
 /// The [`super::net::NetModel`] switch on [`run_lsgd`]: replay the
@@ -335,6 +350,35 @@ pub fn run_csgd_net(
     run_csgd_perturbed(m, topo, steps, &p)
 }
 
+/// The [`super::fabric`] switch on [`run_lsgd`]: route the schedule's
+/// collectives over a shared two-tier graph, no other perturbations.
+/// With a non-blocking spine (`2tier` = `2tier:1`) this reproduces
+/// [`run_lsgd`] to `< 1e-9` (the netsim conservation suite pins it);
+/// oversubscription stretches whatever crosses the spine.
+pub fn run_lsgd_fabric(
+    m: &ClusterModel,
+    topo: &Topology,
+    steps: usize,
+    fab: &FabricConfig,
+) -> Result<DesResult> {
+    let mut p = PerturbConfig::default();
+    p.fabric = fab.clone();
+    run_lsgd_perturbed(m, topo, steps, &p)
+}
+
+/// The [`super::fabric`] switch on [`run_csgd`] (see
+/// [`run_lsgd_fabric`]).
+pub fn run_csgd_fabric(
+    m: &ClusterModel,
+    topo: &Topology,
+    steps: usize,
+    fab: &FabricConfig,
+) -> Result<DesResult> {
+    let mut p = PerturbConfig::default();
+    p.fabric = fab.clone();
+    run_csgd_perturbed(m, topo, steps, &p)
+}
+
 /// Per-segment collective pricing. Closed form: the precomputed α–β
 /// bases scaled by the perturbation factors. Packet
 /// ([`super::net::NetModel::Packet`]): a full message-level replay
@@ -356,23 +400,44 @@ struct SegCosts<'a> {
     /// Per-group permanent link factors (slowest member's node class).
     wl: Vec<f64>,
     g: usize,
+    /// The segment's shared-fabric graph (`--fabric 2tier` with more
+    /// than one group); `None` keeps the private-link pricing bit for
+    /// bit. Rebuilt per segment, so regroups re-shape it.
+    fabric: Option<Fabric>,
 }
 
 impl SegCosts<'_> {
     fn reduce(&self, acc: &mut NetAcc, gi: usize, step: usize) -> f64 {
         let f = self.p.comm_scale(gi, step);
         if self.p.net.is_packet() {
-            net::reduce_tree(
-                self.m.intra.scaled(f),
-                self.sizes[gi] + 1,
-                self.m.grad_bytes,
-                &self.p.net,
-                self.p.seed,
-                gi,
-                step,
-                acc,
-            )
+            if let Some(fab) = &self.fabric {
+                net::reduce_tree_routed(
+                    self.m.intra.scaled(f),
+                    self.sizes[gi] + 1,
+                    self.m.grad_bytes,
+                    &self.p.net,
+                    self.p.seed,
+                    gi,
+                    step,
+                    fab,
+                    acc,
+                )
+            } else {
+                net::reduce_tree(
+                    self.m.intra.scaled(f),
+                    self.sizes[gi] + 1,
+                    self.m.grad_bytes,
+                    &self.p.net,
+                    self.p.seed,
+                    gi,
+                    step,
+                    acc,
+                )
+            }
         } else {
+            // a tree round's NIC pairs are disjoint, so the fabric
+            // cannot slow an isolated local collective — the closed
+            // form stays exact under routing
             self.red_base[gi] * f
         }
     }
@@ -380,16 +445,30 @@ impl SegCosts<'_> {
     fn bcast(&self, acc: &mut NetAcc, gi: usize, step: usize) -> f64 {
         let f = self.p.comm_scale(gi, step);
         if self.p.net.is_packet() {
-            net::broadcast_tree(
-                self.m.intra.scaled(f),
-                self.sizes[gi] + 1,
-                self.m.grad_bytes,
-                &self.p.net,
-                self.p.seed,
-                gi,
-                step,
-                acc,
-            )
+            if let Some(fab) = &self.fabric {
+                net::broadcast_tree_routed(
+                    self.m.intra.scaled(f),
+                    self.sizes[gi] + 1,
+                    self.m.grad_bytes,
+                    &self.p.net,
+                    self.p.seed,
+                    gi,
+                    step,
+                    fab,
+                    acc,
+                )
+            } else {
+                net::broadcast_tree(
+                    self.m.intra.scaled(f),
+                    self.sizes[gi] + 1,
+                    self.m.grad_bytes,
+                    &self.p.net,
+                    self.p.seed,
+                    gi,
+                    step,
+                    acc,
+                )
+            }
         } else {
             self.bc_base[gi] * f
         }
@@ -400,7 +479,26 @@ impl SegCosts<'_> {
             .map(|gi| self.wl[gi] * self.p.comm_scale(gi, step) * self.p.link_factor(gi, step))
             .fold(1.0_f64, f64::max);
         let link = self.m.comm_inter.scaled(worst);
-        if self.p.net.is_packet() {
+        if let Some(fab) = &self.fabric {
+            // routed replay over the shared graph: with the closed-form
+            // net model the config is noise-free (validated), so this
+            // is the exact fair-share pricing of the G lane streams;
+            // with the packet model it is the jittered message replay
+            // on shared links
+            net::allreduce_routed(
+                self.m.algo,
+                link,
+                self.g,
+                self.m.grad_bytes,
+                &self.p.net,
+                self.p.seed,
+                Phase::GlobalAllreduce,
+                step,
+                fab,
+                &net::RouteKind::CommGlobal,
+                acc,
+            )
+        } else if self.p.net.is_packet() {
             net::allreduce(
                 self.m.algo,
                 link,
@@ -440,6 +538,7 @@ fn lsgd_segment(
     }
     let base = range.start;
     let sizes: Vec<usize> = (0..g).map(|gi| memb.group(gi).len()).collect();
+    let seg_fabric = p.fabric.build(&sizes);
     let costs = SegCosts {
         m,
         p,
@@ -454,6 +553,7 @@ fn lsgd_segment(
         sizes,
         wl: group_link_factors(p, memb),
         g,
+        fabric: seg_fabric,
     };
     let io_of = |gi: usize, step: usize| m.t_io * group_scale(p, memb, gi, step);
     let comp_of = |gi: usize, step: usize| m.t_compute * group_scale(p, memb, gi, step);
@@ -595,24 +695,45 @@ pub fn run_csgd_perturbed(
     let mut t = 0.0;
     let regroups = drive_segments(p, &mut memb, steps, |memb, range, _boundary| {
         let n = memb.num_workers();
-        let fabric = if memb.num_groups() == 1 { m.intra } else { m.inter };
+        let groups = memb.num_groups();
+        let flat_link = if groups == 1 { m.intra } else { m.inter };
         // static per-group NIC factor: the slowest member's node class
         let wl = group_link_factors(p, memb);
+        // the segment's shared-fabric graph: CSGD's flat collective
+        // routes rank-to-rank, so its boundary streams compete for the
+        // spine round by round (single group = all intra, no spine)
+        let sizes: Vec<usize> = (0..groups).map(|gi| memb.group(gi).len()).collect();
+        let seg_fabric = p.fabric.build(&sizes);
+        let flat_kind = net::RouteKind::Flat { sizes };
         for step in range {
             let slowest = memb
                 .alive()
                 .map(|w| p.compute_scale(w.0, step))
                 .fold(1.0_f64, f64::max);
-            let worst_link = (0..memb.num_groups())
+            let worst_link = (0..groups)
                 .map(|gi| wl[gi] * p.link_factor(gi, step))
                 .fold(1.0_f64, f64::max);
             // link windows scale the fabric handed to the replay, so
             // under the packet model they stretch every message of the
             // step, not one aggregate number
-            let ar = if p.net.is_packet() {
+            let ar = if let Some(fab) = &seg_fabric {
+                net::allreduce_routed(
+                    m.algo,
+                    flat_link.scaled(worst_link),
+                    n,
+                    m.grad_bytes,
+                    &p.net,
+                    p.seed,
+                    Phase::FlatAllreduce,
+                    step,
+                    fab,
+                    &flat_kind,
+                    &mut netacc,
+                )
+            } else if p.net.is_packet() {
                 net::allreduce(
                     m.algo,
-                    fabric.scaled(worst_link),
+                    flat_link.scaled(worst_link),
                     n,
                     m.grad_bytes,
                     &p.net,
@@ -622,7 +743,7 @@ pub fn run_csgd_perturbed(
                     &mut netacc,
                 )
             } else {
-                m.algo.cost(fabric.scaled(worst_link), n, m.grad_bytes)
+                m.algo.cost(flat_link.scaled(worst_link), n, m.grad_bytes)
             };
             let io = m.t_io * slowest;
             let comp = m.t_compute * slowest;
@@ -637,12 +758,14 @@ pub fn run_csgd_perturbed(
         }
         Ok(())
     })?;
+    let fabric_report = netacc.fabric_report(t);
     Ok(DesResult {
         makespan: t,
         spans: e.spans,
         hidden_comm: 0.0,
         regroups,
         net: netacc.into_report(),
+        fabric: fabric_report,
     })
 }
 
@@ -685,6 +808,7 @@ pub fn run_csgd_jittered(
         hidden_comm: 0.0,
         regroups: Vec::new(),
         net: Vec::new(),
+        fabric: Vec::new(),
     }
 }
 
@@ -1035,6 +1159,61 @@ mod tests {
         for step in 0..steps {
             assert!(a.spans.iter().any(|s| s.step == step && s.phase == "compute"));
         }
+    }
+
+    // --------------------------------------------------------- fabric
+
+    #[test]
+    fn nonblocking_fabric_reduces_to_baseline() {
+        // 2tier with a non-blocking spine (oversub 1): every ring
+        // collective has at most one flow per link → private costs
+        let m = ClusterModel::paper_k80();
+        let fab: FabricConfig = "2tier".parse().unwrap();
+        for g in [1, 2, 8, 64] {
+            let topo = Topology::new(g, 4).unwrap();
+            let l = run_lsgd_fabric(&m, &topo, 4, &fab).unwrap();
+            let base = run_lsgd(&m, &topo, 4);
+            assert!(
+                (l.makespan - base.makespan).abs() < 1e-9,
+                "G={g}: routed {} vs flat {}",
+                l.makespan,
+                base.makespan
+            );
+            let c = run_csgd_fabric(&m, &topo, 4, &fab).unwrap();
+            assert!(
+                (c.makespan - run_csgd(&m, &topo, 4).makespan).abs() < 1e-9,
+                "G={g} csgd"
+            );
+        }
+    }
+
+    #[test]
+    fn oversubscribed_fabric_costs_both_schedules_and_reports_links() {
+        // 64 groups: the communicator allreduce already exceeds the
+        // I/O window, so a stretched spine is visible in the makespan
+        let m = ClusterModel::paper_k80();
+        let topo = Topology::new(64, 4).unwrap();
+        let steps = 3;
+        let fab: FabricConfig = "2tier:4".parse().unwrap();
+        let l = run_lsgd_fabric(&m, &topo, steps, &fab).unwrap();
+        let c = run_csgd_fabric(&m, &topo, steps, &fab).unwrap();
+        assert!(l.makespan > run_lsgd(&m, &topo, steps).makespan);
+        assert!(c.makespan > run_csgd(&m, &topo, steps).makespan);
+        // per-link utilization surfaces, spine included
+        for r in [&l, &c] {
+            assert!(!r.fabric.is_empty(), "fabric run must report link stats");
+            let spine = r.fabric.iter().find(|x| x.link == "spine").expect("spine row");
+            assert!(spine.busy_secs > 0.0);
+            assert!(spine.utilization > 0.0 && spine.utilization <= 1.0);
+        }
+        // per-phase contention accounting: the global allreduce pays
+        // exactly the crossing stretch at message granularity
+        let ga = l.net.iter().find(|s| s.phase == "global_allreduce").expect("phase row");
+        assert!((ga.worst_flow_slowdown - 4.0).abs() < 1e-9);
+        assert!(ga.contention_delay > 0.0);
+        assert_eq!(ga.delay_total, 0.0, "no jitter configured — contention only");
+        // flat runs report nothing
+        assert!(run_lsgd(&m, &topo, steps).fabric.is_empty());
     }
 
     #[test]

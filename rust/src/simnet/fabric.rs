@@ -1,0 +1,696 @@
+//! Topology-aware shared-fabric model: per-node NICs, per-group
+//! switches, shared spine uplinks — and a max–min fair-share bandwidth
+//! allocator that prices *concurrent* traffic competing for them.
+//!
+//! Every network model before this one ([`super::cost`],
+//! [`super::net`]) priced each collective on a **private** link: `p`
+//! in-flight local reduces plus the communicator allreduce never
+//! contend, which systematically flatters exactly the regime the paper
+//! cares about (overlapped subgroup communication, §3–4). This module
+//! adds the missing piece:
+//!
+//! * a **fabric graph** ([`Fabric::two_tier`]): one full-duplex NIC
+//!   pair per rank (worker or communicator), one full-duplex uplink
+//!   pair per group switch, and one shared spine whose capacity is
+//!   `groups / oversub` NIC-units — `oversub` is the classic
+//!   oversubscription factor of a two-tier Clos (1 = non-blocking);
+//! * a **max–min fair-share allocator** ([`max_min_rates`]):
+//!   progressive filling — every flow's rate rises together until a
+//!   link saturates, flows crossing it freeze, repeat. The classic
+//!   water-filling fixpoint: no flow can gain rate without taking it
+//!   from a flow that has no more than it;
+//! * a **fluid flow simulator** ([`run_flows`]): flows drain their
+//!   service time at their allocated rate; whenever a flow finishes
+//!   the rates are re-solved (progressive filling *over time*), so a
+//!   mixed intra/crossing flow set re-prices exactly as the fast flows
+//!   get out of the way.
+//!
+//! ## Units and the conservation contract
+//!
+//! Rates are normalized to one NIC: a flow alone on its route runs at
+//! rate exactly `1.0`, so its duration equals its service time — the
+//! private-link cost the closed forms and the packet replay already
+//! charge. That is the conservation property the netsim suite pins:
+//! **with one flow active per link, fabric routing reproduces the
+//! existing costs to `< 1e-9`** (at `oversub = 1` a `G`-lane global
+//! collective also gets rate exactly 1: `G` crossing flows share a
+//! spine of capacity `G`). Contention only ever *removes* bandwidth,
+//! so makespans are non-decreasing in `oversub` (also pinned).
+//!
+//! Slowdown semantics follow the repo's own congestion convention
+//! ([`super::cost::Link::scaled`]): a flow at fair share `r < 1`
+//! stretches its whole remaining service — latency and bandwidth terms
+//! together — by `1/r`.
+//!
+//! The model is **fully deterministic** (no seeded draws): enabling a
+//! fabric can never shift the worker / communicator / link / NET hash
+//! schedules (`rust/tests/netsim.rs` pins domain separation).
+
+use anyhow::Result;
+
+/// Which fabric a run routes its collectives over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FabricModel {
+    /// Private per-collective links — bit-for-bit the seed behaviour.
+    #[default]
+    Flat,
+    /// Two-tier Clos: per-rank NICs, per-group switches, shared spine.
+    TwoTier,
+}
+
+/// Fabric knobs. `Default` is the flat/private-link model — exactly
+/// the pre-fabric behaviour.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FabricConfig {
+    /// Private links or the two-tier shared graph.
+    pub model: FabricModel,
+    /// Spine oversubscription factor `≥ 1`: the spine carries
+    /// `groups / oversub` NIC-units of bandwidth. `1` = non-blocking.
+    pub oversub: f64,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        Self { model: FabricModel::Flat, oversub: 1.0 }
+    }
+}
+
+impl std::str::FromStr for FabricConfig {
+    type Err = anyhow::Error;
+
+    /// Parse `flat`, `2tier`, or `2tier:OVERSUB` (e.g. `2tier:2.5`).
+    fn from_str(s: &str) -> Result<Self> {
+        let cfg = match s {
+            "flat" => FabricConfig::default(),
+            "2tier" | "two-tier" | "twotier" => {
+                FabricConfig { model: FabricModel::TwoTier, oversub: 1.0 }
+            }
+            other => match other.strip_prefix("2tier:") {
+                Some(f) => FabricConfig {
+                    model: FabricModel::TwoTier,
+                    oversub: f.trim().parse().map_err(|_| {
+                        anyhow::anyhow!("bad oversubscription factor in fabric spec {s:?}")
+                    })?,
+                },
+                None => anyhow::bail!("unknown fabric {s:?} (flat|2tier[:oversub])"),
+            },
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+impl FabricConfig {
+    /// True when collectives keep their private links (the default).
+    pub fn is_flat(&self) -> bool {
+        self.model == FabricModel::Flat
+    }
+
+    /// Range checks shared by the CLI and both execution worlds. An
+    /// oversubscription factor under the flat model would be a silent
+    /// no-op — rejected, same bug class as `--net-jitter` without
+    /// `--net-model packet`.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.oversub.is_finite() && self.oversub >= 1.0,
+            "fabric oversubscription must be a finite factor ≥ 1 (got {})",
+            self.oversub
+        );
+        if self.is_flat() {
+            anyhow::ensure!(
+                self.oversub == 1.0,
+                "oversubscription has no effect under the flat fabric — pass --fabric 2tier:F"
+            );
+        }
+        Ok(())
+    }
+
+    /// Fair-share stretch of one lane of a `groups`-lane global
+    /// collective in which **every** lane crosses the spine (LSGD's
+    /// communicator allreduce; the per-round boundary crossings of a
+    /// flat ring): `G` flows share `G / oversub` spine units, so each
+    /// runs at rate `1/oversub` and stretches by `oversub`. `1` for a
+    /// flat fabric or a single group (no spine to cross). This is the
+    /// deterministic per-lane schedule the real engine injects
+    /// ([`super::perturb::PerturbConfig::fabric_injected_delay`]) —
+    /// derived from the same allocator the DES replays.
+    pub fn crossing_stretch(&self, groups: usize) -> f64 {
+        if self.is_flat() || groups <= 1 {
+            1.0
+        } else {
+            self.oversub.max(1.0)
+        }
+    }
+
+    /// Build the graph for one membership segment (`sizes[g]` workers
+    /// per group): `None` under the flat model or a single group (no
+    /// spine to share) — the callers' signal to keep the private-link
+    /// pricing paths bit for bit. The one place the flat/single-group
+    /// guard lives, so the DES's two schedules cannot drift apart.
+    pub fn build(&self, sizes: &[usize]) -> Option<Fabric> {
+        if self.is_flat() || sizes.len() <= 1 {
+            None
+        } else {
+            Some(Fabric::two_tier(sizes, self.oversub))
+        }
+    }
+}
+
+/// The link graph of one two-tier fabric instance: index layout is
+/// `[spine, up[0], down[0], …, up[G-1], down[G-1], nic_out/in pairs]`.
+/// Uplinks and NICs are full-duplex (separate up/down, out/in links)
+/// so a ring neighbour exchange is not charged twice.
+#[derive(Debug, Clone)]
+pub struct Fabric {
+    caps: Vec<f64>,
+    groups: usize,
+    /// NIC slots per group: `max(group size) + 1` (the `+1` is the
+    /// communicator rank riding on the group's switch).
+    stride: usize,
+}
+
+impl Fabric {
+    /// Build the two-tier graph for the current membership layout:
+    /// `sizes[g]` = workers in group `g` (each group also hosts one
+    /// communicator rank). Spine capacity is `groups / oversub`
+    /// NIC-units.
+    pub fn two_tier(sizes: &[usize], oversub: f64) -> Fabric {
+        let groups = sizes.len();
+        let stride = sizes.iter().copied().max().unwrap_or(0) + 1;
+        let n_links = 1 + 2 * groups + 2 * groups * stride;
+        let mut caps = vec![1.0; n_links];
+        caps[0] = groups as f64 / oversub.max(1.0);
+        Fabric { caps, groups, stride }
+    }
+
+    /// Link capacities, indexed by link id.
+    pub fn caps(&self) -> &[f64] {
+        &self.caps
+    }
+
+    pub fn num_links(&self) -> usize {
+        self.caps.len()
+    }
+
+    pub fn groups(&self) -> usize {
+        self.groups
+    }
+
+    /// The shared spine's link id (always 0).
+    pub fn spine(&self) -> usize {
+        0
+    }
+
+    fn up(&self, g: usize) -> usize {
+        1 + 2 * g
+    }
+
+    fn down(&self, g: usize) -> usize {
+        2 + 2 * g
+    }
+
+    fn nic_out(&self, g: usize, slot: usize) -> usize {
+        1 + 2 * self.groups + 2 * (g * self.stride + slot)
+    }
+
+    fn nic_in(&self, g: usize, slot: usize) -> usize {
+        self.nic_out(g, slot) + 1
+    }
+
+    /// Report label of a link id.
+    pub fn link_name(&self, l: usize) -> String {
+        if l == 0 {
+            return "spine".to_string();
+        }
+        let l1 = l - 1;
+        if l1 < 2 * self.groups {
+            let g = l1 / 2;
+            return if l1 % 2 == 0 { format!("up[{g}]") } else { format!("down[{g}]") };
+        }
+        let l2 = l1 - 2 * self.groups;
+        let g = l2 / (2 * self.stride);
+        let rest = l2 % (2 * self.stride);
+        let slot = rest / 2;
+        if rest % 2 == 0 {
+            format!("nic_out[{g}.{slot}]")
+        } else {
+            format!("nic_in[{g}.{slot}]")
+        }
+    }
+
+    /// Route of an intra-group message (local tree reduce/broadcast):
+    /// sender's NIC out → group switch → receiver's NIC in. The switch
+    /// itself is non-blocking, so only the NIC pair is charged.
+    pub fn route_intra(&self, g: usize, src: usize, dst: usize) -> Vec<usize> {
+        vec![self.nic_out(g, src), self.nic_in(g, dst)]
+    }
+
+    /// Route of one communicator-to-communicator message of the global
+    /// allreduce: group `gs`'s uplink → spine → group `gd`'s downlink.
+    pub fn route_spine(&self, gs: usize, gd: usize) -> Vec<usize> {
+        vec![self.up(gs), self.spine(), self.down(gd)]
+    }
+
+    /// Route of one flat-collective message between worker slots
+    /// (`group`, `local`): NIC out, then — when the peer hangs off
+    /// another switch — uplink/spine/downlink, then NIC in.
+    pub fn route_flat(&self, src: (usize, usize), dst: (usize, usize)) -> Vec<usize> {
+        let mut r = Vec::with_capacity(5);
+        r.push(self.nic_out(src.0, src.1));
+        if src.0 != dst.0 {
+            r.push(self.up(src.0));
+            r.push(self.spine());
+            r.push(self.down(dst.0));
+        }
+        r.push(self.nic_in(dst.0, dst.1));
+        r
+    }
+
+    /// Per-lane flows of a `G`-communicator global allreduce, each
+    /// with `service` seconds of private-link work: lane `g`'s send
+    /// stream crosses its uplink, the spine, and its ring successor's
+    /// downlink (every lane is busy every round of a ring/RHD
+    /// schedule, so the per-lane stream is the whole collective long).
+    pub fn global_allreduce_flows(&self, service: f64) -> Vec<Flow> {
+        (0..self.groups)
+            .map(|g| Flow {
+                route: self.route_spine(g, (g + 1) % self.groups),
+                service,
+                tag: g,
+            })
+            .collect()
+    }
+
+    /// Per-rank flows of a flat ring allreduce over the whole cluster
+    /// (`sizes[g]` workers per group, ranked in ascending flat order):
+    /// rank `r` streams to rank `r+1 mod N` for the collective's whole
+    /// duration; streams at a group boundary cross the spine.
+    pub fn flat_allreduce_flows(&self, sizes: &[usize], service: f64) -> Vec<Flow> {
+        let n: usize = sizes.iter().sum();
+        let mut flows = Vec::with_capacity(n);
+        let mut rank = 0usize;
+        for (g, &sz) in sizes.iter().enumerate() {
+            for l in 0..sz {
+                let (g2, l2) = flat_slot(sizes, (rank + 1) % n);
+                flows.push(Flow { route: self.route_flat((g, l), (g2, l2)), service, tag: rank });
+                rank += 1;
+            }
+        }
+        flows
+    }
+}
+
+/// Map a flat rank to its `(group, local)` slot under a group-size
+/// layout.
+pub fn flat_slot(sizes: &[usize], mut rank: usize) -> (usize, usize) {
+    for (g, &sz) in sizes.iter().enumerate() {
+        if rank < sz {
+            return (g, rank);
+        }
+        rank -= sz;
+    }
+    // callers pass rank < Σ sizes; land on the last slot otherwise
+    (sizes.len().saturating_sub(1), 0)
+}
+
+/// One flow offered to the allocator: the links it crosses and its
+/// service demand (seconds at unit rate — the private-link cost).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Flow {
+    pub route: Vec<usize>,
+    pub service: f64,
+    /// Caller's identity tag (lane / rank index), echoed in outcomes.
+    pub tag: usize,
+}
+
+/// Max–min fair-share rates for a set of concurrent flows (classic
+/// progressive filling / water-filling): raise every unfrozen flow's
+/// rate uniformly until some link saturates, freeze the flows crossing
+/// it, subtract, repeat. A flow with an empty route is unconstrained
+/// and gets rate 1 (one NIC-unit). Exact in the conservation cases:
+/// one flow per link ⇒ rate exactly `1.0`.
+pub fn max_min_rates(caps: &[f64], routes: &[Vec<usize>]) -> Vec<f64> {
+    let refs: Vec<&[usize]> = routes.iter().map(|r| r.as_slice()).collect();
+    water_fill(caps, &refs, &vec![false; routes.len()])
+}
+
+/// The allocator core, borrowing routes in place: `skip[f]` flows are
+/// excluded from the allocation entirely (finished traffic — reported
+/// at rate 1 so callers that ignore them stay well-defined).
+fn water_fill(caps: &[f64], routes: &[&[usize]], skip: &[bool]) -> Vec<f64> {
+    let nf = routes.len();
+    let mut rates = vec![0.0_f64; nf];
+    let mut frozen = vec![false; nf];
+    let mut residual = caps.to_vec();
+    let mut level = 0.0_f64;
+    for f in 0..nf {
+        if skip[f] || routes[f].is_empty() {
+            frozen[f] = true;
+            rates[f] = 1.0;
+        }
+    }
+    let mut users = vec![0usize; caps.len()];
+    loop {
+        // unfrozen flows per link
+        for u in users.iter_mut() {
+            *u = 0;
+        }
+        let mut active = 0usize;
+        for (f, &r) in routes.iter().enumerate() {
+            if !frozen[f] {
+                active += 1;
+                for &l in r {
+                    users[l] += 1;
+                }
+            }
+        }
+        if active == 0 {
+            break;
+        }
+        // the smallest per-flow increment any used link can afford
+        let mut delta = f64::INFINITY;
+        for (l, &u) in users.iter().enumerate() {
+            if u > 0 {
+                delta = delta.min(residual[l] / u as f64);
+            }
+        }
+        if !delta.is_finite() || delta <= 0.0 {
+            // every remaining flow sits on an already-saturated link
+            for f in 0..nf {
+                if !frozen[f] {
+                    frozen[f] = true;
+                    rates[f] = level.max(f64::MIN_POSITIVE);
+                }
+            }
+            break;
+        }
+        level += delta;
+        for (l, &u) in users.iter().enumerate() {
+            if u > 0 {
+                residual[l] -= delta * u as f64;
+            }
+        }
+        // freeze flows crossing a saturated link
+        let mut froze = false;
+        for (f, &r) in routes.iter().enumerate() {
+            if !frozen[f] && r.iter().any(|&l| residual[l] <= caps[l] * 1e-12) {
+                frozen[f] = true;
+                rates[f] = level;
+                froze = true;
+            }
+        }
+        if !froze {
+            // numerical guard: no link registered as saturated even
+            // though delta was finite — freeze everything at level
+            for f in 0..nf {
+                if !frozen[f] {
+                    frozen[f] = true;
+                    rates[f] = level;
+                }
+            }
+            break;
+        }
+    }
+    rates
+}
+
+/// Outcome of draining a concurrent flow set to completion.
+#[derive(Debug, Clone)]
+pub struct FlowOutcome {
+    /// Per-flow finish time (input order), relative to the common
+    /// start.
+    pub finish: Vec<f64>,
+    /// Last finish — the barrier cost of the flow set.
+    pub makespan: f64,
+    /// Per-link carried work divided by capacity: the seconds each
+    /// link was (fractionally) busy.
+    pub busy: Vec<f64>,
+    /// Worst `finish / service` over the flows — how hard contention
+    /// hit the unluckiest flow (`1` = uncontended).
+    pub worst_slowdown: f64,
+}
+
+/// Drain `flows` (all starting together) over `fabric` under
+/// progressive filling: rates are re-solved every time a flow finishes
+/// — the fair shares refill as traffic gets out of the way. A flow
+/// alone on its route finishes in exactly its service time.
+pub fn run_flows(fabric: &Fabric, flows: &[Flow]) -> FlowOutcome {
+    let n = flows.len();
+    let mut remaining: Vec<f64> = flows.iter().map(|f| f.service).collect();
+    let mut finish = vec![0.0_f64; n];
+    let mut done: Vec<bool> = remaining.iter().map(|&r| r <= 0.0).collect();
+    // routes are borrowed in place — `done` doubles as the allocator's
+    // skip mask, so finishing a flow never clones or edits the set
+    let routes: Vec<&[usize]> = flows.iter().map(|f| f.route.as_slice()).collect();
+    // active-flow count per link: a finish that frees no link shared
+    // with a still-active flow cannot change any rate, so the
+    // re-solve is skipped (the common case — disjoint intra flows)
+    let mut users = vec![0u32; fabric.num_links()];
+    let mut active = 0usize;
+    for i in 0..n {
+        if !done[i] {
+            active += 1;
+            for &l in &flows[i].route {
+                users[l] += 1;
+            }
+        }
+    }
+    let mut busy = vec![0.0_f64; fabric.num_links()];
+    let mut t = 0.0_f64;
+    let mut rates = water_fill(fabric.caps(), &routes, &done);
+    while active > 0 {
+        // next completion at current rates
+        let mut dt = f64::INFINITY;
+        for i in 0..n {
+            if !done[i] && rates[i] > 0.0 {
+                dt = dt.min(remaining[i] / rates[i]);
+            }
+        }
+        if !dt.is_finite() {
+            break; // defensive: nothing can progress
+        }
+        // advance: drain work, account link busy time
+        for i in 0..n {
+            if done[i] {
+                continue;
+            }
+            let drained = rates[i] * dt;
+            for &l in &flows[i].route {
+                busy[l] += drained / fabric.caps()[l];
+            }
+            remaining[i] -= drained;
+        }
+        t += dt;
+        let mut resolve = false;
+        for i in 0..n {
+            if !done[i] && remaining[i] <= remaining_eps(flows[i].service) {
+                done[i] = true;
+                finish[i] = t;
+                active -= 1;
+                for &l in &flows[i].route {
+                    users[l] -= 1;
+                    if users[l] > 0 {
+                        resolve = true; // freed capacity others can take
+                    }
+                }
+            }
+        }
+        if resolve && active > 0 {
+            rates = water_fill(fabric.caps(), &routes, &done);
+        }
+    }
+    let makespan = finish.iter().copied().fold(0.0_f64, f64::max);
+    let worst = flows
+        .iter()
+        .zip(&finish)
+        .filter(|(f, _)| f.service > 0.0)
+        .map(|(f, &fin)| fin / f.service)
+        .fold(1.0_f64, f64::max);
+    FlowOutcome { finish, makespan, busy, worst_slowdown: worst }
+}
+
+/// Completion tolerance: float drains land within a relative ulp-scale
+/// band of zero rather than exactly on it.
+fn remaining_eps(service: f64) -> f64 {
+    (service.abs() * 1e-12).max(1e-300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_groups() -> Fabric {
+        Fabric::two_tier(&[2, 2], 1.0)
+    }
+
+    #[test]
+    fn config_parses_and_validates() {
+        let flat: FabricConfig = "flat".parse().unwrap();
+        assert!(flat.is_flat());
+        assert_eq!(flat, FabricConfig::default());
+        let t: FabricConfig = "2tier".parse().unwrap();
+        assert_eq!(t.model, FabricModel::TwoTier);
+        assert_eq!(t.oversub, 1.0);
+        let t: FabricConfig = "2tier:2.5".parse().unwrap();
+        assert_eq!(t.oversub, 2.5);
+        assert!("2tier:0.5".parse::<FabricConfig>().is_err(), "oversub below 1");
+        assert!("2tier:x".parse::<FabricConfig>().is_err());
+        assert!("3tier".parse::<FabricConfig>().is_err());
+        // programmatic misuse: oversub under flat is a silent no-op
+        let bad = FabricConfig { model: FabricModel::Flat, oversub: 2.0 };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn crossing_stretch_matches_the_allocator() {
+        let cfg: FabricConfig = "2tier:3".parse().unwrap();
+        assert_eq!(cfg.crossing_stretch(8), 3.0);
+        assert_eq!(cfg.crossing_stretch(1), 1.0, "no spine to cross");
+        assert_eq!(FabricConfig::default().crossing_stretch(8), 1.0);
+        // the allocator agrees: G crossing flows on a G/3 spine
+        let fab = Fabric::two_tier(&[4; 8], 3.0);
+        let flows = fab.global_allreduce_flows(1.0);
+        let routes: Vec<Vec<usize>> = flows.iter().map(|f| f.route.clone()).collect();
+        let rates = max_min_rates(fab.caps(), &routes);
+        for r in rates {
+            assert!((r - 1.0 / 3.0).abs() < 1e-12, "rate {r}");
+        }
+    }
+
+    #[test]
+    fn link_names_roundtrip() {
+        let fab = two_groups();
+        assert_eq!(fab.link_name(fab.spine()), "spine");
+        assert_eq!(fab.link_name(fab.up(1)), "up[1]");
+        assert_eq!(fab.link_name(fab.down(0)), "down[0]");
+        assert_eq!(fab.link_name(fab.nic_out(1, 2)), "nic_out[1.2]");
+        assert_eq!(fab.link_name(fab.nic_in(0, 0)), "nic_in[0.0]");
+        // every id names a distinct link
+        let names: std::collections::BTreeSet<String> =
+            (0..fab.num_links()).map(|l| fab.link_name(l)).collect();
+        assert_eq!(names.len(), fab.num_links());
+    }
+
+    #[test]
+    fn single_flow_runs_at_exactly_unit_rate() {
+        let fab = two_groups();
+        let routes =
+            [fab.route_intra(0, 0, 1), fab.route_spine(0, 1), fab.route_flat((0, 1), (1, 0))];
+        for route in routes {
+            let out = run_flows(&fab, &[Flow { route, service: 0.125, tag: 0 }]);
+            assert_eq!(out.makespan, 0.125, "one flow per link must pay the private cost");
+            assert_eq!(out.worst_slowdown, 1.0);
+        }
+    }
+
+    #[test]
+    fn nonblocking_spine_gives_unit_rate_to_all_lanes() {
+        // oversub 1: G crossing flows share a spine of capacity G
+        let fab = Fabric::two_tier(&[4; 16], 1.0);
+        let out = run_flows(&fab, &fab.global_allreduce_flows(0.25));
+        assert_eq!(out.makespan, 0.25);
+        assert_eq!(out.worst_slowdown, 1.0);
+    }
+
+    #[test]
+    fn oversubscription_divides_fair_shares() {
+        let fab = Fabric::two_tier(&[4; 8], 2.0);
+        let out = run_flows(&fab, &fab.global_allreduce_flows(0.5));
+        assert!((out.makespan - 1.0).abs() < 1e-12, "8 lanes on a 4-unit spine run at 1/2");
+        assert!((out.worst_slowdown - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mixed_flow_sets_reprice_when_flows_finish() {
+        // two flows share one NIC-out (rate 1/2 each); a third runs
+        // free elsewhere. After the short shared flow finishes, the
+        // long one refills to rate 1.
+        let fab = two_groups();
+        let flows = vec![
+            Flow { route: fab.route_intra(0, 0, 1), service: 1.0, tag: 0 },
+            Flow { route: fab.route_intra(0, 0, 2), service: 0.25, tag: 1 },
+            Flow { route: fab.route_intra(1, 0, 1), service: 0.3, tag: 2 },
+        ];
+        let out = run_flows(&fab, &flows);
+        // shared phase: both at 1/2 until flow 1 drains 0.25 (t=0.5);
+        // flow 0 then holds 0.75 of work and refills to rate 1 → 1.25
+        assert!((out.finish[1] - 0.5).abs() < 1e-12, "short shared flow: {}", out.finish[1]);
+        assert!((out.finish[0] - 1.25).abs() < 1e-12, "repriced long flow: {}", out.finish[0]);
+        assert!((out.finish[2] - 0.3).abs() < 1e-12, "private flow untouched");
+        assert!((out.worst_slowdown - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flat_ring_crossing_flows_pay_the_spine() {
+        let sizes = [4usize; 4];
+        let fab = Fabric::two_tier(&sizes, 4.0);
+        let flows = fab.flat_allreduce_flows(&sizes, 1.0);
+        assert_eq!(flows.len(), 16);
+        let out = run_flows(&fab, &flows);
+        // 4 boundary flows share a 1-unit spine → rate 1/4; the 12
+        // intra flows run at rate 1
+        let crossing: Vec<usize> = flows
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| f.route.len() == 5)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(crossing.len(), 4, "one boundary stream per group");
+        for (i, f) in flows.iter().enumerate() {
+            let want = if f.route.len() == 5 { 4.0 } else { 1.0 };
+            assert!(
+                (out.finish[i] - want).abs() < 1e-9,
+                "flow {i}: finish {} want {want}",
+                out.finish[i]
+            );
+        }
+        assert!((out.makespan - 4.0).abs() < 1e-9);
+        // the spine spent the whole run saturated
+        assert!((out.busy[fab.spine()] - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn makespan_monotone_in_oversub() {
+        let sizes = [4usize; 8];
+        let mut last = 0.0_f64;
+        for oversub in [1.0, 1.5, 2.0, 4.0, 8.0] {
+            let fab = Fabric::two_tier(&sizes, oversub);
+            let out = run_flows(&fab, &fab.flat_allreduce_flows(&sizes, 1.0));
+            assert!(out.makespan >= last - 1e-9, "oversub {oversub}: {} < {last}", out.makespan);
+            last = out.makespan;
+        }
+    }
+
+    #[test]
+    fn busy_accounting_tracks_carried_work() {
+        let fab = two_groups();
+        let out = run_flows(
+            &fab,
+            &[Flow { route: fab.route_intra(0, 0, 1), service: 0.5, tag: 0 }],
+        );
+        assert!((out.busy[fab.nic_out(0, 0)] - 0.5).abs() < 1e-12);
+        assert!((out.busy[fab.nic_in(0, 1)] - 0.5).abs() < 1e-12);
+        assert_eq!(out.busy[fab.spine()], 0.0, "intra traffic never touches the spine");
+    }
+
+    #[test]
+    fn max_min_handles_empty_and_zero_service() {
+        let fab = two_groups();
+        let rates = max_min_rates(fab.caps(), &[Vec::new()]);
+        assert_eq!(rates, vec![1.0]);
+        let out = run_flows(&fab, &[]);
+        assert_eq!(out.makespan, 0.0);
+        let out = run_flows(&fab, &[Flow { route: fab.route_spine(0, 1), service: 0.0, tag: 0 }]);
+        assert_eq!(out.makespan, 0.0);
+    }
+
+    #[test]
+    fn flat_slot_maps_uneven_groups() {
+        let sizes = [3usize, 1, 2];
+        assert_eq!(flat_slot(&sizes, 0), (0, 0));
+        assert_eq!(flat_slot(&sizes, 2), (0, 2));
+        assert_eq!(flat_slot(&sizes, 3), (1, 0));
+        assert_eq!(flat_slot(&sizes, 4), (2, 0));
+        assert_eq!(flat_slot(&sizes, 5), (2, 1));
+    }
+}

@@ -20,6 +20,12 @@
 //!   reordering and chunk serialization (`NetModel::{ClosedForm,
 //!   Packet}` switches both DES paths; jitter-free packet replays
 //!   reproduce the closed forms to `< 1e-9`);
+//! * [`fabric`] — topology-aware shared fabric (`--fabric 2tier`):
+//!   per-rank NICs, per-group switches, an oversubscribable spine, and
+//!   a max–min fair-share allocator so concurrent message schedules
+//!   compete for links instead of each owning a private one (with one
+//!   flow per link the routed replay degenerates to the private-link
+//!   costs — the conservation contract in `rust/tests/netsim.rs`);
 //! * [`perturb`] — seeded straggler / heterogeneity / fail-stop /
 //!   rejoin injection (worker- and communicator-class, plus transient
 //!   link-degradation windows), shared with the real thread-per-rank
@@ -32,10 +38,12 @@
 
 pub mod cost;
 pub mod des;
+pub mod fabric;
 pub mod net;
 pub mod perturb;
 
 pub use cost::{AllreduceAlgo, Link};
+pub use fabric::{FabricConfig, FabricModel};
 pub use net::{NetConfig, NetModel};
 pub use perturb::{FailStop, LinkWindow, PerturbConfig, Rejoin};
 

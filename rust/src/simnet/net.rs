@@ -41,12 +41,31 @@
 //! lane granularity ([`lane_excess`]): lane `g` of the global fold
 //! sleeps `delay_unit` per 1× of slowdown over its own sends, which
 //! for LSGD is key-for-key the DES global-allreduce schedule.
+//!
+//! ## Fabric routing (`--fabric 2tier`)
+//!
+//! The `*_routed` variants replay the *same* rounds with the *same*
+//! draws, but run each round's messages as concurrent flows over the
+//! shared two-tier graph ([`super::fabric`]): every message is
+//! max–min fair-shared against the round's other messages on its
+//! links, and the lockstep barrier pays the slowest *contended* flow.
+//! With one flow per link (intra-group trees; any `G`-lane schedule on
+//! a non-blocking `oversub = 1` spine; a flat multi-group *ring* —
+//! one boundary crossing per group) the fair share is exactly `1.0`
+//! and the routed replay reproduces the private-link costs to float
+//! precision — the conservation contract `rust/tests/netsim.rs` pins.
+//! Contention shows up separately from jitter in the stats:
+//! `delay_total`/`delay_max` stay the seeded-jitter excess, while
+//! `contention_delay` / `worst_flow_slowdown` carry the fair-share
+//! tax, and per-link busy time aggregates into
+//! [`NetAcc::fabric_report`].
 
 use anyhow::Result;
 
 use super::cost::{log2_ceil, AllreduceAlgo, Link};
+use super::fabric::{self, Fabric};
 use super::perturb::{domain, mix, unit};
-use crate::metrics::NetPhaseStats;
+use crate::metrics::{LinkStats, NetPhaseStats};
 
 /// Which network model a run prices its collectives with.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -170,10 +189,13 @@ impl Phase {
 /// Per-phase message accounting for one run — what
 /// [`crate::metrics::PerturbReport::net`] and
 /// [`super::des::DesResult::net`] surface. Phases are keyed by name,
-/// so the report order is deterministic.
+/// so the report order is deterministic. Fabric-routed replays also
+/// fold per-link busy time in here (keyed by link name, so the
+/// accounting survives regroups rebuilding the graph).
 #[derive(Debug, Default, Clone)]
 pub struct NetAcc {
     phases: std::collections::BTreeMap<&'static str, NetPhaseStats>,
+    fabric_busy: std::collections::BTreeMap<String, f64>,
 }
 
 impl NetAcc {
@@ -182,6 +204,28 @@ impl NetAcc {
             phase: phase.name().to_string(),
             ..NetPhaseStats::default()
         })
+    }
+
+    /// Fold one collective's per-link busy seconds into the run totals.
+    pub(crate) fn add_fabric_busy(&mut self, fab: &Fabric, busy: &[f64]) {
+        for (l, &b) in busy.iter().enumerate() {
+            if b > 0.0 {
+                *self.fabric_busy.entry(fab.link_name(l)).or_default() += b;
+            }
+        }
+    }
+
+    /// Per-link utilization of the fabric run (empty when no routed
+    /// collective executed): `busy / makespan`, capped at 1.
+    pub fn fabric_report(&self, makespan: f64) -> Vec<LinkStats> {
+        self.fabric_busy
+            .iter()
+            .map(|(name, &busy)| LinkStats {
+                link: name.clone(),
+                busy_secs: busy,
+                utilization: if makespan > 0.0 { (busy / makespan).min(1.0) } else { 0.0 },
+            })
+            .collect()
     }
 
     /// Drain into the report representation (sorted by phase name).
@@ -316,6 +360,146 @@ fn sim_rounds(
     t
 }
 
+/// How a routed replay maps message slots onto the shared fabric
+/// graph ([`super::fabric::Fabric`]).
+#[derive(Debug, Clone)]
+pub enum RouteKind {
+    /// Intra-group binomial tree (local reduce / broadcast) inside
+    /// membership group `group`: round `r`'s sender `m` transfers to
+    /// rank `m + 2^r` over the pair's private NICs.
+    IntraTree { group: usize },
+    /// Communicator-level global allreduce over the `G` group slots:
+    /// lane `m` streams to its ring successor (ring) or its XOR
+    /// partner (RHD) across uplink → spine → downlink.
+    CommGlobal,
+    /// Flat all-worker collective: `sizes[g]` workers per group in
+    /// flat rank order; messages between groups cross the spine.
+    Flat { sizes: Vec<usize> },
+}
+
+/// Message-pattern family of a round schedule — who sends to whom.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Shape {
+    Ring,
+    Rhd,
+    Tree,
+}
+
+/// `(src, dst)` rank of message `msg` in round `round` of a `p`-rank
+/// schedule. RHD pairs by distance `2^k` (halving then doubling
+/// mirror): XOR for power-of-two `p` (the true RHD pairing), rotation
+/// by `2^k` otherwise — both are bijections, so a round's destinations
+/// stay distinct and conservation holds for every `p` (a `% p` wrap of
+/// the XOR would alias two senders onto one downlink and fabricate
+/// contention). Byte totals always come from the round table and stay
+/// exact; only the non-power-of-two peers' switch assignment is
+/// approximate.
+fn msg_peer(
+    shape: Shape,
+    p: usize,
+    total_rounds: usize,
+    round: usize,
+    msg: usize,
+) -> (usize, usize) {
+    match shape {
+        Shape::Ring => (msg, (msg + 1) % p),
+        Shape::Rhd => {
+            let half = total_rounds / 2;
+            let k = if round < half { round } else { total_rounds - 1 - round };
+            let d = 1usize << k;
+            let dst = if p.is_power_of_two() { msg ^ d } else { (msg + d) % p };
+            (msg, dst)
+        }
+        Shape::Tree => (msg, msg + (1usize << round)),
+    }
+}
+
+/// Fabric-routed counterpart of [`sim_rounds`]: identical draw keys
+/// and per-message service arithmetic, but each round's messages run
+/// as concurrent flows under progressive filling
+/// ([`super::fabric::run_flows`]) — the lockstep barrier pays the
+/// slowest fair-share flow, and contention excess / per-link busy time
+/// are accounted separately from the seeded jitter.
+#[allow(clippy::too_many_arguments)]
+fn sim_rounds_routed(
+    link: Link,
+    rounds: &[Round],
+    shape: Shape,
+    p: usize,
+    cfg: &NetConfig,
+    seed: u64,
+    phase: Phase,
+    group: usize,
+    step: usize,
+    fab: &Fabric,
+    kind: &RouteKind,
+    acc: &mut NetAcc,
+) -> f64 {
+    let c = cfg.chunk.max(1);
+    let a = key_a(phase, group, step);
+    let total_rounds = rounds.len();
+    let mut busy = vec![0.0_f64; fab.num_links()];
+    let mut t = 0.0_f64;
+    let mut contention = 0.0_f64;
+    let mut worst = 1.0_f64;
+    let mut jitter_excess: Vec<(f64, bool)> = Vec::new();
+    for (ri, round) in rounds.iter().enumerate() {
+        let base_chunk = link.p2p(round.bytes / c as f64);
+        let mut flows = Vec::with_capacity(round.msgs);
+        jitter_excess.clear();
+        for mi in 0..round.msgs {
+            // the exact draws the private replay makes — fabric
+            // routing must never shift the NET stream
+            let mut service = 0.0_f64;
+            let mut excess = 0.0_f64;
+            for ci in 0..c {
+                let d = base_chunk * msg_factor(cfg, seed, a, ri, mi, ci);
+                service += d;
+                excess += d - base_chunk;
+            }
+            let reordered = msg_reordered(cfg, seed, a, ri, mi);
+            if reordered {
+                service += base_chunk;
+                excess += base_chunk;
+            }
+            jitter_excess.push((excess, reordered));
+            let (src, dst) = msg_peer(shape, p, total_rounds, ri, mi);
+            let route = match kind {
+                RouteKind::IntraTree { group } => fab.route_intra(*group, src, dst),
+                RouteKind::CommGlobal => fab.route_spine(src, dst),
+                RouteKind::Flat { sizes } => {
+                    fab.route_flat(fabric::flat_slot(sizes, src), fabric::flat_slot(sizes, dst))
+                }
+            };
+            flows.push(fabric::Flow { route, service, tag: mi });
+        }
+        // the round barrier under max–min fair share
+        let out = fabric::run_flows(fab, &flows);
+        for (l, &b) in out.busy.iter().enumerate() {
+            busy[l] += b;
+        }
+        let stats = acc.phase_mut(phase);
+        for ((f, &fin), &(excess, reordered)) in
+            flows.iter().zip(&out.finish).zip(jitter_excess.iter())
+        {
+            stats.messages += 1;
+            if reordered {
+                stats.reordered += 1;
+            }
+            stats.delay_total += excess;
+            stats.delay_max = stats.delay_max.max(excess);
+            contention += fin - f.service;
+        }
+        worst = worst.max(out.worst_slowdown);
+        t += out.makespan;
+    }
+    let stats = acc.phase_mut(phase);
+    stats.contention_delay += contention;
+    stats.worst_flow_slowdown = stats.worst_flow_slowdown.max(worst);
+    acc.add_fabric_busy(fab, &busy);
+    t
+}
+
 /// Packet-level binomial-tree reduce of `n_bytes` over `p` ranks
 /// (mirrors [`super::cost::reduce_tree`]). `group` names the collective
 /// instance (membership group index) so concurrent per-group reduces
@@ -380,6 +564,109 @@ pub fn allreduce(
         AllreduceAlgo::RecursiveHalvingDoubling => rhd_rounds(p, n_bytes),
     };
     sim_rounds(link, &rounds, cfg, seed, phase, 0, step, acc)
+}
+
+/// Fabric-routed replay of a binomial-tree reduce inside group
+/// `group`: same schedule and draws as [`reduce_tree`], with each
+/// round's messages fair-shared over the two-tier graph. A tree
+/// round's senders and receivers are disjoint, so with no competing
+/// traffic every flow runs at rate 1 and this reproduces the private
+/// replay to float precision.
+#[allow(clippy::too_many_arguments)]
+pub fn reduce_tree_routed(
+    link: Link,
+    p: usize,
+    n_bytes: f64,
+    cfg: &NetConfig,
+    seed: u64,
+    group: usize,
+    step: usize,
+    fab: &Fabric,
+    acc: &mut NetAcc,
+) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    let kind = RouteKind::IntraTree { group };
+    sim_rounds_routed(
+        link,
+        &tree_rounds(p, n_bytes),
+        Shape::Tree,
+        p,
+        cfg,
+        seed,
+        Phase::LocalReduce,
+        group,
+        step,
+        fab,
+        &kind,
+        acc,
+    )
+}
+
+/// Fabric-routed replay of a binomial-tree broadcast (see
+/// [`reduce_tree_routed`]), drawn in its own phase.
+#[allow(clippy::too_many_arguments)]
+pub fn broadcast_tree_routed(
+    link: Link,
+    p: usize,
+    n_bytes: f64,
+    cfg: &NetConfig,
+    seed: u64,
+    group: usize,
+    step: usize,
+    fab: &Fabric,
+    acc: &mut NetAcc,
+) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    let kind = RouteKind::IntraTree { group };
+    sim_rounds_routed(
+        link,
+        &tree_rounds(p, n_bytes),
+        Shape::Tree,
+        p,
+        cfg,
+        seed,
+        Phase::Broadcast,
+        group,
+        step,
+        fab,
+        &kind,
+        acc,
+    )
+}
+
+/// Fabric-routed replay of an allreduce over `p` ranks: same rounds
+/// and draw keys as [`allreduce`], with every round's messages routed
+/// per `kind` and fair-shared on `fab`. This is where concurrent
+/// message schedules genuinely compete: the `G` lane streams of the
+/// communicator ring share the spine (each at rate `1/oversub` once
+/// the spine binds), and a flat collective's boundary crossings
+/// contend with each other round by round.
+#[allow(clippy::too_many_arguments)]
+pub fn allreduce_routed(
+    algo: AllreduceAlgo,
+    link: Link,
+    p: usize,
+    n_bytes: f64,
+    cfg: &NetConfig,
+    seed: u64,
+    phase: Phase,
+    step: usize,
+    fab: &Fabric,
+    kind: &RouteKind,
+    acc: &mut NetAcc,
+) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    let (rounds, shape) = match algo {
+        AllreduceAlgo::Ring => (ring_rounds(p, n_bytes), Shape::Ring),
+        AllreduceAlgo::RecursiveHalvingDoubling => (rhd_rounds(p, n_bytes), Shape::Rhd),
+    };
+    sim_rounds_routed(link, &rounds, shape, p, cfg, seed, phase, 0, step, fab, kind, acc)
 }
 
 /// One lane's slice of a global collective's message stream — what the
@@ -594,6 +881,109 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn routed_replay_matches_private_when_uncontended() {
+        use crate::simnet::fabric::Fabric;
+        // same draws, fair share exactly 1 → the fabric-routed replay
+        // equals the private-link replay to float precision, even with
+        // jitter/reorder/chunk active
+        let cfg = packet(0.5, 0.2, 2);
+        for p in [2usize, 5, 8, 17] {
+            // intra-group tree: p−1 workers + their communicator
+            let fab = Fabric::two_tier(&[p - 1], 1.0);
+            let mut acc = NetAcc::default();
+            let private = reduce_tree(L, p, 1e6, &cfg, 7, 0, 3, &mut acc);
+            let routed = reduce_tree_routed(L, p, 1e6, &cfg, 7, 0, 3, &fab, &mut acc);
+            assert!((routed - private).abs() < 1e-9, "tree p={p}: {routed} vs {private}");
+            // communicator ring over p groups on a non-blocking spine
+            let fab = Fabric::two_tier(&vec![4usize; p], 1.0);
+            let private = allreduce(
+                AllreduceAlgo::Ring, L, p, 1e6, &cfg, 7, Phase::GlobalAllreduce, 3, &mut acc,
+            );
+            let routed = allreduce_routed(
+                AllreduceAlgo::Ring,
+                L,
+                p,
+                1e6,
+                &cfg,
+                7,
+                Phase::GlobalAllreduce,
+                3,
+                &fab,
+                &RouteKind::CommGlobal,
+                &mut acc,
+            );
+            assert!((routed - private).abs() < 1e-9, "comm ring p={p}");
+        }
+    }
+
+    #[test]
+    fn routed_replay_pays_the_oversubscribed_spine() {
+        use crate::simnet::fabric::Fabric;
+        let cfg = packet(0.0, 0.0, 1);
+        let p = 8usize;
+        let sizes = vec![4usize; p];
+        let mut acc = NetAcc::default();
+        let base = allreduce_routed(
+            AllreduceAlgo::Ring,
+            L,
+            p,
+            1e6,
+            &cfg,
+            1,
+            Phase::GlobalAllreduce,
+            0,
+            &Fabric::two_tier(&sizes, 1.0),
+            &RouteKind::CommGlobal,
+            &mut acc,
+        );
+        let mut acc3 = NetAcc::default();
+        let contended = allreduce_routed(
+            AllreduceAlgo::Ring,
+            L,
+            p,
+            1e6,
+            &cfg,
+            1,
+            Phase::GlobalAllreduce,
+            0,
+            &Fabric::two_tier(&sizes, 3.0),
+            &RouteKind::CommGlobal,
+            &mut acc3,
+        );
+        assert!(
+            (contended - 3.0 * base).abs() < 1e-9,
+            "every lane crosses the spine at fair share 1/3: {contended} vs 3×{base}"
+        );
+        // the saturated spine spends the whole collective busy
+        let fabric = acc3.fabric_report(contended);
+        let spine = fabric.iter().find(|l| l.link == "spine").expect("spine row");
+        assert!((spine.utilization - 1.0).abs() < 1e-9, "spine util {}", spine.utilization);
+        let stats = acc3.into_report();
+        assert!((stats[0].worst_flow_slowdown - 3.0).abs() < 1e-9);
+        assert!(stats[0].contention_delay > 0.0);
+        assert_eq!(stats[0].delay_total, 0.0, "contention is not jitter");
+        // flat multi-group ring: one boundary stream per group → the
+        // non-blocking spine keeps it at the private cost
+        let flat_sizes = vec![4usize; 4];
+        let mut accf = NetAcc::default();
+        let flat = allreduce_routed(
+            AllreduceAlgo::Ring,
+            L,
+            16,
+            1e6,
+            &cfg,
+            1,
+            Phase::FlatAllreduce,
+            0,
+            &Fabric::two_tier(&flat_sizes, 1.0),
+            &RouteKind::Flat { sizes: flat_sizes.clone() },
+            &mut accf,
+        );
+        let private = cost::allreduce_ring(L, 16, 1e6);
+        assert!((flat - private).abs() < 1e-9, "flat ring at oversub 1: {flat} vs {private}");
     }
 
     #[test]

@@ -199,6 +199,11 @@ pub struct PerturbConfig {
     /// jitter/reorder/chunk knobs. Per-message draws use the
     /// [`domain::NET`] tag and this config's `seed`.
     pub net: super::net::NetConfig,
+    /// Fabric the collectives route over: private per-collective links
+    /// (default — the pre-fabric behaviour, bit for bit) or the
+    /// two-tier shared graph with max–min fair-share contention
+    /// ([`super::fabric`]). Fully deterministic: no seeded draws.
+    pub fabric: super::fabric::FabricConfig,
     /// The real engine's time unit: one unit of *extra* simulated
     /// compute (a factor of 2 on a rank sleeps `delay_unit` seconds).
     /// Keep small so tests stay fast; irrelevant to the DES, which
@@ -220,6 +225,7 @@ impl Default for PerturbConfig {
             failures: Vec::new(),
             rejoins: Vec::new(),
             net: super::net::NetConfig::default(),
+            fabric: super::fabric::FabricConfig::default(),
             delay_unit: 2e-3,
         }
     }
@@ -327,8 +333,9 @@ impl PerturbConfig {
 
     /// True when this config perturbs nothing — the only form the
     /// serial reference engine accepts. Packet-level network emulation
-    /// counts as a perturbation: it changes the DES's collective
-    /// replay and injects delays into the real engine.
+    /// counts as a perturbation, and so does a non-flat fabric: both
+    /// change the DES's collective replay and inject delays into the
+    /// real engine.
     pub fn is_noop(&self) -> bool {
         self.hetero == 0.0
             && self.straggle_prob == 0.0
@@ -338,6 +345,7 @@ impl PerturbConfig {
             && self.failures.is_empty()
             && self.rejoins.is_empty()
             && !self.net.is_packet()
+            && self.fabric.is_flat()
     }
 
     /// Validate against the launch topology and the run length:
@@ -360,6 +368,7 @@ impl PerturbConfig {
         );
         anyhow::ensure!(self.delay_unit >= 0.0, "delay unit must be ≥ 0");
         self.net.validate()?;
+        self.fabric.validate()?;
         for lw in &self.link_windows {
             anyhow::ensure!(
                 lw.factor >= 1.0,
@@ -562,6 +571,36 @@ impl PerturbConfig {
         }
         let ex = super::net::lane_excess(&self.net, self.seed, algo, phase, step, groups, group);
         self.delay_unit * ex.units
+    }
+
+    /// Extra wall-clock lane `group` of the global fold sleeps per
+    /// step under the two-tier fabric: the deterministic max–min
+    /// fair-share stretch of a fully-crossing `groups`-lane collective
+    /// ([`super::fabric::FabricConfig::crossing_stretch`] — derived
+    /// from the same allocator the DES's routed replay solves), at
+    /// `delay_unit` per 1× of slowdown per message slot over the
+    /// lane's own sends (`2(G−1)` ring rounds or `2·⌈log2 G⌉` RHD
+    /// rounds, times the packet `chunk` count when message emulation
+    /// is on). No seeded draws are consumed — enabling the fabric can
+    /// never shift a hash schedule. Zero for the flat fabric.
+    pub fn fabric_injected_delay(
+        &self,
+        _group: usize, // every lane crosses: the schedule is uniform
+        groups: usize,
+        algo: super::cost::AllreduceAlgo,
+    ) -> f64 {
+        let stretch = self.fabric.crossing_stretch(groups);
+        if stretch <= 1.0 || groups <= 1 {
+            return 0.0;
+        }
+        let rounds = match algo {
+            super::cost::AllreduceAlgo::Ring => 2 * (groups - 1),
+            super::cost::AllreduceAlgo::RecursiveHalvingDoubling => {
+                2 * super::cost::log2_ceil(groups) as usize
+            }
+        };
+        let slots = if self.net.is_packet() { rounds * self.net.chunk.max(1) } else { rounds };
+        self.delay_unit * (stretch - 1.0) * slots as f64
     }
 
     /// Extra I/O latency of worker `w`'s shard load at `step`, given
@@ -871,6 +910,34 @@ mod tests {
         assert_eq!(p.link_factor(0, 5), 3.0);
         assert_eq!(p.link_factor(1, 3), 5.0);
         assert_eq!(p.link_factor(2, 3), 1.0, "other groups untouched");
+    }
+
+    #[test]
+    fn fabric_injected_delay_follows_the_crossing_stretch() {
+        use crate::simnet::cost::AllreduceAlgo;
+        let mut p = PerturbConfig::default();
+        assert_eq!(p.fabric_injected_delay(0, 8, AllreduceAlgo::Ring), 0.0, "flat fabric");
+        p.fabric = "2tier:3".parse().unwrap();
+        assert!(!p.is_noop(), "a shared fabric is a perturbation");
+        p.validate(&topo22(), 10).unwrap();
+        let want = p.delay_unit * 2.0 * (2 * 7) as f64;
+        assert_eq!(p.fabric_injected_delay(0, 8, AllreduceAlgo::Ring), want);
+        assert_eq!(p.fabric_injected_delay(3, 8, AllreduceAlgo::Ring), want, "uniform lanes");
+        let want_rhd = p.delay_unit * 2.0 * (2 * 3) as f64;
+        assert_eq!(
+            p.fabric_injected_delay(0, 8, AllreduceAlgo::RecursiveHalvingDoubling),
+            want_rhd
+        );
+        assert_eq!(p.fabric_injected_delay(0, 1, AllreduceAlgo::Ring), 0.0, "no spine at G=1");
+        // chunked packet emulation multiplies the message slots
+        p.net.model = crate::simnet::net::NetModel::Packet;
+        p.net.chunk = 2;
+        assert_eq!(p.fabric_injected_delay(0, 8, AllreduceAlgo::Ring), 2.0 * want);
+        // a non-blocking 2tier spine injects nothing
+        let mut p = PerturbConfig::default();
+        p.fabric = "2tier".parse().unwrap();
+        assert_eq!(p.fabric_injected_delay(0, 8, AllreduceAlgo::Ring), 0.0);
+        assert!(!p.is_noop(), "still routes over the shared graph");
     }
 
     #[test]

@@ -29,6 +29,16 @@
 //!      bitwise-reproducible, and — because the draws live in their
 //!      own `perturb::domain::NET` tag — never shifts the existing
 //!      worker/communicator/link schedules.
+//!
+//! Acceptance (ISSUE 5):
+//!  (f) shared-fabric contention on the real engine applies the exact
+//!      deterministic per-lane schedule (`fabric_injected_delay` —
+//!      derived from the same max–min crossing stretch the DES's
+//!      routed replay solves, and cross-checked against the DES's
+//!      per-phase `worst_flow_slowdown`), stays bitwise-reproducible
+//!      per seed under `--fabric 2tier` + jitter, and — being
+//!      draw-free — never shifts any seeded schedule or the
+//!      trajectory.
 
 use lsgd::config::{Algo, ExperimentConfig};
 use lsgd::metrics::RegroupKind;
@@ -521,6 +531,106 @@ fn net_jitter_does_not_shift_existing_engine_schedules() {
     assert_eq!(a.step_checksums, b.step_checksums);
     assert!(a.perturb.net.is_empty(), "closed-form run must report no messages");
     assert!(b.perturb.net[0].delay_total > 0.0, "packet run must inject something");
+}
+
+// ------------------------------------------------------ acceptance (f)
+
+#[test]
+fn engine_fabric_injected_delays_match_the_des_contention_accounting() {
+    // the engine applies the exact deterministic schedule the model
+    // prescribes: per-lane fabric totals reproduce
+    // `PerturbConfig::fabric_injected_delay` summed in step order, to
+    // the bit — and that schedule is the same crossing stretch the
+    // DES's routed replay reports as `worst_flow_slowdown`
+    let steps = 5;
+    let (groups, workers) = (2usize, 2usize);
+    let mut p = PerturbConfig::default();
+    p.fabric = "2tier:3".parse().unwrap();
+    p.net.model = NetModel::Packet;
+    p.net.jitter = 0.5;
+    p.delay_unit = 0.002;
+    let c = cfg(groups, workers, steps, Algo::Lsgd);
+    let r = run(&c, &p);
+    let algo = AllreduceAlgo::Ring;
+    assert_eq!(r.perturb.fabric_injected_per_group.len(), groups);
+    let mut want_total = 0.0_f64;
+    for &(g, got) in &r.perturb.fabric_injected_per_group {
+        let mut want = 0.0_f64;
+        for _s in 0..steps {
+            want += p.fabric_injected_delay(g, groups, algo);
+        }
+        assert_eq!(got, want, "group {g}: fabric injected {got} != schedule {want}");
+        want_total += want;
+    }
+    assert!(want_total > 0.0, "a 3x-oversubscribed spine must inject something");
+    assert_eq!(r.timers.total("fabric_injected_delay"), want_total);
+    // cross-world agreement: the DES's routed replay pays exactly the
+    // same crossing stretch, surfaced per phase
+    let m = ClusterModel::paper_k80();
+    let topo = Topology::new(groups, workers).unwrap();
+    let d = des::run_lsgd_perturbed(&m, &topo, steps, &p).unwrap();
+    let ga = d
+        .net
+        .iter()
+        .find(|s| s.phase == "global_allreduce")
+        .expect("routed DES surfaces the global phase");
+    assert!(
+        (ga.worst_flow_slowdown - p.fabric.crossing_stretch(groups)).abs() < 1e-9,
+        "DES stretch {} vs model {}",
+        ga.worst_flow_slowdown,
+        p.fabric.crossing_stretch(groups)
+    );
+    assert!(ga.contention_delay > 0.0);
+    assert!(!d.fabric.is_empty(), "routed DES reports link utilization");
+    // bitwise reproducibility per seed under 2tier + jitter
+    let b = run(&c, &p);
+    assert_eq!(r.step_checksums, b.step_checksums, "sleeps never touch numerics");
+    assert_eq!(r.perturb.fabric_injected_per_group, b.perturb.fabric_injected_per_group);
+    assert_eq!(r.perturb.net, b.perturb.net);
+    // CSGD lanes pay the crossing stretch too (its flat ring crosses
+    // the spine at every group boundary)
+    let rc = run(&cfg(groups, workers, steps, Algo::Csgd), &p);
+    assert!(rc.perturb.fabric_injected_total() > 0.0);
+}
+
+#[test]
+fn fabric_never_shifts_engine_schedules_or_numerics() {
+    // the fabric is draw-free: enabling it must leave every seeded
+    // schedule — worker straggle, communicator, NET jitter — and the
+    // trajectory untouched; only the new fabric phase appears
+    let steps = 5;
+    let mut without = PerturbConfig::default();
+    without.straggle_prob = 0.4;
+    without.straggle_factor = 3.0;
+    without.comm_straggle_prob = 0.4;
+    without.comm_straggle_factor = 2.0;
+    without.net.model = NetModel::Packet;
+    without.net.jitter = 0.6;
+    without.delay_unit = 0.002;
+    let mut with = without.clone();
+    with.fabric = "2tier:2".parse().unwrap();
+    let c = cfg(2, 2, steps, Algo::Lsgd);
+    let a = run(&c, &without);
+    let b = run(&c, &with);
+    assert_eq!(a.perturb.injected_per_worker, b.perturb.injected_per_worker);
+    assert_eq!(a.perturb.comm_injected_per_group, b.perturb.comm_injected_per_group);
+    assert_eq!(a.perturb.net, b.perturb.net, "NET draws shifted");
+    assert_eq!(a.step_checksums, b.step_checksums);
+    assert!(a.perturb.fabric_injected_per_group.is_empty(), "flat runs report no fabric");
+    assert!(b.perturb.fabric_injected_total() > 0.0);
+}
+
+#[test]
+fn serial_engine_rejects_fabric_contention() {
+    let e = engine();
+    let mut p = PerturbConfig::default();
+    p.fabric = "2tier:2".parse().unwrap();
+    let mut t = Trainer::new(&e, cfg(2, 2, 2, Algo::Lsgd), false).unwrap();
+    let r = t.run_perturbed(
+        RunOptions { lsgd: Default::default(), mode: ExecMode::Serial },
+        &p,
+    );
+    assert!(r.is_err(), "serial engine must reject shared-fabric contention");
 }
 
 #[test]
