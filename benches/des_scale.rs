@@ -1,0 +1,64 @@
+//! Bench guard: the datacenter-scale DES hot paths stay fast.
+//!
+//! These rows lock in the three rearchitected paths: the calendar
+//! event queue (a 64-group jittered LSGD run is queue-bound), the
+//! incremental max–min allocator (the routed global allreduce at
+//! thousands of communicator lanes re-solves only touched components),
+//! and the arena packet replay (a flat-ring step at p ≥ 1024 is
+//! millions of messages with no per-message allocation). Smoke mode
+//! (`BENCH_SMOKE=1`) shrinks the sizes so CI's `bench-smoke` job stays
+//! fast while `benches/baseline.json` keeps ceilings on the full rows.
+//!
+//! Run: `cargo bench --bench des_scale`
+
+use lsgd::simnet::{des, AllreduceAlgo, ClusterModel, NetConfig, NetModel, PerturbConfig};
+use lsgd::topology::Topology;
+use lsgd::util::bench::{enforce_baseline_from_env, smoke_mode, Harness};
+
+fn main() {
+    let smoke = smoke_mode();
+    let mut h = if smoke { Harness::quick() } else { Harness::default() };
+    println!("# des_scale — datacenter-size DES hot paths");
+
+    let mut m = ClusterModel::paper_k80();
+    m.algo = AllreduceAlgo::RecursiveHalvingDoubling;
+
+    // closed-form fabric mode at many groups: the routed RHD global
+    // allreduce prices G concurrent lane streams per round through the
+    // incremental allocator (smoke: 256 groups, full: 4096 = 65,536
+    // ranks)
+    let groups = if smoke { 256 } else { 4096 };
+    let topo = Topology::new(groups, 16).unwrap();
+    let mut p = PerturbConfig::default();
+    p.fabric = "2tier:2".parse().unwrap();
+    p.trace = false;
+    h.bench(&format!("des_scale/lsgd_2tier_step/{groups}x16"), || {
+        des::run_lsgd_perturbed(&m, &topo, 1, &p).unwrap().makespan
+    });
+
+    // packet replay over private links: a flat-ring CSGD step is
+    // 2(p-1) rounds of p messages (smoke: p = 256 ≈ 130 k msgs, full:
+    // p = 1024 ≈ 2.1 M msgs) — the arena/no-alloc message path
+    let pg = if smoke { 16 } else { 64 };
+    let topo2 = Topology::new(pg, 16).unwrap();
+    let m2 = ClusterModel::paper_k80();
+    let net = NetConfig { model: NetModel::Packet, jitter: 0.05, reorder: 0.01, chunk: 1 };
+    h.bench(&format!("des_scale/csgd_packet_step/{}", pg * 16), || {
+        des::run_csgd_net(&m2, &topo2, 1, &net, 0x57A6).unwrap().makespan
+    });
+
+    // event-queue pressure: jittered lanes desynchronize, so the
+    // calendar queue sees scattered timestamps instead of lockstep
+    // barriers (smoke: 64 groups, full: 512)
+    let jg = if smoke { 64 } else { 512 };
+    let topo3 = Topology::new(jg, 4).unwrap();
+    h.bench(&format!("des_scale/lsgd_jittered/{jg}x4x5"), || {
+        des::run_lsgd_jittered(&m2, &topo3, 5, 0.3).makespan
+    });
+
+    println!("\n{}", h.csv());
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/BENCH_des_scale.json", h.json()).unwrap();
+    println!("→ bench_results/BENCH_des_scale.json");
+    enforce_baseline_from_env(&h.results);
+}

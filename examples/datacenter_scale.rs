@@ -1,0 +1,129 @@
+//! Datacenter-scale DES: the capacity-planning sizes the paper's 512-GPU
+//! testbed could not reach, simulated in seconds.
+//!
+//! Three parts, all exercising the indexed-queue / incremental-allocator
+//! / arena hot paths:
+//!
+//! 1. a 65,536-rank LSGD step (4096 groups × 16 workers) over the
+//!    shared two-tier fabric with closed-form collectives — the routed
+//!    global allreduce prices 4096 concurrent lane streams per round
+//!    under incremental max–min fair share;
+//! 2. a packet-mode CSGD step at p ≥ 2,048: a full flat-ring message
+//!    replay (≈ 8.4 M messages per step at p = 2048), message counts
+//!    reported from the replay's own accounting;
+//! 3. the in-process fold those ranks would run: a chunk-parallel flat
+//!    allreduce over tens of thousands of gradient buffers, checked
+//!    bitwise against the serial left fold.
+//!
+//! ```bash
+//! cargo run --release --example datacenter_scale
+//! cargo run --release --example datacenter_scale -- --groups 8192 --oversub 4
+//! ```
+
+use anyhow::Result;
+use lsgd::collective::{flat_allreduce, flat_allreduce_par};
+use lsgd::simnet::{des, AllreduceAlgo, ClusterModel, NetModel, PerturbConfig};
+use lsgd::topology::Topology;
+use lsgd::util::cli::Args;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let a = Args::parse(&argv, &[])?;
+    let groups = a.usize_or("groups", 4096)?;
+    let workers = a.usize_or("workers", 16)?;
+    let oversub = a.f64_or("oversub", 2.0)?;
+    let steps = a.usize_or("steps", 1)?;
+    let packet_groups = a.usize_or("packet-groups", 128)?;
+    let packet_workers = a.usize_or("packet-workers", 16)?;
+    let fold_ranks = a.usize_or("fold-ranks", 32768)?;
+    let fold_len = a.usize_or("fold-len", 256)?;
+    a.finish()?;
+
+    // -- Part 1: 65,536-rank LSGD step, closed-form fabric mode -------
+    let ranks = groups * workers;
+    println!("== LSGD @ {ranks} ranks ({groups} groups x {workers} workers, 2tier:{oversub}) ==");
+    let mut m = ClusterModel::paper_k80();
+    // ring over thousands of communicator lanes would take 2(G-1)
+    // rounds; recursive halving-doubling keeps it at 2*log2(G)
+    m.algo = AllreduceAlgo::RecursiveHalvingDoubling;
+    let topo = Topology::new(groups, workers)?;
+    let mut p = PerturbConfig::default();
+    p.fabric = format!("2tier:{oversub}").parse()?;
+    // span traces are per-lane-per-step allocations — off at this scale
+    p.trace = false;
+    let t0 = std::time::Instant::now();
+    let r = des::run_lsgd_perturbed(&m, &topo, steps, &p)?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!("  simulated makespan  {:.3} s  ({} step(s))", r.makespan, steps);
+    println!("  hidden comm         {:.3} s", r.hidden_comm);
+    for ph in &r.net {
+        println!(
+            "  phase {:<17} {:>10} msgs   contention {:.3} s   worst slowdown {:.2}x",
+            ph.phase, ph.messages, ph.contention_delay, ph.worst_flow_slowdown
+        );
+    }
+    if let Some(spine) = r.fabric.iter().find(|l| l.link == "spine") {
+        println!(
+            "  spine               {:.3} s busy   utilization {:.0}%",
+            spine.busy_secs,
+            100.0 * spine.utilization
+        );
+    }
+    println!("  links carrying work {}", r.fabric.len());
+    println!("  wall clock          {wall:.2} s");
+
+    // -- Part 2: packet-mode CSGD step, p >= 2048 ---------------------
+    let p2 = packet_groups * packet_workers;
+    println!("\n== CSGD packet replay @ {p2} workers (flat ring, private links) ==");
+    let m2 = ClusterModel::paper_k80(); // ring allreduce: 2(p-1) rounds of p messages
+    let topo2 = Topology::new(packet_groups, packet_workers)?;
+    let mut net = lsgd::simnet::NetConfig::default();
+    net.model = NetModel::Packet;
+    net.jitter = 0.05;
+    net.reorder = 0.01;
+    let t0 = std::time::Instant::now();
+    let r2 = des::run_csgd_net(&m2, &topo2, steps, &net, 0x57A6)?;
+    let wall2 = t0.elapsed().as_secs_f64();
+    let mut total_msgs = 0u64;
+    for ph in &r2.net {
+        println!(
+            "  phase {:<17} {:>10} msgs   {:>8} reordered   tail {:.4} s",
+            ph.phase, ph.messages, ph.reordered, ph.delay_max
+        );
+        total_msgs += ph.messages;
+    }
+    println!("  simulated makespan  {:.3} s  ({} step(s))", r2.makespan, steps);
+    println!(
+        "  wall clock          {wall2:.2} s   ({:.1} M msgs/s)",
+        total_msgs as f64 / wall2.max(1e-9) / 1e6
+    );
+
+    // -- Part 3: the giant flat fold, chunk-parallel ------------------
+    println!("\n== flat allreduce fold @ {fold_ranks} buffers x {fold_len} f32 ==");
+    let bufs: Vec<Vec<f32>> = (0..fold_ranks)
+        .map(|rank| {
+            let mut x = (rank as u64).wrapping_mul(0x9e3779b97f4a7c15) | 1;
+            (0..fold_len)
+                .map(|_| {
+                    x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                    ((x >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+                })
+                .collect()
+        })
+        .collect();
+    let refs: Vec<&[f32]> = bufs.iter().map(|v| v.as_slice()).collect();
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let t0 = std::time::Instant::now();
+    let serial = flat_allreduce(&refs);
+    let t_serial = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let par = flat_allreduce_par(&refs, threads);
+    let t_par = t0.elapsed().as_secs_f64();
+    assert_eq!(serial, par, "parallel fold must be bitwise-identical");
+    println!(
+        "  serial {t_serial:.3} s   {threads} threads {t_par:.3} s   bitwise equal: yes"
+    );
+
+    println!("\ndatacenter_scale OK");
+    Ok(())
+}

@@ -220,6 +220,15 @@ pub fn flat_allreduce(buffers: &[&[f32]]) -> Vec<f32> {
     reduce_scaled(buffers, 1.0 / buffers.len() as f32)
 }
 
+/// Chunk-parallel [`flat_allreduce`] for the giant flat collectives a
+/// datacenter-scale step folds (tens of thousands of buffers): same
+/// ascending-rank left fold per element via [`reduce_scaled_par`], so
+/// the output is bitwise-identical to the serial flat fold for any
+/// thread count — std threads only, no rayon.
+pub fn flat_allreduce_par(buffers: &[&[f32]], threads: usize) -> Vec<f32> {
+    reduce_scaled_par(buffers, 1.0 / buffers.len() as f32, threads)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -336,6 +345,17 @@ mod tests {
                 let got = reduce_scaled_par(&refs, 1.0 / k as f32, threads);
                 assert_eq!(got, want, "k={k} n={n} threads={threads}");
             }
+        }
+    }
+
+    #[test]
+    fn parallel_flat_allreduce_bitwise_equals_serial() {
+        // many small buffers — the shape the datacenter-scale demo folds
+        let bufs: Vec<Vec<f32>> = (0..64u64).map(|i| mk(257, 80 + i)).collect();
+        let refs: Vec<&[f32]> = bufs.iter().map(|v| v.as_slice()).collect();
+        let want = flat_allreduce(&refs);
+        for threads in [1usize, 2, 3, 16] {
+            assert_eq!(flat_allreduce_par(&refs, threads), want, "threads={threads}");
         }
     }
 

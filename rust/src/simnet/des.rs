@@ -19,8 +19,6 @@ use super::{cost, ClusterModel, StepBreakdown};
 use crate::metrics::{LinkStats, NetPhaseStats, RegroupEvent};
 use crate::topology::{Membership, Topology};
 use anyhow::Result;
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
 
 /// One scheduled event in the simulated cluster.
 #[derive(Debug, Clone, PartialEq)]
@@ -28,6 +26,12 @@ struct Event {
     at: f64,
     seq: u64, // FIFO tiebreak for equal times (determinism)
     kind: EventKind,
+}
+
+/// Strict event order: `(at, seq)` ascending — `seq` is unique, so
+/// equal-time events pop in schedule order (the determinism contract).
+fn before(a: &Event, b: &Event) -> bool {
+    a.at < b.at || (a.at == b.at && a.seq < b.seq)
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -40,20 +44,131 @@ enum EventKind {
     UpdateDone { group: usize, step: usize },
 }
 
-impl Eq for Event {}
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // min-heap on (time, seq): BinaryHeap is a max-heap so reverse
-        other
-            .at
-            .partial_cmp(&self.at)
-            .unwrap_or(Ordering::Equal)
-            .then(other.seq.cmp(&self.seq))
-    }
+/// Bucketed (calendar-style) event queue. Events land in bucket
+/// `floor(at / width) mod nbuckets`; the cursor walks one "day" of
+/// simulated time at a time and serves only the events of that day, so
+/// push/pop are O(1) amortized where a global `BinaryHeap` paid
+/// O(log n) on every operation — the profile leader once a run tracks
+/// tens of thousands of lanes. The pop sequence is exactly the heap's:
+/// an event on an earlier day is strictly earlier (floor is monotone),
+/// and within a day the scan minimizes the same `(at, seq)` order.
+///
+/// The DES only ever schedules at or after the time it is currently
+/// serving, so the cursor never has to rewind in practice; `push`
+/// still guards the general case. When occupancy outgrows the bucket
+/// array the queue rebuilds itself with twice the buckets and a width
+/// re-estimated from the pending events' span (classic calendar-queue
+/// resize).
+struct CalendarQueue {
+    buckets: Vec<Vec<Event>>,
+    /// Seconds per bucket ("day" length).
+    width: f64,
+    /// Next day the cursor serves.
+    cur_day: u64,
+    len: usize,
 }
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
+
+impl CalendarQueue {
+    fn new() -> Self {
+        Self { buckets: vec![Vec::new(); 16], width: 1.0, cur_day: 0, len: 0 }
+    }
+
+    fn day(&self, at: f64) -> u64 {
+        (at / self.width) as u64
+    }
+
+    fn push(&mut self, ev: Event) {
+        if self.len + 1 > self.buckets.len() * 8 {
+            self.rebuild();
+        }
+        let day = self.day(ev.at);
+        if day < self.cur_day {
+            self.cur_day = day; // defensive: schedule into the past
+        }
+        let nb = self.buckets.len() as u64;
+        self.buckets[(day % nb) as usize].push(ev);
+        self.len += 1;
+    }
+
+    fn pop(&mut self) -> Option<Event> {
+        if self.len == 0 {
+            return None;
+        }
+        let nb = self.buckets.len() as u64;
+        let mut laps = 0u64;
+        loop {
+            let b = (self.cur_day % nb) as usize;
+            let mut best: Option<usize> = None;
+            for (i, ev) in self.buckets[b].iter().enumerate() {
+                if self.day(ev.at) != self.cur_day {
+                    continue; // a later lap of the calendar
+                }
+                let better = match best {
+                    None => true,
+                    Some(j) => before(ev, &self.buckets[b][j]),
+                };
+                if better {
+                    best = Some(i);
+                }
+            }
+            if let Some(i) = best {
+                self.len -= 1;
+                return Some(self.buckets[b].swap_remove(i));
+            }
+            self.cur_day += 1;
+            laps += 1;
+            if laps >= nb {
+                // a whole empty rotation: jump straight to the
+                // earliest pending day instead of spinning through
+                // empty years
+                self.cur_day = self.min_day();
+                laps = 0;
+            }
+        }
+    }
+
+    /// Day of the earliest pending event (queue must be non-empty).
+    fn min_day(&self) -> u64 {
+        let mut best: Option<&Event> = None;
+        for bucket in &self.buckets {
+            for ev in bucket {
+                let better = match best {
+                    None => true,
+                    Some(cur) => before(ev, cur),
+                };
+                if better {
+                    best = Some(ev);
+                }
+            }
+        }
+        self.day(best.expect("min_day on an empty queue").at)
+    }
+
+    /// Double the bucket array and re-estimate the width from the
+    /// pending events so occupancy stays O(1) per bucket.
+    fn rebuild(&mut self) {
+        let mut all: Vec<Event> = Vec::with_capacity(self.len);
+        for b in self.buckets.iter_mut() {
+            all.append(b);
+        }
+        let nb = (all.len().max(8) * 2).next_power_of_two();
+        let mut lo = f64::INFINITY;
+        let mut hi = 0.0_f64;
+        for ev in &all {
+            lo = lo.min(ev.at);
+            hi = hi.max(ev.at);
+        }
+        // width: mean inter-event gap, floored so day indices stay
+        // far inside u64 range even for pathologically tight clusters
+        let span = (hi - lo).max(0.0);
+        self.width = (span / all.len().max(1) as f64).max(hi * 1e-12).max(1e-12);
+        self.buckets = vec![Vec::new(); nb];
+        self.cur_day = if all.is_empty() { 0 } else { self.day(lo) };
+        let nbu = nb as u64;
+        for ev in all {
+            let d = self.day(ev.at);
+            self.buckets[(d % nbu) as usize].push(ev);
+        }
     }
 }
 
@@ -94,14 +209,21 @@ pub struct DesResult {
 }
 
 struct Engine {
-    queue: BinaryHeap<Event>,
+    queue: CalendarQueue,
     seq: u64,
     spans: Vec<Span>,
+    /// Span recording on/off ([`PerturbConfig::trace`]): datacenter
+    /// runs skip the per-event label allocations entirely.
+    trace: bool,
 }
 
 impl Engine {
     fn new() -> Self {
-        Self { queue: BinaryHeap::new(), seq: 0, spans: Vec::new() }
+        Self::with_trace(true)
+    }
+
+    fn with_trace(trace: bool) -> Self {
+        Self { queue: CalendarQueue::new(), seq: 0, spans: Vec::new(), trace }
     }
 
     fn schedule(&mut self, at: f64, kind: EventKind) {
@@ -109,8 +231,19 @@ impl Engine {
         self.queue.push(Event { at, seq: self.seq, kind });
     }
 
-    fn span(&mut self, rank: String, phase: &'static str, start: f64, end: f64, step: usize) {
-        self.spans.push(Span { rank, phase, start, end, step });
+    /// Record a span; `rank` is lazy so disabled traces never build
+    /// (or allocate) the label.
+    fn span(
+        &mut self,
+        rank: impl FnOnce() -> String,
+        phase: &'static str,
+        start: f64,
+        end: f64,
+        step: usize,
+    ) {
+        if self.trace {
+            self.spans.push(Span { rank: rank(), phase, start, end, step });
+        }
     }
 }
 
@@ -165,7 +298,7 @@ pub fn run_lsgd_jittered(
     // step 0: batches are pre-loaded (paper Alg. 3 draws M^i at line 1)
     for gi in 0..g {
         let d = t_comp(gi, 0);
-        e.span(format!("g{gi}/workers"), "compute", 0.0, d, 0);
+        e.span(|| format!("g{gi}/workers"), "compute", 0.0, d, 0);
         e.schedule(d, EventKind::ComputeDone { group: gi, step: 0 });
     }
 
@@ -174,17 +307,17 @@ pub fn run_lsgd_jittered(
         makespan = makespan.max(now);
         match ev.kind {
             EventKind::ComputeDone { group, step } => {
-                e.span(format!("g{group}/workers"), "reduce", now, now + red, step);
+                e.span(|| format!("g{group}/workers"), "reduce", now, now + red, step);
                 e.schedule(now + red, EventKind::ReduceDone { group, step });
             }
             EventKind::ReduceDone { group, step } => {
                 // workers start loading the NEXT batch immediately
-                e.span(format!("g{group}/workers"), "io", now, now + m.t_io, step);
+                e.span(|| format!("g{group}/workers"), "io", now, now + m.t_io, step);
                 e.schedule(now + m.t_io, EventKind::IoDone { group, step });
                 groups_reduced[step] += 1;
                 if groups_reduced[step] == g {
                     // all communicators hold their partial sum: global AR
-                    e.span("comms".into(), "global_allreduce", now, now + t_g, step);
+                    e.span(|| "comms".into(), "global_allreduce", now, now + t_g, step);
                     e.schedule(now + t_g, EventKind::GlobalDone { step });
                 }
             }
@@ -204,13 +337,13 @@ pub fn run_lsgd_jittered(
                 }
             }
             EventKind::BroadcastDone { group, step } => {
-                e.span(format!("g{group}/workers"), "update", now, now + m.t_update, step);
+                e.span(|| format!("g{group}/workers"), "update", now, now + m.t_update, step);
                 e.schedule(now + m.t_update, EventKind::UpdateDone { group, step });
             }
             EventKind::UpdateDone { group, step } => {
                 if step + 1 < steps {
                     let d = t_comp(group, step + 1);
-                    e.span(format!("g{group}/workers"), "compute", now, now + d, step + 1);
+                    e.span(|| format!("g{group}/workers"), "compute", now, now + d, step + 1);
                     e.schedule(now + d, EventKind::ComputeDone { group, step: step + 1 });
                 }
                 makespan = makespan.max(now);
@@ -249,7 +382,7 @@ fn try_broadcast(
     }
     bcast_scheduled[step][group] = true;
     let start = gd.max(io);
-    e.span(format!("g{group}/workers"), "broadcast", start, start + bcast, step);
+    e.span(|| format!("g{group}/workers"), "broadcast", start, start + bcast, step);
     e.schedule(start + bcast, EventKind::BroadcastDone { group, step });
 }
 
@@ -558,7 +691,7 @@ fn lsgd_segment(
     let io_of = |gi: usize, step: usize| m.t_io * group_scale(p, memb, gi, step);
     let comp_of = |gi: usize, step: usize| m.t_compute * group_scale(p, memb, gi, step);
 
-    let mut e = Engine::new();
+    let mut e = Engine::with_trace(p.trace);
     let mut io_done_at = vec![vec![f64::NAN; g]; nsteps];
     let mut bcast_scheduled = vec![vec![false; g]; nsteps];
     let mut groups_reduced = vec![0usize; nsteps];
@@ -568,7 +701,7 @@ fn lsgd_segment(
 
     for gi in 0..g {
         let d = comp_of(gi, base);
-        e.span(format!("g{gi}/workers"), "compute", t0, t0 + d, base);
+        e.span(|| format!("g{gi}/workers"), "compute", t0, t0 + d, base);
         e.schedule(t0 + d, EventKind::ComputeDone { group: gi, step: base });
     }
 
@@ -578,18 +711,18 @@ fn lsgd_segment(
         match ev.kind {
             EventKind::ComputeDone { group, step } => {
                 let r = costs.reduce(netacc, group, step);
-                e.span(format!("g{group}/workers"), "reduce", now, now + r, step);
+                e.span(|| format!("g{group}/workers"), "reduce", now, now + r, step);
                 e.schedule(now + r, EventKind::ReduceDone { group, step });
             }
             EventKind::ReduceDone { group, step } => {
                 let io = io_of(group, step);
-                e.span(format!("g{group}/workers"), "io", now, now + io, step);
+                e.span(|| format!("g{group}/workers"), "io", now, now + io, step);
                 e.schedule(now + io, EventKind::IoDone { group, step });
                 let si = step - base;
                 groups_reduced[si] += 1;
                 if groups_reduced[si] == g {
                     let t_g = costs.global(netacc, step);
-                    e.span("comms".into(), "global_allreduce", now, now + t_g, step);
+                    e.span(|| "comms".into(), "global_allreduce", now, now + t_g, step);
                     e.schedule(now + t_g, EventKind::GlobalDone { step });
                     // hidden share: the allreduce runs inside every
                     // group's IO window up to the shortest window
@@ -629,13 +762,13 @@ fn lsgd_segment(
                 }
             }
             EventKind::BroadcastDone { group, step } => {
-                e.span(format!("g{group}/workers"), "update", now, now + m.t_update, step);
+                e.span(|| format!("g{group}/workers"), "update", now, now + m.t_update, step);
                 e.schedule(now + m.t_update, EventKind::UpdateDone { group, step });
             }
             EventKind::UpdateDone { group, step } => {
                 if step + 1 < range.end {
                     let d = comp_of(group, step + 1);
-                    e.span(format!("g{group}/workers"), "compute", now, now + d, step + 1);
+                    e.span(|| format!("g{group}/workers"), "compute", now, now + d, step + 1);
                     e.schedule(now + d, EventKind::ComputeDone { group, step: step + 1 });
                 }
                 makespan = makespan.max(now);
@@ -670,7 +803,7 @@ fn try_broadcast_at(
     // each broadcast's messages exactly once
     let bcast = costs.bcast(netacc, group, step);
     let start = gd.max(io);
-    e.span(format!("g{group}/workers"), "broadcast", start, start + bcast, step);
+    e.span(|| format!("g{group}/workers"), "broadcast", start, start + bcast, step);
     e.schedule(start + bcast, EventKind::BroadcastDone { group, step });
 }
 
@@ -690,7 +823,7 @@ pub fn run_csgd_perturbed(
 ) -> Result<DesResult> {
     p.validate(topo, steps)?;
     let mut memb = Membership::full(topo);
-    let mut e = Engine::new();
+    let mut e = Engine::with_trace(p.trace);
     let mut netacc = NetAcc::default();
     let mut t = 0.0;
     let regroups = drive_segments(p, &mut memb, steps, |memb, range, _boundary| {
@@ -747,13 +880,13 @@ pub fn run_csgd_perturbed(
             };
             let io = m.t_io * slowest;
             let comp = m.t_compute * slowest;
-            e.span("workers".into(), "io", t, t + io, step);
+            e.span(|| "workers".into(), "io", t, t + io, step);
             t += io;
-            e.span("workers".into(), "compute", t, t + comp, step);
+            e.span(|| "workers".into(), "compute", t, t + comp, step);
             t += comp;
-            e.span("workers".into(), "allreduce", t, t + ar, step);
+            e.span(|| "workers".into(), "allreduce", t, t + ar, step);
             t += ar;
-            e.span("workers".into(), "update", t, t + m.t_update, step);
+            e.span(|| "workers".into(), "update", t, t + m.t_update, step);
             t += m.t_update;
         }
         Ok(())
@@ -793,13 +926,13 @@ pub fn run_csgd_jittered(
         let slowest = (0..topo.groups)
             .map(|gi| m.t_compute * (1.0 + jitter * jitter_u(gi, step)))
             .fold(0.0_f64, f64::max);
-        e.span("workers".into(), "io", t, t + m.t_io, step);
+        e.span(|| "workers".into(), "io", t, t + m.t_io, step);
         t += m.t_io;
-        e.span("workers".into(), "compute", t, t + slowest, step);
+        e.span(|| "workers".into(), "compute", t, t + slowest, step);
         t += slowest;
-        e.span("workers".into(), "allreduce", t, t + ar, step);
+        e.span(|| "workers".into(), "allreduce", t, t + ar, step);
         t += ar;
-        e.span("workers".into(), "update", t, t + m.t_update, step);
+        e.span(|| "workers".into(), "update", t, t + m.t_update, step);
         t += m.t_update;
     }
     DesResult {
@@ -1224,5 +1357,65 @@ mod tests {
         p.parse_failures("3@500").unwrap();
         assert!(run_lsgd_perturbed(&m, &topo, 100, &p).is_err());
         assert!(run_csgd_perturbed(&m, &topo, 100, &p).is_err());
+    }
+
+    // -------------------------------------------------- event queue
+
+    #[test]
+    fn calendar_queue_pops_in_heap_order() {
+        // enough events to force a rebuild (starts at 16 buckets),
+        // clustered times plus equal-time ties
+        let mut q = CalendarQueue::new();
+        let mut expect: Vec<(f64, u64)> = Vec::new();
+        let mut seq = 0u64;
+        for i in 0..500usize {
+            let at = jitter_u(i, 7) * 10.0 + (i % 5) as f64;
+            seq += 1;
+            q.push(Event { at, seq, kind: EventKind::GlobalDone { step: i } });
+            expect.push((at, seq));
+        }
+        for _ in 0..3 {
+            seq += 1;
+            q.push(Event { at: 2.5, seq, kind: EventKind::GlobalDone { step: 0 } });
+            expect.push((2.5, seq));
+        }
+        expect.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        let mut got = Vec::new();
+        while let Some(ev) = q.pop() {
+            got.push((ev.at, ev.seq));
+        }
+        assert_eq!(got, expect, "pop order must be ascending (at, seq)");
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn calendar_queue_interleaves_pushes_at_the_served_time() {
+        // the DES pattern: every pop schedules follow-ups at now + d,
+        // including zero-delay events that must pop in FIFO order
+        let mut q = CalendarQueue::new();
+        q.push(Event { at: 0.0, seq: 0, kind: EventKind::GlobalDone { step: 0 } });
+        let mut seq = 0u64;
+        let mut last = (0.0_f64, 0u64);
+        let mut popped = 0usize;
+        while let Some(ev) = q.pop() {
+            assert!(
+                ev.at > last.0 || (ev.at == last.0 && ev.seq >= last.1),
+                "pop went backwards: {:?} after {last:?}",
+                (ev.at, ev.seq)
+            );
+            last = (ev.at, ev.seq);
+            popped += 1;
+            if seq < 400 {
+                for d in [0.0, jitter_u(seq as usize, 3) * 7.0] {
+                    seq += 1;
+                    q.push(Event {
+                        at: ev.at + d,
+                        seq,
+                        kind: EventKind::GlobalDone { step: seq as usize },
+                    });
+                }
+            }
+        }
+        assert_eq!(popped, 401, "every scheduled event must surface exactly once");
     }
 }

@@ -25,6 +25,19 @@
 //!   mixed intra/crossing flow set re-prices exactly as the fast flows
 //!   get out of the way.
 //!
+//! The allocator is **incremental**: flows partition into connected
+//! components of the flow–link sharing graph (components share no
+//! link, so they cannot influence each other), each component is
+//! water-filled with its own fresh level, and when a flow finishes
+//! only the components reachable from the links it freed are re-solved
+//! (touched-set propagation). A full from-scratch re-solve would visit
+//! the same components one by one and produce bit-for-bit the same
+//! rates — property-tested against a brute-force reference below.
+//!
+//! Flows that can never progress — a zero-capacity link on the route —
+//! are **stalled**: rate `0.0`, finish `f64::INFINITY`. Makespan and
+//! `worst_slowdown` go infinite rather than silently under-reporting.
+//!
 //! ## Units and the conservation contract
 //!
 //! Rates are normalized to one NIC: a flow alone on its route runs at
@@ -188,6 +201,14 @@ impl Fabric {
         &self.caps
     }
 
+    /// Override one link's capacity (fault injection, experiments): a
+    /// zero capacity stalls every flow routed over the link — they
+    /// report rate `0.0` and `finish = f64::INFINITY`.
+    pub fn set_link_cap(&mut self, l: usize, cap: f64) {
+        assert!(cap.is_finite() && cap >= 0.0, "link capacity must be finite and ≥ 0");
+        self.caps[l] = cap;
+    }
+
     pub fn num_links(&self) -> usize {
         self.caps.len()
     }
@@ -328,7 +349,9 @@ pub struct Flow {
 /// rate uniformly until some link saturates, freeze the flows crossing
 /// it, subtract, repeat. A flow with an empty route is unconstrained
 /// and gets rate 1 (one NIC-unit). Exact in the conservation cases:
-/// one flow per link ⇒ rate exactly `1.0`.
+/// one flow per link ⇒ rate exactly `1.0`. A flow routed over a
+/// zero-capacity link can never progress and reports rate `0.0`
+/// (stalled).
 pub fn max_min_rates(caps: &[f64], routes: &[Vec<usize>]) -> Vec<f64> {
     let refs: Vec<&[usize]> = routes.iter().map(|r| r.as_slice()).collect();
     water_fill(caps, &refs, &vec![false; routes.len()])
@@ -374,23 +397,19 @@ fn water_fill(caps: &[f64], routes: &[&[usize]], skip: &[bool]) -> Vec<f64> {
                 delta = delta.min(residual[l] / u as f64);
             }
         }
-        if !delta.is_finite() || delta <= 0.0 {
-            // every remaining flow sits on an already-saturated link
-            for f in 0..nf {
-                if !frozen[f] {
-                    frozen[f] = true;
-                    rates[f] = level.max(f64::MIN_POSITIVE);
+        if delta.is_finite() && delta > 0.0 {
+            level += delta;
+            for (l, &u) in users.iter().enumerate() {
+                if u > 0 {
+                    residual[l] -= delta * u as f64;
                 }
             }
-            break;
         }
-        level += delta;
-        for (l, &u) in users.iter().enumerate() {
-            if u > 0 {
-                residual[l] -= delta * u as f64;
-            }
-        }
-        // freeze flows crossing a saturated link
+        // freeze flows crossing a saturated link — a zero-delta round
+        // (zero-capacity link) freezes its flows at the current level,
+        // so a flow stuck from the start gets rate 0.0: stalled, never
+        // the old MIN_POSITIVE sentinel whose `remaining / 1e-308`
+        // poisoned `run_flows`' completion scan
         let mut froze = false;
         for (f, &r) in routes.iter().enumerate() {
             if !frozen[f] && r.iter().any(|&l| residual[l] <= caps[l] * 1e-12) {
@@ -430,36 +449,233 @@ pub struct FlowOutcome {
     pub worst_slowdown: f64,
 }
 
+/// Scratch state for incremental per-component progressive filling.
+/// Round stamps make every walk O(component) instead of O(cluster):
+/// bumping the round re-arms all flows and links without clearing the
+/// marks, and the residual/user scratch is only (re)initialised on the
+/// links the current component actually crosses.
+struct ComponentSolver {
+    round: u32,
+    flow_stamp: Vec<u32>,
+    link_stamp: Vec<u32>,
+    members: Vec<u32>,
+    comp_links: Vec<usize>,
+    frozen: Vec<bool>,
+    residual: Vec<f64>,
+    users: Vec<u32>,
+}
+
+impl ComponentSolver {
+    fn new(flows: usize, links: usize) -> Self {
+        Self {
+            round: 0,
+            flow_stamp: vec![0; flows],
+            link_stamp: vec![0; links],
+            members: Vec::new(),
+            comp_links: Vec::new(),
+            frozen: vec![false; flows],
+            residual: vec![0.0; links],
+            users: vec![0; links],
+        }
+    }
+
+    /// Start a re-solve round: components covered by earlier rounds
+    /// become eligible again.
+    fn next_round(&mut self) {
+        self.round += 1;
+    }
+
+    /// Walk the connected component containing the active flow `seed`
+    /// (breadth-first over shared links), then water-fill it. No-op
+    /// when this round's walks already covered the seed.
+    fn solve_from_flow(
+        &mut self,
+        seed: u32,
+        caps: &[f64],
+        routes: &[&[usize]],
+        done: &[bool],
+        link_flows: &[Vec<u32>],
+        rates: &mut [f64],
+    ) {
+        if self.flow_stamp[seed as usize] == self.round {
+            return;
+        }
+        self.members.clear();
+        self.comp_links.clear();
+        self.flow_stamp[seed as usize] = self.round;
+        self.members.push(seed);
+        let mut head = 0usize;
+        while head < self.members.len() {
+            let f = self.members[head] as usize;
+            head += 1;
+            for &l in routes[f] {
+                if self.link_stamp[l] != self.round {
+                    self.link_stamp[l] = self.round;
+                    self.comp_links.push(l);
+                    for &g in &link_flows[l] {
+                        if !done[g as usize] && self.flow_stamp[g as usize] != self.round {
+                            self.flow_stamp[g as usize] = self.round;
+                            self.members.push(g);
+                        }
+                    }
+                }
+            }
+        }
+        self.fill(caps, routes, rates);
+    }
+
+    /// Re-solve every component reachable from link `l` — usually one:
+    /// a freed link's surviving flows all share `l`, but walk each in
+    /// case earlier finishes already split them apart.
+    fn solve_from_link(
+        &mut self,
+        l: usize,
+        caps: &[f64],
+        routes: &[&[usize]],
+        done: &[bool],
+        link_flows: &[Vec<u32>],
+        rates: &mut [f64],
+    ) {
+        for &f in &link_flows[l] {
+            if !done[f as usize] {
+                self.solve_from_flow(f, caps, routes, done, link_flows, rates);
+            }
+        }
+    }
+
+    /// Classic progressive filling restricted to the gathered
+    /// component, with a fresh water level — exactly the rates the
+    /// component would get solved in isolation (and therefore exactly
+    /// what a full per-component pass would hand it: components share
+    /// no link, so solving them separately is lossless). Flows blocked
+    /// by an already-saturated link at level zero freeze at rate `0.0`:
+    /// stalled.
+    fn fill(&mut self, caps: &[f64], routes: &[&[usize]], rates: &mut [f64]) {
+        for &f in &self.members {
+            self.frozen[f as usize] = false;
+        }
+        for &l in &self.comp_links {
+            self.residual[l] = caps[l];
+        }
+        let mut level = 0.0_f64;
+        loop {
+            for &l in &self.comp_links {
+                self.users[l] = 0;
+            }
+            let mut active = 0usize;
+            for &f in &self.members {
+                let f = f as usize;
+                if !self.frozen[f] {
+                    active += 1;
+                    for &l in routes[f] {
+                        self.users[l] += 1;
+                    }
+                }
+            }
+            if active == 0 {
+                break;
+            }
+            let mut delta = f64::INFINITY;
+            for &l in &self.comp_links {
+                if self.users[l] > 0 {
+                    delta = delta.min(self.residual[l] / self.users[l] as f64);
+                }
+            }
+            if delta.is_finite() && delta > 0.0 {
+                level += delta;
+                for &l in &self.comp_links {
+                    if self.users[l] > 0 {
+                        self.residual[l] -= delta * self.users[l] as f64;
+                    }
+                }
+            }
+            // freeze flows crossing a saturated link; a zero-delta
+            // round freezes them at the current level (0.0 = stalled)
+            let mut froze = false;
+            for &f in &self.members {
+                let f = f as usize;
+                if !self.frozen[f]
+                    && routes[f].iter().any(|&l| self.residual[l] <= caps[l] * 1e-12)
+                {
+                    self.frozen[f] = true;
+                    rates[f] = level;
+                    froze = true;
+                }
+            }
+            if !froze {
+                // numerical guard: no link registered as saturated —
+                // freeze the rest at the reached level
+                for &f in &self.members {
+                    let f = f as usize;
+                    if !self.frozen[f] {
+                        self.frozen[f] = true;
+                        rates[f] = level;
+                    }
+                }
+                break;
+            }
+        }
+    }
+}
+
 /// Drain `flows` (all starting together) over `fabric` under
 /// progressive filling: rates are re-solved every time a flow finishes
 /// — the fair shares refill as traffic gets out of the way. A flow
 /// alone on its route finishes in exactly its service time.
+///
+/// Re-solves are *incremental*: only the components reachable from the
+/// links a finishing flow freed are re-filled (touched-set
+/// propagation); every other flow keeps its rate. Flows that can never
+/// progress — a zero-capacity link on the route — surface as
+/// `finish = f64::INFINITY`, driving `makespan` and `worst_slowdown`
+/// infinite instead of silently under-reporting.
 pub fn run_flows(fabric: &Fabric, flows: &[Flow]) -> FlowOutcome {
-    let n = flows.len();
-    let mut remaining: Vec<f64> = flows.iter().map(|f| f.service).collect();
+    let routes: Vec<&[usize]> = flows.iter().map(|f| f.route.as_slice()).collect();
+    let services: Vec<f64> = flows.iter().map(|f| f.service).collect();
+    run_flow_set(fabric, &routes, &services)
+}
+
+/// Borrowed-route twin of [`run_flows`]: flow `i` is
+/// `(routes[i], services[i])`, with routes pointing into caller
+/// storage (e.g. the packet replay's route arena), so draining a
+/// round allocates nothing per message.
+pub fn run_flow_set(fabric: &Fabric, routes: &[&[usize]], services: &[f64]) -> FlowOutcome {
+    assert_eq!(routes.len(), services.len(), "one route per service");
+    let n = routes.len();
+    let caps = fabric.caps();
+    let nl = fabric.num_links();
+    let mut remaining: Vec<f64> = services.to_vec();
     let mut finish = vec![0.0_f64; n];
     let mut done: Vec<bool> = remaining.iter().map(|&r| r <= 0.0).collect();
-    // routes are borrowed in place — `done` doubles as the allocator's
-    // skip mask, so finishing a flow never clones or edits the set
-    let routes: Vec<&[usize]> = flows.iter().map(|f| f.route.as_slice()).collect();
-    // active-flow count per link: a finish that frees no link shared
-    // with a still-active flow cannot change any rate, so the
-    // re-solve is skipped (the common case — disjoint intra flows)
-    let mut users = vec![0u32; fabric.num_links()];
+    // active-flow count per link (a finish that frees no shared link
+    // triggers no re-solve) and the static link → flows index the
+    // component walks filter through `done`
+    let mut users = vec![0u32; nl];
+    let mut link_flows: Vec<Vec<u32>> = vec![Vec::new(); nl];
     let mut active = 0usize;
     for i in 0..n {
         if !done[i] {
             active += 1;
-            for &l in &flows[i].route {
+            for &l in routes[i] {
                 users[l] += 1;
+                link_flows[l].push(i as u32);
             }
         }
     }
-    let mut busy = vec![0.0_f64; fabric.num_links()];
+    let mut solver = ComponentSolver::new(n, nl);
+    let mut rates = vec![1.0_f64; n]; // empty-route flows are unconstrained
+    solver.next_round();
+    for i in 0..n {
+        if !done[i] && !routes[i].is_empty() {
+            solver.solve_from_flow(i as u32, caps, routes, &done, &link_flows, &mut rates);
+        }
+    }
+    let mut busy = vec![0.0_f64; nl];
     let mut t = 0.0_f64;
-    let mut rates = water_fill(fabric.caps(), &routes, &done);
+    let mut freed: Vec<usize> = Vec::new();
     while active > 0 {
-        // next completion at current rates
+        // next completion at current rates (stalled rate-0 flows never
+        // advance the clock)
         let mut dt = f64::INFINITY;
         for i in 0..n {
             if !done[i] && rates[i] > 0.0 {
@@ -467,44 +683,56 @@ pub fn run_flows(fabric: &Fabric, flows: &[Flow]) -> FlowOutcome {
             }
         }
         if !dt.is_finite() {
-            break; // defensive: nothing can progress
+            // every remaining flow is stalled on a dead link — report
+            // the stall loudly instead of leaving finish = 0.0
+            for i in 0..n {
+                if !done[i] {
+                    finish[i] = f64::INFINITY;
+                }
+            }
+            break;
         }
         // advance: drain work, account link busy time
         for i in 0..n {
-            if done[i] {
+            if done[i] || rates[i] <= 0.0 {
                 continue;
             }
             let drained = rates[i] * dt;
-            for &l in &flows[i].route {
-                busy[l] += drained / fabric.caps()[l];
+            for &l in routes[i] {
+                busy[l] += drained / caps[l];
             }
             remaining[i] -= drained;
         }
         t += dt;
-        let mut resolve = false;
+        freed.clear();
         for i in 0..n {
-            if !done[i] && remaining[i] <= remaining_eps(flows[i].service) {
+            if !done[i] && remaining[i] <= remaining_eps(services[i]) {
                 done[i] = true;
                 finish[i] = t;
                 active -= 1;
-                for &l in &flows[i].route {
+                for &l in routes[i] {
                     users[l] -= 1;
                     if users[l] > 0 {
-                        resolve = true; // freed capacity others can take
+                        freed.push(l); // capacity someone else can take
                     }
                 }
             }
         }
-        if resolve && active > 0 {
-            rates = water_fill(fabric.caps(), &routes, &done);
+        if !freed.is_empty() && active > 0 {
+            // touched-set propagation: re-fill only the components
+            // reachable from the freed links
+            solver.next_round();
+            for &l in &freed {
+                solver.solve_from_link(l, caps, routes, &done, &link_flows, &mut rates);
+            }
         }
     }
     let makespan = finish.iter().copied().fold(0.0_f64, f64::max);
-    let worst = flows
+    let worst = services
         .iter()
         .zip(&finish)
-        .filter(|(f, _)| f.service > 0.0)
-        .map(|(f, &fin)| fin / f.service)
+        .filter(|(&s, _)| s > 0.0)
+        .map(|(&s, &fin)| fin / s)
         .fold(1.0_f64, f64::max);
     FlowOutcome { finish, makespan, busy, worst_slowdown: worst }
 }
@@ -692,5 +920,180 @@ mod tests {
         assert_eq!(flat_slot(&sizes, 3), (1, 0));
         assert_eq!(flat_slot(&sizes, 4), (2, 0));
         assert_eq!(flat_slot(&sizes, 5), (2, 1));
+    }
+
+    #[test]
+    fn zero_capacity_link_stalls_only_its_flows() {
+        // regression: the saturated-link guard used to freeze *every*
+        // remaining flow at MIN_POSITIVE when a used link had zero
+        // residual, turning `remaining / 1e-308` into a ~1e300 dt
+        // candidate downstream
+        let mut fab = two_groups();
+        let stalled_route = fab.route_spine(0, 1);
+        fab.set_link_cap(fab.spine(), 0.0);
+        let routes = vec![stalled_route, fab.route_intra(0, 0, 1)];
+        let rates = max_min_rates(fab.caps(), &routes);
+        assert_eq!(rates[0], 0.0, "a dead link must report rate 0, not MIN_POSITIVE");
+        assert_eq!(rates[1], 1.0, "flows off the dead link keep their fair share");
+    }
+
+    #[test]
+    fn stalled_flows_surface_as_infinite_finish() {
+        // regression: run_flows used to bail out of the drain loop on a
+        // non-finite dt and leave stalled flows at finish = 0.0, so
+        // makespan/worst_slowdown under-reported exactly when
+        // contention was worst
+        let mut fab = two_groups();
+        fab.set_link_cap(fab.spine(), 0.0);
+        let flows = vec![
+            Flow { route: fab.route_spine(0, 1), service: 1.0, tag: 0 },
+            Flow { route: fab.route_intra(0, 0, 1), service: 0.25, tag: 1 },
+        ];
+        let out = run_flows(&fab, &flows);
+        assert!(out.finish[0].is_infinite(), "stalled flow must not report finish 0");
+        assert!((out.finish[1] - 0.25).abs() < 1e-12, "healthy flow still drains");
+        assert!(out.makespan.is_infinite());
+        assert!(out.worst_slowdown.is_infinite());
+        // the healthy flow's carried work is still accounted
+        assert!((out.busy[fab.nic_out(0, 0)] - 0.25).abs() < 1e-12);
+        assert_eq!(out.busy[fab.spine()], 0.0, "a dead link never carries work");
+    }
+
+    /// Brute-force reference: global water-filling re-run from scratch
+    /// after every completion — the pre-incremental algorithm the
+    /// component solver must agree with.
+    fn run_flows_reference(fabric: &Fabric, flows: &[Flow]) -> FlowOutcome {
+        let n = flows.len();
+        let caps = fabric.caps();
+        let mut remaining: Vec<f64> = flows.iter().map(|f| f.service).collect();
+        let mut finish = vec![0.0_f64; n];
+        let mut done: Vec<bool> = remaining.iter().map(|&r| r <= 0.0).collect();
+        let routes: Vec<&[usize]> = flows.iter().map(|f| f.route.as_slice()).collect();
+        let mut busy = vec![0.0_f64; fabric.num_links()];
+        let mut t = 0.0_f64;
+        while done.iter().any(|&d| !d) {
+            let rates = water_fill(caps, &routes, &done);
+            let mut dt = f64::INFINITY;
+            for i in 0..n {
+                if !done[i] && rates[i] > 0.0 {
+                    dt = dt.min(remaining[i] / rates[i]);
+                }
+            }
+            if !dt.is_finite() {
+                for i in 0..n {
+                    if !done[i] {
+                        finish[i] = f64::INFINITY;
+                    }
+                }
+                break;
+            }
+            for i in 0..n {
+                if !done[i] && rates[i] > 0.0 {
+                    let drained = rates[i] * dt;
+                    for &l in routes[i] {
+                        busy[l] += drained / caps[l];
+                    }
+                    remaining[i] -= drained;
+                }
+            }
+            t += dt;
+            for i in 0..n {
+                if !done[i] && remaining[i] <= remaining_eps(flows[i].service) {
+                    done[i] = true;
+                    finish[i] = t;
+                }
+            }
+        }
+        let makespan = finish.iter().copied().fold(0.0_f64, f64::max);
+        let worst = flows
+            .iter()
+            .zip(&finish)
+            .filter(|(f, _)| f.service > 0.0)
+            .map(|(f, &fin)| fin / f.service)
+            .fold(1.0_f64, f64::max);
+        FlowOutcome { finish, makespan, busy, worst_slowdown: worst }
+    }
+
+    /// A random mixed flow set (intra / spine / flat routes, the
+    /// occasional zero service) over a `sizes` cluster. Routes only
+    /// depend on the topology, never on oversub, so one set can be
+    /// replayed across fabrics with different spine capacities.
+    fn random_flows(rng: &mut crate::data::Rng, sizes: &[usize]) -> Vec<Flow> {
+        use crate::util::prop::GenExt;
+        let fab = Fabric::two_tier(sizes, 1.0);
+        let nf = rng.usize_in(1, 20);
+        (0..nf)
+            .map(|i| {
+                let g = rng.usize_in(0, sizes.len() - 1);
+                let g2 = rng.usize_in(0, sizes.len() - 1);
+                let s = rng.usize_in(0, sizes[g]); // workers + communicator slot
+                let d = rng.usize_in(0, sizes[g2]);
+                let route = match rng.usize_in(0, 2) {
+                    0 => fab.route_intra(g, s, d),
+                    1 => fab.route_spine(g, g2),
+                    _ => fab.route_flat((g, s), (g2, d)),
+                };
+                let service = if rng.usize_in(0, 9) == 0 { 0.0 } else { 0.05 + rng.f64() };
+                Flow { route, service, tag: i }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn incremental_solver_matches_brute_force_reference() {
+        use crate::util::prop::{self, GenExt};
+        prop::run(48, |rng| {
+            let groups = rng.usize_in(2, 5);
+            let sizes: Vec<usize> = (0..groups).map(|_| rng.usize_in(1, 4)).collect();
+            let oversub = [1.0, 1.5, 2.0, 4.0][rng.usize_in(0, 3)];
+            let fab = Fabric::two_tier(&sizes, oversub);
+            let flows = random_flows(rng, &sizes);
+            let inc = run_flows(&fab, &flows);
+            let full = run_flows_reference(&fab, &flows);
+            for (i, (a, b)) in inc.finish.iter().zip(&full.finish).enumerate() {
+                assert!((a - b).abs() < 1e-9, "flow {i}: incremental {a} vs reference {b}");
+            }
+            assert!((inc.makespan - full.makespan).abs() < 1e-9);
+            assert!((inc.worst_slowdown - full.worst_slowdown).abs() < 1e-9);
+            for (a, b) in inc.busy.iter().zip(&full.busy) {
+                assert!((a - b).abs() < 1e-9, "busy: incremental {a} vs reference {b}");
+            }
+            // link-busy conservation: every second of carried work
+            // lands on exactly the links the route crosses
+            let want: f64 = flows.iter().map(|f| f.service * f.route.len() as f64).sum();
+            let got: f64 = inc.busy.iter().zip(fab.caps()).map(|(b, c)| b * c).sum();
+            assert!((got - want).abs() < 1e-9 * want.max(1.0), "busy {got} vs offered {want}");
+        });
+    }
+
+    #[test]
+    fn makespan_monotone_in_oversub_on_random_services() {
+        use crate::util::prop::{self, GenExt};
+        // communicator lanes with random per-flow services: each lane
+        // owns its uplink/downlink, so the spine is the ONLY shared
+        // link — squeezing the one shared link can never speed a flow
+        // up (single-bottleneck max–min is monotone in its capacity;
+        // with several shared links per flow that is famously not a
+        // theorem), so the makespan is non-decreasing in oversub
+        prop::run(32, |rng| {
+            let groups = rng.usize_in(2, 6);
+            let sizes: Vec<usize> = (0..groups).map(|_| rng.usize_in(1, 3)).collect();
+            let shape = Fabric::two_tier(&sizes, 1.0);
+            let mut flows = shape.global_allreduce_flows(1.0);
+            for f in flows.iter_mut() {
+                f.service = 0.05 + rng.f64();
+            }
+            let mut last = 0.0_f64;
+            for oversub in [1.0, 2.0, 4.0, 8.0] {
+                let fab = Fabric::two_tier(&sizes, oversub);
+                let out = run_flows(&fab, &flows);
+                assert!(
+                    out.makespan >= last - 1e-9,
+                    "oversub {oversub}: makespan {} < {last}",
+                    out.makespan
+                );
+                last = out.makespan;
+            }
+        });
     }
 }

@@ -189,13 +189,29 @@ impl Phase {
 /// Per-phase message accounting for one run — what
 /// [`crate::metrics::PerturbReport::net`] and
 /// [`super::des::DesResult::net`] surface. Phases are keyed by name,
-/// so the report order is deterministic. Fabric-routed replays also
-/// fold per-link busy time in here (keyed by link name, so the
-/// accounting survives regroups rebuilding the graph).
+/// so the report order is deterministic.
+///
+/// Fabric-routed replays also fold per-link busy time in here. Link
+/// names are *interned*: the first time a link carries work its name
+/// is resolved to a dense id (`fabric_ids`), and every later visit is
+/// pure index arithmetic through `fabric_map` — the old per-collective
+/// `link_name` `String` churn is gone. Ids key on the name, so the
+/// accounting still survives regroups rebuilding the graph (a reshaped
+/// fabric re-maps its link ids, but `spine` stays `spine`).
 #[derive(Debug, Default, Clone)]
 pub struct NetAcc {
     phases: std::collections::BTreeMap<&'static str, NetPhaseStats>,
-    fabric_busy: std::collections::BTreeMap<String, f64>,
+    /// Link name → interned id (sorted, so reports stay name-ordered).
+    fabric_ids: std::collections::BTreeMap<String, usize>,
+    /// Accumulated busy seconds by interned id.
+    fabric_busy: Vec<f64>,
+    /// Current fabric's link id → interned id (`usize::MAX` = the link
+    /// has not carried work yet).
+    fabric_map: Vec<usize>,
+    /// `(groups, num_links)` of the fabric `fabric_map` was built for —
+    /// the pair pins the name layout, so a regroup reshaping the graph
+    /// triggers a re-map while identical segments reuse it.
+    fabric_sig: (usize, usize),
 }
 
 impl NetAcc {
@@ -208,9 +224,25 @@ impl NetAcc {
 
     /// Fold one collective's per-link busy seconds into the run totals.
     pub(crate) fn add_fabric_busy(&mut self, fab: &Fabric, busy: &[f64]) {
+        let sig = (fab.groups(), fab.num_links());
+        if self.fabric_sig != sig || self.fabric_map.len() != busy.len() {
+            self.fabric_sig = sig;
+            self.fabric_map.clear();
+            self.fabric_map.resize(busy.len(), usize::MAX);
+        }
         for (l, &b) in busy.iter().enumerate() {
             if b > 0.0 {
-                *self.fabric_busy.entry(fab.link_name(l)).or_default() += b;
+                let mut id = self.fabric_map[l];
+                if id == usize::MAX {
+                    // intern the name once per (layout, link)
+                    let next = self.fabric_busy.len();
+                    id = *self.fabric_ids.entry(fab.link_name(l)).or_insert(next);
+                    if id == next {
+                        self.fabric_busy.push(0.0);
+                    }
+                    self.fabric_map[l] = id;
+                }
+                self.fabric_busy[id] += b;
             }
         }
     }
@@ -218,12 +250,15 @@ impl NetAcc {
     /// Per-link utilization of the fabric run (empty when no routed
     /// collective executed): `busy / makespan`, capped at 1.
     pub fn fabric_report(&self, makespan: f64) -> Vec<LinkStats> {
-        self.fabric_busy
+        self.fabric_ids
             .iter()
-            .map(|(name, &busy)| LinkStats {
-                link: name.clone(),
-                busy_secs: busy,
-                utilization: if makespan > 0.0 { (busy / makespan).min(1.0) } else { 0.0 },
+            .map(|(name, &id)| {
+                let busy = self.fabric_busy[id];
+                LinkStats {
+                    link: name.clone(),
+                    busy_secs: busy,
+                    utilization: if makespan > 0.0 { (busy / makespan).min(1.0) } else { 0.0 },
+                }
             })
             .collect()
     }
@@ -414,12 +449,37 @@ fn msg_peer(
     }
 }
 
+/// Index of the route pattern round `ri` replays. Patterns repeat —
+/// every ring round is the same shift-by-one, every RHD round with the
+/// same distance `2^k` pairs the same peers — so the arena builds each
+/// pattern exactly once.
+fn pattern_of(shape: Shape, total_rounds: usize, ri: usize) -> usize {
+    match shape {
+        Shape::Ring => 0,
+        Shape::Rhd => {
+            let half = total_rounds / 2;
+            if ri < half {
+                ri
+            } else {
+                total_rounds - 1 - ri
+            }
+        }
+        Shape::Tree => ri,
+    }
+}
+
 /// Fabric-routed counterpart of [`sim_rounds`]: identical draw keys
 /// and per-message service arithmetic, but each round's messages run
 /// as concurrent flows under progressive filling
-/// ([`super::fabric::run_flows`]) — the lockstep barrier pays the
+/// ([`super::fabric::run_flow_set`]) — the lockstep barrier pays the
 /// slowest fair-share flow, and contention excess / per-link busy time
 /// are accounted separately from the seeded jitter.
+///
+/// Routes live in a per-collective arena: each distinct round pattern
+/// (one for ring, one per distance for RHD, one per round for tree) is
+/// flattened once into `arena` with `(offset, len)` spans, and replay
+/// rounds borrow slices out of it — no per-message allocation while
+/// the rounds drain.
 #[allow(clippy::too_many_arguments)]
 fn sim_rounds_routed(
     link: Link,
@@ -438,14 +498,45 @@ fn sim_rounds_routed(
     let c = cfg.chunk.max(1);
     let a = key_a(phase, group, step);
     let total_rounds = rounds.len();
+    let n_patterns = match shape {
+        Shape::Ring => 1,
+        Shape::Rhd => total_rounds / 2,
+        Shape::Tree => total_rounds,
+    };
+    let mut arena: Vec<usize> = Vec::new();
+    let mut patterns: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n_patterns];
+    for (ri, round) in rounds.iter().enumerate() {
+        let pid = pattern_of(shape, total_rounds, ri);
+        if !patterns[pid].is_empty() {
+            continue;
+        }
+        let mut spans = Vec::with_capacity(round.msgs);
+        for mi in 0..round.msgs {
+            let (src, dst) = msg_peer(shape, p, total_rounds, ri, mi);
+            let route = match kind {
+                RouteKind::IntraTree { group } => fab.route_intra(*group, src, dst),
+                RouteKind::CommGlobal => fab.route_spine(src, dst),
+                RouteKind::Flat { sizes } => {
+                    fab.route_flat(fabric::flat_slot(sizes, src), fabric::flat_slot(sizes, dst))
+                }
+            };
+            let off = arena.len();
+            arena.extend_from_slice(&route);
+            spans.push((off, route.len()));
+        }
+        patterns[pid] = spans;
+    }
     let mut busy = vec![0.0_f64; fab.num_links()];
     let mut t = 0.0_f64;
     let mut contention = 0.0_f64;
     let mut worst = 1.0_f64;
+    let mut routes: Vec<&[usize]> = Vec::new();
+    let mut services: Vec<f64> = Vec::new();
     let mut jitter_excess: Vec<(f64, bool)> = Vec::new();
     for (ri, round) in rounds.iter().enumerate() {
         let base_chunk = link.p2p(round.bytes / c as f64);
-        let mut flows = Vec::with_capacity(round.msgs);
+        routes.clear();
+        services.clear();
         jitter_excess.clear();
         for mi in 0..round.msgs {
             // the exact draws the private replay makes — fabric
@@ -462,25 +553,20 @@ fn sim_rounds_routed(
                 service += base_chunk;
                 excess += base_chunk;
             }
+            services.push(service);
             jitter_excess.push((excess, reordered));
-            let (src, dst) = msg_peer(shape, p, total_rounds, ri, mi);
-            let route = match kind {
-                RouteKind::IntraTree { group } => fab.route_intra(*group, src, dst),
-                RouteKind::CommGlobal => fab.route_spine(src, dst),
-                RouteKind::Flat { sizes } => {
-                    fab.route_flat(fabric::flat_slot(sizes, src), fabric::flat_slot(sizes, dst))
-                }
-            };
-            flows.push(fabric::Flow { route, service, tag: mi });
+        }
+        for &(off, len) in &patterns[pattern_of(shape, total_rounds, ri)] {
+            routes.push(&arena[off..off + len]);
         }
         // the round barrier under max–min fair share
-        let out = fabric::run_flows(fab, &flows);
+        let out = fabric::run_flow_set(fab, &routes, &services);
         for (l, &b) in out.busy.iter().enumerate() {
             busy[l] += b;
         }
         let stats = acc.phase_mut(phase);
-        for ((f, &fin), &(excess, reordered)) in
-            flows.iter().zip(&out.finish).zip(jitter_excess.iter())
+        for ((&service, &fin), &(excess, reordered)) in
+            services.iter().zip(&out.finish).zip(jitter_excess.iter())
         {
             stats.messages += 1;
             if reordered {
@@ -488,7 +574,7 @@ fn sim_rounds_routed(
             }
             stats.delay_total += excess;
             stats.delay_max = stats.delay_max.max(excess);
-            contention += fin - f.service;
+            contention += fin - service;
         }
         worst = worst.max(out.worst_slowdown);
         t += out.makespan;

@@ -209,6 +209,11 @@ pub struct PerturbConfig {
     /// Keep small so tests stay fast; irrelevant to the DES, which
     /// uses the cluster model's `t_compute` instead.
     pub delay_unit: f64,
+    /// Record per-rank [`super::des::Span`]s during DES replays
+    /// (default). Datacenter-scale runs (tens of thousands of lanes ×
+    /// steps) switch this off to skip the per-event label allocation;
+    /// makespans and reports are unaffected.
+    pub trace: bool,
 }
 
 impl Default for PerturbConfig {
@@ -227,6 +232,7 @@ impl Default for PerturbConfig {
             net: super::net::NetConfig::default(),
             fabric: super::fabric::FabricConfig::default(),
             delay_unit: 2e-3,
+            trace: true,
         }
     }
 }
