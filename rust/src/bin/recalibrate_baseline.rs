@@ -1,0 +1,69 @@
+//! `recalibrate-baseline` — propose fresh perf ceilings from CI
+//! artifacts.
+//!
+//! ```text
+//! recalibrate-baseline bench_results/BENCH_*.json [--out baseline.json]
+//! ```
+//!
+//! Reads one or more `BENCH_*.json` files produced by the bench
+//! binaries (the `util::bench::Harness::json` schema — CI's
+//! `bench-smoke` job uploads them from every green run), and prints a
+//! proposed `benches/baseline.json`: for each bench, the median across
+//! runs of the per-run medians, ×2 as the ceiling. The `recalibrate`
+//! workflow_dispatch CI job runs this over a fresh smoke run and
+//! uploads the proposal as an artifact for review — it is never
+//! committed automatically.
+
+use anyhow::{Context, Result};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut out: Option<String> = None;
+    let mut files = Vec::new();
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--out" => {
+                i += 1;
+                out = Some(argv.get(i).context("--out needs a path")?.clone());
+            }
+            "--help" | "-h" => {
+                println!(
+                    "usage: recalibrate-baseline <BENCH_*.json ...> [--out FILE]"
+                );
+                return Ok(());
+            }
+            f => files.push(f.to_string()),
+        }
+        i += 1;
+    }
+    anyhow::ensure!(
+        !files.is_empty(),
+        "usage: recalibrate-baseline <BENCH_*.json ...> [--out FILE]"
+    );
+    let runs: Vec<(String, String)> = files
+        .iter()
+        .map(|p| {
+            Ok((
+                p.clone(),
+                std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?,
+            ))
+        })
+        .collect::<Result<_>>()?;
+    let proposed = lsgd::util::bench::recalibrate(&runs)?;
+    match out {
+        Some(p) => {
+            std::fs::write(&p, &proposed).with_context(|| format!("writing {p}"))?;
+            eprintln!("proposed baseline ({} input runs) written to {p}", runs.len());
+        }
+        None => print!("{proposed}"),
+    }
+    Ok(())
+}

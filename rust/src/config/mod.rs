@@ -17,7 +17,10 @@ use crate::simnet::{AllreduceAlgo, ClusterModel, Link};
 use crate::topology::Topology;
 use crate::util::kvconf::KvConf;
 
-/// Which schedule to run (paper Algorithm 2 vs Algorithm 3).
+/// Which step schedule to run. `Csgd`/`Lsgd` are the paper's
+/// Algorithms 2/3; the rest are the related-work scheduler family
+/// (see [`crate::sched::scheduler`]) priced and executed through the
+/// same [`crate::sched::scheduler::Scheduler`] trait.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum Algo {
     /// Conventional distributed SGD — flat allreduce every step.
@@ -26,6 +29,18 @@ pub enum Algo {
     /// broadcast, deferred update.
     #[default]
     Lsgd,
+    /// Periodic model averaging with an elastic blend: local SGD every
+    /// step, parameter allreduce every `sched.comm_interval` steps,
+    /// merged as `w ← w − α(w − w̄)`.
+    Ma,
+    /// DaSGD-style delayed averaging: the global gradient average is
+    /// applied one step late so the collective overlaps the next
+    /// compute phase.
+    Dasgd,
+    /// DC-S3GD-style stale-synchronous SGD: the one-step-stale global
+    /// average is corrected by the local gradient delta
+    /// (`ḡ_{t−1} + λ(g_t − g_{t−1})`).
+    Dcs3gd,
 }
 
 impl std::str::FromStr for Algo {
@@ -35,7 +50,10 @@ impl std::str::FromStr for Algo {
         match s.to_ascii_lowercase().as_str() {
             "csgd" => Ok(Algo::Csgd),
             "lsgd" => Ok(Algo::Lsgd),
-            other => anyhow::bail!("unknown algo {other:?} (csgd|lsgd)"),
+            "ma" => Ok(Algo::Ma),
+            "dasgd" => Ok(Algo::Dasgd),
+            "dcs3gd" => Ok(Algo::Dcs3gd),
+            other => anyhow::bail!("unknown algo {other:?} (csgd|lsgd|ma|dasgd|dcs3gd)"),
         }
     }
 }
@@ -45,7 +63,30 @@ impl std::fmt::Display for Algo {
         match self {
             Algo::Csgd => write!(f, "csgd"),
             Algo::Lsgd => write!(f, "lsgd"),
+            Algo::Ma => write!(f, "ma"),
+            Algo::Dasgd => write!(f, "dasgd"),
+            Algo::Dcs3gd => write!(f, "dcs3gd"),
         }
+    }
+}
+
+/// Knobs for the scheduler family (ignored by schedulers that don't
+/// read them; see the per-variant docs on [`Algo`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SchedConfig {
+    /// `ma`: run the parameter allreduce every `comm_interval` steps
+    /// (1 = every step).
+    pub comm_interval: usize,
+    /// `ma`: elastic-averaging blend weight toward the global mean
+    /// (1.0 = hard reset to the mean).
+    pub alpha: f64,
+    /// `dcs3gd`: delay-compensation weight on the local gradient delta.
+    pub lambda: f64,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        Self { comm_interval: 4, alpha: 0.5, lambda: 0.5 }
     }
 }
 
@@ -123,6 +164,8 @@ pub struct ExperimentConfig {
     pub eval_every: usize,
     pub optim: OptimConfig,
     pub data: DataConfig,
+    /// Scheduler-family knobs (`ma`/`dasgd`/`dcs3gd`).
+    pub sched: SchedConfig,
     /// Timing model for simulated-scale runs and the figure benches.
     pub cluster: ClusterModel,
 }
@@ -138,6 +181,7 @@ impl Default for ExperimentConfig {
             eval_every: 0,
             optim: OptimConfig::default(),
             data: DataConfig::default(),
+            sched: SchedConfig::default(),
             cluster: ClusterModel::paper_k80(),
         }
     }
@@ -183,6 +227,11 @@ impl ExperimentConfig {
                 seed: kv.u64_or("data.seed", d.data.seed)?,
                 io_latency: kv.f64_or("data.io_latency", d.data.io_latency)?,
             },
+            sched: SchedConfig {
+                comm_interval: kv.usize_or("sched.comm_interval", d.sched.comm_interval)?,
+                alpha: kv.f64_or("sched.alpha", d.sched.alpha)?,
+                lambda: kv.f64_or("sched.lambda", d.sched.lambda)?,
+            },
             cluster: ClusterModel {
                 intra: Link {
                     alpha: kv.f64_or("cluster.intra_alpha", d.cluster.intra.alpha)?,
@@ -222,6 +271,12 @@ impl ExperimentConfig {
         );
         anyhow::ensure!(self.optim.base_global_batch > 0);
         anyhow::ensure!(self.data.train_samples > 0);
+        anyhow::ensure!(self.sched.comm_interval >= 1, "sched.comm_interval must be >= 1");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.sched.alpha),
+            "sched.alpha out of range [0, 1]"
+        );
+        anyhow::ensure!(self.sched.lambda >= 0.0, "sched.lambda must be non-negative");
         Ok(())
     }
 
@@ -233,6 +288,7 @@ impl ExperimentConfig {
              [optim]\nbase_lr = {}\nbase_global_batch = {}\nlinear_scaling = {}\nwarmup_epochs = {}\n\
              decay_factor = {}\ndecay_every_epochs = {}\nmomentum = {}\nweight_decay = {}\n\n\
              [data]\ntrain_samples = {}\nval_samples = {}\nseed = {}\nio_latency = {}\n\n\
+             [sched]\ncomm_interval = {}\nalpha = {}\nlambda = {}\n\n\
              [cluster]\nintra_alpha = {}\nintra_beta = {}\ninter_alpha = {}\ninter_beta = {}\n\
              comm_inter_alpha = {}\ncomm_inter_beta = {}\nt_compute = {}\nt_io = {}\n\
              grad_bytes = {}\nt_update = {}\nallreduce = \"{}\"\nlocal_batch = {}\n",
@@ -255,6 +311,9 @@ impl ExperimentConfig {
             self.data.val_samples,
             self.data.seed,
             self.data.io_latency,
+            self.sched.comm_interval,
+            self.sched.alpha,
+            self.sched.lambda,
             self.cluster.intra.alpha,
             self.cluster.intra.beta,
             self.cluster.inter.alpha,
@@ -311,6 +370,35 @@ mod tests {
     #[test]
     fn bad_algo_rejected() {
         assert!(ExperimentConfig::from_toml("algo = \"async\"\n").is_err());
+    }
+
+    #[test]
+    fn scheduler_family_algos_parse_and_display() {
+        for (s, a) in [
+            ("ma", Algo::Ma),
+            ("dasgd", Algo::Dasgd),
+            ("dcs3gd", Algo::Dcs3gd),
+        ] {
+            assert_eq!(s.parse::<Algo>().unwrap(), a);
+            assert_eq!(a.to_string(), s);
+        }
+    }
+
+    #[test]
+    fn sched_knobs_roundtrip_and_validate() {
+        let c = ExperimentConfig::from_toml(
+            "algo = \"ma\"\n[sched]\ncomm_interval = 8\nalpha = 0.25\nlambda = 0.75\n",
+        )
+        .unwrap();
+        assert_eq!(c.algo, Algo::Ma);
+        assert_eq!(c.sched.comm_interval, 8);
+        assert_eq!(c.sched.alpha, 0.25);
+        assert_eq!(c.sched.lambda, 0.75);
+        let c2 = ExperimentConfig::from_toml(&c.to_toml()).unwrap();
+        assert_eq!(c, c2);
+
+        assert!(ExperimentConfig::from_toml("[sched]\ncomm_interval = 0\n").is_err());
+        assert!(ExperimentConfig::from_toml("[sched]\nalpha = 1.5\n").is_err());
     }
 
     #[test]

@@ -19,7 +19,7 @@ use std::path::PathBuf;
 use anyhow::{Context, Result};
 
 use lsgd::audit;
-use lsgd::config::{Algo, ExperimentConfig};
+use lsgd::config::{Algo, ExperimentConfig, SchedConfig};
 use lsgd::metrics::{FigureSeries, ScalingRow};
 use lsgd::runtime::{host, Engine, Manifest};
 use lsgd::sched::{ExecMode, RunOptions, Trainer};
@@ -33,12 +33,19 @@ lsgd — Layered SGD (Yu et al. 2019) reproduction launcher
 USAGE: lsgd <SUBCOMMAND> [flags]
 
 SUBCOMMANDS:
-  train     train with CSGD (Alg. 2) or LSGD (Alg. 3)
-            --algo csgd|lsgd --preset P --groups G --workers W --steps K
+  train     train with CSGD (Alg. 2), LSGD (Alg. 3), or a related-work
+            scheduler (ma = periodic model averaging, dasgd = delayed
+            averaging, dcs3gd = stale-sync + delay compensation)
+            --algo csgd|lsgd|ma|dasgd|dcs3gd
+            --preset P --groups G --workers W --steps K
             --eval-every K --seed S --io-latency SECS --train-samples N
             --dedup-replicas --parallel --config FILE --curve-out FILE
             (--parallel = thread-per-rank engine: one OS thread per
              worker and per communicator; bitwise-identical trajectory)
+            scheduler-family knobs:
+            --comm-interval K    ma: global sync every K steps (default 4)
+            --alpha A            ma: elastic blend weight (default 0.5)
+            --lambda L           dcs3gd: delay compensation (default 0.5)
             perturbation (needs --parallel):
             --stragglers P[xF]   straggle each rank w.p. P, slowdown F
             --hetero H           permanent per-rank speed spread [0,H]
@@ -66,7 +73,8 @@ SUBCOMMANDS:
             fig2|fig4|fig5|fig6 [--allreduce ring|rhd] [--csv FILE]
             [--t-compute S] [--t-io S]
   simulate  discrete-event timeline at scale
-            --algo csgd|lsgd --groups G --workers W --steps K
+            --algo csgd|lsgd|ma|dasgd|dcs3gd --groups G --workers W --steps K
+            [--comm-interval K] [--alpha A] [--lambda L]
             [--stragglers P[xF]] [--hetero H] [--comm-stragglers P[xF]]
             [--comm-hetero H] [--link-degrade G@S..ExF]
             [--fail W@S[,..]] [--rejoin W@S[,..]] [--perturb-seed S]
@@ -219,6 +227,9 @@ fn parse_train_config(a: &Args, algo: Algo) -> Result<ExperimentConfig> {
     cfg.data.io_latency = a.f64_or("io-latency", cfg.data.io_latency)?;
     cfg.data.train_samples = a.usize_or("train-samples", cfg.data.train_samples)?;
     cfg.data.val_samples = a.usize_or("val-samples", cfg.data.val_samples)?;
+    cfg.sched.comm_interval = a.usize_or("comm-interval", cfg.sched.comm_interval)?;
+    cfg.sched.alpha = a.f64_or("alpha", cfg.sched.alpha)?;
+    cfg.sched.lambda = a.f64_or("lambda", cfg.sched.lambda)?;
     cfg.validate()?;
     Ok(cfg)
 }
@@ -451,6 +462,10 @@ fn cmd_simulate(rest: &[String]) -> Result<()> {
     let workers = a.usize_or("workers", 4)?;
     let steps = a.usize_or("steps", 3)?;
     let algo: Algo = a.str_or("algo", "lsgd").parse()?;
+    let mut sc = SchedConfig::default();
+    sc.comm_interval = a.usize_or("comm-interval", sc.comm_interval)?;
+    sc.alpha = a.f64_or("alpha", sc.alpha)?;
+    sc.lambda = a.f64_or("lambda", sc.lambda)?;
     let perturb = parse_perturb(&a)?;
     a.finish()?;
 
@@ -459,6 +474,10 @@ fn cmd_simulate(rest: &[String]) -> Result<()> {
     let r = match algo {
         Algo::Lsgd => des::run_lsgd_perturbed(&m, &topo, steps, &perturb)?,
         Algo::Csgd => des::run_csgd_perturbed(&m, &topo, steps, &perturb)?,
+        _ => {
+            let sched = lsgd::sched::scheduler::scheduler_for(algo, &sc)?;
+            des::run_sched_perturbed(&m, &topo, steps, &perturb, sched.as_ref())?
+        }
     };
     println!(
         "{algo} {groups}x{workers} steps={steps}: makespan={:.3}s per_step={:.3}s hidden_comm={:.3}s",
@@ -470,6 +489,10 @@ fn cmd_simulate(rest: &[String]) -> Result<()> {
         let base = match algo {
             Algo::Lsgd => des::run_lsgd(&m, &topo, steps),
             Algo::Csgd => des::run_csgd(&m, &topo, steps),
+            _ => {
+                let sched = lsgd::sched::scheduler::scheduler_for(algo, &sc)?;
+                des::run_sched(&m, &topo, steps, sched.as_ref())?
+            }
         };
         println!(
             "perturbation tax: {:+.3}s total ({:+.1}% per step vs unperturbed)",

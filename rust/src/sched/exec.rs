@@ -1,15 +1,25 @@
-//! Thread-per-rank parallel runtime for Algorithms 2 and 3, with
-//! straggler injection and elastic fail-stop recovery.
+//! Thread-per-rank parallel runtime for the whole scheduler family,
+//! with straggler injection and elastic fail-stop recovery.
 //!
-//! The serial schedulers ([`super::csgd`], [`super::lsgd`]) *simulate*
-//! the paper's decentralized ranks on one thread. This module runs
-//! them for real: **one OS thread per worker rank and one per
-//! communicator rank**, with mpsc channels as the Reduce / Broadcast
-//! edges of Fig. 3 and the calling thread acting as the communicators'
-//! global folder. Worker compute, group-local reduces of different
-//! groups, and next-batch I/O all overlap in wall-clock time —
-//! `hidden_io_secs` measures genuinely concurrent ranks rather than
-//! one scoped loader thread.
+//! The serial schedulers ([`super::csgd`], [`super::lsgd`],
+//! [`super::family`]) *simulate* the decentralized ranks on one
+//! thread. This module runs them for real: **one OS thread per worker
+//! rank and one per communicator rank**, with mpsc channels as the
+//! Reduce / Broadcast edges of Fig. 3 and the calling thread acting as
+//! the communicators' global folder. Worker compute, group-local
+//! reduces of different groups, and next-batch I/O all overlap in
+//! wall-clock time — `hidden_io_secs` measures genuinely concurrent
+//! ranks rather than one scoped loader thread.
+//!
+//! The runtime is written once against the
+//! [`Scheduler`](super::scheduler::Scheduler) trait: the trait answers
+//! decide the step shape (layered vs. flat I/O), the communication
+//! cadence (non-communicating steps skip the whole collective web and
+//! route losses over a side channel), the payload (gradients or
+//! post-update parameters) and the merge rule each worker applies.
+//! With the `lsgd`/`csgd` instances every answer reduces to the flags
+//! the pre-trait engine hard-coded, so those schedules are
+//! bit-for-bit unchanged.
 //!
 //! ```text
 //! worker threads (alive)     communicator threads (G)      main thread
@@ -118,9 +128,9 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use super::scheduler::{delay_compensate, elastic_blend, GlobalPayload, MergeRule, Scheduler};
 use super::{checksum, evaluate_params, LsgdOptions, RunResult, Trainer};
 use crate::collective;
-use crate::config::Algo;
 use crate::metrics::{NetPhaseStats, PerturbReport, PhaseTimers, RegroupEvent, TrainCurve};
 use crate::simnet::net;
 use crate::simnet::perturb::drive_segments;
@@ -158,12 +168,12 @@ struct StepReport {
 
 /// Run Algorithm 3 on the thread-per-rank runtime.
 pub fn run_lsgd(t: &mut Trainer, opts: LsgdOptions, perturb: &PerturbConfig) -> Result<RunResult> {
-    run(t, Algo::Lsgd, opts, perturb)
+    run(t, &super::scheduler::Lsgd, opts, perturb)
 }
 
 /// Run Algorithm 2 on the thread-per-rank runtime.
 pub fn run_csgd(t: &mut Trainer, perturb: &PerturbConfig) -> Result<RunResult> {
-    run(t, Algo::Csgd, LsgdOptions::default(), perturb)
+    run(t, &super::scheduler::Csgd, LsgdOptions::default(), perturb)
 }
 
 /// Cross-segment accumulators: one set for the whole run, appended to
@@ -190,9 +200,10 @@ struct Acc {
     net: NetPhaseStats,
 }
 
-fn run(
+/// Run any registered scheduler on the thread-per-rank runtime.
+pub fn run(
     t: &mut Trainer,
-    algo: Algo,
+    sched: &dyn Scheduler,
     opts: LsgdOptions,
     perturb: &PerturbConfig,
 ) -> Result<RunResult> {
@@ -205,11 +216,11 @@ fn run(
     );
     let steps = t.cfg.steps;
     perturb.validate(&topo, steps)?;
-    let is_lsgd = algo == Algo::Lsgd;
+    let layered = sched.has_communicator_layer();
 
     let mut acc = Acc {
         timers: PhaseTimers::new(),
-        curve: TrainCurve::new(if is_lsgd { "lsgd" } else { "csgd" }),
+        curve: TrainCurve::new(sched.name()),
         checksums: Vec::with_capacity(steps),
         hidden_io: 0.0,
         injected: vec![0.0; n_workers],
@@ -244,18 +255,24 @@ fn run(
             }
         }
         src_rank = memb.alive().next().expect("non-empty membership").0;
-        run_segment(t, algo, opts, perturb, memb, range, &mut acc)
+        run_segment(t, sched, opts, perturb, memb, range, &mut acc)
     })?;
     acc.regroups = regroups;
 
     let first_alive = membership.alive().next().expect("at least one survivor").0;
-    debug_assert!(alive_replicas_identical(t, &membership), "surviving replicas diverged");
+    // replicas stay bitwise-identical only under the averaged-gradient
+    // merge; ma/dasgd/dcs3gd replicas diverge by construction (see the
+    // scheduler module's determinism contract)
+    debug_assert!(
+        sched.merge() != MergeRule::AverageGradient || alive_replicas_identical(t, &membership),
+        "surviving replicas diverged"
+    );
     Ok(RunResult {
         curve: acc.curve,
         timers: acc.timers,
         step_checksums: acc.checksums,
         final_params: t.replicas[first_alive].params.clone(),
-        hidden_io_secs: if is_lsgd { acc.hidden_io } else { 0.0 },
+        hidden_io_secs: if layered { acc.hidden_io } else { 0.0 },
         steps,
         perturb: PerturbReport {
             injected_per_worker: acc.injected.iter().copied().enumerate().collect(),
@@ -268,10 +285,7 @@ fn run(
             },
             regroups: acc.regroups,
             net: if perturb.net.is_packet() {
-                vec![NetPhaseStats {
-                    phase: (if is_lsgd { "global_allreduce" } else { "allreduce" }).to_string(),
-                    ..acc.net
-                }]
+                vec![NetPhaseStats { phase: sched.net_phase().name().to_string(), ..acc.net }]
             } else {
                 Vec::new()
             },
@@ -306,7 +320,7 @@ fn alive_replicas_identical(t: &Trainer, memb: &Membership) -> bool {
 #[allow(clippy::too_many_arguments)]
 fn run_segment(
     t: &mut Trainer,
-    algo: Algo,
+    sched: &dyn Scheduler,
     opts: LsgdOptions,
     perturb: &PerturbConfig,
     memb: &Membership,
@@ -322,16 +336,16 @@ fn run_segment(
     let first_alive = memb.alive().next().expect("non-empty membership").0;
     let eval_every = t.cfg.eval_every;
     let gb = n_alive * t.engine.micro_batch();
-    let is_lsgd = algo == Algo::Lsgd;
+    let layered = sched.has_communicator_layer();
+    let payload = sched.payload();
+    let merge = sched.merge();
     let nf = n_alive as f32;
     // Division placement mirrors the serial schedulers exactly
-    // (sched/mod.rs "Division placement"): scale once after the global
-    // fold by default, at each communicator for the paper-literal mode.
-    let (local_scale, global_scale) = if is_lsgd && opts.divide_at_local_reduce {
-        (1.0 / nf, 1.0)
-    } else {
-        (1.0, 1.0 / nf)
-    };
+    // (sched/mod.rs "Division placement"): the scheduler says which
+    // reduction level divides (LSGD's paper-literal mode divides at
+    // each communicator; everything else scales once after the global
+    // fold).
+    let (local_scale, global_scale) = sched.scales(nf, opts.divide_at_local_reduce);
     let fold_threads = std::thread::available_parallelism()
         .map(|x| x.get())
         .unwrap_or(1)
@@ -341,13 +355,13 @@ fn run_segment(
     // identical to the pre-fault engine (plain scheduler jitter is not
     // a straggler signal)
     let measure_wait = !perturb.is_noop();
-    // packet-level emulation lane phase: LSGD lanes share the DES's
-    // global-allreduce draw stream key-for-key; CSGD has no
-    // communicator layer, so its lane emulation draws the flat-
-    // allreduce stream at lane granularity. The lane schedule follows
-    // the configured allreduce algorithm, as the DES replay does.
-    let net_phase =
-        if is_lsgd { net::Phase::GlobalAllreduce } else { net::Phase::FlatAllreduce };
+    // packet-level emulation lane phase: layered schedulers share the
+    // DES's global-allreduce draw stream key-for-key; flat schedulers
+    // have no communicator layer, so their lane emulation draws the
+    // flat-allreduce stream at lane granularity. The lane schedule
+    // follows the configured allreduce algorithm, as the DES replay
+    // does.
+    let net_phase = sched.net_phase();
     let net_algo = t.cfg.cluster.algo;
 
     // Shared read-only context (the host backend is Sync — see
@@ -394,6 +408,11 @@ fn run_segment(
         avg_rxs.push(rx);
     }
     let (report_tx, report_rx) = channel::<StepReport>();
+    // side channel for non-communicating steps (cadence > 1): losses
+    // still reach the curve without waking the collective web —
+    // (flat alive index, loss), slotted before summation so arrival
+    // races never reach the f64 fold
+    let (loss_tx, loss_rx) = channel::<(usize, f32)>();
 
     let mut hidden_io = 0.0_f64;
 
@@ -424,6 +443,11 @@ fn run_segment(
                 let mut fabric_injected = 0.0_f64;
                 let mut net_tot = NetPhaseStats::default();
                 for step in seg {
+                    // cadence: a non-communicating step never reaches
+                    // the communicator (workers run local-only)
+                    if !sched.communicates_at(step) {
+                        continue;
+                    }
                     let mut slots: Vec<Option<GradMsg>> = (0..wpg).map(|_| None).collect();
                     let mut first_arrival: Option<Instant> = None;
                     for _ in 0..wpg {
@@ -444,14 +468,11 @@ fn run_segment(
                     }
                     // the slow-communicator / degraded-link model: a
                     // slow communicator holds its group partial — and
-                    // so the global barrier — back right here. CSGD
-                    // has no communicator layer, so its lanes pay only
-                    // the link-window share (exactly as in the DES)
-                    let d = if is_lsgd {
-                        perturb.comm_injected_delay(group, step)
-                    } else {
-                        perturb.link_injected_delay(group, step)
-                    };
+                    // so the global barrier — back right here. Flat
+                    // schedulers (CSGD) have no communicator layer, so
+                    // their lanes pay only the link-window share
+                    // (exactly as in the DES)
+                    let d = perturb.lane_injected_delay(layered, group, step);
                     if d > 0.0 {
                         sleep_secs(d);
                         tm.add("comm_injected_delay", d);
@@ -531,6 +552,7 @@ fn run_segment(
             let my_range = shard_ranges[pos].clone();
             let my_grad_tx = grad_txs[gi].clone();
             let my_report_tx = report_tx.clone();
+            let my_loss_tx = loss_tx.clone();
             let seg = range.clone();
             worker_handles.push(s.spawn(move || -> (PhaseTimers, f64) {
                 let mut tm = PhaseTimers::new();
@@ -545,8 +567,9 @@ fn run_segment(
                         tm.add("io_straggle", secs);
                     }
                 };
-                // Alg. 3 line 1: the first mini-batch is drawn up front
-                let mut shard: Vec<i32> = if is_lsgd {
+                // Layered schedules draw the first mini-batch up front
+                // (Alg. 3 line 1); flat schedules load inside the step.
+                let mut shard: Vec<i32> = if layered {
                     let sh = tm.time("io", || loader.load_range(seg.start, gb, my_range.clone()));
                     slow_io(&mut tm, perturb.io_extension(w, seg.start, io_latency));
                     sh
@@ -554,8 +577,18 @@ fn run_segment(
                     Vec::new()
                 };
                 let mut prev_io = 0.0_f64;
+                // Staleness state: stale merge rules DEFER the receive —
+                // the average broadcast at sync s is consumed at sync
+                // s+1, so the global collective genuinely overlaps the
+                // next compute phase (the mpsc channel is the in-flight
+                // buffer). Cold at every segment boundary: a regroup
+                // tears the channel web down, dropping the in-flight
+                // average (documented in the scheduler module).
+                let mut first_comm = true;
+                let mut prev_grad: Option<Vec<f32>> = None;
                 for step in seg.clone() {
-                    if !is_lsgd {
+                    let comm = sched.communicates_at(step);
+                    if !layered {
                         // Alg. 2 has no overlap window: I/O is serial
                         // with compute on every worker
                         shard = tm.time("io", || loader.load_range(step, gb, my_range.clone()));
@@ -572,29 +605,138 @@ fn run_segment(
                         tm.add("injected_delay", d);
                         injected += d;
                     }
-                    my_grad_tx
-                        .send(GradMsg { local, grad, loss, prev_io_secs: prev_io })
-                        .expect("communicator gone");
-                    prev_io = 0.0;
-                    if is_lsgd && step + 1 < seg.end {
-                        // Alg. 3 line 8's worker column: the next-batch
-                        // load runs WHILE the communicators allreduce
-                        let t0 = Instant::now();
-                        let next = loader.load_range(step + 1, gb, my_range.clone());
-                        slow_io(&mut tm, perturb.io_extension(w, step, io_latency));
-                        prev_io = t0.elapsed().as_secs_f64();
-                        tm.add("io_overlapped", prev_io);
-                        shard = next;
-                    }
-                    let avg = avg_rx.recv().expect("broadcast channel closed");
                     let lr_t = lr.lr_at(step) as f32;
-                    let (w2, m2) = tm
-                        .time("update", || {
-                            engine.sgd_update(&replica.params, &replica.momentum, &avg, lr_t)
-                        })
-                        .expect("sgd_update failed");
-                    replica.params = w2;
-                    replica.momentum = m2;
+                    // local-first merge rules (ma): the own-gradient
+                    // update happens BEFORE anything goes on the wire,
+                    // so a Parameters payload carries post-update state
+                    if let MergeRule::ElasticAverage { .. } = merge {
+                        let (w2, m2) = tm
+                            .time("update", || {
+                                engine.sgd_update(&replica.params, &replica.momentum, &grad, lr_t)
+                            })
+                            .expect("sgd_update failed");
+                        replica.params = w2;
+                        replica.momentum = m2;
+                    }
+                    // stale merge rules still need this step's gradient
+                    // after it is moved into the collective
+                    let grad_keep: Option<Vec<f32>> = match merge {
+                        MergeRule::DelayedAverageGradient if first_comm => Some(grad.clone()),
+                        MergeRule::DelayCompensatedStale { .. } => Some(grad.clone()),
+                        _ => None,
+                    };
+                    if comm {
+                        let wire = match payload {
+                            GlobalPayload::Gradients => grad,
+                            GlobalPayload::Parameters => replica.params.clone(),
+                        };
+                        my_grad_tx
+                            .send(GradMsg { local, grad: wire, loss, prev_io_secs: prev_io })
+                            .expect("communicator gone");
+                        prev_io = 0.0;
+                    } else {
+                        // local-only step: the loss still reaches the
+                        // curve, over the side channel
+                        my_loss_tx.send((pos, loss)).expect("result collector gone");
+                    }
+                    if layered && step + 1 < seg.end {
+                        if comm {
+                            // Alg. 3 line 8's worker column: the next-
+                            // batch load runs WHILE the communicators
+                            // allreduce
+                            let t0 = Instant::now();
+                            let next = loader.load_range(step + 1, gb, my_range.clone());
+                            slow_io(&mut tm, perturb.io_extension(w, step, io_latency));
+                            prev_io = t0.elapsed().as_secs_f64();
+                            tm.add("io_overlapped", prev_io);
+                            shard = next;
+                        } else {
+                            // no collective to hide behind on a local-
+                            // only step: the load is exposed I/O
+                            shard =
+                                tm.time("io", || loader.load_range(step + 1, gb, my_range.clone()));
+                            slow_io(&mut tm, perturb.io_extension(w, step, io_latency));
+                        }
+                    }
+                    if comm {
+                        match merge {
+                            MergeRule::AverageGradient => {
+                                let avg = avg_rx.recv().expect("broadcast channel closed");
+                                let (w2, m2) = tm
+                                    .time("update", || {
+                                        engine.sgd_update(
+                                            &replica.params,
+                                            &replica.momentum,
+                                            &avg,
+                                            lr_t,
+                                        )
+                                    })
+                                    .expect("sgd_update failed");
+                                replica.params = w2;
+                                replica.momentum = m2;
+                            }
+                            MergeRule::ElasticAverage { alpha } => {
+                                // the local update already ran; pull the
+                                // replica toward the group average
+                                let avg = avg_rx.recv().expect("broadcast channel closed");
+                                tm.time("merge", || {
+                                    elastic_blend(&mut replica.params, &avg, alpha)
+                                });
+                            }
+                            MergeRule::DelayedAverageGradient => {
+                                // deferred receive: apply the average
+                                // broadcast at the PREVIOUS sync (it was
+                                // in flight during this step's compute);
+                                // cold start applies the own gradient
+                                let g_eff = if first_comm {
+                                    first_comm = false;
+                                    grad_keep.expect("cold start keeps the own gradient")
+                                } else {
+                                    avg_rx.recv().expect("broadcast channel closed")
+                                };
+                                let (w2, m2) = tm
+                                    .time("update", || {
+                                        engine.sgd_update(
+                                            &replica.params,
+                                            &replica.momentum,
+                                            &g_eff,
+                                            lr_t,
+                                        )
+                                    })
+                                    .expect("sgd_update failed");
+                                replica.params = w2;
+                                replica.momentum = m2;
+                            }
+                            MergeRule::DelayCompensatedStale { lambda } => {
+                                // correct the previous sync's (stale)
+                                // average with the local gradient drift
+                                // since then — DC-S3GD's compensation
+                                let g_now =
+                                    grad_keep.expect("stale scheduler keeps its gradient");
+                                let g_eff = match prev_grad.take() {
+                                    Some(pg) => {
+                                        let stale =
+                                            avg_rx.recv().expect("broadcast channel closed");
+                                        delay_compensate(&stale, &g_now, &pg, lambda)
+                                    }
+                                    None => g_now.clone(),
+                                };
+                                let (w2, m2) = tm
+                                    .time("update", || {
+                                        engine.sgd_update(
+                                            &replica.params,
+                                            &replica.momentum,
+                                            &g_eff,
+                                            lr_t,
+                                        )
+                                    })
+                                    .expect("sgd_update failed");
+                                replica.params = w2;
+                                replica.momentum = m2;
+                                prev_grad = Some(g_now);
+                            }
+                        }
+                    }
                     if w == first_alive {
                         let eval = if eval_every > 0 && (step + 1) % eval_every == 0 {
                             Some(
@@ -613,51 +755,86 @@ fn run_segment(
                             .expect("result collector gone");
                     }
                 }
+                // deferred-receive merges consume broadcast s at sync
+                // s+1, so exactly one message is still in flight when
+                // the segment ends — drain it so the communicator's
+                // final send never hits a dropped channel
+                match merge {
+                    MergeRule::DelayedAverageGradient if !first_comm => {
+                        let _ = avg_rx.recv();
+                    }
+                    MergeRule::DelayCompensatedStale { .. } if prev_grad.is_some() => {
+                        let _ = avg_rx.recv();
+                    }
+                    _ => {}
+                }
                 (tm, injected)
             }));
         }
 
         // ---- global folder (this thread = the communicators' ring) --
+        let global_phase = sched.net_phase().name();
         let mut prev_comm = 0.0_f64;
-        for (si, step) in range.clone().enumerate() {
-            let mut slots: Vec<Option<PartialMsg>> = (0..groups).map(|_| None).collect();
-            for _ in 0..groups {
-                let m = partial_rx.recv().expect("communicator channel closed");
-                let group = m.group;
-                slots[group] = Some(m);
-            }
-            // overlap accounting: the prefetch measured during step s
-            // arrives with step s+1's messages; pair it with step s's
-            // global-fold time (matches the serial min(t_io, t_comm))
-            let io_prev_max = slots
-                .iter()
-                .map(|m| m.as_ref().unwrap().prev_io_max)
-                .fold(0.0_f64, f64::max);
-            if si > 0 {
-                hidden_io += prev_comm.min(io_prev_max);
-            }
-            let t0 = Instant::now();
-            let merged = {
-                let refs: Vec<&[f32]> = slots
-                    .iter()
-                    .map(|m| m.as_ref().unwrap().partial.as_slice())
-                    .collect();
-                collective::reduce_scaled_par(&refs, global_scale, fold_threads)
-            };
-            prev_comm = t0.elapsed().as_secs_f64();
-            acc.timers.add(if is_lsgd { "global_allreduce" } else { "allreduce" }, prev_comm);
-            let shared = Arc::new(merged);
-            for tx in &bcast_txs {
-                tx.send(shared.clone()).expect("communicator gone");
-            }
-            // mean loss in flat ascending worker order — identical f64
-            // summation order to the serial schedulers
-            let mut loss_sum = 0.0_f64;
-            for slot in &slots {
-                for &l in &slot.as_ref().unwrap().losses {
-                    loss_sum += l as f64;
+        // count of *communicating* steps so far — the prefetch-overlap
+        // pairing below is defined between consecutive global folds
+        let mut comm_si = 0usize;
+        for step in range.clone() {
+            let loss_sum = if sched.communicates_at(step) {
+                let mut slots: Vec<Option<PartialMsg>> = (0..groups).map(|_| None).collect();
+                for _ in 0..groups {
+                    let m = partial_rx.recv().expect("communicator channel closed");
+                    let group = m.group;
+                    slots[group] = Some(m);
                 }
-            }
+                // overlap accounting: the prefetch measured during step
+                // s arrives with the next fold's messages; pair it with
+                // that fold's time (matches the serial min(t_io, t_comm))
+                let io_prev_max = slots
+                    .iter()
+                    .map(|m| m.as_ref().unwrap().prev_io_max)
+                    .fold(0.0_f64, f64::max);
+                if comm_si > 0 {
+                    hidden_io += prev_comm.min(io_prev_max);
+                }
+                let t0 = Instant::now();
+                let merged = {
+                    let refs: Vec<&[f32]> = slots
+                        .iter()
+                        .map(|m| m.as_ref().unwrap().partial.as_slice())
+                        .collect();
+                    collective::reduce_scaled_par(&refs, global_scale, fold_threads)
+                };
+                prev_comm = t0.elapsed().as_secs_f64();
+                acc.timers.add(global_phase, prev_comm);
+                let shared = Arc::new(merged);
+                for tx in &bcast_txs {
+                    tx.send(shared.clone()).expect("communicator gone");
+                }
+                comm_si += 1;
+                // mean loss in flat ascending worker order — identical
+                // f64 summation order to the serial schedulers
+                let mut loss_sum = 0.0_f64;
+                for slot in &slots {
+                    for &l in &slot.as_ref().unwrap().losses {
+                        loss_sum += l as f64;
+                    }
+                }
+                loss_sum
+            } else {
+                // local-only step: losses arrive over the side channel;
+                // slot by flat alive index before summing so arrival
+                // races never reach the f64 fold
+                let mut lslots: Vec<Option<f32>> = vec![None; n_alive];
+                for _ in 0..n_alive {
+                    let (p, l) = loss_rx.recv().expect("worker loss channel closed");
+                    lslots[p] = Some(l);
+                }
+                let mut loss_sum = 0.0_f64;
+                for l in &lslots {
+                    loss_sum += l.expect("every alive worker reported a loss") as f64;
+                }
+                loss_sum
+            };
             let report = report_rx.recv().expect("reporting worker gone");
             assert_eq!(report.step, step, "step report out of order");
             acc.checksums.push(report.checksum);

@@ -1,0 +1,179 @@
+//! Generic serial runner for the related-work scheduler family
+//! (`ma`, `dasgd`, `dcs3gd`).
+//!
+//! The paper's own two schedules keep their audited, line-for-line
+//! serial references ([`super::lsgd`], [`super::csgd`]); everything
+//! else runs here, driven purely by the
+//! [`Scheduler`](super::scheduler::Scheduler) trait answers: cadence
+//! decides whether a step touches the wire at all, payload decides
+//! what is folded (gradients or post-update parameters), and the merge
+//! rule decides how each replica absorbs the global average. The
+//! numerics — fold order, scaling placement, loss aggregation, the
+//! staleness pipelines — are element-for-element the ones the
+//! thread-per-rank engine ([`super::exec`]) executes, so the two
+//! engines stay bitwise-identical per scheduler (asserted in
+//! `rust/tests/schedulers.rs`).
+//!
+//! Unlike LSGD/CSGD, these schedulers let replicas *diverge* between
+//! synchronizations (see the determinism contract in
+//! [`super::scheduler`]), so the runner requires one replica per
+//! worker and reports worker 0's trajectory.
+
+use anyhow::Result;
+
+use super::scheduler::{delay_compensate, elastic_blend, GlobalPayload, MergeRule, Scheduler};
+use super::{checksum, RunOptions, RunResult, Trainer};
+use crate::metrics::{PhaseTimers, TrainCurve};
+
+/// Run any family scheduler for `cfg.steps` steps on the serial
+/// reference engine (single thread, no perturbation).
+pub fn run_serial(t: &mut Trainer, sched: &dyn Scheduler, opts: RunOptions) -> Result<RunResult> {
+    let n_workers = t.topo.num_workers();
+    anyhow::ensure!(
+        t.replicas.len() == n_workers,
+        "{} lets replicas diverge between synchronizations; construct \
+         the Trainer with dedup_replicas = false",
+        sched.name()
+    );
+    let mut timers = PhaseTimers::new();
+    let mut curve = TrainCurve::new(sched.name());
+    let mut checksums = Vec::with_capacity(t.cfg.steps);
+    let nf = n_workers as f32;
+    let (local_scale, global_scale) = sched.scales(nf, opts.lsgd.divide_at_local_reduce);
+    let payload = sched.payload();
+    let merge = sched.merge();
+
+    // Staleness pipelines, one slot per replica — the same state the
+    // thread-per-rank workers keep thread-locally.
+    let mut pending_avg: Vec<Option<Vec<f32>>> = vec![None; n_workers];
+    let mut stale_state: Vec<Option<(Vec<f32>, Vec<f32>)>> = vec![None; n_workers];
+
+    for step in 0..t.cfg.steps {
+        // every step: load + compute on each worker's own replica
+        let batch = timers.time("io", || t.load_all_shards(step))?;
+        let (grads, loss) = t.compute_grads(&batch, &mut timers)?;
+        let lr = t.lr.lr_at(step) as f32;
+
+        // local-first merge rules (ma): the own-gradient update runs
+        // before anything goes on the wire
+        if let MergeRule::ElasticAverage { .. } = merge {
+            for w in 0..n_workers {
+                let (w2, m2) = timers.time("update", || {
+                    t.engine.sgd_update(
+                        &t.replicas[w].params,
+                        &t.replicas[w].momentum,
+                        &grads[w],
+                        lr,
+                    )
+                })?;
+                t.replicas[w].params = w2;
+                t.replicas[w].momentum = m2;
+            }
+        }
+
+        if sched.communicates_at(step) {
+            // what goes on the wire — per-worker, ascending id
+            let contribs: Vec<&[f32]> = match payload {
+                GlobalPayload::Gradients => grads.iter().map(|g| g.as_slice()).collect(),
+                GlobalPayload::Parameters => {
+                    t.replicas.iter().map(|r| r.params.as_slice()).collect()
+                }
+            };
+            // group-local reduce, then the cross-group fold — the same
+            // two-level ascending-id association every engine uses
+            let partials = timers.time("local_reduce", || -> Result<Vec<Vec<f32>>> {
+                let mut v = Vec::with_capacity(t.topo.groups);
+                for g in t.topo.all_groups() {
+                    let bufs: Vec<&[f32]> =
+                        t.topo.workers_of(g).map(|w| contribs[w.0]).collect();
+                    v.push(t.engine.reduce_fold(&bufs, local_scale)?);
+                }
+                Ok(v)
+            })?;
+            let avg = timers.time(sched.net_phase().name(), || {
+                let refs: Vec<&[f32]> = partials.iter().map(|v| v.as_slice()).collect();
+                t.engine.reduce_fold(&refs, global_scale)
+            })?;
+
+            // per-replica merge, ascending id — identical helpers and
+            // state transitions to the thread-per-rank workers
+            for w in 0..n_workers {
+                match merge {
+                    MergeRule::AverageGradient => {
+                        let (w2, m2) = timers.time("update", || {
+                            t.engine.sgd_update(
+                                &t.replicas[w].params,
+                                &t.replicas[w].momentum,
+                                &avg,
+                                lr,
+                            )
+                        })?;
+                        t.replicas[w].params = w2;
+                        t.replicas[w].momentum = m2;
+                    }
+                    MergeRule::ElasticAverage { alpha } => {
+                        timers.time("merge", || {
+                            elastic_blend(&mut t.replicas[w].params, &avg, alpha)
+                        });
+                    }
+                    MergeRule::DelayedAverageGradient => {
+                        // apply LAST sync's average; this one stays in
+                        // flight. Cold start applies the own gradient.
+                        let g_eff = pending_avg[w]
+                            .take()
+                            .unwrap_or_else(|| grads[w].clone());
+                        let (w2, m2) = timers.time("update", || {
+                            t.engine.sgd_update(
+                                &t.replicas[w].params,
+                                &t.replicas[w].momentum,
+                                &g_eff,
+                                lr,
+                            )
+                        })?;
+                        t.replicas[w].params = w2;
+                        t.replicas[w].momentum = m2;
+                        pending_avg[w] = Some(avg.clone());
+                    }
+                    MergeRule::DelayCompensatedStale { lambda } => {
+                        let g_eff = match stale_state[w].take() {
+                            Some((stale, pg)) => {
+                                delay_compensate(&stale, &grads[w], &pg, lambda)
+                            }
+                            None => grads[w].clone(),
+                        };
+                        let (w2, m2) = timers.time("update", || {
+                            t.engine.sgd_update(
+                                &t.replicas[w].params,
+                                &t.replicas[w].momentum,
+                                &g_eff,
+                                lr,
+                            )
+                        })?;
+                        t.replicas[w].params = w2;
+                        t.replicas[w].momentum = m2;
+                        stale_state[w] = Some((avg.clone(), grads[w].clone()));
+                    }
+                }
+            }
+        }
+
+        checksums.push(checksum(&t.replicas[0].params));
+        curve.train.push((step, loss, lr as f64));
+        if t.cfg.eval_every > 0 && (step + 1) % t.cfg.eval_every == 0 {
+            let (vl, va) = t.evaluate()?;
+            curve.eval.push((step, vl, va));
+        }
+    }
+
+    Ok(RunResult {
+        curve,
+        timers,
+        step_checksums: checksums,
+        final_params: t.replicas[0].params.clone(),
+        // the serial reference has no concurrent loader thread here,
+        // so no I/O is genuinely hidden
+        hidden_io_secs: 0.0,
+        steps: t.cfg.steps,
+        perturb: Default::default(),
+    })
+}

@@ -8,6 +8,13 @@
 //! same [`crate::optim::LrSchedule`] — the *only* degree of freedom is
 //! the communication schedule, which is exactly the paper's claim.
 //!
+//! The communication schedule itself is abstracted by the
+//! [`scheduler::Scheduler`] trait (step shape, cadence, payload, merge
+//! rule). LSGD and CSGD are its reference instances; the related-work
+//! family (`ma`, `dasgd`, `dcs3gd`) plugs into the same two engines —
+//! [`family`] serially, [`exec`] thread-per-rank — and the same DES
+//! pricing ([`crate::simnet::des::run_sched_perturbed`]).
+//!
 //! ## Division placement (the one deliberate deviation)
 //!
 //! Algorithm 3 line 6 divides by `N` at the local reduce; summing the
@@ -54,7 +61,9 @@
 
 pub mod csgd;
 pub mod exec;
+pub mod family;
 pub mod lsgd;
+pub mod scheduler;
 
 use anyhow::Result;
 
@@ -264,11 +273,14 @@ impl<'e> Trainer<'e> {
                 "straggler/fault/network injection requires the thread-per-rank engine (--parallel)"
             );
         }
+        let sched = scheduler::scheduler_for(self.cfg.algo, &self.cfg.sched)?;
         match (self.cfg.algo, opts.mode) {
+            // the paper's two algorithms keep their specialized serial
+            // reference paths (audited line-for-line against Alg. 2/3)
             (Algo::Csgd, ExecMode::Serial) => csgd::run(self),
             (Algo::Lsgd, ExecMode::Serial) => lsgd::run(self, opts.lsgd),
-            (Algo::Csgd, ExecMode::ThreadPerRank) => exec::run_csgd(self, perturb),
-            (Algo::Lsgd, ExecMode::ThreadPerRank) => exec::run_lsgd(self, opts.lsgd, perturb),
+            (_, ExecMode::Serial) => family::run_serial(self, sched.as_ref(), opts),
+            (_, ExecMode::ThreadPerRank) => exec::run(self, sched.as_ref(), opts, perturb),
         }
     }
 

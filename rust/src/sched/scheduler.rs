@@ -1,0 +1,363 @@
+//! The `Scheduler` trait: one description of a step schedule, consumed
+//! by every world.
+//!
+//! A scheduler is the per-algorithm answer to four questions:
+//!
+//! 1. **step structure** — does the step run a flat all-worker
+//!    collective (CSGD) or the layered local-reduce → global collective
+//!    → broadcast pipeline, and does the update wait for this step's
+//!    collective ([`CommShape::LayeredSync`]) or consume the previous
+//!    step's ([`CommShape::LayeredStale`])?
+//! 2. **communication cadence** — [`Scheduler::communicates_at`]: which
+//!    steps pay for (and execute) the global collective at all.
+//! 3. **payload** — gradients or parameters on the wire
+//!    ([`GlobalPayload`]).
+//! 4. **parameter-merge rule** — how a replica folds the collective's
+//!    output into its state ([`MergeRule`]).
+//!
+//! Both execution worlds are written once against this trait:
+//! `simnet/des.rs` prices a schedule from the shape/cadence answers,
+//! and `sched/exec.rs` (thread-per-rank) plus `sched/family.rs`
+//! (serial) run the real numerics from the payload/merge answers, with
+//! `simnet/perturb.rs` injection routed by
+//! [`Scheduler::has_communicator_layer`]. Adding an algorithm means
+//! adding one instance here and registering it in [`scheduler_for`] —
+//! no per-world plumbing.
+//!
+//! ## Determinism contract per scheduler
+//!
+//! Every instance inherits the crate's reduction contract (see
+//! [`crate::sched`] module docs): collectives are fixed-order left
+//! folds, merges are element-wise f32 loops in ascending index order,
+//! and per-replica staleness state ([`MergeRule::DelayedAverageGradient`],
+//! [`MergeRule::DelayCompensatedStale`]) is owned by the rank that uses
+//! it. Consequences:
+//!
+//! * `lsgd`/`csgd`: replicas stay bitwise-identical across ranks and
+//!   across serial ↔ thread-per-rank engines (the existing suites).
+//! * `ma`: replicas *diverge* between syncs by construction (local
+//!   SGD), but the whole trajectory — including the elastic blend — is
+//!   bitwise-reproducible per seed and identical across engines.
+//! * `dasgd`/`dcs3gd`: rank 0's trajectory is bitwise-reproducible per
+//!   seed and identical across engines; staleness state cold-restarts
+//!   at membership changes (a regroup drops the in-flight average).
+
+use anyhow::Result;
+
+use crate::config::{Algo, SchedConfig};
+use crate::simnet::net::Phase;
+
+/// What a communicating step puts on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GlobalPayload {
+    /// The step's local gradients (LSGD, CSGD, DaSGD, DC-S3GD).
+    Gradients,
+    /// The post-local-update parameters (periodic model averaging).
+    Parameters,
+}
+
+/// How a replica folds the global collective's output into its state.
+///
+/// Each rule is a fixed-order element-wise computation, so every
+/// scheduler keeps the bitwise-repro-per-seed guarantee.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MergeRule {
+    /// `w ← sgd(w, m, ḡ_t)` — the LSGD/CSGD rule: the update consumes
+    /// this step's global gradient average.
+    AverageGradient,
+    /// Local SGD with the rank's own gradient every step; on
+    /// communicating steps the post-update parameters are averaged and
+    /// blended elastically: `w ← w − α(w − w̄)`.
+    ElasticAverage { alpha: f32 },
+    /// `w ← sgd(w, m, ḡ_{t−1})` — the update consumes the *previous*
+    /// step's global average (the rank's own `g_t` on the cold-start
+    /// step), so the collective overlaps the next compute phase.
+    DelayedAverageGradient,
+    /// `w ← sgd(w, m, ḡ_{t−1} + λ(g_t − g_{t−1}))` — one-step-stale
+    /// average corrected by the local gradient delta (delay
+    /// compensation); the rank's own `g_t` on the cold-start step.
+    DelayCompensatedStale { lambda: f32 },
+}
+
+/// The step's communication structure — what the DES prices and how
+/// the engine's channel web is wired.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommShape {
+    /// Flat all-worker collective, no communicator layer; I/O is
+    /// serial within the step (CSGD, Algorithm 2).
+    Flat,
+    /// Layered: local reduce → global collective (overlapping the next
+    /// batch's I/O) → broadcast; the update waits for *this* step's
+    /// collective (LSGD, periodic MA on communicating steps).
+    LayeredSync,
+    /// Layered, but the update consumes the *previous* step's
+    /// collective, so this step's global allreduce additionally
+    /// overlaps the next step's compute (DaSGD, DC-S3GD).
+    LayeredStale,
+}
+
+/// One step schedule: structure, cadence, payload, merge rule.
+///
+/// Implementations are small value types; both worlds read the same
+/// answers, which is what keeps DES pricing and real execution in
+/// lockstep (the DES↔engine suites in `rust/tests/schedulers.rs`).
+pub trait Scheduler: Send + Sync {
+    /// Registry key — the `--algo` value and the CI matrix dimension.
+    fn name(&self) -> &'static str;
+
+    /// Communication structure of a communicating step.
+    fn shape(&self) -> CommShape;
+
+    /// Parameter-merge rule applied by each replica.
+    fn merge(&self) -> MergeRule;
+
+    /// What the collective carries on communicating steps.
+    fn payload(&self) -> GlobalPayload {
+        GlobalPayload::Gradients
+    }
+
+    /// Global collective every `comm_interval()` steps (1 = every step).
+    fn comm_interval(&self) -> usize {
+        1
+    }
+
+    /// Whether absolute step `step` runs the global collective.
+    /// With interval `k`, syncs land after every `k`-th local step
+    /// (steps `k−1, 2k−1, …`), so DES communication time falls ~1/k.
+    fn communicates_at(&self, step: usize) -> bool {
+        (step + 1) % self.comm_interval() == 0
+    }
+
+    /// `(local_scale, global_scale)` applied by the two reduction
+    /// levels for `n` contributing ranks. Exactly one level divides,
+    /// so the collective output is the mean.
+    fn scales(&self, n: f32, divide_at_local_reduce: bool) -> (f32, f32) {
+        let _ = divide_at_local_reduce;
+        (1.0, 1.0 / n)
+    }
+
+    /// Whether the schedule has LSGD's communicator layer — routes
+    /// communicator-class perturbations (`comm_scale`,
+    /// `comm_injected_delay`) vs. flat link perturbations.
+    fn has_communicator_layer(&self) -> bool {
+        self.shape() != CommShape::Flat
+    }
+
+    /// Packet-emulation phase of the global collective (stable name
+    /// shared with the engine's timer phases).
+    fn net_phase(&self) -> Phase {
+        match self.shape() {
+            CommShape::Flat => Phase::FlatAllreduce,
+            _ => Phase::GlobalAllreduce,
+        }
+    }
+
+    /// One-line description for `--help`-style listings.
+    fn description(&self) -> &'static str;
+}
+
+/// Layered SGD (paper Algorithm 3): the reference layered schedule.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Lsgd;
+
+impl Scheduler for Lsgd {
+    fn name(&self) -> &'static str {
+        "lsgd"
+    }
+    fn shape(&self) -> CommShape {
+        CommShape::LayeredSync
+    }
+    fn merge(&self) -> MergeRule {
+        MergeRule::AverageGradient
+    }
+    fn scales(&self, n: f32, divide_at_local_reduce: bool) -> (f32, f32) {
+        if divide_at_local_reduce {
+            (1.0 / n, 1.0)
+        } else {
+            (1.0, 1.0 / n)
+        }
+    }
+    fn description(&self) -> &'static str {
+        "layered SGD: local reduce, global allreduce overlapping next-batch I/O"
+    }
+}
+
+/// Conventional synchronous SGD (paper Algorithm 2).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Csgd;
+
+impl Scheduler for Csgd {
+    fn name(&self) -> &'static str {
+        "csgd"
+    }
+    fn shape(&self) -> CommShape {
+        CommShape::Flat
+    }
+    fn merge(&self) -> MergeRule {
+        MergeRule::AverageGradient
+    }
+    fn description(&self) -> &'static str {
+        "conventional synchronous SGD: flat allreduce every step, nothing overlaps"
+    }
+}
+
+/// Periodic model averaging with an elastic blend (`MA`/
+/// `elastic_update` in the related-work corpora).
+#[derive(Debug, Clone, Copy)]
+pub struct PeriodicMa {
+    pub comm_interval: usize,
+    pub alpha: f32,
+}
+
+impl Scheduler for PeriodicMa {
+    fn name(&self) -> &'static str {
+        "ma"
+    }
+    fn shape(&self) -> CommShape {
+        CommShape::LayeredSync
+    }
+    fn merge(&self) -> MergeRule {
+        MergeRule::ElasticAverage { alpha: self.alpha }
+    }
+    fn payload(&self) -> GlobalPayload {
+        GlobalPayload::Parameters
+    }
+    fn comm_interval(&self) -> usize {
+        self.comm_interval
+    }
+    fn description(&self) -> &'static str {
+        "periodic model averaging: local SGD, parameter allreduce every k steps, elastic blend"
+    }
+}
+
+/// DaSGD-style delayed averaging (Zhou et al. 2020).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DaSgd;
+
+impl Scheduler for DaSgd {
+    fn name(&self) -> &'static str {
+        "dasgd"
+    }
+    fn shape(&self) -> CommShape {
+        CommShape::LayeredStale
+    }
+    fn merge(&self) -> MergeRule {
+        MergeRule::DelayedAverageGradient
+    }
+    fn description(&self) -> &'static str {
+        "delayed averaging: global average applied one step late, collective overlaps compute"
+    }
+}
+
+/// DC-S3GD-style stale-synchronous SGD with delay compensation
+/// (Rigazzi et al. 2019).
+#[derive(Debug, Clone, Copy)]
+pub struct DcS3gd {
+    pub lambda: f32,
+}
+
+impl Scheduler for DcS3gd {
+    fn name(&self) -> &'static str {
+        "dcs3gd"
+    }
+    fn shape(&self) -> CommShape {
+        CommShape::LayeredStale
+    }
+    fn merge(&self) -> MergeRule {
+        MergeRule::DelayCompensatedStale { lambda: self.lambda }
+    }
+    fn description(&self) -> &'static str {
+        "stale-sync SGD: one-step-stale average corrected by the local gradient delta"
+    }
+}
+
+/// Every registered scheduler name, in `--algo` order. The CI matrix
+/// and the parameterized determinism suites iterate this list.
+pub const REGISTRY: &[&str] = &["csgd", "lsgd", "ma", "dasgd", "dcs3gd"];
+
+/// Build the scheduler instance for an algorithm + knob set.
+pub fn scheduler_for(algo: Algo, knobs: &SchedConfig) -> Result<Box<dyn Scheduler>> {
+    anyhow::ensure!(knobs.comm_interval >= 1, "sched.comm_interval must be >= 1");
+    Ok(match algo {
+        Algo::Csgd => Box::new(Csgd),
+        Algo::Lsgd => Box::new(Lsgd),
+        Algo::Ma => Box::new(PeriodicMa {
+            comm_interval: knobs.comm_interval,
+            alpha: knobs.alpha as f32,
+        }),
+        Algo::Dasgd => Box::new(DaSgd),
+        Algo::Dcs3gd => Box::new(DcS3gd { lambda: knobs.lambda as f32 }),
+    })
+}
+
+/// The elastic-averaging blend `w ← w − α(w − w̄)`, shared verbatim by
+/// the serial and thread-per-rank engines so both produce identical
+/// bits (ascending element order, no reassociation).
+pub fn elastic_blend(params: &mut [f32], avg: &[f32], alpha: f32) {
+    debug_assert_eq!(params.len(), avg.len());
+    for i in 0..params.len() {
+        params[i] -= alpha * (params[i] - avg[i]);
+    }
+}
+
+/// The DC-S3GD delay-compensated gradient `ḡ + λ(g − g_prev)`, shared
+/// verbatim by both engines (ascending element order).
+pub fn delay_compensate(stale_avg: &[f32], grad: &[f32], prev_grad: &[f32], lambda: f32) -> Vec<f32> {
+    debug_assert_eq!(stale_avg.len(), grad.len());
+    debug_assert_eq!(grad.len(), prev_grad.len());
+    (0..stale_avg.len()).map(|i| stale_avg[i] + lambda * (grad[i] - prev_grad[i])).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_algo() {
+        let knobs = SchedConfig::default();
+        for name in REGISTRY {
+            let algo: Algo = name.parse().unwrap();
+            let s = scheduler_for(algo, &knobs).unwrap();
+            assert_eq!(s.name(), *name, "registry name must round-trip through --algo");
+            assert!(!s.description().is_empty());
+        }
+    }
+
+    #[test]
+    fn lsgd_csgd_answers_match_the_legacy_dispatch() {
+        // the refactor's zero-drift contract in miniature: the trait
+        // answers for lsgd/csgd are exactly the flags the old
+        // hard-coded paths used
+        let knobs = SchedConfig::default();
+        let lsgd = scheduler_for(Algo::Lsgd, &knobs).unwrap();
+        let csgd = scheduler_for(Algo::Csgd, &knobs).unwrap();
+        assert!(lsgd.has_communicator_layer());
+        assert!(!csgd.has_communicator_layer());
+        assert_eq!(lsgd.net_phase().name(), "global_allreduce");
+        assert_eq!(csgd.net_phase().name(), "allreduce");
+        assert!((0..64).all(|s| lsgd.communicates_at(s) && csgd.communicates_at(s)));
+        assert_eq!(lsgd.scales(4.0, false), (1.0, 0.25));
+        assert_eq!(lsgd.scales(4.0, true), (0.25, 1.0));
+        assert_eq!(csgd.scales(4.0, false), (1.0, 0.25));
+        assert_eq!(csgd.scales(4.0, true), (1.0, 0.25));
+    }
+
+    #[test]
+    fn ma_cadence_lands_after_every_k_local_steps() {
+        let ma = PeriodicMa { comm_interval: 4, alpha: 0.5 };
+        let comm: Vec<usize> = (0..12).filter(|&s| ma.communicates_at(s)).collect();
+        assert_eq!(comm, vec![3, 7, 11]);
+        // k = 1 degenerates to every-step sync
+        let every = PeriodicMa { comm_interval: 1, alpha: 0.5 };
+        assert!((0..8).all(|s| every.communicates_at(s)));
+    }
+
+    #[test]
+    fn merge_helpers_are_element_exact() {
+        let mut w = vec![1.0_f32, 2.0, 3.0];
+        elastic_blend(&mut w, &[0.0, 0.0, 1.0], 0.5);
+        assert_eq!(w, vec![0.5, 1.0, 2.0]);
+        let c = delay_compensate(&[1.0, 1.0], &[3.0, 5.0], &[1.0, 1.0], 0.5);
+        assert_eq!(c, vec![2.0, 3.0]);
+    }
+}

@@ -1,4 +1,5 @@
-//! Discrete-event replay of the CSGD / LSGD schedules.
+//! Discrete-event replay of the scheduler family's communication
+//! schedules.
 //!
 //! The closed forms in [`super`] assume a perfectly synchronous steady
 //! state. This engine checks that assumption by actually *playing* the
@@ -7,6 +8,16 @@
 //! member finished compute; a communicator can't start the global
 //! allreduce before its local reduce landed; a worker can't start step
 //! `t+1` before broadcast + deferred update of step `t`).
+//!
+//! The event loop is written once against the
+//! [`Scheduler`](crate::sched::scheduler::Scheduler) trait
+//! ([`run_sched_perturbed`]): the [`CommShape`] picks the step
+//! skeleton (flat barrier / layered-synchronous / layered-stale), the
+//! cadence decides which steps touch the wire at all, and everything
+//! else — perturbations, packet replay, shared-fabric routing,
+//! fail-stop regroups — applies uniformly. `run_lsgd_perturbed` /
+//! `run_csgd_perturbed` are the `lsgd`/`csgd` instances of that one
+//! loop and price bit-for-bit what the pre-trait specializations did.
 //!
 //! `tests` cross-validate: the DES makespan over `k` steps must match
 //! `k × step_time_*().total` to float precision — if someone edits one
@@ -17,6 +28,7 @@ use super::net::{self, NetAcc, NetConfig, Phase};
 use super::perturb::{drive_segments, PerturbConfig};
 use super::{cost, ClusterModel, StepBreakdown};
 use crate::metrics::{LinkStats, NetPhaseStats, RegroupEvent};
+use crate::sched::scheduler::{CommShape, Scheduler};
 use crate::topology::{Membership, Topology};
 use anyhow::Result;
 
@@ -427,14 +439,46 @@ pub fn run_lsgd_perturbed(
     steps: usize,
     p: &PerturbConfig,
 ) -> Result<DesResult> {
+    run_sched_perturbed(m, topo, steps, p, &crate::sched::scheduler::Lsgd)
+}
+
+/// Any registered scheduler under a perturbation profile — the one
+/// event loop behind every `run_*_perturbed` entry point. The
+/// [`CommShape`] picks the skeleton:
+///
+/// * [`CommShape::Flat`] — io → compute → flat allreduce barrier →
+///   update, fully serialized (Algorithm 2's shape);
+/// * [`CommShape::LayeredSync`] — compute → local reduce →
+///   `[global allreduce ∥ next-batch I/O]` → broadcast → update
+///   (Algorithm 3's shape). Non-communicating steps (`ma` with
+///   `comm_interval > 1`) skip the entire collective: the own-gradient
+///   update runs right after compute and the next shard loads
+///   serially, so groups decouple between synchronizations and the
+///   priced communication time falls ~1/k;
+/// * [`CommShape::LayeredStale`] — like `LayeredSync`, but the update
+///   at step `s` waits for the broadcast of step `s−1` instead of its
+///   own (the deferred-receive pipeline `dasgd`/`dcs3gd` run in the
+///   real engine), so the global collective overlaps the *next*
+///   compute phase and only its tail past the next local reduce is
+///   exposed.
+pub fn run_sched_perturbed(
+    m: &ClusterModel,
+    topo: &Topology,
+    steps: usize,
+    p: &PerturbConfig,
+    sched: &dyn Scheduler,
+) -> Result<DesResult> {
     p.validate(topo, steps)?;
+    if sched.shape() == CommShape::Flat {
+        return run_flat_perturbed(m, topo, steps, p, sched);
+    }
     let mut memb = Membership::full(topo);
     let mut spans = Vec::new();
     let mut netacc = NetAcc::default();
     let mut hidden = 0.0;
     let mut t = 0.0;
     let regroups = drive_segments(p, &mut memb, steps, |memb, range, _boundary| {
-        let (t2, h) = lsgd_segment(m, p, memb, range, t, &mut spans, &mut netacc);
+        let (t2, h) = sched_segment(m, p, memb, range, t, &mut spans, &mut netacc, sched);
         t = t2;
         hidden += h;
         Ok(())
@@ -448,6 +492,17 @@ pub fn run_lsgd_perturbed(
         net: netacc.into_report(),
         fabric,
     })
+}
+
+/// Unperturbed baseline for any registered scheduler (noop profile) —
+/// the family's analogue of [`run_lsgd`] / [`run_csgd`].
+pub fn run_sched(
+    m: &ClusterModel,
+    topo: &Topology,
+    steps: usize,
+    sched: &dyn Scheduler,
+) -> Result<DesResult> {
+    run_sched_perturbed(m, topo, steps, &PerturbConfig::default(), sched)
 }
 
 /// The [`super::net::NetModel`] switch on [`run_lsgd`]: replay the
@@ -649,13 +704,102 @@ impl SegCosts<'_> {
     }
 }
 
-/// One membership-stable stretch of a perturbed LSGD run: the event
+/// Per-segment bookkeeping for the stale-synchronous shape, indexed
+/// `[step - base][group]`. The update of step `s` is gated on its own
+/// local reduce AND the broadcast of step `s−1` (never its own), and
+/// compute of `s+1` on update + next-batch io of `s` — the DES double
+/// of the deferred-receive pipeline in `sched/exec.rs`.
+struct StaleState {
+    reduce_done_at: Vec<Vec<f64>>,
+    bcast_done_at: Vec<Vec<f64>>,
+    update_done_at: Vec<Vec<f64>>,
+    update_scheduled: Vec<Vec<bool>>,
+    next_scheduled: Vec<Vec<bool>>,
+    /// Worst update stall (wait on the previous step's broadcast)
+    /// across groups, per step.
+    worst_stall: Vec<f64>,
+    /// Priced global-collective cost per step (NAN until priced).
+    t_g: Vec<f64>,
+}
+
+impl StaleState {
+    fn new(g: usize, nsteps: usize) -> Self {
+        Self {
+            reduce_done_at: vec![vec![f64::NAN; g]; nsteps],
+            bcast_done_at: vec![vec![f64::NAN; g]; nsteps],
+            update_done_at: vec![vec![f64::NAN; g]; nsteps],
+            update_scheduled: vec![vec![false; g]; nsteps],
+            next_scheduled: vec![vec![false; g]; nsteps],
+            worst_stall: vec![0.0; nsteps],
+            t_g: vec![f64::NAN; nsteps],
+        }
+    }
+
+    /// Schedule the (stale) update of `step` once its local reduce is
+    /// done and the previous step's broadcast has landed (segment head:
+    /// cold start, the reduce alone gates it).
+    fn try_update(&mut self, e: &mut Engine, group: usize, step: usize, base: usize, t_up: f64) {
+        let si = step - base;
+        if self.update_scheduled[si][group] {
+            return;
+        }
+        let red = self.reduce_done_at[si][group];
+        if red.is_nan() {
+            return;
+        }
+        let start = if si == 0 {
+            red
+        } else {
+            let bc = self.bcast_done_at[si - 1][group];
+            if bc.is_nan() {
+                return;
+            }
+            red.max(bc)
+        };
+        self.update_scheduled[si][group] = true;
+        self.worst_stall[si] = self.worst_stall[si].max(start - red);
+        e.span(|| format!("g{group}/workers"), "update", start, start + t_up, step);
+        e.schedule(start + t_up, EventKind::UpdateDone { group, step });
+    }
+
+    /// Schedule compute of `step + 1` once update and next-batch io of
+    /// `step` are both done (caller guards `step + 1 < range.end`).
+    fn try_next_compute(
+        &mut self,
+        e: &mut Engine,
+        group: usize,
+        step: usize,
+        base: usize,
+        io_done_at: &[Vec<f64>],
+        comp: f64,
+    ) {
+        let si = step - base;
+        if self.next_scheduled[si][group] {
+            return;
+        }
+        let up = self.update_done_at[si][group];
+        let io = io_done_at[si][group];
+        if up.is_nan() || io.is_nan() {
+            return;
+        }
+        self.next_scheduled[si][group] = true;
+        let start = up.max(io);
+        e.span(|| format!("g{group}/workers"), "compute", start, start + comp, step + 1);
+        e.schedule(start + comp, EventKind::ComputeDone { group, step: step + 1 });
+    }
+}
+
+/// One membership-stable stretch of a perturbed layered run: the event
 /// loop of [`run_lsgd`], generalized to uneven groups, per-(group,
-/// step) compute/IO scales, communicator-class slowdowns and
-/// time-varying link factors. All groups start the segment
-/// synchronized at `t0` (the engine's regroup barrier). Returns
-/// `(segment end time, hidden comm)`.
-fn lsgd_segment(
+/// step) compute/IO scales, communicator-class slowdowns, time-varying
+/// link factors — and to the scheduler family's step shapes
+/// (communication cadence, stale-synchronous updates; see
+/// [`run_sched_perturbed`]). The `ma` merge's pre-wire own-gradient
+/// update is priced inside the step's single `update` span. All groups
+/// start the segment synchronized at `t0` (the engine's regroup
+/// barrier). Returns `(segment end time, hidden comm)`.
+#[allow(clippy::too_many_arguments)]
+fn sched_segment(
     m: &ClusterModel,
     p: &PerturbConfig,
     memb: &Membership,
@@ -663,12 +807,14 @@ fn lsgd_segment(
     t0: f64,
     spans: &mut Vec<Span>,
     netacc: &mut NetAcc,
+    sched: &dyn Scheduler,
 ) -> (f64, f64) {
     let g = memb.num_groups();
     let nsteps = range.len();
     if nsteps == 0 {
         return (t0, 0.0);
     }
+    let stale = sched.shape() == CommShape::LayeredStale;
     let base = range.start;
     let sizes: Vec<usize> = (0..g).map(|gi| memb.group(gi).len()).collect();
     let seg_fabric = p.fabric.build(&sizes);
@@ -696,6 +842,9 @@ fn lsgd_segment(
     let mut bcast_scheduled = vec![vec![false; g]; nsteps];
     let mut groups_reduced = vec![0usize; nsteps];
     let mut global_done_at = vec![f64::NAN; nsteps];
+    // stale-shape bookkeeping (empty for the synchronous shapes)
+    let mut st =
+        if stale { StaleState::new(g, nsteps) } else { StaleState::new(0, 0) };
     let mut makespan: f64 = t0;
     let mut hidden = 0.0;
 
@@ -710,9 +859,17 @@ fn lsgd_segment(
         makespan = makespan.max(now);
         match ev.kind {
             EventKind::ComputeDone { group, step } => {
-                let r = costs.reduce(netacc, group, step);
-                e.span(|| format!("g{group}/workers"), "reduce", now, now + r, step);
-                e.schedule(now + r, EventKind::ReduceDone { group, step });
+                if !sched.communicates_at(step) {
+                    // local-only step (cadence > 1): the own-gradient
+                    // update runs right after compute — nothing touches
+                    // the wire, so groups decouple until the next sync
+                    e.span(|| format!("g{group}/workers"), "update", now, now + m.t_update, step);
+                    e.schedule(now + m.t_update, EventKind::UpdateDone { group, step });
+                } else {
+                    let r = costs.reduce(netacc, group, step);
+                    e.span(|| format!("g{group}/workers"), "reduce", now, now + r, step);
+                    e.schedule(now + r, EventKind::ReduceDone { group, step });
+                }
             }
             EventKind::ReduceDone { group, step } => {
                 let io = io_of(group, step);
@@ -724,33 +881,33 @@ fn lsgd_segment(
                     let t_g = costs.global(netacc, step);
                     e.span(|| "comms".into(), "global_allreduce", now, now + t_g, step);
                     e.schedule(now + t_g, EventKind::GlobalDone { step });
-                    // hidden share: the allreduce runs inside every
-                    // group's IO window up to the shortest window
-                    let io_min = (0..g).map(|gi| io_of(gi, step)).fold(f64::INFINITY, f64::min);
-                    hidden += t_g.min(io_min);
+                    if stale {
+                        st.t_g[si] = t_g;
+                    } else {
+                        // hidden share: the allreduce runs inside every
+                        // group's IO window up to the shortest window
+                        let io_min =
+                            (0..g).map(|gi| io_of(gi, step)).fold(f64::INFINITY, f64::min);
+                        hidden += t_g.min(io_min);
+                    }
+                }
+                if stale {
+                    st.reduce_done_at[si][group] = now;
+                    st.try_update(&mut e, group, step, base, m.t_update);
                 }
             }
             EventKind::IoDone { group, step } => {
                 let si = step - base;
                 io_done_at[si][group] = now;
-                try_broadcast_at(
-                    &mut e,
-                    group,
-                    step,
-                    base,
-                    &global_done_at,
-                    &io_done_at,
-                    &mut bcast_scheduled,
-                    &costs,
-                    netacc,
-                );
-            }
-            EventKind::GlobalDone { step } => {
-                global_done_at[step - base] = now;
-                for gi in 0..g {
+                if stale {
+                    if step + 1 < range.end {
+                        let comp = comp_of(group, step + 1);
+                        st.try_next_compute(&mut e, group, step, base, &io_done_at, comp);
+                    }
+                } else {
                     try_broadcast_at(
                         &mut e,
-                        gi,
+                        group,
                         step,
                         base,
                         &global_done_at,
@@ -761,18 +918,91 @@ fn lsgd_segment(
                     );
                 }
             }
+            EventKind::GlobalDone { step } => {
+                global_done_at[step - base] = now;
+                if stale {
+                    // the broadcast is a communicator push: it starts
+                    // as soon as the global fold lands — the workers
+                    // are already computing the next step and consume
+                    // it at their next update
+                    for gi in 0..g {
+                        let bc = costs.bcast(netacc, gi, step);
+                        e.span(|| format!("g{gi}/workers"), "broadcast", now, now + bc, step);
+                        e.schedule(now + bc, EventKind::BroadcastDone { group: gi, step });
+                    }
+                } else {
+                    for gi in 0..g {
+                        try_broadcast_at(
+                            &mut e,
+                            gi,
+                            step,
+                            base,
+                            &global_done_at,
+                            &io_done_at,
+                            &mut bcast_scheduled,
+                            &costs,
+                            netacc,
+                        );
+                    }
+                }
+            }
             EventKind::BroadcastDone { group, step } => {
-                e.span(|| format!("g{group}/workers"), "update", now, now + m.t_update, step);
-                e.schedule(now + m.t_update, EventKind::UpdateDone { group, step });
+                if stale {
+                    let si = step - base;
+                    st.bcast_done_at[si][group] = now;
+                    if step + 1 < range.end {
+                        st.try_update(&mut e, group, step + 1, base, m.t_update);
+                    }
+                } else {
+                    e.span(|| format!("g{group}/workers"), "update", now, now + m.t_update, step);
+                    e.schedule(now + m.t_update, EventKind::UpdateDone { group, step });
+                }
             }
             EventKind::UpdateDone { group, step } => {
-                if step + 1 < range.end {
+                if !sched.communicates_at(step) {
+                    // local-only step: the next shard loads serially
+                    // after the update (no collective to hide it)
+                    if step + 1 < range.end {
+                        let io = io_of(group, step);
+                        e.span(|| format!("g{group}/workers"), "io", now, now + io, step);
+                        let d = comp_of(group, step + 1);
+                        e.span(
+                            || format!("g{group}/workers"),
+                            "compute",
+                            now + io,
+                            now + io + d,
+                            step + 1,
+                        );
+                        e.schedule(now + io + d, EventKind::ComputeDone { group, step: step + 1 });
+                    }
+                } else if stale {
+                    let si = step - base;
+                    st.update_done_at[si][group] = now;
+                    if step + 1 < range.end {
+                        let comp = comp_of(group, step + 1);
+                        st.try_next_compute(&mut e, group, step, base, &io_done_at, comp);
+                    }
+                } else if step + 1 < range.end {
                     let d = comp_of(group, step + 1);
                     e.span(|| format!("g{group}/workers"), "compute", now, now + d, step + 1);
                     e.schedule(now + d, EventKind::ComputeDone { group, step: step + 1 });
                 }
                 makespan = makespan.max(now);
             }
+        }
+    }
+
+    if stale {
+        // hidden share for the stale pipeline: each step's global
+        // collective runs under the NEXT step's compute; only the
+        // stall it caused there (the update waiting on the previous
+        // broadcast) is exposed
+        for si in 0..nsteps {
+            if st.t_g[si].is_nan() {
+                continue;
+            }
+            let stall = if si + 1 < nsteps { st.worst_stall[si + 1] } else { 0.0 };
+            hidden += (st.t_g[si] - stall).max(0.0);
         }
     }
 
@@ -821,7 +1051,20 @@ pub fn run_csgd_perturbed(
     steps: usize,
     p: &PerturbConfig,
 ) -> Result<DesResult> {
-    p.validate(topo, steps)?;
+    run_sched_perturbed(m, topo, steps, p, &crate::sched::scheduler::Csgd)
+}
+
+/// The [`CommShape::Flat`] skeleton: io → compute → flat allreduce
+/// barrier over all alive workers → update, fully serialized.
+/// Non-communicating steps (cadence > 1) skip the allreduce.
+fn run_flat_perturbed(
+    m: &ClusterModel,
+    topo: &Topology,
+    steps: usize,
+    p: &PerturbConfig,
+    sched: &dyn Scheduler,
+) -> Result<DesResult> {
+    let phase = sched.net_phase();
     let mut memb = Membership::full(topo);
     let mut e = Engine::with_trace(p.trace);
     let mut netacc = NetAcc::default();
@@ -846,46 +1089,48 @@ pub fn run_csgd_perturbed(
             let worst_link = (0..groups)
                 .map(|gi| wl[gi] * p.link_factor(gi, step))
                 .fold(1.0_f64, f64::max);
-            // link windows scale the fabric handed to the replay, so
-            // under the packet model they stretch every message of the
-            // step, not one aggregate number
-            let ar = if let Some(fab) = &seg_fabric {
-                net::allreduce_routed(
-                    m.algo,
-                    flat_link.scaled(worst_link),
-                    n,
-                    m.grad_bytes,
-                    &p.net,
-                    p.seed,
-                    Phase::FlatAllreduce,
-                    step,
-                    fab,
-                    &flat_kind,
-                    &mut netacc,
-                )
-            } else if p.net.is_packet() {
-                net::allreduce(
-                    m.algo,
-                    flat_link.scaled(worst_link),
-                    n,
-                    m.grad_bytes,
-                    &p.net,
-                    p.seed,
-                    Phase::FlatAllreduce,
-                    step,
-                    &mut netacc,
-                )
-            } else {
-                m.algo.cost(flat_link.scaled(worst_link), n, m.grad_bytes)
-            };
             let io = m.t_io * slowest;
             let comp = m.t_compute * slowest;
             e.span(|| "workers".into(), "io", t, t + io, step);
             t += io;
             e.span(|| "workers".into(), "compute", t, t + comp, step);
             t += comp;
-            e.span(|| "workers".into(), "allreduce", t, t + ar, step);
-            t += ar;
+            if sched.communicates_at(step) {
+                // link windows scale the fabric handed to the replay,
+                // so under the packet model they stretch every message
+                // of the step, not one aggregate number
+                let ar = if let Some(fab) = &seg_fabric {
+                    net::allreduce_routed(
+                        m.algo,
+                        flat_link.scaled(worst_link),
+                        n,
+                        m.grad_bytes,
+                        &p.net,
+                        p.seed,
+                        phase,
+                        step,
+                        fab,
+                        &flat_kind,
+                        &mut netacc,
+                    )
+                } else if p.net.is_packet() {
+                    net::allreduce(
+                        m.algo,
+                        flat_link.scaled(worst_link),
+                        n,
+                        m.grad_bytes,
+                        &p.net,
+                        p.seed,
+                        phase,
+                        step,
+                        &mut netacc,
+                    )
+                } else {
+                    m.algo.cost(flat_link.scaled(worst_link), n, m.grad_bytes)
+                };
+                e.span(|| "workers".into(), phase.name(), t, t + ar, step);
+                t += ar;
+            }
             e.span(|| "workers".into(), "update", t, t + m.t_update, step);
             t += m.t_update;
         }

@@ -555,6 +555,23 @@ impl PerturbConfig {
         self.delay_unit * (self.link_factor(group, step) - 1.0)
     }
 
+    /// Trait-routed injection for a scheduler's group lane: layered
+    /// schedulers (a real communicator layer —
+    /// `Scheduler::has_communicator_layer()`) pay the full
+    /// [`Self::comm_injected_delay`]; flat schedulers cross the same
+    /// degraded fabric but have no communicator rank, so their lanes
+    /// pay only the [`Self::link_injected_delay`] window share. The
+    /// engine and the DES both dispatch through this helper, so the
+    /// two worlds cannot disagree about which class of delay a
+    /// scheduler is exposed to.
+    pub fn lane_injected_delay(&self, layered: bool, group: usize, step: usize) -> f64 {
+        if layered {
+            self.comm_injected_delay(group, step)
+        } else {
+            self.link_injected_delay(group, step)
+        }
+    }
+
     /// Extra wall-clock the real engine injects into lane `group` of
     /// the global fold at `step` when packet-level network emulation
     /// is on: `delay_unit` per 1× of per-message slowdown, summed over

@@ -236,6 +236,64 @@ pub fn regressions_vs_baseline(
     Ok(out)
 }
 
+/// Propose fresh `benches/baseline.json` ceilings from green-run CI
+/// artifacts. `runs` holds `(filename, contents)` of one or more
+/// `BENCH_*.json` files (the [`Harness::json`] schema). For every
+/// bench the proposed ceiling is the median across runs of the
+/// per-run medians, ×2 — tight enough for percent-level sensitivity
+/// on the measuring runner class, loose enough to absorb cross-run
+/// noise. Output is the committed baseline schema (a `comment` plus
+/// one `{name, median_s}` row per bench, name-sorted), ready to be
+/// reviewed and dropped in as `benches/baseline.json`.
+pub fn recalibrate(runs: &[(String, String)]) -> anyhow::Result<String> {
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+    let mut medians: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    for (file, content) in runs {
+        let doc = Json::parse(content)
+            .map_err(|e| anyhow::anyhow!("parsing {file}: {e}"))?;
+        for b in doc.get("benches")?.as_arr()? {
+            medians
+                .entry(b.get("name")?.as_str()?.to_string())
+                .or_default()
+                .push(b.get("median_s")?.as_f64()?);
+        }
+    }
+    anyhow::ensure!(
+        !medians.is_empty(),
+        "no bench entries found in {} file(s)",
+        runs.len()
+    );
+    let mut out = String::from("{\n  \"comment\": \"");
+    out.push_str(&format!(
+        "Proposed perf ceilings generated by recalibrate-baseline from {} \
+         green-run BENCH_*.json artifact(s): per-bench median of medians x 2. \
+         Review against benches/baseline.json before committing - CI fails a \
+         bench at >25% over its ceiling (util::bench::regressions_vs_baseline), \
+         so ceilings must come from the slowest runner class that enforces them.",
+        runs.len()
+    ));
+    out.push_str("\",\n  \"benches\": [\n");
+    let rows: Vec<String> = medians
+        .iter()
+        .map(|(name, samples)| {
+            let mut s = samples.clone();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let med = s[((s.len() - 1) as f64 * 0.5).round() as usize];
+            format!(
+                "    {{\"name\": {}, \"median_s\": {}}}",
+                Json::Str(name.clone()),
+                Json::Num(med * 2.0)
+            )
+        })
+        .collect();
+    out.push_str(&rows.join(",\n"));
+    out.push_str("\n  ]\n}\n");
+    // the proposal must itself satisfy the schema the CI gate parses
+    crate::util::json::Json::parse(&out).expect("recalibrate emitted invalid json");
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -302,6 +360,47 @@ mod tests {
         assert!(regressions_vs_baseline(&[ok], baseline, 0.25).unwrap().is_empty());
         // malformed baseline is an error, not a silent pass
         assert!(regressions_vs_baseline(&[], "{}", 0.25).is_err());
+    }
+
+    #[test]
+    fn recalibrate_proposes_doubled_median_of_medians() {
+        let run1 = r#"{"benches": [
+            {"name": "a", "median_s": 0.010, "mean_s": 0.011},
+            {"name": "b", "median_s": 0.100}
+        ]}"#;
+        let run2 = r#"{"benches": [
+            {"name": "a", "median_s": 0.030},
+            {"name": "c", "median_s": 1.5}
+        ]}"#;
+        let run3 = r#"{"benches": [{"name": "a", "median_s": 0.020}]}"#;
+        let proposed = recalibrate(&[
+            ("r1.json".into(), run1.into()),
+            ("r2.json".into(), run2.into()),
+            ("r3.json".into(), run3.into()),
+        ])
+        .unwrap();
+        // the proposal parses as the baseline schema the CI gate reads
+        let doc = crate::util::json::Json::parse(&proposed).unwrap();
+        let mut got = std::collections::BTreeMap::new();
+        for b in doc.get("benches").unwrap().as_arr().unwrap() {
+            got.insert(
+                b.get("name").unwrap().as_str().unwrap().to_string(),
+                b.get("median_s").unwrap().as_f64().unwrap(),
+            );
+        }
+        // a: medians {0.010, 0.030, 0.020} → median 0.020 → ceiling 0.040
+        assert!((got["a"] - 0.040).abs() < 1e-12, "{got:?}");
+        assert!((got["b"] - 0.200).abs() < 1e-12, "{got:?}");
+        assert!((got["c"] - 3.0).abs() < 1e-12, "{got:?}");
+        // and a run measured at exactly the old medians passes the gate
+        let current = [
+            Stats::from_samples("a", vec![0.020; 5]),
+            Stats::from_samples("b", vec![0.100; 5]),
+        ];
+        assert!(regressions_vs_baseline(&current, &proposed, 0.25).unwrap().is_empty());
+
+        assert!(recalibrate(&[("bad.json".into(), "{".into())]).is_err());
+        assert!(recalibrate(&[]).is_err());
     }
 
     #[test]

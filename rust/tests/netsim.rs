@@ -28,6 +28,13 @@
 //!  (f) domain separation — enabling the fabric never shifts the
 //!      worker/comm/link/NET draw schedules (the model is draw-free).
 
+//! Acceptance (ISSUE 7 — scheduler family):
+//!  (g) the zero-jitter packet replay reproduces the closed-form DES
+//!      for `ma`/`dasgd`/`dcs3gd` across the group grid, and `ma`'s
+//!      priced communication falls as ~1/k in `comm_interval`.
+
+use lsgd::config::{Algo, SchedConfig};
+use lsgd::sched::scheduler::scheduler_for;
 use lsgd::simnet::{
     cost, des, fabric::Fabric, net, AllreduceAlgo, ClusterModel, FabricConfig, Link, NetConfig,
     NetModel, PerturbConfig,
@@ -592,4 +599,89 @@ fn perturbation_factors_scale_per_message_delays() {
     let ca = des::run_csgd_perturbed(&m, &topo, steps, &closed).unwrap();
     let cb = des::run_csgd_perturbed(&m, &topo, steps, &pkt).unwrap();
     assert!((ca.makespan - cb.makespan).abs() < 1e-9);
+}
+
+// ---------------------------------------- acceptance (g) — ISSUE 7
+
+#[test]
+fn zero_jitter_packet_des_matches_closed_form_for_the_scheduler_family() {
+    // the convergence grid, extended to the related-work schedulers:
+    // with jitter = 0, reorder = 0, chunk = 1 the packet replay of
+    // every family schedule reproduces its closed-form DES — same
+    // makespan, same overlap accounting — across the group grid
+    let m = ClusterModel::paper_k80();
+    let steps = 6;
+    for g in [1usize, 2, 8, 64] {
+        let topo = Topology::new(g, 4).unwrap();
+        for name in ["ma", "dasgd", "dcs3gd"] {
+            let sc = SchedConfig { comm_interval: 2, ..Default::default() };
+            let sched = scheduler_for(name.parse::<Algo>().unwrap(), &sc).unwrap();
+            let base = des::run_sched(&m, &topo, steps, sched.as_ref()).unwrap();
+            let mut p = PerturbConfig::default();
+            p.net = packet(0.0, 0.0, 1);
+            let pkt = des::run_sched_perturbed(&m, &topo, steps, &p, sched.as_ref()).unwrap();
+            assert!(
+                (pkt.makespan - base.makespan).abs() < 1e-9,
+                "{name} G={g}: packet {} vs closed {}",
+                pkt.makespan,
+                base.makespan
+            );
+            assert!(
+                (pkt.hidden_comm - base.hidden_comm).abs() < 1e-9,
+                "{name} G={g}: overlap accounting diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn ma_comm_time_falls_inversely_with_comm_interval() {
+    // the cadence knob's pricing claim: with k-step averaging the DES
+    // prices exactly steps/k global collectives, their total time is
+    // exactly 1/k of the every-step schedule (the per-sync cost does
+    // not depend on k), and skipping collectives genuinely shortens
+    // the makespan
+    let m = ClusterModel::paper_k80();
+    let topo = Topology::new(16, 4).unwrap();
+    let steps = 8;
+    let run_k = |k: usize| {
+        let sc = SchedConfig { comm_interval: k, ..Default::default() };
+        let sched = scheduler_for(Algo::Ma, &sc).unwrap();
+        des::run_sched(&m, &topo, steps, sched.as_ref()).unwrap()
+    };
+    let count = |r: &des::DesResult| {
+        r.spans.iter().filter(|s| s.phase == "global_allreduce").count()
+    };
+    let total = |r: &des::DesResult| -> f64 {
+        r.spans
+            .iter()
+            .filter(|s| s.phase == "global_allreduce")
+            .map(|s| s.end - s.start)
+            .sum()
+    };
+    let r1 = run_k(1);
+    assert_eq!(count(&r1), steps, "k=1 must price a collective every step");
+    let t1 = total(&r1);
+    assert!(t1 > 0.0);
+    let mut last_makespan = r1.makespan;
+    for k in [2usize, 4, 8] {
+        let r = run_k(k);
+        assert_eq!(count(&r), steps / k, "k={k}: wrong number of global collectives");
+        let tk = total(&r);
+        let want = t1 / k as f64;
+        assert!(
+            (tk - want).abs() < 1e-9,
+            "k={k}: priced comm time {tk} != {want} (1/k of the k=1 schedule)"
+        );
+        assert!(
+            r.makespan <= last_makespan + 1e-9,
+            "k={k}: makespan {} grew past k/2's {last_makespan}",
+            r.makespan
+        );
+        last_makespan = r.makespan;
+    }
+    assert!(
+        last_makespan < r1.makespan - 1e-9,
+        "k=8 must be strictly cheaper than every-step averaging"
+    );
 }

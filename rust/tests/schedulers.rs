@@ -1,0 +1,212 @@
+//! Per-scheduler determinism suite — the entry point of CI's
+//! scheduler matrix (ISSUE 7).
+//!
+//! Every test parameterizes over the scheduler registry
+//! (`lsgd::sched::scheduler::REGISTRY`). CI fans the file out as a
+//! named matrix dimension by setting `LSGD_SCHEDULER=<name>`, which
+//! narrows every test to that one scheduler; locally (variable unset)
+//! each test sweeps the full family, so `cargo test --test schedulers`
+//! is the whole matrix in one process.
+//!
+//! Matrix cells, per scheduler:
+//!   1. thread-per-rank == serial reference, bitwise (checksums, final
+//!      params, per-step losses);
+//!   2. seeded perturbation runs are bitwise-reproducible, and a
+//!      different perturbation seed reshuffles delays without touching
+//!      the trajectory;
+//!   3. the DES replay and the real engine agree on the elastic
+//!      regroup schedule (same `drive_segments` contract the
+//!      LSGD/CSGD suites pin, extended familywide);
+//!   4. the DES prices every scheduler deterministically, in both the
+//!      closed-form and packet-level network models, and perturbation
+//!      never beats the unperturbed baseline.
+
+use lsgd::config::{Algo, ExperimentConfig, SchedConfig};
+use lsgd::runtime::Engine;
+use lsgd::sched::scheduler::{self, REGISTRY};
+use lsgd::sched::{ExecMode, RunOptions, RunResult, Trainer};
+use lsgd::simnet::{des, ClusterModel, NetModel, PerturbConfig};
+use lsgd::topology::Topology;
+
+/// The schedulers this process should exercise: the one named by
+/// `LSGD_SCHEDULER` (CI matrix mode), or the whole registry.
+fn schedulers_under_test() -> Vec<&'static str> {
+    match std::env::var("LSGD_SCHEDULER") {
+        Ok(want) => {
+            let hit: Vec<&'static str> =
+                REGISTRY.iter().copied().filter(|n| *n == want).collect();
+            assert!(
+                !hit.is_empty(),
+                "LSGD_SCHEDULER={want:?} is not in the registry {REGISTRY:?}"
+            );
+            hit
+        }
+        Err(_) => REGISTRY.to_vec(),
+    }
+}
+
+fn engine() -> Engine {
+    Engine::host("tiny").expect("built-in tiny preset")
+}
+
+fn cfg(name: &str, groups: usize, workers: usize, steps: usize) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.algo = name.parse::<Algo>().unwrap();
+    c.topology = Topology::new(groups, workers).unwrap();
+    c.steps = steps;
+    c.data.train_samples = 512;
+    c.data.val_samples = 64;
+    // a non-trivial cadence so `ma` actually skips wire steps (syncs
+    // land at odd steps); the knob is ignored by everyone else
+    c.sched = SchedConfig { comm_interval: 2, ..Default::default() };
+    c
+}
+
+fn run_perturbed(c: &ExperimentConfig, p: &PerturbConfig) -> RunResult {
+    let e = engine();
+    let mut t = Trainer::new(&e, c.clone(), false).unwrap();
+    t.run_perturbed(RunOptions::parallel(), p).unwrap()
+}
+
+// ------------------------------------------------- matrix cell 1
+
+#[test]
+fn parallel_matches_serial_bitwise() {
+    let e = engine();
+    for name in schedulers_under_test() {
+        for (groups, workers) in [(2usize, 2usize), (3, 1)] {
+            let c = cfg(name, groups, workers, 6);
+            let mut s = Trainer::new(&e, c.clone(), false).unwrap();
+            let rs = s
+                .run_with(RunOptions { mode: ExecMode::Serial, ..Default::default() })
+                .unwrap();
+            let mut par = Trainer::new(&e, c, false).unwrap();
+            let rp = par
+                .run_with(RunOptions { mode: ExecMode::ThreadPerRank, ..Default::default() })
+                .unwrap();
+            assert_eq!(
+                rs.step_checksums, rp.step_checksums,
+                "{name} {groups}x{workers}: parallel trajectory diverged from serial"
+            );
+            assert_eq!(rs.final_params, rp.final_params, "{name}: final params differ");
+            for (a, b) in rs.curve.train.iter().zip(rp.curve.train.iter()) {
+                assert_eq!(
+                    a.1.to_bits(),
+                    b.1.to_bits(),
+                    "{name}: loss differs at step {}",
+                    a.0
+                );
+            }
+        }
+    }
+}
+
+// ------------------------------------------------- matrix cell 2
+
+#[test]
+fn perturbed_runs_are_bitwise_reproducible_per_seed() {
+    let mut p = PerturbConfig::default();
+    p.straggle_prob = 0.4;
+    p.straggle_factor = 3.0;
+    p.comm_straggle_prob = 0.4;
+    p.comm_straggle_factor = 2.0;
+    p.hetero = 0.3;
+    p.comm_hetero = 0.3;
+    p.delay_unit = 0.002;
+    for name in schedulers_under_test() {
+        let c = cfg(name, 2, 2, 6);
+        let a = run_perturbed(&c, &p);
+        let b = run_perturbed(&c, &p);
+        assert_eq!(a.step_checksums, b.step_checksums, "{name}: rerun diverged");
+        assert_eq!(a.final_params, b.final_params, "{name}: final params differ");
+        assert_eq!(
+            a.perturb.injected_per_worker, b.perturb.injected_per_worker,
+            "{name}: worker schedule not reproducible"
+        );
+        assert_eq!(
+            a.perturb.comm_injected_per_group, b.perturb.comm_injected_per_group,
+            "{name}: communicator schedule not reproducible"
+        );
+        for (x, y) in a.curve.train.iter().zip(b.curve.train.iter()) {
+            assert_eq!(x.1.to_bits(), y.1.to_bits(), "{name}: loss differs at step {}", x.0);
+        }
+        // a different perturbation seed reshuffles the delay schedule
+        // but never the numerics (sleeps are timing-only)
+        let mut p2 = p.clone();
+        p2.seed ^= 0xBEEF;
+        let d = run_perturbed(&c, &p2);
+        assert_eq!(
+            a.step_checksums, d.step_checksums,
+            "{name}: perturbation seed leaked into the trajectory"
+        );
+    }
+}
+
+// ------------------------------------------------- matrix cell 3
+
+#[test]
+fn des_and_engine_agree_on_the_regroup_schedule() {
+    let steps = 8;
+    let mut p = PerturbConfig::default();
+    p.parse_failures("1@2,2@5").unwrap();
+    p.parse_rejoins("1@5").unwrap();
+    let m = ClusterModel::paper_k80();
+    let topo = Topology::new(2, 2).unwrap();
+    for name in schedulers_under_test() {
+        let c = cfg(name, 2, 2, steps);
+        let r = run_perturbed(&c, &p);
+        assert_eq!(r.step_checksums.len(), steps, "{name}: run did not complete");
+        assert_eq!(r.perturb.regroups.len(), 2, "{name}");
+        let sched = scheduler::scheduler_for(c.algo, &c.sched).unwrap();
+        let d = des::run_sched_perturbed(&m, &topo, steps, &p, sched.as_ref()).unwrap();
+        assert_eq!(
+            r.perturb.regroups, d.regroups,
+            "{name}: DES and engine disagree on the regroup schedule"
+        );
+        // and the engine reproduces bitwise across both boundaries
+        let r2 = run_perturbed(&c, &p);
+        assert_eq!(r.step_checksums, r2.step_checksums, "{name}");
+        assert_eq!(r.final_params, r2.final_params, "{name}");
+        assert_eq!(r.perturb.regroups, r2.perturb.regroups, "{name}");
+    }
+}
+
+// ------------------------------------------------- matrix cell 4
+
+#[test]
+fn des_prices_every_scheduler_deterministically() {
+    let m = ClusterModel::paper_k80();
+    let topo = Topology::new(4, 4).unwrap();
+    let steps = 5;
+    for name in schedulers_under_test() {
+        let sc = SchedConfig { comm_interval: 2, ..Default::default() };
+        let sched = scheduler::scheduler_for(name.parse::<Algo>().unwrap(), &sc).unwrap();
+        let base = des::run_sched(&m, &topo, steps, sched.as_ref()).unwrap();
+        assert!(base.makespan > 0.0, "{name}: empty timeline");
+        assert!(base.hidden_comm >= 0.0, "{name}: negative overlap accounting");
+        for model in [NetModel::ClosedForm, NetModel::Packet] {
+            let mut p = PerturbConfig::default();
+            p.straggle_prob = 0.3;
+            p.straggle_factor = 2.0;
+            p.delay_unit = 0.01;
+            p.net.model = model;
+            if model == NetModel::Packet {
+                p.net.jitter = 0.5;
+            }
+            let a = des::run_sched_perturbed(&m, &topo, steps, &p, sched.as_ref()).unwrap();
+            let b = des::run_sched_perturbed(&m, &topo, steps, &p, sched.as_ref()).unwrap();
+            assert_eq!(
+                a.makespan.to_bits(),
+                b.makespan.to_bits(),
+                "{name}/{model:?}: DES replay not deterministic"
+            );
+            assert_eq!(a.spans.len(), b.spans.len(), "{name}/{model:?}");
+            assert!(
+                a.makespan >= base.makespan - 1e-9,
+                "{name}/{model:?}: perturbed makespan {} beat baseline {}",
+                a.makespan,
+                base.makespan
+            );
+        }
+    }
+}

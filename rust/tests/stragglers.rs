@@ -40,9 +40,17 @@
 //!      draw-free — never shifts any seeded schedule or the
 //!      trajectory.
 
-use lsgd::config::{Algo, ExperimentConfig};
+//! Acceptance (ISSUE 7 — scheduler family):
+//!  (g) the straggler degradation ordering extends to the new
+//!      schedulers — every family schedule pays a positive DES tax
+//!      under the profile and undercuts flat CSGD's — and the engine's
+//!      `ma` merges stay bitwise-deterministic per seed across the
+//!      `comm_interval` sweep.
+
+use lsgd::config::{Algo, ExperimentConfig, SchedConfig};
 use lsgd::metrics::RegroupKind;
 use lsgd::runtime::Engine;
+use lsgd::sched::scheduler::scheduler_for;
 use lsgd::sched::{ExecMode, RunOptions, Trainer};
 use lsgd::simnet::{des, net, AllreduceAlgo, ClusterModel, NetModel, PerturbConfig};
 use lsgd::topology::{Topology, WorkerId};
@@ -666,4 +674,76 @@ fn invalid_failure_specs_rejected_up_front() {
     p.parse_failures("9@1").unwrap(); // worker 9 of 4
     let mut t = Trainer::new(&e, cfg(2, 2, 2, Algo::Lsgd), false).unwrap();
     assert!(t.run_perturbed(RunOptions::parallel(), &p).is_err());
+}
+
+// ------------------------------------------------------ acceptance (g)
+
+#[test]
+fn family_des_straggler_tax_positive_and_below_flat_csgd() {
+    // the degradation ordering, familywide: every layered schedule
+    // pays its own lanes' straggle serially but decouples groups
+    // between global syncs, so its absolute per-step tax undercuts
+    // flat CSGD's every-step max-over-all-ranks barrier (the same
+    // mechanism `des_straggler_tax_lsgd_below_csgd` pins for LSGD)
+    let m = ClusterModel::paper_k80();
+    let topo = Topology::new(64, 4).unwrap();
+    let steps = 6;
+    let mut p = PerturbConfig::default();
+    p.straggle_prob = 0.3;
+    p.straggle_factor = 2.0;
+    let tax_c = des::per_step(&des::run_csgd_perturbed(&m, &topo, steps, &p).unwrap(), steps)
+        - des::per_step(&des::run_csgd(&m, &topo, steps), steps);
+    assert!(tax_c > 0.0);
+    for name in ["ma", "dasgd", "dcs3gd"] {
+        let sc = SchedConfig::default();
+        let sched = scheduler_for(name.parse::<Algo>().unwrap(), &sc).unwrap();
+        let base = des::run_sched(&m, &topo, steps, sched.as_ref()).unwrap();
+        let pert = des::run_sched_perturbed(&m, &topo, steps, &p, sched.as_ref()).unwrap();
+        let tax = des::per_step(&pert, steps) - des::per_step(&base, steps);
+        assert!(tax > 0.0, "{name}: stragglers must cost the schedule something");
+        assert!(
+            tax < tax_c,
+            "{name}: layered tax {tax} must undercut flat CSGD tax {tax_c}"
+        );
+    }
+}
+
+#[test]
+fn ma_comm_interval_sweep_is_bitwise_reproducible_on_the_engine() {
+    // the cadence knob on the real engine: for every k the two-run
+    // trajectory is bitwise-identical, and the knob genuinely changes
+    // the merge schedule (adjacent k's trajectories differ)
+    let e = engine();
+    let mut prev: Option<Vec<u64>> = None;
+    for k in [1usize, 2, 3] {
+        let mut c = cfg(2, 2, 6, Algo::Ma);
+        c.sched.comm_interval = k;
+        let mut t1 = Trainer::new(&e, c.clone(), false).unwrap();
+        let a = t1.run_with(RunOptions::parallel()).unwrap();
+        let mut t2 = Trainer::new(&e, c.clone(), false).unwrap();
+        let b = t2.run_with(RunOptions::parallel()).unwrap();
+        assert_eq!(a.step_checksums, b.step_checksums, "k={k}: merges not deterministic");
+        assert_eq!(a.final_params, b.final_params, "k={k}: final params differ");
+        if let Some(prev) = &prev {
+            assert_ne!(&a.step_checksums, prev, "k={k}: the cadence knob changed nothing");
+        }
+        prev = Some(a.step_checksums);
+    }
+}
+
+#[test]
+fn stale_schedulers_absorb_perturbed_io_like_lsgd() {
+    // dasgd/dcs3gd keep LSGD's loader-thread overlap window on comm
+    // steps, so under the same straggler profile they still hide
+    // prefetch I/O under the global fold
+    let mut p = PerturbConfig::default();
+    p.straggle_prob = 0.5;
+    p.straggle_factor = 3.0;
+    p.delay_unit = 0.005;
+    for algo in [Algo::Dasgd, Algo::Dcs3gd] {
+        let mut c = cfg(2, 2, 4, algo);
+        c.data.io_latency = 0.005;
+        let r = run(&c, &p);
+        assert!(r.hidden_io_secs > 0.0, "{algo}: lost the absorption channel");
+    }
 }
