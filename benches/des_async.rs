@@ -1,0 +1,52 @@
+//! Bench guard: the de-synchronized event core prices big perturbed
+//! runs fast — with and without a global barrier.
+//!
+//! Two rows drive the same straggler-perturbed schedule through the
+//! per-entity timeline core: `rendezvous_step` (synchronous `lsgd` —
+//! every step an all-group rendezvous, the event-heavy worst case) and
+//! `barrier_free_step` (`lasgd` — group-local rendezvous only, plus
+//! the parked-update retry machinery of the one-step-stale exchange).
+//! Stragglers desynchronize the group clocks, so the calendar queue
+//! sees scattered timestamps rather than lockstep barriers. Smoke mode
+//! (`BENCH_SMOKE=1`) runs 64×4; the full rows run 256×4.
+//!
+//! Run: `cargo bench --bench des_async`
+
+use lsgd::sched::scheduler::{Lasgd, Lsgd, RendezvousScope};
+use lsgd::simnet::{des, ClusterModel, PerturbConfig};
+use lsgd::topology::Topology;
+use lsgd::util::bench::{enforce_baseline_from_env, smoke_mode, Harness};
+
+fn main() {
+    let smoke = smoke_mode();
+    let mut h = if smoke { Harness::quick() } else { Harness::default() };
+    println!("# des_async — rendezvous-heavy vs barrier-free event core");
+
+    let m = ClusterModel::paper_k80();
+    let groups = if smoke { 64 } else { 256 };
+    let steps = 6;
+    let topo = Topology::new(groups, 4).unwrap();
+    let mut p = PerturbConfig::default();
+    p.straggle_prob = 0.3;
+    p.straggle_factor = 3.0;
+    p.trace = false;
+
+    // every step joins all group timelines at the global rendezvous —
+    // maximum barrier events per step
+    h.bench(&format!("des_async/rendezvous_step/{groups}x4x{steps}"), || {
+        des::run_sched_perturbed(&m, &topo, steps, &p, &Lsgd).unwrap().makespan
+    });
+
+    // group-local rendezvous only: the cross-group exchange runs off
+    // the critical path and updates park on the one-step-stale gate
+    let lasgd = Lasgd { alpha: 0.5, scope: RendezvousScope::GroupLocal };
+    h.bench(&format!("des_async/barrier_free_step/{groups}x4x{steps}"), || {
+        des::run_sched_perturbed(&m, &topo, steps, &p, &lasgd).unwrap().makespan
+    });
+
+    println!("\n{}", h.csv());
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/BENCH_des_async.json", h.json()).unwrap();
+    println!("→ bench_results/BENCH_des_async.json");
+    enforce_baseline_from_env(&h.results);
+}

@@ -41,6 +41,10 @@ pub enum Algo {
     /// average is corrected by the local gradient delta
     /// (`ḡ_{t−1} + λ(g_t − g_{t−1})`).
     Dcs3gd,
+    /// Locally-asynchronous layered SGD: workers sync group-locally
+    /// every step, the cross-group exchange runs off the barrier and
+    /// its mean is applied one step late as an `α`-weighted correction.
+    Lasgd,
 }
 
 impl std::str::FromStr for Algo {
@@ -53,7 +57,8 @@ impl std::str::FromStr for Algo {
             "ma" => Ok(Algo::Ma),
             "dasgd" => Ok(Algo::Dasgd),
             "dcs3gd" => Ok(Algo::Dcs3gd),
-            other => anyhow::bail!("unknown algo {other:?} (csgd|lsgd|ma|dasgd|dcs3gd)"),
+            "lasgd" => Ok(Algo::Lasgd),
+            other => anyhow::bail!("unknown algo {other:?} (csgd|lsgd|ma|dasgd|dcs3gd|lasgd)"),
         }
     }
 }
@@ -66,6 +71,7 @@ impl std::fmt::Display for Algo {
             Algo::Ma => write!(f, "ma"),
             Algo::Dasgd => write!(f, "dasgd"),
             Algo::Dcs3gd => write!(f, "dcs3gd"),
+            Algo::Lasgd => write!(f, "lasgd"),
         }
     }
 }
@@ -74,11 +80,15 @@ impl std::fmt::Display for Algo {
 /// read them; see the per-variant docs on [`Algo`]).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SchedConfig {
-    /// `ma`: run the parameter allreduce every `comm_interval` steps
-    /// (1 = every step).
-    pub comm_interval: usize,
+    /// Run the global collective every `comm_interval` steps
+    /// (1 = every step). `None` keeps each scheduler's own default
+    /// cadence: `ma` syncs every 4 steps, the layered family (`lsgd`/
+    /// `dasgd`/`dcs3gd`) every step; `csgd` and `lasgd` ignore the
+    /// knob (see [`crate::sched::scheduler::scheduler_for`]).
+    pub comm_interval: Option<usize>,
     /// `ma`: elastic-averaging blend weight toward the global mean
-    /// (1.0 = hard reset to the mean).
+    /// (1.0 = hard reset to the mean). `lasgd`: weight of the delayed
+    /// cross-group correction.
     pub alpha: f64,
     /// `dcs3gd`: delay-compensation weight on the local gradient delta.
     pub lambda: f64,
@@ -86,7 +96,7 @@ pub struct SchedConfig {
 
 impl Default for SchedConfig {
     fn default() -> Self {
-        Self { comm_interval: 4, alpha: 0.5, lambda: 0.5 }
+        Self { comm_interval: None, alpha: 0.5, lambda: 0.5 }
     }
 }
 
@@ -228,7 +238,12 @@ impl ExperimentConfig {
                 io_latency: kv.f64_or("data.io_latency", d.data.io_latency)?,
             },
             sched: SchedConfig {
-                comm_interval: kv.usize_or("sched.comm_interval", d.sched.comm_interval)?,
+                // absent key = None = per-scheduler default cadence
+                comm_interval: if kv.has("sched.comm_interval") {
+                    Some(kv.usize_or("sched.comm_interval", 1)?)
+                } else {
+                    d.sched.comm_interval
+                },
                 alpha: kv.f64_or("sched.alpha", d.sched.alpha)?,
                 lambda: kv.f64_or("sched.lambda", d.sched.lambda)?,
             },
@@ -271,7 +286,9 @@ impl ExperimentConfig {
         );
         anyhow::ensure!(self.optim.base_global_batch > 0);
         anyhow::ensure!(self.data.train_samples > 0);
-        anyhow::ensure!(self.sched.comm_interval >= 1, "sched.comm_interval must be >= 1");
+        if let Some(k) = self.sched.comm_interval {
+            anyhow::ensure!(k >= 1, "sched.comm_interval must be >= 1");
+        }
         anyhow::ensure!(
             (0.0..=1.0).contains(&self.sched.alpha),
             "sched.alpha out of range [0, 1]"
@@ -288,7 +305,7 @@ impl ExperimentConfig {
              [optim]\nbase_lr = {}\nbase_global_batch = {}\nlinear_scaling = {}\nwarmup_epochs = {}\n\
              decay_factor = {}\ndecay_every_epochs = {}\nmomentum = {}\nweight_decay = {}\n\n\
              [data]\ntrain_samples = {}\nval_samples = {}\nseed = {}\nio_latency = {}\n\n\
-             [sched]\ncomm_interval = {}\nalpha = {}\nlambda = {}\n\n\
+             [sched]\n{}alpha = {}\nlambda = {}\n\n\
              [cluster]\nintra_alpha = {}\nintra_beta = {}\ninter_alpha = {}\ninter_beta = {}\n\
              comm_inter_alpha = {}\ncomm_inter_beta = {}\nt_compute = {}\nt_io = {}\n\
              grad_bytes = {}\nt_update = {}\nallreduce = \"{}\"\nlocal_batch = {}\n",
@@ -311,7 +328,12 @@ impl ExperimentConfig {
             self.data.val_samples,
             self.data.seed,
             self.data.io_latency,
-            self.sched.comm_interval,
+            // None stays absent so the round-trip preserves the
+            // per-scheduler default cadence
+            match self.sched.comm_interval {
+                Some(k) => format!("comm_interval = {k}\n"),
+                None => String::new(),
+            },
             self.sched.alpha,
             self.sched.lambda,
             self.cluster.intra.alpha,
@@ -378,6 +400,7 @@ mod tests {
             ("ma", Algo::Ma),
             ("dasgd", Algo::Dasgd),
             ("dcs3gd", Algo::Dcs3gd),
+            ("lasgd", Algo::Lasgd),
         ] {
             assert_eq!(s.parse::<Algo>().unwrap(), a);
             assert_eq!(a.to_string(), s);
@@ -391,11 +414,16 @@ mod tests {
         )
         .unwrap();
         assert_eq!(c.algo, Algo::Ma);
-        assert_eq!(c.sched.comm_interval, 8);
+        assert_eq!(c.sched.comm_interval, Some(8));
         assert_eq!(c.sched.alpha, 0.25);
         assert_eq!(c.sched.lambda, 0.75);
         let c2 = ExperimentConfig::from_toml(&c.to_toml()).unwrap();
         assert_eq!(c, c2);
+        // an absent key stays None through the round-trip (so each
+        // scheduler keeps its own default cadence)
+        let d = ExperimentConfig::from_toml("algo = \"lsgd\"\n").unwrap();
+        assert_eq!(d.sched.comm_interval, None);
+        assert_eq!(ExperimentConfig::from_toml(&d.to_toml()).unwrap().sched.comm_interval, None);
 
         assert!(ExperimentConfig::from_toml("[sched]\ncomm_interval = 0\n").is_err());
         assert!(ExperimentConfig::from_toml("[sched]\nalpha = 1.5\n").is_err());

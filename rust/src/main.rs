@@ -35,16 +35,22 @@ USAGE: lsgd <SUBCOMMAND> [flags]
 SUBCOMMANDS:
   train     train with CSGD (Alg. 2), LSGD (Alg. 3), or a related-work
             scheduler (ma = periodic model averaging, dasgd = delayed
-            averaging, dcs3gd = stale-sync + delay compensation)
-            --algo csgd|lsgd|ma|dasgd|dcs3gd
+            averaging, dcs3gd = stale-sync + delay compensation,
+            lasgd = locally-async layered SGD: group-local sync every
+            step, cross-group exchange off the barrier)
+            --algo csgd|lsgd|ma|dasgd|dcs3gd|lasgd
             --preset P --groups G --workers W --steps K
             --eval-every K --seed S --io-latency SECS --train-samples N
             --dedup-replicas --parallel --config FILE --curve-out FILE
             (--parallel = thread-per-rank engine: one OS thread per
              worker and per communicator; bitwise-identical trajectory)
             scheduler-family knobs:
-            --comm-interval K    ma: global sync every K steps (default 4)
-            --alpha A            ma: elastic blend weight (default 0.5)
+            --comm-interval K    global sync every K steps, accumulating
+                                 gradients in between (ma default 4;
+                                 lsgd/dasgd/dcs3gd default 1; ignored
+                                 by csgd/lasgd)
+            --alpha A            ma: elastic blend weight; lasgd: delayed
+                                 global correction weight (default 0.5)
             --lambda L           dcs3gd: delay compensation (default 0.5)
             perturbation (needs --parallel):
             --stragglers P[xF]   straggle each rank w.p. P, slowdown F
@@ -73,7 +79,7 @@ SUBCOMMANDS:
             fig2|fig4|fig5|fig6 [--allreduce ring|rhd] [--csv FILE]
             [--t-compute S] [--t-io S]
   simulate  discrete-event timeline at scale
-            --algo csgd|lsgd|ma|dasgd|dcs3gd --groups G --workers W --steps K
+            --algo csgd|lsgd|ma|dasgd|dcs3gd|lasgd --groups G --workers W --steps K
             [--comm-interval K] [--alpha A] [--lambda L]
             [--stragglers P[xF]] [--hetero H] [--comm-stragglers P[xF]]
             [--comm-hetero H] [--link-degrade G@S..ExF]
@@ -227,7 +233,9 @@ fn parse_train_config(a: &Args, algo: Algo) -> Result<ExperimentConfig> {
     cfg.data.io_latency = a.f64_or("io-latency", cfg.data.io_latency)?;
     cfg.data.train_samples = a.usize_or("train-samples", cfg.data.train_samples)?;
     cfg.data.val_samples = a.usize_or("val-samples", cfg.data.val_samples)?;
-    cfg.sched.comm_interval = a.usize_or("comm-interval", cfg.sched.comm_interval)?;
+    if let Some(k) = a.opt_usize("comm-interval")? {
+        cfg.sched.comm_interval = Some(k);
+    }
     cfg.sched.alpha = a.f64_or("alpha", cfg.sched.alpha)?;
     cfg.sched.lambda = a.f64_or("lambda", cfg.sched.lambda)?;
     cfg.validate()?;
@@ -463,7 +471,9 @@ fn cmd_simulate(rest: &[String]) -> Result<()> {
     let steps = a.usize_or("steps", 3)?;
     let algo: Algo = a.str_or("algo", "lsgd").parse()?;
     let mut sc = SchedConfig::default();
-    sc.comm_interval = a.usize_or("comm-interval", sc.comm_interval)?;
+    if let Some(k) = a.opt_usize("comm-interval")? {
+        sc.comm_interval = Some(k);
+    }
     sc.alpha = a.f64_or("alpha", sc.alpha)?;
     sc.lambda = a.f64_or("lambda", sc.lambda)?;
     let perturb = parse_perturb(&a)?;
@@ -471,8 +481,11 @@ fn cmd_simulate(rest: &[String]) -> Result<()> {
 
     let m = ClusterModel::paper_k80();
     let topo = Topology::new(groups, workers)?;
+    // lsgd with a widened --comm-interval prices through the generic
+    // event core (the legacy entry point is the every-step schedule)
+    let legacy_lsgd = sc.comm_interval.unwrap_or(1) == 1;
     let r = match algo {
-        Algo::Lsgd => des::run_lsgd_perturbed(&m, &topo, steps, &perturb)?,
+        Algo::Lsgd if legacy_lsgd => des::run_lsgd_perturbed(&m, &topo, steps, &perturb)?,
         Algo::Csgd => des::run_csgd_perturbed(&m, &topo, steps, &perturb)?,
         _ => {
             let sched = lsgd::sched::scheduler::scheduler_for(algo, &sc)?;
@@ -487,7 +500,7 @@ fn cmd_simulate(rest: &[String]) -> Result<()> {
     );
     if !perturb.is_noop() {
         let base = match algo {
-            Algo::Lsgd => des::run_lsgd(&m, &topo, steps),
+            Algo::Lsgd if legacy_lsgd => des::run_lsgd(&m, &topo, steps),
             Algo::Csgd => des::run_csgd(&m, &topo, steps),
             _ => {
                 let sched = lsgd::sched::scheduler::scheduler_for(algo, &sc)?;

@@ -186,6 +186,18 @@ pub struct PerturbReport {
     /// ([`crate::simnet::perturb::PerturbConfig::fabric_injected_delay`])
     /// as applied per global-fold lane. Empty under the flat fabric.
     pub fabric_injected_per_group: Vec<(usize, f64)>,
+    /// Wall-clock seconds timelines spent parked at the schedule's
+    /// blocking rendezvous, measured at the folder: for the
+    /// synchronous merges the spread between the first and last group
+    /// partial per step (summed), for the stale/group-local merges the
+    /// wait on the deferred delivery. Engine-side mirror of
+    /// [`crate::simnet::des::DesResult::rendezvous_wait`].
+    pub rendezvous_wait_secs: f64,
+    /// Worst per-step clock skew observed at the global fold — the
+    /// spread between the first and last arriving group partial.
+    /// Engine-side mirror of
+    /// [`crate::simnet::des::DesResult::clock_skew`].
+    pub clock_skew_secs: f64,
 }
 
 impl PerturbReport {

@@ -128,7 +128,9 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::scheduler::{delay_compensate, elastic_blend, GlobalPayload, MergeRule, Scheduler};
+use super::scheduler::{
+    delay_compensate, elastic_blend, group_delayed_correction, GlobalPayload, MergeRule, Scheduler,
+};
 use super::{checksum, evaluate_params, LsgdOptions, RunResult, Trainer};
 use crate::collective;
 use crate::metrics::{NetPhaseStats, PerturbReport, PhaseTimers, RegroupEvent, TrainCurve};
@@ -198,6 +200,12 @@ struct Acc {
     /// Packet-level emulation totals across lanes and segments
     /// (injected wall-clock seconds; `phase` filled at report time).
     net: NetPhaseStats,
+    /// Seconds group timelines spent parked at the global rendezvous,
+    /// measured at the folder (Σ over steps and groups of
+    /// last-arrival − arrival).
+    rendezvous_wait: f64,
+    /// Worst per-step first-to-last spread between group partials.
+    clock_skew: f64,
 }
 
 /// Run any registered scheduler on the thread-per-rank runtime.
@@ -229,6 +237,8 @@ pub fn run(
         fabric_injected: Vec::new(),
         regroups: Vec::new(),
         net: NetPhaseStats::default(),
+        rendezvous_wait: 0.0,
+        clock_skew: 0.0,
     };
 
     // Segment loop: run membership-stable stretches, regroup at
@@ -261,8 +271,8 @@ pub fn run(
 
     let first_alive = membership.alive().next().expect("at least one survivor").0;
     // replicas stay bitwise-identical only under the averaged-gradient
-    // merge; ma/dasgd/dcs3gd replicas diverge by construction (see the
-    // scheduler module's determinism contract)
+    // merge; ma/dasgd/dcs3gd/lasgd replicas diverge by construction
+    // (see the scheduler module's determinism contract)
     debug_assert!(
         sched.merge() != MergeRule::AverageGradient || alive_replicas_identical(t, &membership),
         "surviving replicas diverged"
@@ -289,6 +299,8 @@ pub fn run(
             } else {
                 Vec::new()
             },
+            rendezvous_wait_secs: acc.rendezvous_wait,
+            clock_skew_secs: acc.clock_skew,
         },
     })
 }
@@ -344,8 +356,13 @@ fn run_segment(
     // (sched/mod.rs "Division placement"): the scheduler says which
     // reduction level divides (LSGD's paper-literal mode divides at
     // each communicator; everything else scales once after the global
-    // fold).
+    // fold). The group-local merge (`lasgd`) scales *per group*
+    // instead — group averages on the wire (1/w_g at each
+    // communicator), mean of group averages out of the exchange
+    // (1/G at the folder); its static trait answer is unity.
+    let group_local = matches!(merge, MergeRule::GroupAverageDelayedGlobal { .. });
     let (local_scale, global_scale) = sched.scales(nf, opts.divide_at_local_reduce);
+    let global_scale = if group_local { 1.0 / groups as f32 } else { global_scale };
     let fold_threads = std::thread::available_parallelism()
         .map(|x| x.get())
         .unwrap_or(1)
@@ -509,13 +526,16 @@ fn run_segment(
                         fabric_injected += fd;
                     }
                     // fold in ascending worker id — arrival order (the
-                    // race) is erased by the slotting above
+                    // race) is erased by the slotting above. The group-
+                    // local merge averages here (1/w_g): the partial IS
+                    // the group average ā_g.
+                    let lscale = if group_local { 1.0 / wpg as f32 } else { local_scale };
                     let msg = tm.time("local_reduce", || {
                         let grads: Vec<&[f32]> = slots
                             .iter()
                             .map(|m| m.as_ref().unwrap().grad.as_slice())
                             .collect();
-                        let partial = collective::reduce_scaled(&grads, local_scale);
+                        let partial = collective::reduce_scaled(&grads, lscale);
                         PartialMsg {
                             group,
                             partial,
@@ -526,6 +546,19 @@ fn run_segment(
                                 .fold(0.0_f64, f64::max),
                         }
                     });
+                    if group_local {
+                        // the group-local rendezvous fires HERE: the
+                        // group average reaches the workers before the
+                        // cross-group exchange even starts, so no group
+                        // ever waits on another group's stragglers —
+                        // the exchange result lands one step later over
+                        // the same channel
+                        tm.time("broadcast", || {
+                            for tx in &my_avg_txs {
+                                tx.send(msg.partial.clone()).expect("worker gone");
+                            }
+                        });
+                    }
                     my_partial_tx.send(msg).expect("global folder gone");
                     let avg = bcast_rx.recv().expect("global folder gone");
                     // Broadcast (Alg. 3 line 9): one real copy per worker
@@ -586,6 +619,13 @@ fn run_segment(
                 // average (documented in the scheduler module).
                 let mut first_comm = true;
                 let mut prev_grad: Option<Vec<f32>> = None;
+                // group-local merge state: the own group's average from
+                // the previous step (the `ā_g_prev` of the correction)
+                let mut prev_avg_g: Option<Vec<f32>> = None;
+                // cadence > 1 with gradients on the wire: the window
+                // accumulator (ascending step order); the sync step
+                // ships the whole window's sum
+                let mut accum: Option<Vec<f32>> = None;
                 for step in seg.clone() {
                     let comm = sched.communicates_at(step);
                     if !layered {
@@ -618,25 +658,49 @@ fn run_segment(
                         replica.params = w2;
                         replica.momentum = m2;
                     }
-                    // stale merge rules still need this step's gradient
-                    // after it is moved into the collective
-                    let grad_keep: Option<Vec<f32>> = match merge {
-                        MergeRule::DelayedAverageGradient if first_comm => Some(grad.clone()),
-                        MergeRule::DelayCompensatedStale { .. } => Some(grad.clone()),
-                        _ => None,
+                    // cadence > 1: fold this step's gradient into the
+                    // window accumulator (element-wise, ascending step
+                    // order — the serial engine folds identically, so
+                    // the window sum is bitwise engine-independent)
+                    let window_grad: Option<Vec<f32>> = match payload {
+                        GlobalPayload::Gradients => Some(match accum.take() {
+                            Some(mut a) => {
+                                for (ai, gi) in a.iter_mut().zip(&grad) {
+                                    *ai += gi;
+                                }
+                                a
+                            }
+                            None => grad,
+                        }),
+                        GlobalPayload::Parameters => None,
+                    };
+                    // stale merge rules still need this sync's gradient
+                    // (the window sum) after it is moved into the
+                    // collective
+                    let grad_keep: Option<Vec<f32>> = if comm {
+                        match merge {
+                            MergeRule::DelayedAverageGradient if first_comm => {
+                                window_grad.clone()
+                            }
+                            MergeRule::DelayCompensatedStale { .. } => window_grad.clone(),
+                            _ => None,
+                        }
+                    } else {
+                        None
                     };
                     if comm {
-                        let wire = match payload {
-                            GlobalPayload::Gradients => grad,
-                            GlobalPayload::Parameters => replica.params.clone(),
+                        let wire = match window_grad {
+                            Some(g) => g,
+                            None => replica.params.clone(),
                         };
                         my_grad_tx
                             .send(GradMsg { local, grad: wire, loss, prev_io_secs: prev_io })
                             .expect("communicator gone");
                         prev_io = 0.0;
                     } else {
-                        // local-only step: the loss still reaches the
-                        // curve, over the side channel
+                        // local-only step: park the window sum and send
+                        // the loss to the curve over the side channel
+                        accum = window_grad;
                         my_loss_tx.send((pos, loss)).expect("result collector gone");
                     }
                     if layered && step + 1 < seg.end {
@@ -735,6 +799,47 @@ fn run_segment(
                                 replica.momentum = m2;
                                 prev_grad = Some(g_now);
                             }
+                            MergeRule::GroupAverageDelayedGlobal { alpha } => {
+                                // group-local rendezvous: the own
+                                // group's fresh average arrives first
+                                // and is applied immediately; the
+                                // cross-group mean arrives one step
+                                // late (FIFO: Ā(s−1) precedes ā_g(s))
+                                // and enters as an α-weighted
+                                // correction. Cold start applies ā_g
+                                // alone.
+                                let g_eff = match prev_avg_g.take() {
+                                    Some(prev) => {
+                                        let global =
+                                            avg_rx.recv().expect("broadcast channel closed");
+                                        let a_g =
+                                            avg_rx.recv().expect("broadcast channel closed");
+                                        let eff = group_delayed_correction(
+                                            &a_g, &global, &prev, alpha,
+                                        );
+                                        prev_avg_g = Some(a_g);
+                                        eff
+                                    }
+                                    None => {
+                                        let a_g =
+                                            avg_rx.recv().expect("broadcast channel closed");
+                                        prev_avg_g = Some(a_g.clone());
+                                        a_g
+                                    }
+                                };
+                                let (w2, m2) = tm
+                                    .time("update", || {
+                                        engine.sgd_update(
+                                            &replica.params,
+                                            &replica.momentum,
+                                            &g_eff,
+                                            lr_t,
+                                        )
+                                    })
+                                    .expect("sgd_update failed");
+                                replica.params = w2;
+                                replica.momentum = m2;
+                            }
                         }
                     }
                     if w == first_alive {
@@ -766,6 +871,11 @@ fn run_segment(
                     MergeRule::DelayCompensatedStale { .. } if prev_grad.is_some() => {
                         let _ = avg_rx.recv();
                     }
+                    // the final cross-group mean is still in flight
+                    // (it would have been consumed at step end+1)
+                    MergeRule::GroupAverageDelayedGlobal { .. } if prev_avg_g.is_some() => {
+                        let _ = avg_rx.recv();
+                    }
                     _ => {}
                 }
                 (tm, injected)
@@ -781,10 +891,24 @@ fn run_segment(
         for step in range.clone() {
             let loss_sum = if sched.communicates_at(step) {
                 let mut slots: Vec<Option<PartialMsg>> = (0..groups).map(|_| None).collect();
+                // per-partial arrival stamps: the folder is where every
+                // group timeline rendezvouses, so last − arrival is the
+                // engine-side mirror of the DES's Rendezvous::wait
+                let mut arrivals: Vec<Instant> = Vec::with_capacity(groups);
                 for _ in 0..groups {
                     let m = partial_rx.recv().expect("communicator channel closed");
+                    arrivals.push(Instant::now());
                     let group = m.group;
                     slots[group] = Some(m);
+                }
+                if measure_wait && groups > 1 {
+                    let last = *arrivals.last().expect("received every partial");
+                    acc.rendezvous_wait += arrivals
+                        .iter()
+                        .map(|a| last.duration_since(*a).as_secs_f64())
+                        .sum::<f64>();
+                    let skew = last.duration_since(arrivals[0]).as_secs_f64();
+                    acc.clock_skew = acc.clock_skew.max(skew);
                 }
                 // overlap accounting: the prefetch measured during step
                 // s arrives with the next fold's messages; pair it with

@@ -1,14 +1,17 @@
 //! Generic serial runner for the related-work scheduler family
-//! (`ma`, `dasgd`, `dcs3gd`).
+//! (`ma`, `dasgd`, `dcs3gd`, `lasgd`, and any layered scheduler
+//! wrapped in the [`Every`](super::scheduler::Every) interval
+//! adapter).
 //!
 //! The paper's own two schedules keep their audited, line-for-line
 //! serial references ([`super::lsgd`], [`super::csgd`]); everything
 //! else runs here, driven purely by the
 //! [`Scheduler`](super::scheduler::Scheduler) trait answers: cadence
-//! decides whether a step touches the wire at all, payload decides
-//! what is folded (gradients or post-update parameters), and the merge
-//! rule decides how each replica absorbs the global average. The
-//! numerics — fold order, scaling placement, loss aggregation, the
+//! decides whether a step touches the wire at all (non-communicating
+//! steps accumulate gradients into a per-worker window sum), payload
+//! decides what is folded (gradients or post-update parameters), and
+//! the merge rule decides how each replica absorbs the global average.
+//! The numerics — fold order, scaling placement, loss aggregation, the
 //! staleness pipelines — are element-for-element the ones the
 //! thread-per-rank engine ([`super::exec`]) executes, so the two
 //! engines stay bitwise-identical per scheduler (asserted in
@@ -21,9 +24,12 @@
 
 use anyhow::Result;
 
-use super::scheduler::{delay_compensate, elastic_blend, GlobalPayload, MergeRule, Scheduler};
+use super::scheduler::{
+    delay_compensate, elastic_blend, group_delayed_correction, GlobalPayload, MergeRule, Scheduler,
+};
 use super::{checksum, RunOptions, RunResult, Trainer};
 use crate::metrics::{PhaseTimers, TrainCurve};
+use crate::topology::WorkerId;
 
 /// Run any family scheduler for `cfg.steps` steps on the serial
 /// reference engine (single thread, no perturbation).
@@ -39,14 +45,26 @@ pub fn run_serial(t: &mut Trainer, sched: &dyn Scheduler, opts: RunOptions) -> R
     let mut curve = TrainCurve::new(sched.name());
     let mut checksums = Vec::with_capacity(t.cfg.steps);
     let nf = n_workers as f32;
-    let (local_scale, global_scale) = sched.scales(nf, opts.lsgd.divide_at_local_reduce);
     let payload = sched.payload();
     let merge = sched.merge();
+    // Division placement mirrors the thread-per-rank engine: the
+    // group-local merge (`lasgd`) scales per group — averages on the
+    // wire (1/w_g at each local fold), mean of group averages out of
+    // the exchange (1/G) — everyone else uses the static trait answer.
+    let group_local = matches!(merge, MergeRule::GroupAverageDelayedGlobal { .. });
+    let (local_scale, global_scale) = sched.scales(nf, opts.lsgd.divide_at_local_reduce);
+    let global_scale = if group_local { 1.0 / t.topo.groups as f32 } else { global_scale };
 
     // Staleness pipelines, one slot per replica — the same state the
     // thread-per-rank workers keep thread-locally.
     let mut pending_avg: Vec<Option<Vec<f32>>> = vec![None; n_workers];
     let mut stale_state: Vec<Option<(Vec<f32>, Vec<f32>)>> = vec![None; n_workers];
+    // group-local merge state: the own group's previous average
+    // (`ā_g_prev`), per replica like the engine's thread-local copy
+    let mut prev_group_avg: Vec<Option<Vec<f32>>> = vec![None; n_workers];
+    // cadence > 1 with gradients on the wire: per-worker window
+    // accumulators (ascending step order)
+    let mut accums: Vec<Option<Vec<f32>>> = vec![None; n_workers];
 
     for step in 0..t.cfg.steps {
         // every step: load + compute on each worker's own replica
@@ -71,13 +89,32 @@ pub fn run_serial(t: &mut Trainer, sched: &dyn Scheduler, opts: RunOptions) -> R
             }
         }
 
+        // cadence > 1: fold this step's gradient into each worker's
+        // window accumulator (identical element-wise add order to the
+        // thread-per-rank workers, so the window sum is bitwise
+        // engine-independent); the sync step ships the window's sum
+        let windows: Option<Vec<Vec<f32>>> = match payload {
+            GlobalPayload::Gradients => Some(
+                (0..n_workers)
+                    .map(|w| match accums[w].take() {
+                        Some(mut a) => {
+                            for (ai, gi) in a.iter_mut().zip(&grads[w]) {
+                                *ai += gi;
+                            }
+                            a
+                        }
+                        None => grads[w].clone(),
+                    })
+                    .collect(),
+            ),
+            GlobalPayload::Parameters => None,
+        };
+
         if sched.communicates_at(step) {
             // what goes on the wire — per-worker, ascending id
-            let contribs: Vec<&[f32]> = match payload {
-                GlobalPayload::Gradients => grads.iter().map(|g| g.as_slice()).collect(),
-                GlobalPayload::Parameters => {
-                    t.replicas.iter().map(|r| r.params.as_slice()).collect()
-                }
+            let contribs: Vec<&[f32]> = match &windows {
+                Some(ws) => ws.iter().map(|g| g.as_slice()).collect(),
+                None => t.replicas.iter().map(|r| r.params.as_slice()).collect(),
             };
             // group-local reduce, then the cross-group fold — the same
             // two-level ascending-id association every engine uses
@@ -86,7 +123,8 @@ pub fn run_serial(t: &mut Trainer, sched: &dyn Scheduler, opts: RunOptions) -> R
                 for g in t.topo.all_groups() {
                     let bufs: Vec<&[f32]> =
                         t.topo.workers_of(g).map(|w| contribs[w.0]).collect();
-                    v.push(t.engine.reduce_fold(&bufs, local_scale)?);
+                    let ls = if group_local { 1.0 / bufs.len() as f32 } else { local_scale };
+                    v.push(t.engine.reduce_fold(&bufs, ls)?);
                 }
                 Ok(v)
             })?;
@@ -118,10 +156,10 @@ pub fn run_serial(t: &mut Trainer, sched: &dyn Scheduler, opts: RunOptions) -> R
                     }
                     MergeRule::DelayedAverageGradient => {
                         // apply LAST sync's average; this one stays in
-                        // flight. Cold start applies the own gradient.
-                        let g_eff = pending_avg[w]
-                            .take()
-                            .unwrap_or_else(|| grads[w].clone());
+                        // flight. Cold start applies the own window sum.
+                        let g_eff = pending_avg[w].take().unwrap_or_else(|| {
+                            windows.as_ref().expect("gradient payload")[w].clone()
+                        });
                         let (w2, m2) = timers.time("update", || {
                             t.engine.sgd_update(
                                 &t.replicas[w].params,
@@ -135,11 +173,10 @@ pub fn run_serial(t: &mut Trainer, sched: &dyn Scheduler, opts: RunOptions) -> R
                         pending_avg[w] = Some(avg.clone());
                     }
                     MergeRule::DelayCompensatedStale { lambda } => {
+                        let g_now = &windows.as_ref().expect("gradient payload")[w];
                         let g_eff = match stale_state[w].take() {
-                            Some((stale, pg)) => {
-                                delay_compensate(&stale, &grads[w], &pg, lambda)
-                            }
-                            None => grads[w].clone(),
+                            Some((stale, pg)) => delay_compensate(&stale, g_now, &pg, lambda),
+                            None => g_now.clone(),
                         };
                         let (w2, m2) = timers.time("update", || {
                             t.engine.sgd_update(
@@ -151,9 +188,42 @@ pub fn run_serial(t: &mut Trainer, sched: &dyn Scheduler, opts: RunOptions) -> R
                         })?;
                         t.replicas[w].params = w2;
                         t.replicas[w].momentum = m2;
-                        stale_state[w] = Some((avg.clone(), grads[w].clone()));
+                        stale_state[w] = Some((avg.clone(), g_now.clone()));
+                    }
+                    MergeRule::GroupAverageDelayedGlobal { alpha } => {
+                        // group-local rendezvous: apply the own group's
+                        // fresh average immediately, corrected toward
+                        // the one-step-stale cross-group mean; cold
+                        // start applies ā_g alone — exactly the
+                        // thread-per-rank worker's transition
+                        let g = t.topo.group_of(WorkerId(w)).0;
+                        let g_eff = match prev_group_avg[w].take() {
+                            Some(prev) => {
+                                let global =
+                                    pending_avg[w].take().expect("exchange is one step behind");
+                                group_delayed_correction(&partials[g], &global, &prev, alpha)
+                            }
+                            None => partials[g].clone(),
+                        };
+                        let (w2, m2) = timers.time("update", || {
+                            t.engine.sgd_update(
+                                &t.replicas[w].params,
+                                &t.replicas[w].momentum,
+                                &g_eff,
+                                lr,
+                            )
+                        })?;
+                        t.replicas[w].params = w2;
+                        t.replicas[w].momentum = m2;
+                        prev_group_avg[w] = Some(partials[g].clone());
+                        pending_avg[w] = Some(avg.clone());
                     }
                 }
+            }
+        } else if let Some(ws) = windows {
+            // local-only step: park the window sums for the next sync
+            for (slot, wsum) in accums.iter_mut().zip(ws) {
+                *slot = Some(wsum);
             }
         }
 

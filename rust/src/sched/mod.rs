@@ -11,9 +11,10 @@
 //! The communication schedule itself is abstracted by the
 //! [`scheduler::Scheduler`] trait (step shape, cadence, payload, merge
 //! rule). LSGD and CSGD are its reference instances; the related-work
-//! family (`ma`, `dasgd`, `dcs3gd`) plugs into the same two engines —
-//! [`family`] serially, [`exec`] thread-per-rank — and the same DES
-//! pricing ([`crate::simnet::des::run_sched_perturbed`]).
+//! family (`ma`, `dasgd`, `dcs3gd`) and the locally-asynchronous
+//! `lasgd` plug into the same two engines — [`family`] serially,
+//! [`exec`] thread-per-rank — and the same DES pricing
+//! ([`crate::simnet::des::run_sched_perturbed`]).
 //!
 //! ## Division placement (the one deliberate deviation)
 //!
@@ -276,9 +277,13 @@ impl<'e> Trainer<'e> {
         let sched = scheduler::scheduler_for(self.cfg.algo, &self.cfg.sched)?;
         match (self.cfg.algo, opts.mode) {
             // the paper's two algorithms keep their specialized serial
-            // reference paths (audited line-for-line against Alg. 2/3)
+            // reference paths (audited line-for-line against Alg. 2/3);
+            // an interval-wrapped lsgd accumulates gradient windows, so
+            // it runs on the generic family runner instead
             (Algo::Csgd, ExecMode::Serial) => csgd::run(self),
-            (Algo::Lsgd, ExecMode::Serial) => lsgd::run(self, opts.lsgd),
+            (Algo::Lsgd, ExecMode::Serial) if self.cfg.sched.comm_interval.unwrap_or(1) == 1 => {
+                lsgd::run(self, opts.lsgd)
+            }
             (_, ExecMode::Serial) => family::run_serial(self, sched.as_ref(), opts),
             (_, ExecMode::ThreadPerRank) => exec::run(self, sched.as_ref(), opts, perturb),
         }

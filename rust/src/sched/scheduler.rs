@@ -41,6 +41,15 @@
 //! * `dasgd`/`dcs3gd`: rank 0's trajectory is bitwise-reproducible per
 //!   seed and identical across engines; staleness state cold-restarts
 //!   at membership changes (a regroup drops the in-flight average).
+//! * `lasgd`: replicas within a group stay identical (they consume the
+//!   same group average each step), groups diverge between exchanges;
+//!   the trajectory is bitwise-reproducible per seed and identical
+//!   across engines, with the same cold-restart rule at regroups.
+//!
+//! Schedulers also declare a [`RendezvousScope`]: whether the step's
+//! synchronization joins *all* timelines (the legacy barrier) or only
+//! the group's own workers (`lasgd`), which is what the event core in
+//! `simnet/des.rs` prices.
 
 use anyhow::Result;
 
@@ -77,6 +86,45 @@ pub enum MergeRule {
     /// average corrected by the local gradient delta (delay
     /// compensation); the rank's own `g_t` on the cold-start step.
     DelayCompensatedStale { lambda: f32 },
+    /// `w ← sgd(w, m, ā_g(t) + α(Ā(t−1) − ā_g(t−1)))` — the `lasgd`
+    /// rule: the replica consumes its **group's own average** `ā_g(t)`
+    /// immediately (the group-local rendezvous) plus an `α`-weighted
+    /// correction toward the one-step-stale **mean of group averages**
+    /// `Ā(t−1)` delivered by the asynchronous cross-group exchange.
+    /// Cold start (`t = 0`, and after a regroup) applies `ā_g(t)`
+    /// alone.
+    GroupAverageDelayedGlobal { alpha: f32 },
+}
+
+/// The set of timelines a scheduler's synchronization point spans.
+///
+/// In the event core (`simnet/des.rs`) every rank and communicator is
+/// an entity with its own virtual clock; a *rendezvous* is the event
+/// that joins a set of those clocks. The scope answers "who has to
+/// show up":
+///
+/// * [`RendezvousScope::Global`] — every participant. The classic
+///   barrier: the step's global collective fires when the **last**
+///   group arrives, and every group's update waits for it. All five
+///   synchronous schedulers (csgd, lsgd, ma, dasgd, dcs3gd) use this
+///   scope, and an all-participant rendezvous prices *exactly* like
+///   the legacy segment-synchronous loop (pinned to < 1e-9 in
+///   `rust/tests/des_async.rs`).
+/// * [`RendezvousScope::GroupLocal`] — only the group's own workers.
+///   A group broadcasts its local average and keeps running the moment
+///   its own reduce lands; the cross-group exchange still happens (it
+///   is a collective) but never gates another group's step — its
+///   result is consumed one step late, so the only global coupling is
+///   a one-step-stale data dependency (`lasgd`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RendezvousScope {
+    /// Barrier over all groups: the global collective gates every
+    /// group's step (the legacy segment-synchronous semantics).
+    Global,
+    /// Barrier over the group's own workers only: groups run on their
+    /// own clocks, the cross-group exchange is asynchronous with a
+    /// bounded (one-step) staleness.
+    GroupLocal,
 }
 
 /// The step's communication structure — what the DES prices and how
@@ -126,6 +174,14 @@ pub trait Scheduler: Send + Sync {
     /// (steps `k−1, 2k−1, …`), so DES communication time falls ~1/k.
     fn communicates_at(&self, step: usize) -> bool {
         (step + 1) % self.comm_interval() == 0
+    }
+
+    /// Which timelines the step's synchronization point joins. The
+    /// default — a [`RendezvousScope::Global`] barrier — reproduces
+    /// the legacy segment-synchronous pricing exactly; only `lasgd`
+    /// narrows the scope to its own group.
+    fn rendezvous_scope(&self) -> RendezvousScope {
+        RendezvousScope::Global
     }
 
     /// `(local_scale, global_scale)` applied by the two reduction
@@ -271,22 +327,127 @@ impl Scheduler for DcS3gd {
     }
 }
 
+/// Locally-asynchronous layered SGD: the group-local rendezvous is the
+/// only barrier a step pays.
+///
+/// Workers still sync **inside their group** every step — compute,
+/// local reduce, broadcast of the group average, update — but the
+/// communicator layer exchanges group averages across the fabric
+/// *asynchronously*: the global collective for step `t` launches when
+/// the groups' partials are in, runs off every group's critical path,
+/// and its mean-of-group-averages is folded in at step `t + 1` as an
+/// `α`-weighted correction ([`MergeRule::GroupAverageDelayedGlobal`]).
+/// No group ever waits for another group's stragglers — the payoff the
+/// straggler-tax suites pin (`rust/tests/des_async.rs`,
+/// `examples/straggler_sweep.rs` part 8).
+///
+/// `scope` is [`RendezvousScope::GroupLocal`] in the registry build;
+/// the property tests also instantiate the [`RendezvousScope::Global`]
+/// variant, which must price exactly like `lsgd` (shrinking the scope
+/// can then only shorten the makespan — the monotonicity contract).
+#[derive(Debug, Clone, Copy)]
+pub struct Lasgd {
+    /// Weight of the delayed cross-group correction (the `--alpha`
+    /// knob, shared with `ma`).
+    pub alpha: f32,
+    /// Barrier scope; `GroupLocal` is the real algorithm.
+    pub scope: RendezvousScope,
+}
+
+impl Scheduler for Lasgd {
+    fn name(&self) -> &'static str {
+        "lasgd"
+    }
+    fn shape(&self) -> CommShape {
+        CommShape::LayeredSync
+    }
+    fn merge(&self) -> MergeRule {
+        MergeRule::GroupAverageDelayedGlobal { alpha: self.alpha }
+    }
+    fn rendezvous_scope(&self) -> RendezvousScope {
+        self.scope
+    }
+    /// Scaling is *per group* for this rule (group averages on the
+    /// wire, mean of group averages from the exchange), so both levels
+    /// divide dynamically in the engines; the static answer is unity.
+    fn scales(&self, _n: f32, _divide_at_local_reduce: bool) -> (f32, f32) {
+        (1.0, 1.0)
+    }
+    fn description(&self) -> &'static str {
+        "locally-async layered SGD: group-local sync every step, cross-group exchange off the barrier"
+    }
+}
+
+/// Interval adapter: `Every(inner, k)` runs `inner`'s schedule but
+/// fires the global collective only every `k` steps, accumulating
+/// gradients locally in between (the layered `--comm-interval`
+/// support). Everything except the cadence delegates to `inner`, so
+/// `Every(Lsgd, 1)` answers identically to `Lsgd`.
+#[derive(Debug, Clone, Copy)]
+pub struct Every<S: Scheduler>(pub S, pub usize);
+
+impl<S: Scheduler> Scheduler for Every<S> {
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+    fn shape(&self) -> CommShape {
+        self.0.shape()
+    }
+    fn merge(&self) -> MergeRule {
+        self.0.merge()
+    }
+    fn payload(&self) -> GlobalPayload {
+        self.0.payload()
+    }
+    fn comm_interval(&self) -> usize {
+        self.1
+    }
+    fn rendezvous_scope(&self) -> RendezvousScope {
+        self.0.rendezvous_scope()
+    }
+    fn scales(&self, n: f32, divide_at_local_reduce: bool) -> (f32, f32) {
+        self.0.scales(n, divide_at_local_reduce)
+    }
+    fn description(&self) -> &'static str {
+        self.0.description()
+    }
+}
+
 /// Every registered scheduler name, in `--algo` order. The CI matrix
 /// and the parameterized determinism suites iterate this list.
-pub const REGISTRY: &[&str] = &["csgd", "lsgd", "ma", "dasgd", "dcs3gd"];
+pub const REGISTRY: &[&str] = &["csgd", "lsgd", "ma", "dasgd", "dcs3gd", "lasgd"];
 
 /// Build the scheduler instance for an algorithm + knob set.
+///
+/// `comm_interval` is resolved per scheduler: `None` means the
+/// scheduler's own default (`ma`: 4, everyone else: 1); `Some(k)`
+/// wraps the layered schedulers (lsgd, dasgd, dcs3gd) in [`Every`] so
+/// the communicator ring syncs every `k` steps. `csgd` (flat,
+/// every-step by definition) and `lasgd` (group-local sync every step
+/// is the algorithm) ignore the knob.
 pub fn scheduler_for(algo: Algo, knobs: &SchedConfig) -> Result<Box<dyn Scheduler>> {
-    anyhow::ensure!(knobs.comm_interval >= 1, "sched.comm_interval must be >= 1");
+    if let Some(k) = knobs.comm_interval {
+        anyhow::ensure!(k >= 1, "sched.comm_interval must be >= 1");
+    }
+    let layered_k = knobs.comm_interval.unwrap_or(1);
     Ok(match algo {
         Algo::Csgd => Box::new(Csgd),
+        Algo::Lsgd if layered_k > 1 => Box::new(Every(Lsgd, layered_k)),
         Algo::Lsgd => Box::new(Lsgd),
         Algo::Ma => Box::new(PeriodicMa {
-            comm_interval: knobs.comm_interval,
+            comm_interval: knobs.comm_interval.unwrap_or(4),
             alpha: knobs.alpha as f32,
         }),
+        Algo::Dasgd if layered_k > 1 => Box::new(Every(DaSgd, layered_k)),
         Algo::Dasgd => Box::new(DaSgd),
+        Algo::Dcs3gd if layered_k > 1 => {
+            Box::new(Every(DcS3gd { lambda: knobs.lambda as f32 }, layered_k))
+        }
         Algo::Dcs3gd => Box::new(DcS3gd { lambda: knobs.lambda as f32 }),
+        Algo::Lasgd => Box::new(Lasgd {
+            alpha: knobs.alpha as f32,
+            scope: RendezvousScope::GroupLocal,
+        }),
     })
 }
 
@@ -306,6 +467,21 @@ pub fn delay_compensate(stale_avg: &[f32], grad: &[f32], prev_grad: &[f32], lamb
     debug_assert_eq!(stale_avg.len(), grad.len());
     debug_assert_eq!(grad.len(), prev_grad.len());
     (0..stale_avg.len()).map(|i| stale_avg[i] + lambda * (grad[i] - prev_grad[i])).collect()
+}
+
+/// The lasgd effective gradient `ā_g + α(Ā_prev − ā_g_prev)`: the own
+/// group's fresh average corrected toward the one-step-stale mean of
+/// group averages. Shared verbatim by both engines (ascending element
+/// order).
+pub fn group_delayed_correction(
+    avg_g: &[f32],
+    global_prev: &[f32],
+    avg_g_prev: &[f32],
+    alpha: f32,
+) -> Vec<f32> {
+    debug_assert_eq!(avg_g.len(), global_prev.len());
+    debug_assert_eq!(avg_g.len(), avg_g_prev.len());
+    (0..avg_g.len()).map(|i| avg_g[i] + alpha * (global_prev[i] - avg_g_prev[i])).collect()
 }
 
 #[cfg(test)]
@@ -353,11 +529,70 @@ mod tests {
     }
 
     #[test]
+    fn interval_adapter_changes_cadence_and_nothing_else() {
+        let plain = Lsgd;
+        let every3 = Every(Lsgd, 3);
+        assert_eq!(every3.name(), plain.name());
+        assert_eq!(every3.shape(), plain.shape());
+        assert_eq!(every3.merge(), plain.merge());
+        assert_eq!(every3.payload(), plain.payload());
+        assert_eq!(every3.rendezvous_scope(), plain.rendezvous_scope());
+        assert_eq!(every3.scales(4.0, true), plain.scales(4.0, true));
+        let comm: Vec<usize> = (0..9).filter(|&s| every3.communicates_at(s)).collect();
+        assert_eq!(comm, vec![2, 5, 8]);
+        // the identity adapter answers identically to the bare scheduler
+        let every1 = Every(DaSgd, 1);
+        assert!((0..8).all(|s| every1.communicates_at(s) == DaSgd.communicates_at(s)));
+    }
+
+    #[test]
+    fn comm_interval_resolution_is_per_scheduler() {
+        // None → each scheduler's own default: ma syncs every 4 steps,
+        // the layered family every step (the legacy cadence)
+        let none = SchedConfig::default();
+        assert_eq!(scheduler_for(Algo::Ma, &none).unwrap().comm_interval(), 4);
+        for algo in [Algo::Lsgd, Algo::Csgd, Algo::Dasgd, Algo::Dcs3gd, Algo::Lasgd] {
+            assert_eq!(scheduler_for(algo, &none).unwrap().comm_interval(), 1, "{algo:?}");
+        }
+        // Some(k) → the layered schedulers pick it up, csgd/lasgd stay
+        // every-step by construction
+        let k3 = SchedConfig { comm_interval: Some(3), ..Default::default() };
+        for algo in [Algo::Lsgd, Algo::Ma, Algo::Dasgd, Algo::Dcs3gd] {
+            assert_eq!(scheduler_for(algo, &k3).unwrap().comm_interval(), 3, "{algo:?}");
+        }
+        assert_eq!(scheduler_for(Algo::Csgd, &k3).unwrap().comm_interval(), 1);
+        assert_eq!(scheduler_for(Algo::Lasgd, &k3).unwrap().comm_interval(), 1);
+        // Some(0) is rejected for every algorithm
+        let zero = SchedConfig { comm_interval: Some(0), ..Default::default() };
+        assert!(scheduler_for(Algo::Lsgd, &zero).is_err());
+    }
+
+    #[test]
+    fn lasgd_narrows_the_rendezvous_scope() {
+        let knobs = SchedConfig::default();
+        let lasgd = scheduler_for(Algo::Lasgd, &knobs).unwrap();
+        assert_eq!(lasgd.rendezvous_scope(), RendezvousScope::GroupLocal);
+        assert!(lasgd.has_communicator_layer());
+        assert_eq!(lasgd.merge(), MergeRule::GroupAverageDelayedGlobal { alpha: 0.5 });
+        // every synchronous scheduler keeps the global barrier scope
+        for name in ["csgd", "lsgd", "ma", "dasgd", "dcs3gd"] {
+            let s = scheduler_for(name.parse::<Algo>().unwrap(), &knobs).unwrap();
+            assert_eq!(s.rendezvous_scope(), RendezvousScope::Global, "{name}");
+        }
+        // the Global-scope variant used by the monotonicity property
+        let pinned = Lasgd { alpha: 0.5, scope: RendezvousScope::Global };
+        assert_eq!(pinned.rendezvous_scope(), RendezvousScope::Global);
+        assert_eq!(pinned.shape(), CommShape::LayeredSync);
+    }
+
+    #[test]
     fn merge_helpers_are_element_exact() {
         let mut w = vec![1.0_f32, 2.0, 3.0];
         elastic_blend(&mut w, &[0.0, 0.0, 1.0], 0.5);
         assert_eq!(w, vec![0.5, 1.0, 2.0]);
         let c = delay_compensate(&[1.0, 1.0], &[3.0, 5.0], &[1.0, 1.0], 0.5);
         assert_eq!(c, vec![2.0, 3.0]);
+        let g = group_delayed_correction(&[2.0, 4.0], &[3.0, 1.0], &[1.0, 3.0], 0.5);
+        assert_eq!(g, vec![3.0, 3.0]);
     }
 }

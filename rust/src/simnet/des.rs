@@ -22,13 +22,42 @@
 //! `tests` cross-validate: the DES makespan over `k` steps must match
 //! `k × step_time_*().total` to float precision — if someone edits one
 //! model and not the other, the suite fails.
+//!
+//! ## Time model: per-entity timelines and rendezvous
+//!
+//! Simulated time is not one global clock. Every entity — one worker
+//! lane per group (a group's workers advance in lockstep, so one lane
+//! carries their shared clock) and one communicator lane per group —
+//! owns a *virtual clock* that advances only when one of its events
+//! pops from the [`CalendarQueue`]. Synchronization between entities
+//! is never implicit: wherever the schedule requires timelines to
+//! meet (the global collective gathering every group's partial, the
+//! flat allreduce barrier, the regroup boundary at membership
+//! changes), the meeting is an explicit [`Rendezvous`] — participants
+//! arrive at their own virtual times, the rendezvous *fires* when the
+//! last one arrives, and the disagreement it erased is observable:
+//! [`Rendezvous::wait`] / [`Rendezvous::skew`] roll up into
+//! [`DesResult::rendezvous_wait`] / [`DesResult::clock_skew`].
+//!
+//! How wide the *blocking* rendezvous is comes from the scheduler
+//! ([`Scheduler::rendezvous_scope`]). Every registered scheduler
+//! except `lasgd` blocks on the all-participant rendezvous
+//! ([`RendezvousScope::Global`]), which prices exactly like the legacy
+//! synchronized-segment math (the equivalence suites pin `< 1e-9`).
+//! `lasgd` narrows the blocking scope to the group
+//! ([`RendezvousScope::GroupLocal`]): the broadcast returns the
+//! *group* average as soon as the group's own reduce and I/O land, the
+//! cross-group exchange still fires when the last partial arrives, but
+//! workers consume it one step late (bounded staleness 1) — so the
+//! exchange runs entirely off the barrier and only the stall it causes
+//! at the next update is ever exposed.
 
 use super::fabric::{Fabric, FabricConfig};
 use super::net::{self, NetAcc, NetConfig, Phase};
 use super::perturb::{drive_segments, PerturbConfig};
 use super::{cost, ClusterModel, StepBreakdown};
 use crate::metrics::{LinkStats, NetPhaseStats, RegroupEvent};
-use crate::sched::scheduler::{CommShape, Scheduler};
+use crate::sched::scheduler::{CommShape, RendezvousScope, Scheduler};
 use crate::topology::{Membership, Topology};
 use anyhow::Result;
 
@@ -184,6 +213,61 @@ impl CalendarQueue {
     }
 }
 
+/// An explicit synchronization point between per-entity timelines.
+///
+/// `expected` participants arrive at their own virtual times
+/// ([`Rendezvous::arrive`]); the rendezvous **fires** the moment the
+/// last one arrives — `arrive` returns `true` exactly then, which is
+/// the caller's cue to price and schedule whatever the barrier was
+/// guarding. Until then the early arrivals are *parked*:
+/// [`Rendezvous::wait`] totals the parked seconds and
+/// [`Rendezvous::skew`] reports the spread between the first and last
+/// arrival — the clock disagreement the barrier erased. Replacing the
+/// old anonymous arrival counters with this type changes no
+/// arithmetic: the fire time is the same last-arrival event time the
+/// counters keyed on (the bitwise equivalence suites pin it).
+#[derive(Debug, Clone)]
+pub struct Rendezvous {
+    expected: usize,
+    arrivals: Vec<f64>,
+}
+
+impl Rendezvous {
+    /// A rendezvous over `expected` participant timelines.
+    pub fn new(expected: usize) -> Self {
+        Self { expected, arrivals: Vec::with_capacity(expected) }
+    }
+
+    /// Record one participant's arrival at virtual time `t`; `true`
+    /// when this arrival completes the set (the rendezvous fires).
+    pub fn arrive(&mut self, t: f64) -> bool {
+        debug_assert!(self.arrivals.len() < self.expected, "over-subscribed rendezvous");
+        self.arrivals.push(t);
+        self.arrivals.len() == self.expected
+    }
+
+    /// The fire time so far: the latest arrival (`0.0` before any).
+    pub fn fire_at(&self) -> f64 {
+        self.arrivals.iter().copied().fold(0.0_f64, f64::max)
+    }
+
+    /// Total seconds participants spent parked: `Σ (fire − arrival)`.
+    pub fn wait(&self) -> f64 {
+        let fire = self.fire_at();
+        self.arrivals.iter().map(|a| fire - a).sum()
+    }
+
+    /// Spread between the first and last arrival (`0.0` until two
+    /// participants arrived) — the clock skew the barrier absorbs.
+    pub fn skew(&self) -> f64 {
+        if self.arrivals.len() < 2 {
+            return 0.0;
+        }
+        let first = self.arrivals.iter().copied().fold(f64::INFINITY, f64::min);
+        self.fire_at() - first
+    }
+}
+
 /// A labelled interval on some rank's timeline (for tracing/plots).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Span {
@@ -204,6 +288,15 @@ pub struct DesResult {
     /// Seconds of inter-group allreduce hidden under worker I/O,
     /// summed over steps (the paper's overlap win, measured).
     pub hidden_comm: f64,
+    /// Seconds participant timelines spent parked at the schedule's
+    /// *blocking* rendezvous, summed over steps and participants: the
+    /// global-barrier wait for the synchronous shapes, the
+    /// stale-exchange stall for `dasgd`/`dcs3gd`/`lasgd`. Zero when
+    /// every participant arrives together (homogeneous, unperturbed).
+    pub rendezvous_wait: f64,
+    /// Worst per-step clock skew observed at the global rendezvous —
+    /// the spread between the first and the last arriving timeline.
+    pub clock_skew: f64,
     /// Membership changes applied by the perturbed replays, in step
     /// order (empty for unperturbed runs). Identical — by shared
     /// construction through [`drive_segments`] — to the schedule the
@@ -301,7 +394,7 @@ pub fn run_lsgd_jittered(
     // per-(step, group) progress state
     let mut io_done_at = vec![vec![f64::NAN; g]; steps];
     let mut bcast_scheduled = vec![vec![false; g]; steps];
-    let mut groups_reduced = vec![0usize; steps];
+    let mut rdv: Vec<Rendezvous> = (0..steps).map(|_| Rendezvous::new(g)).collect();
     let mut global_done_at = vec![f64::NAN; steps];
     let mut makespan: f64 = 0.0;
 
@@ -326,8 +419,7 @@ pub fn run_lsgd_jittered(
                 // workers start loading the NEXT batch immediately
                 e.span(|| format!("g{group}/workers"), "io", now, now + m.t_io, step);
                 e.schedule(now + m.t_io, EventKind::IoDone { group, step });
-                groups_reduced[step] += 1;
-                if groups_reduced[step] == g {
+                if rdv[step].arrive(now) {
                     // all communicators hold their partial sum: global AR
                     e.span(|| "comms".into(), "global_allreduce", now, now + t_g, step);
                     e.schedule(now + t_g, EventKind::GlobalDone { step });
@@ -371,6 +463,8 @@ pub fn run_lsgd_jittered(
         makespan,
         spans: e.spans,
         hidden_comm: hidden,
+        rendezvous_wait: rdv.iter().map(Rendezvous::wait).sum(),
+        clock_skew: rdv.iter().map(Rendezvous::skew).fold(0.0_f64, f64::max),
         regroups: Vec::new(),
         net: Vec::new(),
         fabric: Vec::new(),
@@ -476,11 +570,15 @@ pub fn run_sched_perturbed(
     let mut spans = Vec::new();
     let mut netacc = NetAcc::default();
     let mut hidden = 0.0;
+    let mut rendezvous_wait = 0.0;
+    let mut clock_skew = 0.0_f64;
     let mut t = 0.0;
     let regroups = drive_segments(p, &mut memb, steps, |memb, range, _boundary| {
-        let (t2, h) = sched_segment(m, p, memb, range, t, &mut spans, &mut netacc, sched);
-        t = t2;
-        hidden += h;
+        let seg = sched_segment(m, p, memb, range, t, &mut spans, &mut netacc, sched);
+        t = seg.end;
+        hidden += seg.hidden;
+        rendezvous_wait += seg.rendezvous_wait;
+        clock_skew = clock_skew.max(seg.clock_skew);
         Ok(())
     })?;
     let fabric = netacc.fabric_report(t);
@@ -488,6 +586,8 @@ pub fn run_sched_perturbed(
         makespan: t,
         spans,
         hidden_comm: hidden,
+        rendezvous_wait,
+        clock_skew,
         regroups,
         net: netacc.into_report(),
         fabric,
@@ -663,8 +763,16 @@ impl SegCosts<'_> {
     }
 
     fn global(&self, acc: &mut NetAcc, step: usize) -> f64 {
+        // under a routed fabric the transient `--link-degrade` windows
+        // bind to the group's *physical* uplink/downlink (see
+        // [`degraded_fabric`]) instead of scaling the whole lane, so
+        // the per-lane factor excludes them there
         let worst = (0..self.g)
-            .map(|gi| self.wl[gi] * self.p.comm_scale(gi, step) * self.p.link_factor(gi, step))
+            .map(|gi| {
+                let win =
+                    if self.fabric.is_some() { 1.0 } else { self.p.link_factor(gi, step) };
+                self.wl[gi] * self.p.comm_scale(gi, step) * win
+            })
             .fold(1.0_f64, f64::max);
         let link = self.m.comm_inter.scaled(worst);
         if let Some(fab) = &self.fabric {
@@ -673,6 +781,8 @@ impl SegCosts<'_> {
             // is the exact fair-share pricing of the G lane streams;
             // with the packet model it is the jittered message replay
             // on shared links
+            let degraded = degraded_fabric(self.p, fab, self.g, step);
+            let fab_step = degraded.as_ref().unwrap_or(fab);
             net::allreduce_routed(
                 self.m.algo,
                 link,
@@ -682,7 +792,7 @@ impl SegCosts<'_> {
                 self.p.seed,
                 Phase::GlobalAllreduce,
                 step,
-                fab,
+                fab_step,
                 &net::RouteKind::CommGlobal,
                 acc,
             )
@@ -704,6 +814,34 @@ impl SegCosts<'_> {
     }
 }
 
+/// Clone of `fab` with every group's uplink/downlink capacity divided
+/// by its active `--link-degrade` window factor, or `None` when no
+/// window covers `step` (the common case — no clone, no cost).
+///
+/// Under a routed fabric a degradation window is a *physical* fault:
+/// it squeezes the spine-facing links the group's traffic crosses, so
+/// only the flows actually routed over them stretch and the fair-share
+/// allocator re-prices everyone else around the bottleneck. Under the
+/// flat (private-link) model the same window keeps its historical
+/// *positional* semantics — it scales the named communicator slot's
+/// whole lane (see [`super::perturb::PerturbConfig::link_factor`]).
+fn degraded_fabric(p: &PerturbConfig, fab: &Fabric, groups: usize, step: usize) -> Option<Fabric> {
+    let mut out: Option<Fabric> = None;
+    for gi in 0..groups {
+        let f = p.link_factor(gi, step);
+        if f != 1.0 {
+            let fb = out.get_or_insert_with(|| fab.clone());
+            let up = fb.uplink(gi);
+            let cap = fb.caps()[up] / f;
+            fb.set_link_cap(up, cap);
+            let down = fb.downlink(gi);
+            let cap = fb.caps()[down] / f;
+            fb.set_link_cap(down, cap);
+        }
+    }
+    out
+}
+
 /// Per-segment bookkeeping for the stale-synchronous shape, indexed
 /// `[step - base][group]`. The update of step `s` is gated on its own
 /// local reduce AND the broadcast of step `s−1` (never its own), and
@@ -718,6 +856,9 @@ struct StaleState {
     /// Worst update stall (wait on the previous step's broadcast)
     /// across groups, per step.
     worst_stall: Vec<f64>,
+    /// Stall seconds summed over groups, per step — the stale shape's
+    /// rendezvous-wait contribution.
+    stall_sum: Vec<f64>,
     /// Priced global-collective cost per step (NAN until priced).
     t_g: Vec<f64>,
 }
@@ -731,14 +872,26 @@ impl StaleState {
             update_scheduled: vec![vec![false; g]; nsteps],
             next_scheduled: vec![vec![false; g]; nsteps],
             worst_stall: vec![0.0; nsteps],
+            stall_sum: vec![0.0; nsteps],
             t_g: vec![f64::NAN; nsteps],
         }
     }
 
     /// Schedule the (stale) update of `step` once its local reduce is
-    /// done and the previous step's broadcast has landed (segment head:
-    /// cold start, the reduce alone gates it).
-    fn try_update(&mut self, e: &mut Engine, group: usize, step: usize, base: usize, t_up: f64) {
+    /// done and the broadcast of `prev_comm` — the nearest *earlier
+    /// communicating* step, which with `comm_interval > 1` can sit
+    /// several local-only steps back — has landed. `None` is the
+    /// segment cold start: the reduce alone gates it.
+    #[allow(clippy::too_many_arguments)]
+    fn try_update(
+        &mut self,
+        e: &mut Engine,
+        group: usize,
+        step: usize,
+        base: usize,
+        t_up: f64,
+        prev_comm: Option<usize>,
+    ) {
         let si = step - base;
         if self.update_scheduled[si][group] {
             return;
@@ -747,17 +900,19 @@ impl StaleState {
         if red.is_nan() {
             return;
         }
-        let start = if si == 0 {
-            red
-        } else {
-            let bc = self.bcast_done_at[si - 1][group];
-            if bc.is_nan() {
-                return;
+        let start = match prev_comm {
+            None => red,
+            Some(ps) => {
+                let bc = self.bcast_done_at[ps - base][group];
+                if bc.is_nan() {
+                    return;
+                }
+                red.max(bc)
             }
-            red.max(bc)
         };
         self.update_scheduled[si][group] = true;
         self.worst_stall[si] = self.worst_stall[si].max(start - red);
+        self.stall_sum[si] += start - red;
         e.span(|| format!("g{group}/workers"), "update", start, start + t_up, step);
         e.schedule(start + t_up, EventKind::UpdateDone { group, step });
     }
@@ -789,6 +944,89 @@ impl StaleState {
     }
 }
 
+/// Per-segment bookkeeping for the group-local rendezvous scope
+/// ([`RendezvousScope::GroupLocal`] — the `lasgd` schedule), indexed
+/// `[step - base][group]`. The broadcast of step `s` carries the
+/// *group* average and starts as soon as the group's own reduce and
+/// next-batch I/O land — never parked on the cross-group exchange.
+/// The exchange of step `s` still fires when the last group's partial
+/// arrives, but workers consume it one step late: the update of `s` is
+/// gated on the exchange of `s−1` (bounded one-step staleness), so the
+/// exchange prices entirely off the barrier except the stall it causes
+/// there.
+struct LocalScopeState {
+    bcast_done_at: Vec<Vec<f64>>,
+    update_scheduled: Vec<Vec<bool>>,
+    /// Worst per-step update stall (wait on the previous exchange).
+    worst_stall: Vec<f64>,
+    /// Stall seconds summed over groups, per step — the group-local
+    /// scope's rendezvous-wait contribution.
+    stall_sum: Vec<f64>,
+    /// Priced exchange cost per step (NAN until priced).
+    t_g: Vec<f64>,
+}
+
+impl LocalScopeState {
+    fn new(g: usize, nsteps: usize) -> Self {
+        Self {
+            bcast_done_at: vec![vec![f64::NAN; g]; nsteps],
+            update_scheduled: vec![vec![false; g]; nsteps],
+            worst_stall: vec![0.0; nsteps],
+            stall_sum: vec![0.0; nsteps],
+            t_g: vec![f64::NAN; nsteps],
+        }
+    }
+
+    /// Schedule the update of `step` once the group's own broadcast
+    /// has landed and the *previous* step's exchange is done (segment
+    /// head: cold start, the broadcast alone gates it).
+    fn try_update(
+        &mut self,
+        e: &mut Engine,
+        group: usize,
+        step: usize,
+        base: usize,
+        t_up: f64,
+        global_done_at: &[f64],
+    ) {
+        let si = step - base;
+        if self.update_scheduled[si][group] {
+            return;
+        }
+        let bc = self.bcast_done_at[si][group];
+        if bc.is_nan() {
+            return;
+        }
+        let start = if si == 0 {
+            bc
+        } else {
+            let gd = global_done_at[si - 1];
+            if gd.is_nan() {
+                return;
+            }
+            bc.max(gd)
+        };
+        self.update_scheduled[si][group] = true;
+        self.worst_stall[si] = self.worst_stall[si].max(start - bc);
+        self.stall_sum[si] += start - bc;
+        e.span(|| format!("g{group}/workers"), "update", start, start + t_up, step);
+        e.schedule(start + t_up, EventKind::UpdateDone { group, step });
+    }
+}
+
+/// What one membership-stable segment reports back to
+/// [`run_sched_perturbed`].
+struct SegOutcome {
+    /// Segment end time (the run's clock after the regroup barrier).
+    end: f64,
+    /// Seconds of global collective hidden under overlapping work.
+    hidden: f64,
+    /// Parked seconds at the blocking rendezvous (summed).
+    rendezvous_wait: f64,
+    /// Worst per-step arrival spread at the global rendezvous.
+    clock_skew: f64,
+}
+
 /// One membership-stable stretch of a perturbed layered run: the event
 /// loop of [`run_lsgd`], generalized to uneven groups, per-(group,
 /// step) compute/IO scales, communicator-class slowdowns, time-varying
@@ -808,13 +1046,14 @@ fn sched_segment(
     spans: &mut Vec<Span>,
     netacc: &mut NetAcc,
     sched: &dyn Scheduler,
-) -> (f64, f64) {
+) -> SegOutcome {
     let g = memb.num_groups();
     let nsteps = range.len();
     if nsteps == 0 {
-        return (t0, 0.0);
+        return SegOutcome { end: t0, hidden: 0.0, rendezvous_wait: 0.0, clock_skew: 0.0 };
     }
     let stale = sched.shape() == CommShape::LayeredStale;
+    let local_scope = !stale && sched.rendezvous_scope() == RendezvousScope::GroupLocal;
     let base = range.start;
     let sizes: Vec<usize> = (0..g).map(|gi| memb.group(gi).len()).collect();
     let seg_fabric = p.fabric.build(&sizes);
@@ -840,11 +1079,20 @@ fn sched_segment(
     let mut e = Engine::with_trace(p.trace);
     let mut io_done_at = vec![vec![f64::NAN; g]; nsteps];
     let mut bcast_scheduled = vec![vec![false; g]; nsteps];
-    let mut groups_reduced = vec![0usize; nsteps];
+    // one global rendezvous per step: every group's reduce arrival
+    let mut rdv: Vec<Rendezvous> = (0..nsteps).map(|_| Rendezvous::new(g)).collect();
     let mut global_done_at = vec![f64::NAN; nsteps];
     // stale-shape bookkeeping (empty for the synchronous shapes)
     let mut st =
         if stale { StaleState::new(g, nsteps) } else { StaleState::new(0, 0) };
+    // group-local-scope bookkeeping (empty for the global scope)
+    let mut la =
+        if local_scope { LocalScopeState::new(g, nsteps) } else { LocalScopeState::new(0, 0) };
+    // cadence-aware neighbours: with `comm_interval > 1` the stale
+    // pipeline's gates must look across the local-only gap to the
+    // nearest communicating step
+    let prev_comm = |step: usize| (base..step).rev().find(|&s| sched.communicates_at(s));
+    let next_comm = |step: usize| (step..range.end).find(|&s| sched.communicates_at(s));
     let mut makespan: f64 = t0;
     let mut hidden = 0.0;
 
@@ -876,13 +1124,14 @@ fn sched_segment(
                 e.span(|| format!("g{group}/workers"), "io", now, now + io, step);
                 e.schedule(now + io, EventKind::IoDone { group, step });
                 let si = step - base;
-                groups_reduced[si] += 1;
-                if groups_reduced[si] == g {
+                if rdv[si].arrive(now) {
                     let t_g = costs.global(netacc, step);
                     e.span(|| "comms".into(), "global_allreduce", now, now + t_g, step);
                     e.schedule(now + t_g, EventKind::GlobalDone { step });
                     if stale {
                         st.t_g[si] = t_g;
+                    } else if local_scope {
+                        la.t_g[si] = t_g;
                     } else {
                         // hidden share: the allreduce runs inside every
                         // group's IO window up to the shortest window
@@ -893,7 +1142,7 @@ fn sched_segment(
                 }
                 if stale {
                     st.reduce_done_at[si][group] = now;
-                    st.try_update(&mut e, group, step, base, m.t_update);
+                    st.try_update(&mut e, group, step, base, m.t_update, prev_comm(step));
                 }
             }
             EventKind::IoDone { group, step } => {
@@ -904,6 +1153,13 @@ fn sched_segment(
                         let comp = comp_of(group, step + 1);
                         st.try_next_compute(&mut e, group, step, base, &io_done_at, comp);
                     }
+                } else if local_scope {
+                    // group-local sync: the broadcast returns the
+                    // group's own average as soon as reduce + io land —
+                    // never parked on the cross-group exchange
+                    let bc = costs.bcast(netacc, group, step);
+                    e.span(|| format!("g{group}/workers"), "broadcast", now, now + bc, step);
+                    e.schedule(now + bc, EventKind::BroadcastDone { group, step });
                 } else {
                     try_broadcast_at(
                         &mut e,
@@ -930,6 +1186,15 @@ fn sched_segment(
                         e.span(|| format!("g{gi}/workers"), "broadcast", now, now + bc, step);
                         e.schedule(now + bc, EventKind::BroadcastDone { group: gi, step });
                     }
+                } else if local_scope {
+                    // the exchange of step s unblocks the updates of
+                    // step s+1 (bounded one-step staleness) — updates
+                    // parked on it retry here
+                    if step + 1 < range.end {
+                        for gi in 0..g {
+                            la.try_update(&mut e, gi, step + 1, base, m.t_update, &global_done_at);
+                        }
+                    }
                 } else {
                     for gi in 0..g {
                         try_broadcast_at(
@@ -950,9 +1215,15 @@ fn sched_segment(
                 if stale {
                     let si = step - base;
                     st.bcast_done_at[si][group] = now;
-                    if step + 1 < range.end {
-                        st.try_update(&mut e, group, step + 1, base, m.t_update);
+                    // the update this delivery gates sits at the next
+                    // *communicating* step — with cadence > 1 that can
+                    // be several local-only steps ahead
+                    if let Some(ns) = next_comm(step + 1) {
+                        st.try_update(&mut e, group, ns, base, m.t_update, Some(step));
                     }
+                } else if local_scope {
+                    la.bcast_done_at[step - base][group] = now;
+                    la.try_update(&mut e, group, step, base, m.t_update, &global_done_at);
                 } else {
                     e.span(|| format!("g{group}/workers"), "update", now, now + m.t_update, step);
                     e.schedule(now + m.t_update, EventKind::UpdateDone { group, step });
@@ -994,20 +1265,42 @@ fn sched_segment(
 
     if stale {
         // hidden share for the stale pipeline: each step's global
-        // collective runs under the NEXT step's compute; only the
-        // stall it caused there (the update waiting on the previous
-        // broadcast) is exposed
+        // collective runs under the following steps' compute; only the
+        // stall it caused at the next *communicating* step's update is
+        // exposed
         for si in 0..nsteps {
             if st.t_g[si].is_nan() {
                 continue;
             }
-            let stall = if si + 1 < nsteps { st.worst_stall[si + 1] } else { 0.0 };
+            let stall =
+                next_comm(base + si + 1).map(|s| st.worst_stall[s - base]).unwrap_or(0.0);
             hidden += (st.t_g[si] - stall).max(0.0);
         }
     }
+    if local_scope {
+        // hidden share for the group-local scope: each step's exchange
+        // runs under the next step's work; only the stall it caused at
+        // the next update is exposed
+        for si in 0..nsteps {
+            if la.t_g[si].is_nan() {
+                continue;
+            }
+            let stall = if si + 1 < nsteps { la.worst_stall[si + 1] } else { 0.0 };
+            hidden += (la.t_g[si] - stall).max(0.0);
+        }
+    }
+
+    let rendezvous_wait = if stale {
+        st.stall_sum.iter().sum()
+    } else if local_scope {
+        la.stall_sum.iter().sum()
+    } else {
+        rdv.iter().map(Rendezvous::wait).sum()
+    };
+    let clock_skew = rdv.iter().map(Rendezvous::skew).fold(0.0_f64, f64::max);
 
     spans.append(&mut e.spans);
-    (makespan, hidden)
+    SegOutcome { end: makespan, hidden, rendezvous_wait, clock_skew }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -1069,6 +1362,8 @@ fn run_flat_perturbed(
     let mut e = Engine::with_trace(p.trace);
     let mut netacc = NetAcc::default();
     let mut t = 0.0;
+    let mut rendezvous_wait = 0.0;
+    let mut clock_skew = 0.0_f64;
     let regroups = drive_segments(p, &mut memb, steps, |memb, range, _boundary| {
         let n = memb.num_workers();
         let groups = memb.num_groups();
@@ -1086,8 +1381,14 @@ fn run_flat_perturbed(
                 .alive()
                 .map(|w| p.compute_scale(w.0, step))
                 .fold(1.0_f64, f64::max);
+            // under a routed fabric the degradation windows bind to
+            // the group's physical uplink/downlink (degraded_fabric)
+            // instead of scaling the whole flat lane
             let worst_link = (0..groups)
-                .map(|gi| wl[gi] * p.link_factor(gi, step))
+                .map(|gi| {
+                    let win = if seg_fabric.is_some() { 1.0 } else { p.link_factor(gi, step) };
+                    wl[gi] * win
+                })
                 .fold(1.0_f64, f64::max);
             let io = m.t_io * slowest;
             let comp = m.t_compute * slowest;
@@ -1096,10 +1397,23 @@ fn run_flat_perturbed(
             e.span(|| "workers".into(), "compute", t, t + comp, step);
             t += comp;
             if sched.communicates_at(step) {
+                // the flat barrier as an explicit rendezvous: rank r
+                // would reach it (io + compute) · scale_r after the
+                // step start; the serial pricing charges the last
+                // arrival, the spread is the parked time
+                let mut rdv = Rendezvous::new(n);
+                let ready = m.t_io + m.t_compute;
+                for wkr in memb.alive() {
+                    rdv.arrive(ready * p.compute_scale(wkr.0, step));
+                }
+                rendezvous_wait += rdv.wait();
+                clock_skew = clock_skew.max(rdv.skew());
                 // link windows scale the fabric handed to the replay,
                 // so under the packet model they stretch every message
                 // of the step, not one aggregate number
                 let ar = if let Some(fab) = &seg_fabric {
+                    let degraded = degraded_fabric(p, fab, groups, step);
+                    let fab_step = degraded.as_ref().unwrap_or(fab);
                     net::allreduce_routed(
                         m.algo,
                         flat_link.scaled(worst_link),
@@ -1109,7 +1423,7 @@ fn run_flat_perturbed(
                         p.seed,
                         phase,
                         step,
-                        fab,
+                        fab_step,
                         &flat_kind,
                         &mut netacc,
                     )
@@ -1141,6 +1455,8 @@ fn run_flat_perturbed(
         makespan: t,
         spans: e.spans,
         hidden_comm: 0.0,
+        rendezvous_wait,
+        clock_skew,
         regroups,
         net: netacc.into_report(),
         fabric: fabric_report,
@@ -1167,10 +1483,18 @@ pub fn run_csgd_jittered(
     let ar = m.algo.cost(fabric, n, m.grad_bytes);
     let mut e = Engine::new();
     let mut t = 0.0;
+    let mut rendezvous_wait = 0.0;
+    let mut clock_skew = 0.0_f64;
     for step in 0..steps {
-        let slowest = (0..topo.groups)
-            .map(|gi| m.t_compute * (1.0 + jitter * jitter_u(gi, step)))
-            .fold(0.0_f64, f64::max);
+        // the flat barrier as an explicit rendezvous: one arrival per
+        // group lane, the serial pricing charges the last
+        let mut rdv = Rendezvous::new(topo.groups);
+        for gi in 0..topo.groups {
+            rdv.arrive(m.t_compute * (1.0 + jitter * jitter_u(gi, step)));
+        }
+        let slowest = rdv.fire_at();
+        rendezvous_wait += rdv.wait();
+        clock_skew = clock_skew.max(rdv.skew());
         e.span(|| "workers".into(), "io", t, t + m.t_io, step);
         t += m.t_io;
         e.span(|| "workers".into(), "compute", t, t + slowest, step);
@@ -1184,6 +1508,8 @@ pub fn run_csgd_jittered(
         makespan: t,
         spans: e.spans,
         hidden_comm: 0.0,
+        rendezvous_wait,
+        clock_skew,
         regroups: Vec::new(),
         net: Vec::new(),
         fabric: Vec::new(),
@@ -1592,6 +1918,160 @@ mod tests {
         assert_eq!(ga.delay_total, 0.0, "no jitter configured — contention only");
         // flat runs report nothing
         assert!(run_lsgd(&m, &topo, steps).fabric.is_empty());
+    }
+
+    #[test]
+    fn link_window_binds_to_fabric_links_under_2tier() {
+        // with --fabric 2tier a degradation window squeezes the named
+        // group's physical uplink/downlink; the fair-share allocator
+        // stretches exactly the flows routed over them. Both schedules
+        // cross those links, so both pay — and a longer window pays
+        // more. (The flat-fabric tests above pin the historical slot
+        // semantics unchanged.)
+        let m = ClusterModel::paper_k80();
+        let topo = Topology::new(64, 4).unwrap();
+        let steps = 6;
+        let mut clean = PerturbConfig::default();
+        clean.fabric = "2tier".parse().unwrap();
+        let base_l = run_lsgd_perturbed(&m, &topo, steps, &clean).unwrap().makespan;
+        let base_c = run_csgd_perturbed(&m, &topo, steps, &clean).unwrap().makespan;
+        let mut short = clean.clone();
+        short.parse_link_degrade("0@2..4x4").unwrap();
+        let hit_l = run_lsgd_perturbed(&m, &topo, steps, &short).unwrap().makespan;
+        let hit_c = run_csgd_perturbed(&m, &topo, steps, &short).unwrap().makespan;
+        assert!(hit_l > base_l, "a degraded uplink must slow the communicator exchange");
+        assert!(hit_c > base_c, "a degraded uplink must slow the flat ring's boundary stream");
+        let mut long = clean.clone();
+        long.parse_link_degrade("0@2..6x4").unwrap();
+        assert!(run_lsgd_perturbed(&m, &topo, steps, &long).unwrap().makespan > hit_l);
+        assert!(run_csgd_perturbed(&m, &topo, steps, &long).unwrap().makespan > hit_c);
+    }
+
+    // ----------------------------------------------------- rendezvous
+
+    #[test]
+    fn rendezvous_waits_and_skew_are_exact() {
+        let mut r = Rendezvous::new(3);
+        assert!(!r.arrive(2.0));
+        assert!(!r.arrive(5.0));
+        assert_eq!(r.skew(), 3.0);
+        assert!(r.arrive(4.0), "third arrival fires the rendezvous");
+        assert_eq!(r.fire_at(), 5.0);
+        assert_eq!(r.wait(), (5.0 - 2.0) + 0.0 + (5.0 - 4.0));
+        assert_eq!(r.skew(), 3.0);
+        // degenerate: a single-participant rendezvous never parks
+        let mut solo = Rendezvous::new(1);
+        assert!(solo.arrive(7.0));
+        assert_eq!(solo.wait(), 0.0);
+        assert_eq!(solo.skew(), 0.0);
+    }
+
+    #[test]
+    fn rendezvous_accounting_measures_the_barrier() {
+        let m = ClusterModel::paper_k80();
+        let topo = Topology::new(8, 4).unwrap();
+        // homogeneous: every timeline arrives together — nothing parks
+        let r = run_lsgd(&m, &topo, 4);
+        assert_eq!(r.rendezvous_wait, 0.0);
+        assert_eq!(r.clock_skew, 0.0);
+        // stragglers park the fast groups at the barrier
+        let mut p = PerturbConfig::default();
+        p.straggle_prob = 0.4;
+        p.straggle_factor = 2.0;
+        let r = run_lsgd_perturbed(&m, &topo, 6, &p).unwrap();
+        assert!(r.rendezvous_wait > 0.0, "fast groups must park at the global rendezvous");
+        assert!(r.clock_skew > 0.0, "stragglers must spread the arrivals");
+        // csgd's flat barrier reports through the same fields
+        let c = run_csgd_perturbed(&m, &topo, 6, &p).unwrap();
+        assert!(c.rendezvous_wait > 0.0 && c.clock_skew > 0.0);
+        // deterministic replay includes the new accounting
+        let r2 = run_lsgd_perturbed(&m, &topo, 6, &p).unwrap();
+        assert_eq!(r.rendezvous_wait, r2.rendezvous_wait);
+        assert_eq!(r.clock_skew, r2.clock_skew);
+    }
+
+    // ---------------------------------------------------------- lasgd
+
+    #[test]
+    fn lasgd_with_global_scope_prices_exactly_like_lsgd() {
+        // the monotonicity anchor: lasgd blocking on the
+        // all-participant rendezvous IS the lsgd schedule
+        use crate::sched::scheduler::Lasgd;
+        let m = ClusterModel::paper_k80();
+        for g in [2, 16, 64] {
+            let topo = Topology::new(g, 4).unwrap();
+            let anchor = Lasgd { alpha: 0.5, scope: RendezvousScope::Global };
+            let a = run_sched(&m, &topo, 6, &anchor).unwrap();
+            let b = run_lsgd(&m, &topo, 6);
+            assert!(
+                (a.makespan - b.makespan).abs() < 1e-9,
+                "G={g}: lasgd/global {} vs lsgd {}",
+                a.makespan,
+                b.makespan
+            );
+        }
+    }
+
+    #[test]
+    fn lasgd_narrowed_rendezvous_never_slows_the_run() {
+        use crate::sched::scheduler::Lasgd;
+        let m = ClusterModel::paper_k80();
+        let topo = Topology::new(16, 4).unwrap();
+        let steps = 6;
+        let local = Lasgd { alpha: 0.5, scope: RendezvousScope::GroupLocal };
+        let global = Lasgd { alpha: 0.5, scope: RendezvousScope::Global };
+        // unperturbed: narrowing the scope can only help or tie
+        let a = run_sched(&m, &topo, steps, &local).unwrap();
+        let b = run_sched(&m, &topo, steps, &global).unwrap();
+        assert!(a.makespan <= b.makespan + 1e-9);
+        // under stragglers the barrier is expensive and the win strict
+        let mut p = PerturbConfig::default();
+        p.straggle_prob = 0.3;
+        p.straggle_factor = 3.0;
+        let a = run_sched_perturbed(&m, &topo, steps, &p, &local).unwrap();
+        let b = run_sched_perturbed(&m, &topo, steps, &p, &global).unwrap();
+        assert!(
+            a.makespan < b.makespan,
+            "group-local {} must beat global {} under stragglers",
+            a.makespan,
+            b.makespan
+        );
+        // every step still fully traced off the barrier
+        for step in 0..steps {
+            for phase in ["compute", "reduce", "io", "broadcast", "update"] {
+                assert!(
+                    a.spans.iter().any(|s| s.step == step && s.phase == phase),
+                    "missing {phase} span for step {step}"
+                );
+            }
+        }
+        // the exchange still prices once per step
+        assert_eq!(
+            a.spans.iter().filter(|s| s.phase == "global_allreduce").count(),
+            steps,
+            "one cross-group exchange per step"
+        );
+    }
+
+    #[test]
+    fn lasgd_survives_failures_and_stays_deterministic() {
+        use crate::sched::scheduler::Lasgd;
+        let m = ClusterModel::paper_k80();
+        let topo = Topology::new(8, 4).unwrap();
+        let steps = 9;
+        let sched = Lasgd { alpha: 0.5, scope: RendezvousScope::GroupLocal };
+        let mut p = PerturbConfig::default();
+        p.straggle_prob = 0.2;
+        p.parse_failures("28@3,29@3,30@3,31@3").unwrap();
+        p.parse_rejoins("28@6,29@6,30@6,31@6").unwrap();
+        let a = run_sched_perturbed(&m, &topo, steps, &p, &sched).unwrap();
+        let b = run_sched_perturbed(&m, &topo, steps, &p, &sched).unwrap();
+        assert_eq!(a.makespan, b.makespan, "bitwise-reproducible per seed");
+        assert_eq!(a.spans, b.spans);
+        assert_eq!(a.regroups.len(), 2);
+        for step in 0..steps {
+            assert!(a.spans.iter().any(|s| s.step == step && s.phase == "update"));
+        }
     }
 
     #[test]

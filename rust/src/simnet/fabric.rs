@@ -222,6 +222,19 @@ impl Fabric {
         0
     }
 
+    /// Group `g`'s uplink (group switch → spine) link id. Public so
+    /// fault injection (`--link-degrade` under `--fabric 2tier`) can
+    /// squeeze the physical link a communicator's traffic rides on.
+    pub fn uplink(&self, g: usize) -> usize {
+        self.up(g)
+    }
+
+    /// Group `g`'s downlink (spine → group switch) link id — the
+    /// receive side of [`Fabric::uplink`].
+    pub fn downlink(&self, g: usize) -> usize {
+        self.down(g)
+    }
+
     fn up(&self, g: usize) -> usize {
         1 + 2 * g
     }

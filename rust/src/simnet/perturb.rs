@@ -117,8 +117,7 @@ impl std::str::FromStr for Rejoin {
 }
 
 /// A transient link-degradation window: group `group`'s inter-node
-/// fabric runs `factor`× slower (startup latency grows, bandwidth
-/// shrinks — [`super::cost::Link::scaled`]) for every step in `steps`.
+/// fabric runs `factor`× slower for every step in `steps`.
 ///
 /// `group` names a **communicator slot** (current-membership group
 /// index), not a set of worker ids: a degraded fabric is positional
@@ -130,6 +129,23 @@ impl std::str::FromStr for Rejoin {
 /// Validation bounds `group` against the launch topology — the
 /// per-segment group count is schedule-dependent and can't be checked
 /// statically.
+///
+/// *What* the window slows depends on the fabric model in force:
+///
+/// - **Flat fabric** (the default, private per-group lanes): the
+///   window keeps its historical slot semantics and scales the slot's
+///   whole inter-node lane — startup latency grows, bandwidth shrinks
+///   ([`super::cost::Link::scaled`], applied via
+///   [`PerturbConfig::link_factor`]).
+/// - **Routed fabric** (`--fabric 2tier`): the window binds to the
+///   slot's *physical* spine-facing links instead — the group's uplink
+///   and downlink capacities are divided by `factor` for the covered
+///   steps, and the max-min fair-share allocator re-prices every flow
+///   crossing them. Flows routed around the squeezed links are
+///   untouched, so the same window hurts less (or more) depending on
+///   who shares the bottleneck — exactly the locality a per-lane
+///   scalar cannot express. See `degraded_fabric` in
+///   [`super::des`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct LinkWindow {
     /// Communicator slot (membership group index) whose fabric

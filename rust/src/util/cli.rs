@@ -66,6 +66,14 @@ impl Args {
         }
     }
 
+    pub fn opt_usize(&self, key: &str) -> Result<Option<usize>> {
+        self.mark(key);
+        self.flags
+            .get(key)
+            .map(|v| v.parse().with_context(|| format!("--{key}: not an integer: {v}")))
+            .transpose()
+    }
+
     pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
         self.mark(key);
         match self.flags.get(key) {

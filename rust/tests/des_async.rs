@@ -1,0 +1,205 @@
+//! Event-core property suite (ISSUE 8): per-entity virtual-time
+//! timelines, rendezvous pricing, and the locally-asynchronous `lasgd`
+//! schedule.
+//!
+//! The de-synchronized DES core replaced the "loop over synchronized
+//! segments" time model with per-entity clocks joined by explicit
+//! rendezvous events (`simnet/des.rs`). These tests pin the refactor's
+//! two contracts:
+//!
+//! 1. **equivalence** — an all-participant ([`RendezvousScope::Global`])
+//!    rendezvous prices *exactly* like the legacy segment-synchronous
+//!    loop: the legacy closed-loop LSGD entry point and the generic
+//!    event core agree < 1e-9 over random topologies, and a
+//!    `Lasgd { scope: Global }` schedule is indistinguishable from
+//!    `Lsgd` under random perturbation seeds — for every registered
+//!    scheduler the replay stays bitwise-deterministic;
+//! 2. **monotonicity** — shrinking the rendezvous scope from `Global`
+//!    to `GroupLocal` can only *remove* waiting: per seed, the `lasgd`
+//!    makespan is monotone non-increasing in the barrier scope, and at
+//!    16×4 under the default straggler profile the per-step straggler
+//!    tax is *strictly* lower than synchronous `lsgd`'s (the
+//!    acceptance pin).
+
+use lsgd::config::{Algo, SchedConfig};
+use lsgd::sched::scheduler::{scheduler_for, Lasgd, Lsgd, RendezvousScope, REGISTRY};
+use lsgd::simnet::{des, ClusterModel, PerturbConfig};
+use lsgd::topology::Topology;
+use lsgd::util::prop::{self, GenExt};
+
+fn stragglers(seed: u64, prob: f64, factor: f64) -> PerturbConfig {
+    let mut p = PerturbConfig::default();
+    p.seed = seed;
+    p.straggle_prob = prob;
+    p.straggle_factor = factor;
+    p
+}
+
+// ------------------------------------------------- contract 1
+
+#[test]
+fn global_rendezvous_reproduces_legacy_segment_pricing() {
+    // random topologies: the event core's all-sync rendezvous and the
+    // legacy closed-loop LSGD pricing are the same arithmetic
+    let m = ClusterModel::paper_k80();
+    prop::run(12, |rng| {
+        let (g, w) = rng.topology_shape(8, 6);
+        let steps = rng.usize_in(2, 8);
+        let topo = Topology::new(g, w).unwrap();
+        let legacy = des::run_lsgd(&m, &topo, steps);
+        let core = des::run_sched(&m, &topo, steps, &Lsgd).unwrap();
+        assert!(
+            (legacy.makespan - core.makespan).abs() < 1e-9,
+            "{g}x{w} steps={steps}: event core {} vs legacy {}",
+            core.makespan,
+            legacy.makespan
+        );
+        assert!(
+            (legacy.hidden_comm - core.hidden_comm).abs() < 1e-9,
+            "{g}x{w}: overlap accounting diverged"
+        );
+    });
+}
+
+#[test]
+fn lasgd_with_global_scope_is_indistinguishable_from_lsgd_under_perturbation() {
+    // widening lasgd's rendezvous back to a full barrier recovers the
+    // synchronous schedule exactly, under random perturbation seeds —
+    // the anchor the monotonicity property is measured against
+    let m = ClusterModel::paper_k80();
+    prop::run(12, |rng| {
+        let (g, w) = rng.topology_shape(8, 6);
+        let steps = rng.usize_in(2, 8);
+        let topo = Topology::new(g, w).unwrap();
+        let p = stragglers(
+            0xA5_u64.wrapping_mul(rng.usize_in(1, 1 << 30) as u64),
+            rng.f32_in(0.0, 0.6) as f64,
+            1.0 + rng.f32_in(0.0, 3.0) as f64,
+        );
+        let pinned = Lasgd { alpha: 0.5, scope: RendezvousScope::Global };
+        let a = des::run_sched_perturbed(&m, &topo, steps, &p, &pinned).unwrap();
+        let b = des::run_sched_perturbed(&m, &topo, steps, &p, &Lsgd).unwrap();
+        assert!(
+            (a.makespan - b.makespan).abs() < 1e-9,
+            "{g}x{w} steps={steps}: global-scope lasgd {} vs lsgd {}",
+            a.makespan,
+            b.makespan
+        );
+        assert!((a.rendezvous_wait - b.rendezvous_wait).abs() < 1e-9, "{g}x{w}: wait accounting");
+        assert!((a.clock_skew - b.clock_skew).abs() < 1e-9, "{g}x{w}: skew accounting");
+    });
+}
+
+#[test]
+fn every_scheduler_replays_bitwise_deterministically_on_random_topologies() {
+    let m = ClusterModel::paper_k80();
+    prop::run(6, |rng| {
+        let (g, w) = rng.topology_shape(6, 4);
+        let steps = rng.usize_in(2, 6);
+        let topo = Topology::new(g, w).unwrap();
+        let p = stragglers(rng.usize_in(0, 1 << 30) as u64, 0.4, 2.5);
+        let sc = SchedConfig { comm_interval: Some(rng.usize_in(1, 3)), ..Default::default() };
+        for name in REGISTRY {
+            let sched = scheduler_for(name.parse::<Algo>().unwrap(), &sc).unwrap();
+            let a = des::run_sched_perturbed(&m, &topo, steps, &p, sched.as_ref()).unwrap();
+            let b = des::run_sched_perturbed(&m, &topo, steps, &p, sched.as_ref()).unwrap();
+            assert_eq!(
+                a.makespan.to_bits(),
+                b.makespan.to_bits(),
+                "{name} {g}x{w}: replay not bitwise"
+            );
+            assert_eq!(a.spans.len(), b.spans.len(), "{name} {g}x{w}");
+            for (x, y) in a.spans.iter().zip(&b.spans) {
+                assert_eq!(x.start.to_bits(), y.start.to_bits(), "{name} {g}x{w}");
+                assert_eq!(x.end.to_bits(), y.end.to_bits(), "{name} {g}x{w}");
+            }
+        }
+    });
+}
+
+// ------------------------------------------------- contract 2
+
+#[test]
+fn lasgd_makespan_is_monotone_nonincreasing_as_the_barrier_scope_shrinks() {
+    // per seed: releasing the global barrier (Global → GroupLocal) can
+    // only remove waiting from every timeline, never add it
+    let m = ClusterModel::paper_k80();
+    prop::run(12, |rng| {
+        let (g, w) = rng.topology_shape(8, 6);
+        let steps = rng.usize_in(2, 8);
+        let topo = Topology::new(g, w).unwrap();
+        let p = stragglers(
+            rng.usize_in(0, 1 << 30) as u64,
+            rng.f32_in(0.0, 0.7) as f64,
+            1.0 + rng.f32_in(0.0, 4.0) as f64,
+        );
+        let global = Lasgd { alpha: 0.5, scope: RendezvousScope::Global };
+        let local = Lasgd { alpha: 0.5, scope: RendezvousScope::GroupLocal };
+        let rg = des::run_sched_perturbed(&m, &topo, steps, &p, &global).unwrap();
+        let rl = des::run_sched_perturbed(&m, &topo, steps, &p, &local).unwrap();
+        assert!(
+            rl.makespan <= rg.makespan + 1e-9,
+            "{g}x{w} steps={steps}: narrowing the rendezvous slowed the run \
+             (local {} vs global {})",
+            rl.makespan,
+            rg.makespan
+        );
+    });
+}
+
+#[test]
+fn lasgd_straggler_tax_strictly_undercuts_lsgd_at_16x4() {
+    // the acceptance pin: under the default straggler injection the
+    // locally-asynchronous schedule pays a strictly lower per-step
+    // straggler tax than the synchronous barrier at 16 groups × 4
+    let m = ClusterModel::paper_k80();
+    let topo = Topology::new(16, 4).unwrap();
+    let steps = 6;
+    let p = stragglers(PerturbConfig::default().seed, 0.3, 3.0);
+    let sc = SchedConfig::default();
+    let lasgd = scheduler_for(Algo::Lasgd, &sc).unwrap();
+    let lsgd_s = scheduler_for(Algo::Lsgd, &sc).unwrap();
+    let tax = |sched: &dyn lsgd::sched::scheduler::Scheduler| -> f64 {
+        let base = des::run_sched(&m, &topo, steps, sched).unwrap();
+        let pert = des::run_sched_perturbed(&m, &topo, steps, &p, sched).unwrap();
+        des::per_step(&pert, steps) - des::per_step(&base, steps)
+    };
+    let tax_lasgd = tax(lasgd.as_ref());
+    let tax_lsgd = tax(lsgd_s.as_ref());
+    assert!(tax_lsgd > 0.0, "stragglers must cost the synchronous schedule something");
+    assert!(
+        tax_lasgd < tax_lsgd,
+        "lasgd tax {tax_lasgd} must strictly undercut lsgd tax {tax_lsgd}"
+    );
+    // and the asynchronous schedule still pays for its own group's
+    // stragglers — it is not a free lunch
+    assert!(tax_lasgd >= 0.0, "negative tax: lasgd beat its own unperturbed baseline");
+}
+
+#[test]
+fn lasgd_rendezvous_wait_vanishes_while_lsgd_pays_the_barrier() {
+    // with per-group compute heterogeneity the synchronous barrier
+    // accumulates rendezvous wait; the group-local scope reports the
+    // one-step-stale exchange stalls instead, which the same profile
+    // keeps at (or near) zero because the exchange hides under compute
+    let m = ClusterModel::paper_k80();
+    let topo = Topology::new(8, 4).unwrap();
+    let steps = 6;
+    let mut p = PerturbConfig::default();
+    p.hetero = 0.5;
+    let sc = SchedConfig::default();
+    let lsgd_r = des::run_sched_perturbed(&m, &topo, steps, &p, &Lsgd).unwrap();
+    let lasgd = scheduler_for(Algo::Lasgd, &sc).unwrap();
+    let lasgd_r = des::run_sched_perturbed(&m, &topo, steps, &p, lasgd.as_ref()).unwrap();
+    assert!(
+        lsgd_r.rendezvous_wait > 0.0,
+        "heterogeneous groups must park time at the global barrier"
+    );
+    assert!(
+        lasgd_r.rendezvous_wait <= lsgd_r.rendezvous_wait + 1e-9,
+        "group-local scope reported more waiting ({}) than the barrier ({})",
+        lasgd_r.rendezvous_wait,
+        lsgd_r.rendezvous_wait
+    );
+    assert!(lsgd_r.clock_skew > 0.0, "skew must be visible at the barrier");
+}

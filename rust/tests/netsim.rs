@@ -614,7 +614,7 @@ fn zero_jitter_packet_des_matches_closed_form_for_the_scheduler_family() {
     for g in [1usize, 2, 8, 64] {
         let topo = Topology::new(g, 4).unwrap();
         for name in ["ma", "dasgd", "dcs3gd"] {
-            let sc = SchedConfig { comm_interval: 2, ..Default::default() };
+            let sc = SchedConfig { comm_interval: Some(2), ..Default::default() };
             let sched = scheduler_for(name.parse::<Algo>().unwrap(), &sc).unwrap();
             let base = des::run_sched(&m, &topo, steps, sched.as_ref()).unwrap();
             let mut p = PerturbConfig::default();
@@ -645,7 +645,7 @@ fn ma_comm_time_falls_inversely_with_comm_interval() {
     let topo = Topology::new(16, 4).unwrap();
     let steps = 8;
     let run_k = |k: usize| {
-        let sc = SchedConfig { comm_interval: k, ..Default::default() };
+        let sc = SchedConfig { comm_interval: Some(k), ..Default::default() };
         let sched = scheduler_for(Algo::Ma, &sc).unwrap();
         des::run_sched(&m, &topo, steps, sched.as_ref()).unwrap()
     };
@@ -684,4 +684,57 @@ fn ma_comm_time_falls_inversely_with_comm_interval() {
         last_makespan < r1.makespan - 1e-9,
         "k=8 must be strictly cheaper than every-step averaging"
     );
+}
+
+#[test]
+fn layered_family_comm_time_falls_inversely_with_comm_interval() {
+    // --comm-interval beyond ma: wrapping lsgd/dasgd/dcs3gd in the
+    // interval adapter prices exactly steps/k global collectives whose
+    // total time is exactly 1/k of the every-step schedule, and the
+    // makespan never grows as the cadence widens
+    let m = ClusterModel::paper_k80();
+    let topo = Topology::new(16, 4).unwrap();
+    let steps = 8;
+    for algo in [Algo::Lsgd, Algo::Dasgd, Algo::Dcs3gd] {
+        let run_k = |k: usize| {
+            let sc = SchedConfig { comm_interval: Some(k), ..Default::default() };
+            let sched = scheduler_for(algo, &sc).unwrap();
+            des::run_sched(&m, &topo, steps, sched.as_ref()).unwrap()
+        };
+        let count = |r: &des::DesResult| {
+            r.spans.iter().filter(|s| s.phase == "global_allreduce").count()
+        };
+        let total = |r: &des::DesResult| -> f64 {
+            r.spans
+                .iter()
+                .filter(|s| s.phase == "global_allreduce")
+                .map(|s| s.end - s.start)
+                .sum()
+        };
+        let r1 = run_k(1);
+        assert_eq!(count(&r1), steps, "{algo:?} k=1 must price a collective every step");
+        let t1 = total(&r1);
+        assert!(t1 > 0.0, "{algo:?}");
+        let mut last_makespan = r1.makespan;
+        for k in [2usize, 4, 8] {
+            let r = run_k(k);
+            assert_eq!(count(&r), steps / k, "{algo:?} k={k}: wrong collective count");
+            let tk = total(&r);
+            let want = t1 / k as f64;
+            assert!(
+                (tk - want).abs() < 1e-9,
+                "{algo:?} k={k}: priced comm time {tk} != {want} (1/k of every-step)"
+            );
+            assert!(
+                r.makespan <= last_makespan + 1e-9,
+                "{algo:?} k={k}: makespan {} grew past the tighter cadence's {last_makespan}",
+                r.makespan
+            );
+            last_makespan = r.makespan;
+        }
+        assert!(
+            last_makespan < r1.makespan - 1e-9,
+            "{algo:?}: k=8 must be strictly cheaper than every-step sync"
+        );
+    }
 }

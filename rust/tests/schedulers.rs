@@ -56,9 +56,10 @@ fn cfg(name: &str, groups: usize, workers: usize, steps: usize) -> ExperimentCon
     c.steps = steps;
     c.data.train_samples = 512;
     c.data.val_samples = 64;
-    // a non-trivial cadence so `ma` actually skips wire steps (syncs
-    // land at odd steps); the knob is ignored by everyone else
-    c.sched = SchedConfig { comm_interval: 2, ..Default::default() };
+    // a non-trivial cadence so the interval machinery is exercised in
+    // every matrix cell: ma skips wire steps, lsgd/dasgd/dcs3gd
+    // accumulate gradient windows between syncs; csgd/lasgd ignore it
+    c.sched = SchedConfig { comm_interval: Some(2), ..Default::default() };
     c
 }
 
@@ -179,7 +180,7 @@ fn des_prices_every_scheduler_deterministically() {
     let topo = Topology::new(4, 4).unwrap();
     let steps = 5;
     for name in schedulers_under_test() {
-        let sc = SchedConfig { comm_interval: 2, ..Default::default() };
+        let sc = SchedConfig { comm_interval: Some(2), ..Default::default() };
         let sched = scheduler::scheduler_for(name.parse::<Algo>().unwrap(), &sc).unwrap();
         let base = des::run_sched(&m, &topo, steps, sched.as_ref()).unwrap();
         assert!(base.makespan > 0.0, "{name}: empty timeline");

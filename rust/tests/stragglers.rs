@@ -717,7 +717,7 @@ fn ma_comm_interval_sweep_is_bitwise_reproducible_on_the_engine() {
     let mut prev: Option<Vec<u64>> = None;
     for k in [1usize, 2, 3] {
         let mut c = cfg(2, 2, 6, Algo::Ma);
-        c.sched.comm_interval = k;
+        c.sched.comm_interval = Some(k);
         let mut t1 = Trainer::new(&e, c.clone(), false).unwrap();
         let a = t1.run_with(RunOptions::parallel()).unwrap();
         let mut t2 = Trainer::new(&e, c.clone(), false).unwrap();
