@@ -1,0 +1,67 @@
+//! Bench guard: multi-tenant fleet pricing must stay interactive.
+//!
+//! `des::run_fleet` is two layers — the solo DES per job, then the
+//! fluid contention replay whose every event re-solves max–min twice
+//! (all tenants, then owner-only) over the live flow set. An
+//! accidental O(events²) scan in the event loop, a per-event clone of
+//! the whole flow table, or a regression in the placement search shows
+//! up here. The `policy_sweep` row replays the README's reference
+//! fleet under all three placement policies (what the
+//! `fleet_policy_sweep` example runs); the `16rack` row scales the
+//! event loop to a fuller inventory. Ceilings live in
+//! `benches/baseline.json`, enforced by CI's `bench-smoke` job.
+//!
+//! Run: `cargo bench --bench fleet`
+
+use lsgd::config::FleetConfig;
+use lsgd::simnet::{des, ClusterModel, PerturbConfig, PlacementPolicy};
+use lsgd::util::bench::{enforce_baseline_from_env, smoke_mode, Harness};
+
+fn fleet(jobs: &str, racks: usize, rack_slots: usize) -> FleetConfig {
+    let mut f = FleetConfig::default();
+    f.jobs = FleetConfig::parse_jobs(jobs).unwrap();
+    f.racks = racks;
+    f.rack_slots = rack_slots;
+    f
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    let mut h = if smoke { Harness::quick() } else { Harness::default() };
+    println!("# fleet — multi-tenant shared-Clos pricing hot path");
+
+    // contention must be visible for the replay to do real work
+    let mut m = ClusterModel::paper_k80();
+    m.t_io = 1e-3;
+    let p = PerturbConfig::default();
+
+    // the reference fleet under every policy (the example's workload)
+    let reference = "lsgd:3x4:steps=4,lsgd:3x4:steps=4,lasgd:3x4:steps=4,csgd:3x4:steps=4";
+    let policies =
+        [PlacementPolicy::Pack, PlacementPolicy::Spread, PlacementPolicy::TopologyAware];
+    h.bench("fleet/policy_sweep/4jobs_4racks", || {
+        let mut acc = 0.0;
+        for policy in policies {
+            let mut f = fleet(reference, 4, 4);
+            f.placement = policy;
+            acc += des::run_fleet(&m, &f, &p).unwrap().fleet_makespan;
+        }
+        acc
+    });
+
+    // a fuller inventory: 8 staggered tenants on 16 racks, mixed
+    // schedulers, pack placement (the most fragmented, most flows)
+    let big = "lsgd:6x4:steps=6,csgd:4x4:steps=6,lasgd:6x4:steps=6,ma:4x4:steps=6,\
+               dasgd:6x4:steps=6,dcs3gd:4x4:steps=6,lsgd:6x4:steps=6,csgd:4x4:steps=6";
+    h.bench("fleet/run_fleet/8jobs_16racks", || {
+        let mut f = fleet(big, 16, 4);
+        f.stagger = 0.5;
+        des::run_fleet(&m, &f, &p).unwrap().fleet_makespan
+    });
+
+    println!("\n{}", h.csv());
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/BENCH_fleet.json", h.json()).unwrap();
+    println!("→ bench_results/BENCH_fleet.json");
+    enforce_baseline_from_env(&h.results);
+}

@@ -83,8 +83,9 @@ pub struct SchedConfig {
     /// Run the global collective every `comm_interval` steps
     /// (1 = every step). `None` keeps each scheduler's own default
     /// cadence: `ma` syncs every 4 steps, the layered family (`lsgd`/
-    /// `dasgd`/`dcs3gd`) every step; `csgd` and `lasgd` ignore the
-    /// knob (see [`crate::sched::scheduler::scheduler_for`]).
+    /// `dasgd`/`dcs3gd`) every step. `csgd` and `lasgd` sync every
+    /// step by definition, so a widened interval is a hard error for
+    /// them ([`validate_comm_interval`]) — never a silent clamp.
     pub comm_interval: Option<usize>,
     /// `ma`: elastic-averaging blend weight toward the global mean
     /// (1.0 = hard reset to the mean). `lasgd`: weight of the delayed
@@ -97,6 +98,197 @@ pub struct SchedConfig {
 impl Default for SchedConfig {
     fn default() -> Self {
         Self { comm_interval: None, alpha: 0.5, lambda: 0.5 }
+    }
+}
+
+/// Reject knob combinations a scheduler cannot honor. `csgd`'s flat
+/// allreduce runs every step by definition, and `lasgd`'s group-local
+/// sync every step *is* the algorithm (the cross-group exchange
+/// already runs off the barrier) — a widened `--comm-interval` has no
+/// meaning for either, so it is a hard error naming the scheduler
+/// instead of a silent clamp to 1. Spelling out the default
+/// (`comm_interval = 1`) stays accepted. Shared by every entry path:
+/// [`ExperimentConfig::validate`] (train/config), `scheduler_for`
+/// (library callers), and `lsgd simulate`.
+pub fn validate_comm_interval(algo: Algo, sched: &SchedConfig) -> Result<()> {
+    if let Some(k) = sched.comm_interval {
+        anyhow::ensure!(k >= 1, "sched.comm_interval must be >= 1");
+        if k > 1 {
+            match algo {
+                Algo::Csgd => anyhow::bail!(
+                    "csgd does not support comm_interval = {k}: the flat allreduce runs \
+                     every step by definition (drop the knob, or pick a layered \
+                     scheduler: lsgd|ma|dasgd|dcs3gd)"
+                ),
+                Algo::Lasgd => anyhow::bail!(
+                    "lasgd does not support comm_interval = {k}: group-local sync every \
+                     step is the algorithm and the cross-group exchange already runs \
+                     off the barrier (drop the knob, or pick a layered scheduler: \
+                     lsgd|ma|dasgd|dcs3gd)"
+                ),
+                _ => {}
+            }
+        }
+    }
+    Ok(())
+}
+
+/// One training job of a multi-tenant fleet ([`FleetConfig`]): which
+/// scheduler it runs, its shape, and when it shows up.
+///
+/// Parsed from the `--fleet` job-spec grammar:
+/// `algo:GxW[:steps=K][:arrive=T][:interval=K][:alpha=A][:lambda=L]`
+/// — e.g. `lsgd:3x4:steps=8:arrive=0.5`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub algo: Algo,
+    /// Groups the job's topology spans (`G` of `GxW`).
+    pub groups: usize,
+    /// Workers per group (`W` of `GxW`).
+    pub workers: usize,
+    pub steps: usize,
+    /// Requested arrival time in cluster seconds; the fleet's seeded
+    /// stagger ([`FleetConfig::stagger`]) adds on top.
+    pub arrival: f64,
+    pub sched: SchedConfig,
+}
+
+impl JobSpec {
+    /// Parse one job spec. Every field after `algo:GxW` is an optional
+    /// `key=value`; unknown keys are hard errors so a typo can't
+    /// silently drop a knob.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut parts = spec.split(':');
+        let algo: Algo = parts
+            .next()
+            .filter(|s| !s.is_empty())
+            .ok_or_else(|| anyhow::anyhow!("empty job spec"))?
+            .parse()?;
+        let shape = parts
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("job spec {spec:?} is missing its GxW shape"))?;
+        let (g, w) = shape
+            .split_once('x')
+            .ok_or_else(|| anyhow::anyhow!("bad shape {shape:?} in {spec:?} (want GxW)"))?;
+        let groups: usize =
+            g.parse().map_err(|_| anyhow::anyhow!("bad group count {g:?} in {spec:?}"))?;
+        let workers: usize =
+            w.parse().map_err(|_| anyhow::anyhow!("bad worker count {w:?} in {spec:?}"))?;
+        let mut job = JobSpec {
+            algo,
+            groups,
+            workers,
+            steps: 4,
+            arrival: 0.0,
+            sched: SchedConfig::default(),
+        };
+        for kv in parts {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("bad option {kv:?} in {spec:?} (want key=value)"))?;
+            let bad = |what: &str| anyhow::anyhow!("bad {what} {v:?} in {spec:?}");
+            match k {
+                "steps" => job.steps = v.parse().map_err(|_| bad("steps"))?,
+                "arrive" => job.arrival = v.parse().map_err(|_| bad("arrive"))?,
+                "interval" => {
+                    job.sched.comm_interval = Some(v.parse().map_err(|_| bad("interval"))?)
+                }
+                "alpha" => job.sched.alpha = v.parse().map_err(|_| bad("alpha"))?,
+                "lambda" => job.sched.lambda = v.parse().map_err(|_| bad("lambda"))?,
+                other => anyhow::bail!(
+                    "unknown job option {other:?} in {spec:?} \
+                     (steps|arrive|interval|alpha|lambda)"
+                ),
+            }
+        }
+        job.validate()?;
+        Ok(job)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.groups >= 1, "job needs at least one group");
+        anyhow::ensure!(self.workers >= 1, "job needs at least one worker per group");
+        anyhow::ensure!(self.steps >= 1, "job needs at least one step");
+        anyhow::ensure!(
+            self.arrival.is_finite() && self.arrival >= 0.0,
+            "job arrival must be finite and >= 0, got {}",
+            self.arrival
+        );
+        validate_comm_interval(self.algo, &self.sched)
+    }
+
+    /// Display label, e.g. `lsgd 3x4`.
+    pub fn label(&self) -> String {
+        format!("{} {}x{}", self.algo, self.groups, self.workers)
+    }
+}
+
+/// A multi-tenant fleet: several jobs sharing one two-tier Clos
+/// ([`crate::simnet::des::run_fleet`]), with a placement policy
+/// mapping each job's groups onto racks at arrival.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetConfig {
+    pub jobs: Vec<JobSpec>,
+    pub placement: crate::simnet::PlacementPolicy,
+    /// Racks of the shared fabric.
+    pub racks: usize,
+    /// Group-slots per rack.
+    pub rack_slots: usize,
+    /// Spine oversubscription of the shared fabric (`>= 1`; `1` =
+    /// non-blocking).
+    pub oversub: f64,
+    /// Seed of the arrival stagger (only randomness in a fleet run).
+    pub seed: u64,
+    /// Max seconds of seeded stagger added to each job's requested
+    /// arrival (`0` = arrivals exactly as specified).
+    pub stagger: f64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            jobs: Vec::new(),
+            placement: crate::simnet::PlacementPolicy::default(),
+            racks: 4,
+            rack_slots: 4,
+            oversub: 4.0,
+            seed: 0xF1EE7,
+            stagger: 0.0,
+        }
+    }
+}
+
+impl FleetConfig {
+    /// Parse a comma-separated list of [`JobSpec`]s.
+    pub fn parse_jobs(spec: &str) -> Result<Vec<JobSpec>> {
+        spec.split(',').map(|s| JobSpec::parse(s.trim())).collect()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(!self.jobs.is_empty(), "a fleet needs at least one job");
+        anyhow::ensure!(self.racks >= 1, "a fleet fabric needs at least one rack");
+        anyhow::ensure!(self.rack_slots >= 1, "racks need at least one group-slot");
+        anyhow::ensure!(
+            self.oversub.is_finite() && self.oversub >= 1.0,
+            "fleet oversub must be finite and >= 1, got {}",
+            self.oversub
+        );
+        anyhow::ensure!(
+            self.stagger.is_finite() && self.stagger >= 0.0,
+            "fleet stagger must be finite and >= 0, got {}",
+            self.stagger
+        );
+        for (j, job) in self.jobs.iter().enumerate() {
+            job.validate().map_err(|e| anyhow::anyhow!("fleet job {j}: {e}"))?;
+            anyhow::ensure!(
+                job.groups <= self.racks * self.rack_slots,
+                "fleet job {j} ({}) wants {} groups but the fabric holds {}",
+                job.label(),
+                job.groups,
+                self.racks * self.rack_slots
+            );
+        }
+        Ok(())
     }
 }
 
@@ -286,9 +478,7 @@ impl ExperimentConfig {
         );
         anyhow::ensure!(self.optim.base_global_batch > 0);
         anyhow::ensure!(self.data.train_samples > 0);
-        if let Some(k) = self.sched.comm_interval {
-            anyhow::ensure!(k >= 1, "sched.comm_interval must be >= 1");
-        }
+        validate_comm_interval(self.algo, &self.sched)?;
         anyhow::ensure!(
             (0.0..=1.0).contains(&self.sched.alpha),
             "sched.alpha out of range [0, 1]"
@@ -430,9 +620,92 @@ mod tests {
     }
 
     #[test]
+    fn comm_interval_rejected_for_every_step_schedulers() {
+        // csgd/lasgd sync every step by definition: a widened interval
+        // is a hard error naming the scheduler, not a silent clamp
+        for algo in ["csgd", "lasgd"] {
+            let err = ExperimentConfig::from_toml(&format!(
+                "algo = \"{algo}\"\n[sched]\ncomm_interval = 3\n"
+            ))
+            .unwrap_err();
+            assert!(err.to_string().contains(algo), "error must name {algo}: {err:#}");
+            // spelling out the default (k = 1) stays accepted
+            assert!(ExperimentConfig::from_toml(&format!(
+                "algo = \"{algo}\"\n[sched]\ncomm_interval = 1\n"
+            ))
+            .is_ok());
+        }
+        // the layered family still picks the knob up
+        assert!(ExperimentConfig::from_toml("algo = \"lsgd\"\n[sched]\ncomm_interval = 3\n").is_ok());
+    }
+
+    #[test]
     fn paper_global_batch_rule() {
         let mut c = ExperimentConfig::default();
         c.topology = Topology::paper_max();
         assert_eq!(c.global_batch(64), 16384); // the paper's 16k
+    }
+
+    #[test]
+    fn job_spec_grammar_round_trips() {
+        let j = JobSpec::parse("lsgd:3x4").unwrap();
+        assert_eq!((j.algo, j.groups, j.workers, j.steps, j.arrival), (Algo::Lsgd, 3, 4, 4, 0.0));
+
+        let j = JobSpec::parse("ma:2x8:steps=16:arrive=1.5:interval=4:alpha=0.25").unwrap();
+        assert_eq!(j.algo, Algo::Ma);
+        assert_eq!((j.groups, j.workers, j.steps), (2, 8, 16));
+        assert_eq!(j.arrival, 1.5);
+        assert_eq!(j.sched.comm_interval, Some(4));
+        assert_eq!(j.sched.alpha, 0.25);
+        assert_eq!(j.label(), "ma 2x8");
+
+        let jobs = FleetConfig::parse_jobs("lsgd:3x4:steps=6, csgd:2x2").unwrap();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[1].algo, Algo::Csgd);
+    }
+
+    #[test]
+    fn job_spec_grammar_rejects_garbage() {
+        for bad in [
+            "",
+            "lsgd",               // no shape
+            "lsgd:3",             // not GxW
+            "lsgd:3x4:steps",     // option without value
+            "lsgd:3x4:turbo=1",   // unknown key
+            "lsgd:0x4",           // zero groups
+            "lsgd:3x4:steps=0",   // zero steps
+            "lsgd:3x4:arrive=-1", // negative arrival
+            "warp:3x4",           // unknown scheduler
+            "csgd:3x4:interval=2", // every-step scheduler, widened cadence
+        ] {
+            assert!(JobSpec::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+        // the csgd/lasgd cadence rejection names the scheduler
+        let err = JobSpec::parse("lasgd:2x2:interval=3").unwrap_err().to_string();
+        assert!(err.contains("lasgd"), "{err}");
+    }
+
+    #[test]
+    fn fleet_config_validates_capacity() {
+        let mut f = FleetConfig {
+            jobs: FleetConfig::parse_jobs("lsgd:3x4,csgd:2x2").unwrap(),
+            ..FleetConfig::default()
+        };
+        f.validate().unwrap();
+        f.rack_slots = 1;
+        f.racks = 2;
+        let err = f.validate().unwrap_err().to_string();
+        assert!(err.contains("job 0"), "oversized job is named: {err}");
+        assert!(FleetConfig { jobs: Vec::new(), ..FleetConfig::default() }.validate().is_err());
+        assert!(
+            FleetConfig {
+                jobs: FleetConfig::parse_jobs("lsgd:1x1").unwrap(),
+                oversub: 0.5,
+                ..FleetConfig::default()
+            }
+            .validate()
+            .is_err(),
+            "oversub below 1 is rejected"
+        );
     }
 }

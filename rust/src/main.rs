@@ -19,7 +19,7 @@ use std::path::PathBuf;
 use anyhow::{Context, Result};
 
 use lsgd::audit;
-use lsgd::config::{Algo, ExperimentConfig, SchedConfig};
+use lsgd::config::{Algo, ExperimentConfig, FleetConfig, SchedConfig};
 use lsgd::metrics::{FigureSeries, ScalingRow};
 use lsgd::runtime::{host, Engine, Manifest};
 use lsgd::sched::{ExecMode, RunOptions, Trainer};
@@ -47,8 +47,9 @@ SUBCOMMANDS:
             scheduler-family knobs:
             --comm-interval K    global sync every K steps, accumulating
                                  gradients in between (ma default 4;
-                                 lsgd/dasgd/dcs3gd default 1; ignored
-                                 by csgd/lasgd)
+                                 lsgd/dasgd/dcs3gd default 1; K>1 is an
+                                 error for csgd/lasgd, which sync every
+                                 step by definition)
             --alpha A            ma: elastic blend weight; lasgd: delayed
                                  global correction weight (default 0.5)
             --lambda L           dcs3gd: delay compensation (default 0.5)
@@ -87,6 +88,14 @@ SUBCOMMANDS:
             [--net-model closed|packet] [--net-jitter J]
             [--net-reorder R] [--net-chunk C]
             [--fabric flat|2tier[:oversub]]
+            multi-tenant fleet (replaces the single-job flags):
+            --fleet J1,J2,..     one spec per job, grammar
+                                 algo:GxW[:steps=K][:arrive=T]
+                                 [:interval=K][:alpha=A][:lambda=L]
+            [--placement pack|spread|topology-aware] (group → rack)
+            [--racks R] [--rack-slots C]  shared-Clos inventory
+            [--oversub X]        spine oversubscription (default 4)
+            [--fleet-seed S] [--stagger SECS]  seeded arrival stagger
   config    dump | check [--file FILE]
   info      [--artifacts DIR]
 ";
@@ -464,8 +473,30 @@ fn run_figure(figure: &str, m: &ClusterModel) -> Result<FigureSeries> {
     Ok(series)
 }
 
+/// `lsgd simulate --fleet …`: several jobs on one shared Clos, per-job
+/// SLO report ([`des::run_fleet`]).
+fn cmd_fleet(a: &Args, spec: &str) -> Result<()> {
+    let mut fleet = FleetConfig { jobs: FleetConfig::parse_jobs(spec)?, ..FleetConfig::default() };
+    fleet.placement = a.parse_or("placement", fleet.placement)?;
+    fleet.racks = a.usize_or("racks", fleet.racks)?;
+    fleet.rack_slots = a.usize_or("rack-slots", fleet.rack_slots)?;
+    fleet.oversub = a.f64_or("oversub", fleet.oversub)?;
+    fleet.seed = a.u64_or("fleet-seed", fleet.seed)?;
+    fleet.stagger = a.f64_or("stagger", fleet.stagger)?;
+    let perturb = parse_perturb(a)?;
+    a.finish()?;
+
+    let m = ClusterModel::paper_k80();
+    let report = des::run_fleet(&m, &fleet, &perturb)?;
+    print!("{}", report.to_table());
+    Ok(())
+}
+
 fn cmd_simulate(rest: &[String]) -> Result<()> {
     let a = Args::parse(rest, &[])?;
+    if let Some(spec) = a.opt_str("fleet") {
+        return cmd_fleet(&a, &spec);
+    }
     let groups = a.usize_or("groups", 4)?;
     let workers = a.usize_or("workers", 4)?;
     let steps = a.usize_or("steps", 3)?;
@@ -476,6 +507,10 @@ fn cmd_simulate(rest: &[String]) -> Result<()> {
     }
     sc.alpha = a.f64_or("alpha", sc.alpha)?;
     sc.lambda = a.f64_or("lambda", sc.lambda)?;
+    // csgd/lasgd sync every step by definition: reject a widened
+    // interval here too — the legacy dispatch below never consults
+    // scheduler_for, so this path used to ignore the knob silently
+    lsgd::config::validate_comm_interval(algo, &sc)?;
     let perturb = parse_perturb(&a)?;
     a.finish()?;
 

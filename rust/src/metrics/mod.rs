@@ -328,6 +328,101 @@ impl TrainCurve {
     }
 }
 
+/// Per-job SLO accounting of one multi-tenant fleet replay
+/// ([`crate::simnet::des::run_fleet`]): what the job would have cost
+/// alone on its own fabric vs what it actually cost while sharing the
+/// Clos with the rest of the fleet.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct JobSlo {
+    /// Job index in the fleet spec (also the flow owner id).
+    pub job: usize,
+    /// Human label, e.g. `lsgd 3x4`.
+    pub label: String,
+    /// Scheduler name from the registry.
+    pub algo: String,
+    /// Actual arrival time (requested arrival plus seeded stagger).
+    pub arrival: f64,
+    /// Rack index per group, in ring order.
+    pub racks: Vec<usize>,
+    /// Distinct racks the job landed on.
+    pub rack_count: usize,
+    /// Ring hops that cross the spine under this placement.
+    pub spine_crossings: usize,
+    /// Makespan of the job priced solo on a private fabric.
+    pub solo_makespan: f64,
+    /// Completion minus arrival in the shared replay.
+    pub shared_makespan: f64,
+    /// `shared_makespan / solo_makespan` — the fleet's SLO headline.
+    /// Exactly 1 when nobody contended with the job.
+    pub stretch: f64,
+    /// `shared_makespan - solo_makespan` (seconds lost to neighbors).
+    pub contention_tax: f64,
+    /// NIC-unit-seconds of data the job moved across the shared spine.
+    pub spine_busy: f64,
+    /// This job's fraction of all spine traffic (`0` when the fleet
+    /// never touched the spine).
+    pub spine_share: f64,
+}
+
+/// The fleet-wide view [`crate::simnet::des::run_fleet`] returns: one
+/// [`JobSlo`] row per job plus the shared-fabric aggregates.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FleetReport {
+    /// Placement policy the fleet ran under (display form).
+    pub placement: String,
+    pub jobs: Vec<JobSlo>,
+    /// Time the last job finished (fleet clock, arrivals included).
+    pub fleet_makespan: f64,
+    /// Total NIC-unit-seconds carried by the shared spine.
+    pub spine_busy_total: f64,
+}
+
+impl FleetReport {
+    /// Mean stretch across jobs selected by `pred` (`NaN` when none
+    /// match, so a filter typo can't silently pass as "no stretch").
+    pub fn mean_stretch_of(&self, pred: impl Fn(&JobSlo) -> bool) -> f64 {
+        let sel: Vec<f64> = self.jobs.iter().filter(|j| pred(j)).map(|j| j.stretch).collect();
+        sel.iter().sum::<f64>() / sel.len() as f64
+    }
+
+    /// Mean stretch across the whole fleet.
+    pub fn mean_stretch(&self) -> f64 {
+        self.mean_stretch_of(|_| true)
+    }
+
+    /// Render the per-job SLO report as an aligned text table.
+    pub fn to_table(&self) -> String {
+        let mut s = format!(
+            "# fleet SLO report (placement={}, makespan={:.4}s, spine={:.4} NIC-s)\n",
+            self.placement, self.fleet_makespan, self.spine_busy_total
+        );
+        s.push_str(&format!(
+            "{:>4} {:>12} {:>9} {:>6} {:>7} ",
+            "job", "spec", "arrive_s", "racks", "x-spine"
+        ));
+        s.push_str(&format!(
+            "{:>10} {:>10} {:>8} {:>9} {:>11}\n",
+            "solo_s", "shared_s", "stretch", "tax_s", "spine_share"
+        ));
+        for j in &self.jobs {
+            s.push_str(&format!(
+                "{:>4} {:>12} {:>9.3} {:>6} {:>7} {:>10.4} {:>10.4} {:>8.4} {:>9.4} {:>11.3}\n",
+                j.job,
+                j.label,
+                j.arrival,
+                j.rack_count,
+                j.spine_crossings,
+                j.solo_makespan,
+                j.shared_makespan,
+                j.stretch,
+                j.contention_tax,
+                j.spine_share
+            ));
+        }
+        s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -420,6 +515,38 @@ mod tests {
         let csv = f.to_csv();
         assert_eq!(csv.lines().count(), 2);
         assert!(csv.lines().nth(1).unwrap().starts_with("4,1,lsgd"));
+    }
+
+    #[test]
+    fn fleet_report_table_and_means() {
+        let job = |idx: usize, algo: &str, stretch: f64| JobSlo {
+            job: idx,
+            label: format!("{algo} 3x4"),
+            algo: algo.into(),
+            arrival: 0.0,
+            racks: vec![0, 0, 1],
+            rack_count: 2,
+            spine_crossings: 2,
+            solo_makespan: 10.0,
+            shared_makespan: 10.0 * stretch,
+            stretch,
+            contention_tax: 10.0 * (stretch - 1.0),
+            spine_busy: 1.0,
+            spine_share: 0.5,
+        };
+        let r = FleetReport {
+            placement: "pack".into(),
+            jobs: vec![job(0, "lsgd", 1.5), job(1, "csgd", 2.5)],
+            fleet_makespan: 25.0,
+            spine_busy_total: 2.0,
+        };
+        assert!((r.mean_stretch() - 2.0).abs() < 1e-12);
+        assert!((r.mean_stretch_of(|j| j.algo != "csgd") - 1.5).abs() < 1e-12);
+        assert!(r.mean_stretch_of(|_| false).is_nan(), "empty selection is loud");
+        let table = r.to_table();
+        assert!(table.contains("placement=pack"));
+        assert!(table.contains("lsgd 3x4"));
+        assert!(table.contains("stretch"));
     }
 
     #[test]

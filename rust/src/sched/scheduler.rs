@@ -424,11 +424,11 @@ pub const REGISTRY: &[&str] = &["csgd", "lsgd", "ma", "dasgd", "dcs3gd", "lasgd"
 /// wraps the layered schedulers (lsgd, dasgd, dcs3gd) in [`Every`] so
 /// the communicator ring syncs every `k` steps. `csgd` (flat,
 /// every-step by definition) and `lasgd` (group-local sync every step
-/// is the algorithm) ignore the knob.
+/// is the algorithm) **reject** `k > 1` with a hard error naming the
+/// scheduler ([`crate::config::validate_comm_interval`]) — never a
+/// silent clamp.
 pub fn scheduler_for(algo: Algo, knobs: &SchedConfig) -> Result<Box<dyn Scheduler>> {
-    if let Some(k) = knobs.comm_interval {
-        anyhow::ensure!(k >= 1, "sched.comm_interval must be >= 1");
-    }
+    crate::config::validate_comm_interval(algo, knobs)?;
     let layered_k = knobs.comm_interval.unwrap_or(1);
     Ok(match algo {
         Algo::Csgd => Box::new(Csgd),
@@ -554,14 +554,21 @@ mod tests {
         for algo in [Algo::Lsgd, Algo::Csgd, Algo::Dasgd, Algo::Dcs3gd, Algo::Lasgd] {
             assert_eq!(scheduler_for(algo, &none).unwrap().comm_interval(), 1, "{algo:?}");
         }
-        // Some(k) → the layered schedulers pick it up, csgd/lasgd stay
-        // every-step by construction
+        // Some(k) → the layered schedulers pick it up; csgd/lasgd are
+        // every-step by definition, so a widened interval is a hard
+        // error naming the scheduler (not the old silent clamp to 1)
         let k3 = SchedConfig { comm_interval: Some(3), ..Default::default() };
         for algo in [Algo::Lsgd, Algo::Ma, Algo::Dasgd, Algo::Dcs3gd] {
             assert_eq!(scheduler_for(algo, &k3).unwrap().comm_interval(), 3, "{algo:?}");
         }
-        assert_eq!(scheduler_for(Algo::Csgd, &k3).unwrap().comm_interval(), 1);
-        assert_eq!(scheduler_for(Algo::Lasgd, &k3).unwrap().comm_interval(), 1);
+        let csgd_err = scheduler_for(Algo::Csgd, &k3).unwrap_err().to_string();
+        assert!(csgd_err.contains("csgd"), "error must name the scheduler: {csgd_err}");
+        let lasgd_err = scheduler_for(Algo::Lasgd, &k3).unwrap_err().to_string();
+        assert!(lasgd_err.contains("lasgd"), "error must name the scheduler: {lasgd_err}");
+        // spelling out the default (k = 1) stays accepted for both
+        let k1 = SchedConfig { comm_interval: Some(1), ..Default::default() };
+        assert_eq!(scheduler_for(Algo::Csgd, &k1).unwrap().comm_interval(), 1);
+        assert_eq!(scheduler_for(Algo::Lasgd, &k1).unwrap().comm_interval(), 1);
         // Some(0) is rejected for every algorithm
         let zero = SchedConfig { comm_interval: Some(0), ..Default::default() };
         assert!(scheduler_for(Algo::Lsgd, &zero).is_err());

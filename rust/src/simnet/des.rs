@@ -52,9 +52,11 @@
 //! exchange runs entirely off the barrier and only the stall it causes
 //! at the next update is ever exposed.
 
-use super::fabric::{Fabric, FabricConfig};
+use super::fabric::{
+    max_min_rates, spine_crossings, Fabric, FabricConfig, RackInventory,
+};
 use super::net::{self, NetAcc, NetConfig, Phase};
-use super::perturb::{drive_segments, PerturbConfig};
+use super::perturb::{domain, drive_segments, mix, unit, PerturbConfig};
 use super::{cost, ClusterModel, StepBreakdown};
 use crate::metrics::{LinkStats, NetPhaseStats, RegroupEvent};
 use crate::sched::scheduler::{CommShape, RendezvousScope, Scheduler};
@@ -200,9 +202,20 @@ impl CalendarQueue {
             hi = hi.max(ev.at);
         }
         // width: mean inter-event gap, floored so day indices stay
-        // far inside u64 range even for pathologically tight clusters
+        // far inside u64 range even for pathologically tight clusters.
+        // A degenerate distribution — a single pending event, or every
+        // event at one timestamp — has span 0 and used to inherit the
+        // microscopic `hi * 1e-12` floor, leaving the cursor ~1e12
+        // "days" of calendar to cross to any later event. Any positive
+        // width pops in the same (at, seq) order (the degenerate-queue
+        // property tests pin it), so pick a macroscopic one instead:
+        // the cluster lands on one day and later events stay nearby.
         let span = (hi - lo).max(0.0);
-        self.width = (span / all.len().max(1) as f64).max(hi * 1e-12).max(1e-12);
+        self.width = if span > 0.0 {
+            (span / all.len() as f64).max(hi * 1e-12).max(1e-12)
+        } else {
+            (hi.abs() * 1e-3).max(1.0)
+        };
         self.buckets = vec![Vec::new(); nb];
         self.cur_day = if all.is_empty() { 0 } else { self.day(lo) };
         let nbu = nb as u64;
@@ -568,7 +581,7 @@ pub fn run_sched_perturbed(
     }
     let mut memb = Membership::full(topo);
     let mut spans = Vec::new();
-    let mut netacc = NetAcc::default();
+    let mut netacc = NetAcc::with_owner(p.flow_owner);
     let mut hidden = 0.0;
     let mut rendezvous_wait = 0.0;
     let mut clock_skew = 0.0_f64;
@@ -1360,7 +1373,7 @@ fn run_flat_perturbed(
     let phase = sched.net_phase();
     let mut memb = Membership::full(topo);
     let mut e = Engine::with_trace(p.trace);
-    let mut netacc = NetAcc::default();
+    let mut netacc = NetAcc::with_owner(p.flow_owner);
     let mut t = 0.0;
     let mut rendezvous_wait = 0.0;
     let mut clock_skew = 0.0_f64;
@@ -1531,6 +1544,408 @@ pub fn validate_against_closed_form(
     let des_l = per_step(&run_lsgd(m, topo, steps), steps);
     let des_c = per_step(&run_csgd(m, topo, steps), steps);
     (des_l, des_c, super::step_time_lsgd(m, topo), super::step_time_csgd(m, topo))
+}
+
+// ---------------------------------------------------------------------------
+// Multi-tenant fleet: several jobs sharing one Clos
+// ---------------------------------------------------------------------------
+
+/// One global collective of a job, extracted from its solo trace: when
+/// it ran, how long it took alone, and the solo time at which the rest
+/// of the schedule starts *waiting* for its result (the gate).
+#[derive(Debug, Clone, Copy)]
+struct FleetColl {
+    step: usize,
+    /// Solo start time of the collective.
+    start: f64,
+    /// Solo duration (private-fabric pricing).
+    dur: f64,
+    /// Solo time at which a consumer blocks on the result: the same
+    /// step's broadcast for the synchronous layered shapes, the same
+    /// step's update for the flat barrier, the *next* communicating
+    /// step's update for the stale / group-local pipelines. `∞` = no
+    /// consumer inside the run (the slack past the last step).
+    gate: f64,
+}
+
+/// Pull a job's global collectives + consumer gates out of its solo
+/// span trace. Span phases are the DES's own labels, so this stays in
+/// lockstep with the emitters above by construction of the tests in
+/// `rust/tests/fleet.rs`.
+fn extract_colls(sched: &dyn Scheduler, spans: &[Span]) -> Vec<FleetColl> {
+    use std::collections::BTreeMap;
+    let comm_phase =
+        if sched.shape() == CommShape::Flat { "allreduce" } else { "global_allreduce" };
+    let mut window: BTreeMap<usize, (f64, f64)> = BTreeMap::new();
+    let mut bcast_min: BTreeMap<usize, f64> = BTreeMap::new();
+    let mut update_min: BTreeMap<usize, f64> = BTreeMap::new();
+    for s in spans {
+        if s.phase == comm_phase {
+            let e = window.entry(s.step).or_insert((s.start, s.end));
+            e.0 = e.0.min(s.start);
+            e.1 = e.1.max(s.end);
+        } else if s.phase == "broadcast" {
+            let e = bcast_min.entry(s.step).or_insert(f64::INFINITY);
+            *e = e.min(s.start);
+        } else if s.phase == "update" {
+            let e = update_min.entry(s.step).or_insert(f64::INFINITY);
+            *e = e.min(s.start);
+        }
+    }
+    let steps: Vec<usize> = window.keys().copied().collect();
+    steps
+        .iter()
+        .enumerate()
+        .map(|(i, &st)| {
+            let (start, end) = window[&st];
+            let gate = match (sched.shape(), sched.rendezvous_scope()) {
+                // flat barrier: the update follows the allreduce
+                (CommShape::Flat, _) => update_min.get(&st).copied().unwrap_or(f64::INFINITY),
+                // synchronous layered: the same step's broadcast waits
+                (CommShape::LayeredSync, RendezvousScope::Global) => {
+                    bcast_min.get(&st).copied().unwrap_or(f64::INFINITY)
+                }
+                // stale / group-local: the delivery gates the update at
+                // the next communicating step (= the next collective)
+                _ => steps
+                    .get(i + 1)
+                    .and_then(|ns| update_min.get(ns))
+                    .copied()
+                    .unwrap_or(f64::INFINITY),
+            };
+            FleetColl { step: st, start, dur: end - start, gate }
+        })
+        .collect()
+}
+
+/// Play a whole fleet ([`crate::config::FleetConfig`]) on one shared
+/// two-tier Clos and report per-job SLOs.
+///
+/// Two-layer pricing:
+///
+/// 1. **Solo layer** — every job is priced alone via
+///    [`run_sched_perturbed`] on its own private fabric (exactly the
+///    single-tenant entry point, same perturbations, trace forced on),
+///    yielding its solo makespan and its collectives + gates
+///    ([`extract_colls`]).
+/// 2. **Contention layer** — a fluid replay on the *rack-level* shared
+///    fabric (`racks` groups of `rack_slots` lanes,
+///    [`Fabric::two_tier`] with the fleet's oversub). Each collective
+///    becomes its placement's spine-crossing ring hops, tagged with
+///    the owning job, and all live flows compete in the existing
+///    max–min allocator. A flow's progress is scaled by
+///    `r_shared / r_alone` — the rate the allocator grants it over the
+///    rate it would get with only its own job present — so with one
+///    tenant the two solves coincide and the fleet prices *exactly*
+///    like the solo layer (the reduction the equivalence tests pin).
+///    When a collective finishes past its gate, the job's remaining
+///    schedule shifts rigidly by the excess (a conservative
+///    exposure model: contention can't be re-hidden).
+///
+/// Deterministic end to end: the only randomness is the seeded arrival
+/// stagger ([`domain::FLEET`], drawn from the fleet's own seed).
+/// Placement happens at arrival ([`RackInventory::place`]); a job that
+/// doesn't fit is a hard admission error.
+pub fn run_fleet(
+    m: &ClusterModel,
+    fleet: &crate::config::FleetConfig,
+    p: &PerturbConfig,
+) -> Result<crate::metrics::FleetReport> {
+    use crate::metrics::{FleetReport, JobSlo};
+    fleet.validate()?;
+    let njobs = fleet.jobs.len();
+
+    // ---- layer 1: solo pricing on private fabrics --------------------
+    struct Solo {
+        colls: Vec<FleetColl>,
+        makespan: f64,
+        arrival: f64,
+        groups: usize,
+        label: String,
+        algo: String,
+    }
+    let mut solo: Vec<Solo> = Vec::with_capacity(njobs);
+    for (j, job) in fleet.jobs.iter().enumerate() {
+        let topo = Topology::new(job.groups, job.workers)?;
+        let sched = crate::sched::scheduler::scheduler_for(job.algo, &job.sched)?;
+        let mut pj = p.clone();
+        pj.trace = true; // gates come from the spans
+        pj.flow_owner = j;
+        let res = run_sched_perturbed(m, &topo, job.steps, &pj, sched.as_ref())?;
+        let stagger = fleet.stagger * unit(mix(fleet.seed, domain::FLEET, j as u64, 0));
+        solo.push(Solo {
+            colls: extract_colls(sched.as_ref(), &res.spans),
+            makespan: res.makespan,
+            arrival: job.arrival + stagger,
+            groups: job.groups,
+            label: job.label(),
+            algo: job.algo.to_string(),
+        });
+    }
+
+    // ---- layer 2: fluid contention replay on the rack fabric ---------
+    let shared = Fabric::two_tier(&vec![fleet.rack_slots; fleet.racks], fleet.oversub);
+    let caps = shared.caps().to_vec();
+    let spine = shared.spine();
+    let mut inv = RackInventory::new(fleet.racks, fleet.rack_slots);
+
+    #[derive(Debug)]
+    struct JobState {
+        arrived: bool,
+        done: bool,
+        /// Accumulated exposure delay: every not-yet-activated part of
+        /// the schedule is shifted rigidly by this much.
+        delay: f64,
+        next_coll: usize,
+        racks: Vec<usize>,
+        crossings: usize,
+        live_colls: usize,
+        last_coll_end: f64,
+        end: f64,
+        spine_busy: f64,
+    }
+    struct ActiveFlow {
+        job: usize,
+        coll: usize,
+        route: Vec<usize>,
+        remaining: f64,
+        dur: f64,
+    }
+
+    let mut js: Vec<JobState> = (0..njobs)
+        .map(|_| JobState {
+            arrived: false,
+            done: false,
+            delay: 0.0,
+            next_coll: 0,
+            racks: Vec::new(),
+            crossings: 0,
+            live_colls: 0,
+            last_coll_end: 0.0,
+            end: 0.0,
+            spine_busy: 0.0,
+        })
+        .collect();
+    let mut flows: Vec<ActiveFlow> = Vec::new();
+    // outstanding flow count per (job, collective)
+    let mut left: Vec<Vec<usize>> = solo.iter().map(|s| vec![0usize; s.colls.len()]).collect();
+    // flowless collectives complete at a fixed time
+    let mut pending: Vec<(f64, usize, usize)> = Vec::new();
+    let mut departures: Vec<(f64, usize)> = Vec::new();
+    let mut now = 0.0_f64;
+    let eps = |dur: f64| (dur.abs() * 1e-12).max(1e-300);
+
+    // event kinds, in same-instant priority order: departures free
+    // slots first, completions apply their gate delay before any
+    // activation reads it, arrivals place before their own activations
+    const K_DEPART: u8 = 0;
+    const K_COMPLETE: u8 = 1;
+    const K_ARRIVE: u8 = 2;
+    const K_ACTIVATE: u8 = 3;
+
+    let total_colls: usize = solo.iter().map(|s| s.colls.len()).sum();
+    let max_groups = fleet.jobs.iter().map(|j| j.groups).max().unwrap_or(1);
+    let budget = 64 + 16 * njobs + 8 * total_colls * (max_groups + 1);
+    let mut iters = 0usize;
+
+    let depart_time =
+        |st: &JobState, s: &Solo| (s.arrival + s.makespan + st.delay).max(st.last_coll_end);
+
+    while js.iter().any(|s| !s.done) {
+        iters += 1;
+        anyhow::ensure!(iters <= budget, "fleet replay did not converge (event budget {budget})");
+
+        // fair-share rates: one solve over everyone, one per owner
+        let routes: Vec<Vec<usize>> = flows.iter().map(|f| f.route.clone()).collect();
+        let r_all = max_min_rates(&caps, &routes);
+        let mut ratio = vec![1.0_f64; flows.len()];
+        for j in 0..njobs {
+            let idx: Vec<usize> = (0..flows.len()).filter(|&i| flows[i].job == j).collect();
+            if idx.is_empty() {
+                continue;
+            }
+            let own: Vec<Vec<usize>> = idx.iter().map(|&i| flows[i].route.clone()).collect();
+            let r_own = max_min_rates(&caps, &own);
+            for (k, &i) in idx.iter().enumerate() {
+                if r_own[k] > 0.0 {
+                    // `min(1)`: a neighbor's presence never speeds you up
+                    ratio[i] = (r_all[i] / r_own[k]).min(1.0);
+                }
+            }
+        }
+
+        // next event: lexicographic min over (time, kind, job)
+        let mut best: Option<(f64, u8, usize)> = None;
+        let mut offer = |cand: (f64, u8, usize)| match best {
+            Some(b) if cand >= b => {}
+            _ => best = Some(cand),
+        };
+        for &(t, j) in &departures {
+            offer((t.max(now), K_DEPART, j));
+        }
+        for (i, f) in flows.iter().enumerate() {
+            if ratio[i] > 0.0 {
+                offer(((now + f.remaining / ratio[i]).max(now), K_COMPLETE, f.job));
+            }
+        }
+        for &(t, j, _) in &pending {
+            offer((t.max(now), K_COMPLETE, j));
+        }
+        for (j, s) in solo.iter().enumerate() {
+            let st = &js[j];
+            if !st.arrived {
+                offer((s.arrival.max(now), K_ARRIVE, j));
+            } else if !st.done && st.next_coll < s.colls.len() {
+                let t = s.arrival + s.colls[st.next_coll].start + st.delay;
+                offer((t.max(now), K_ACTIVATE, j));
+            }
+        }
+        let (t_next, kind, job) =
+            best.ok_or_else(|| anyhow::anyhow!("fleet replay stuck: live jobs but no events"))?;
+
+        // drain every live flow up to the event; attribute spine time
+        let dt = t_next - now;
+        if dt > 0.0 {
+            for (i, f) in flows.iter_mut().enumerate() {
+                f.remaining -= dt * ratio[i];
+                if f.route.contains(&spine) {
+                    js[f.job].spine_busy += dt * r_all[i];
+                }
+            }
+        }
+        now = t_next;
+
+        match kind {
+            K_DEPART => {
+                let i = departures
+                    .iter()
+                    .position(|&(t, j)| j == job && t <= now)
+                    .expect("chosen departure exists");
+                departures.swap_remove(i);
+                let racks = std::mem::take(&mut js[job].racks);
+                inv.release(&racks);
+                js[job].racks = racks;
+                js[job].done = true;
+                js[job].end = now;
+            }
+            K_COMPLETE => {
+                // sweep everything due at this instant, in (job, coll)
+                // order so simultaneous gate delays apply canonically
+                let mut done_colls: Vec<(usize, usize)> = Vec::new();
+                let mut i = 0;
+                while i < flows.len() {
+                    if flows[i].remaining <= eps(flows[i].dur) {
+                        let f = flows.remove(i);
+                        left[f.job][f.coll] -= 1;
+                        if left[f.job][f.coll] == 0 {
+                            done_colls.push((f.job, f.coll));
+                        }
+                    } else {
+                        i += 1;
+                    }
+                }
+                let mut i = 0;
+                while i < pending.len() {
+                    if pending[i].0 <= now {
+                        let (_, j, c) = pending.remove(i);
+                        done_colls.push((j, c));
+                    } else {
+                        i += 1;
+                    }
+                }
+                done_colls.sort_unstable();
+                for (j, c) in done_colls {
+                    let coll = solo[j].colls[c];
+                    if coll.gate.is_finite() {
+                        let deadline = solo[j].arrival + js[j].delay + coll.gate;
+                        js[j].delay += (now - deadline).max(0.0);
+                    }
+                    js[j].last_coll_end = js[j].last_coll_end.max(now);
+                    js[j].live_colls -= 1;
+                    if js[j].next_coll == solo[j].colls.len() && js[j].live_colls == 0 {
+                        departures.push((depart_time(&js[j], &solo[j]), j));
+                    }
+                }
+            }
+            K_ARRIVE => {
+                let assignment = inv.place(fleet.placement, solo[job].groups).map_err(|e| {
+                    anyhow::anyhow!(
+                        "fleet admission failed at t={now:.4}: job {job} ({}): {e}",
+                        solo[job].label
+                    )
+                })?;
+                js[job].crossings = spine_crossings(&assignment);
+                js[job].racks = assignment;
+                js[job].arrived = true;
+                if solo[job].colls.is_empty() {
+                    departures.push((depart_time(&js[job], &solo[job]), job));
+                }
+            }
+            K_ACTIVATE => {
+                let c = js[job].next_coll;
+                js[job].next_coll += 1;
+                js[job].live_colls += 1;
+                let coll = solo[job].colls[c];
+                let racks = &js[job].racks;
+                let g = racks.len();
+                let mut n = 0;
+                for gi in 0..g {
+                    let (ra, rb) = (racks[gi], racks[(gi + 1) % g]);
+                    if g > 1 && ra != rb {
+                        flows.push(ActiveFlow {
+                            job,
+                            coll: c,
+                            route: shared.route_spine(ra, rb),
+                            remaining: coll.dur,
+                            dur: coll.dur,
+                        });
+                        n += 1;
+                    }
+                }
+                if n == 0 {
+                    // fully rack-local: no shared links, solo pace
+                    pending.push((now + coll.dur, job, c));
+                } else {
+                    left[job][c] = n;
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    // ---- report ------------------------------------------------------
+    let spine_total: f64 = js.iter().map(|s| s.spine_busy).sum();
+    let jobs = (0..njobs)
+        .map(|j| {
+            let shared_makespan = js[j].end - solo[j].arrival;
+            JobSlo {
+                job: j,
+                label: solo[j].label.clone(),
+                algo: solo[j].algo.clone(),
+                arrival: solo[j].arrival,
+                rack_count: {
+                    let mut r = js[j].racks.clone();
+                    r.sort_unstable();
+                    r.dedup();
+                    r.len()
+                },
+                racks: js[j].racks.clone(),
+                spine_crossings: js[j].crossings,
+                solo_makespan: solo[j].makespan,
+                shared_makespan,
+                stretch: shared_makespan / solo[j].makespan,
+                contention_tax: shared_makespan - solo[j].makespan,
+                spine_busy: js[j].spine_busy,
+                spine_share: if spine_total > 0.0 { js[j].spine_busy / spine_total } else { 0.0 },
+            }
+        })
+        .collect();
+    Ok(FleetReport {
+        placement: fleet.placement.to_string(),
+        jobs,
+        fleet_makespan: js.iter().map(|s| s.end).fold(0.0, f64::max),
+        spine_busy_total: spine_total,
+    })
 }
 
 #[cfg(test)]
@@ -2142,5 +2557,59 @@ mod tests {
             }
         }
         assert_eq!(popped, 401, "every scheduled event must surface exactly once");
+    }
+
+    #[test]
+    fn calendar_queue_degenerate_cluster_rebuilds_with_sane_width() {
+        // every pending event at ONE timestamp: the rebuild's span is
+        // zero, so the width must come from the degenerate branch —
+        // macroscopic, positive, finite — and the (at, seq) pop order
+        // must survive regardless (pop order is width-independent)
+        use crate::util::prop::{self, GenExt};
+        prop::run(24, |rng| {
+            let at = match rng.usize_in(0, 4) {
+                0 => 0.0,
+                1 => 1e-9,
+                2 => 1.0,
+                3 => rng.f32_in(0.0, 4096.0) as f64,
+                _ => 1e9,
+            };
+            // > 128 pending events forces at least one rebuild mid-push
+            let n = rng.usize_in(130, 400);
+            let mut q = CalendarQueue::new();
+            for i in 0..n {
+                q.push(Event { at, seq: i as u64, kind: EventKind::GlobalDone { step: i } });
+            }
+            assert!(
+                q.width.is_finite() && q.width >= 1.0,
+                "degenerate rebuild picked width {} for cluster at {at}",
+                q.width
+            );
+            // a follow-up event slightly later must not strand the
+            // cursor years away (the old microscopic-width failure)
+            q.push(Event { at: at + 1.5, seq: n as u64, kind: EventKind::GlobalDone { step: n } });
+            for want in 0..=n {
+                let ev = q.pop().expect("queue drained early");
+                assert_eq!(ev.seq, want as u64, "FIFO order at equal timestamps");
+            }
+            assert!(q.pop().is_none());
+        });
+    }
+
+    #[test]
+    fn calendar_queue_single_event_rebuild_width_is_sane() {
+        for at in [0.0, 1e-9, 3.5, 1e9] {
+            let mut q = CalendarQueue::new();
+            q.push(Event { at, seq: 1, kind: EventKind::GlobalDone { step: 0 } });
+            q.rebuild(); // span is 0 by construction
+            assert!(
+                q.width.is_finite() && q.width >= 1.0,
+                "single-event rebuild picked width {} at {at}",
+                q.width
+            );
+            let ev = q.pop().expect("the event must survive the rebuild");
+            assert_eq!((ev.at, ev.seq), (at, 1));
+            assert!(q.pop().is_none());
+        }
     }
 }

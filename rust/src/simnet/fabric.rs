@@ -311,6 +311,7 @@ impl Fabric {
                 route: self.route_spine(g, (g + 1) % self.groups),
                 service,
                 tag: g,
+                owner: 0,
             })
             .collect()
     }
@@ -326,7 +327,12 @@ impl Fabric {
         for (g, &sz) in sizes.iter().enumerate() {
             for l in 0..sz {
                 let (g2, l2) = flat_slot(sizes, (rank + 1) % n);
-                flows.push(Flow { route: self.route_flat((g, l), (g2, l2)), service, tag: rank });
+                flows.push(Flow {
+                    route: self.route_flat((g, l), (g2, l2)),
+                    service,
+                    tag: rank,
+                    owner: 0,
+                });
                 rank += 1;
             }
         }
@@ -355,6 +361,12 @@ pub struct Flow {
     pub service: f64,
     /// Caller's identity tag (lane / rank index), echoed in outcomes.
     pub tag: usize,
+    /// Which tenant offered the flow — `0` for single-job runs. The
+    /// allocator is owner-blind (max–min fair share is per flow, never
+    /// per tenant); owners exist so multi-tenant replays
+    /// ([`super::des::run_fleet`]) can attribute spine bandwidth and
+    /// contention back to the job that caused them.
+    pub owner: usize,
 }
 
 /// Max–min fair-share rates for a set of concurrent flows (classic
@@ -756,6 +768,163 @@ fn remaining_eps(service: f64) -> f64 {
     (service.abs() * 1e-12).max(1e-300)
 }
 
+// ---------------------------------------------------------------------------
+// Multi-tenant placement: mapping a fleet's groups onto racks
+// ---------------------------------------------------------------------------
+
+/// How a multi-tenant fleet maps each job's groups onto racks of the
+/// shared Clos. The policy decides how many of a job's ring hops cross
+/// the (oversubscribed) spine — and therefore how much the job fights
+/// other tenants for bandwidth.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlacementPolicy {
+    /// First-fit: fill the lowest-indexed rack with a free slot. Dense
+    /// but oblivious — a job that straddles a rack boundary pays spine
+    /// crossings it didn't need.
+    #[default]
+    Pack,
+    /// Load-balance: each group goes to the rack with the most free
+    /// slots (ties → lowest index). Evens out rack wear at the cost of
+    /// scattering every job across the spine.
+    Spread,
+    /// Contention-aware: co-locate each job on as few racks as
+    /// possible (greedy: repeatedly take the emptiest rack and fill it
+    /// with as many remaining groups as fit), minimizing ring hops
+    /// that cross the spine.
+    TopologyAware,
+}
+
+impl std::str::FromStr for PlacementPolicy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "pack" => Ok(Self::Pack),
+            "spread" => Ok(Self::Spread),
+            "topology-aware" | "topology_aware" | "topo" => Ok(Self::TopologyAware),
+            other => anyhow::bail!(
+                "unknown placement policy {other:?} (expected pack|spread|topology-aware)"
+            ),
+        }
+    }
+}
+
+impl std::fmt::Display for PlacementPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Pack => "pack",
+            Self::Spread => "spread",
+            Self::TopologyAware => "topology-aware",
+        })
+    }
+}
+
+/// Rack inventory of one shared fabric: how many group-slots each rack
+/// has left. Jobs claim slots at arrival ([`Self::place`]) and return
+/// them at departure ([`Self::release`]).
+#[derive(Debug, Clone)]
+pub struct RackInventory {
+    free: Vec<usize>,
+    slots_per_rack: usize,
+}
+
+impl RackInventory {
+    pub fn new(racks: usize, slots_per_rack: usize) -> Self {
+        Self { free: vec![slots_per_rack; racks], slots_per_rack }
+    }
+
+    pub fn racks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn slots_per_rack(&self) -> usize {
+        self.slots_per_rack
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.free.iter().sum()
+    }
+
+    /// Assign `groups` group-slots under `policy`, returning the rack
+    /// index per group. Hard error when the inventory can't hold the
+    /// job — a fleet must surface admission failure, not silently
+    /// queue or shrink the tenant.
+    pub fn place(
+        &mut self,
+        policy: PlacementPolicy,
+        groups: usize,
+    ) -> anyhow::Result<Vec<usize>> {
+        anyhow::ensure!(groups > 0, "placement needs at least one group");
+        let avail = self.free_slots();
+        anyhow::ensure!(
+            avail >= groups,
+            "placement failed: job needs {groups} group-slots, only {avail} free \
+             across {} racks",
+            self.free.len()
+        );
+        let emptiest = |free: &[usize]| {
+            (0..free.len())
+                .max_by_key(|&r| (free[r], std::cmp::Reverse(r)))
+                .expect("inventory has at least one rack")
+        };
+        let mut out = Vec::with_capacity(groups);
+        match policy {
+            PlacementPolicy::Pack => {
+                for _ in 0..groups {
+                    let r = self
+                        .free
+                        .iter()
+                        .position(|&f| f > 0)
+                        .expect("free_slots() >= groups was checked");
+                    self.free[r] -= 1;
+                    out.push(r);
+                }
+            }
+            PlacementPolicy::Spread => {
+                for _ in 0..groups {
+                    let r = emptiest(&self.free);
+                    debug_assert!(self.free[r] > 0);
+                    self.free[r] -= 1;
+                    out.push(r);
+                }
+            }
+            PlacementPolicy::TopologyAware => {
+                let mut remaining = groups;
+                while remaining > 0 {
+                    let r = emptiest(&self.free);
+                    let take = self.free[r].min(remaining);
+                    debug_assert!(take > 0);
+                    for _ in 0..take {
+                        out.push(r);
+                    }
+                    self.free[r] -= take;
+                    remaining -= take;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Return a departing job's slots to the pool.
+    pub fn release(&mut self, assignment: &[usize]) {
+        for &r in assignment {
+            self.free[r] += 1;
+            debug_assert!(self.free[r] <= self.slots_per_rack);
+        }
+    }
+}
+
+/// How many ring hops of a job cross racks under `assignment` (rack
+/// index per group, ring order). Cross-rack hops are the ones that pay
+/// the spine; same-rack hops stay inside the ToR.
+pub fn spine_crossings(assignment: &[usize]) -> usize {
+    if assignment.len() <= 1 {
+        return 0;
+    }
+    (0..assignment.len())
+        .filter(|&g| assignment[g] != assignment[(g + 1) % assignment.len()])
+        .count()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -818,7 +987,7 @@ mod tests {
         let routes =
             [fab.route_intra(0, 0, 1), fab.route_spine(0, 1), fab.route_flat((0, 1), (1, 0))];
         for route in routes {
-            let out = run_flows(&fab, &[Flow { route, service: 0.125, tag: 0 }]);
+            let out = run_flows(&fab, &[Flow { route, service: 0.125, tag: 0, owner: 0 }]);
             assert_eq!(out.makespan, 0.125, "one flow per link must pay the private cost");
             assert_eq!(out.worst_slowdown, 1.0);
         }
@@ -848,9 +1017,9 @@ mod tests {
         // long one refills to rate 1.
         let fab = two_groups();
         let flows = vec![
-            Flow { route: fab.route_intra(0, 0, 1), service: 1.0, tag: 0 },
-            Flow { route: fab.route_intra(0, 0, 2), service: 0.25, tag: 1 },
-            Flow { route: fab.route_intra(1, 0, 1), service: 0.3, tag: 2 },
+            Flow { route: fab.route_intra(0, 0, 1), service: 1.0, tag: 0, owner: 0 },
+            Flow { route: fab.route_intra(0, 0, 2), service: 0.25, tag: 1, owner: 0 },
+            Flow { route: fab.route_intra(1, 0, 1), service: 0.3, tag: 2, owner: 0 },
         ];
         let out = run_flows(&fab, &flows);
         // shared phase: both at 1/2 until flow 1 drains 0.25 (t=0.5);
@@ -907,7 +1076,7 @@ mod tests {
         let fab = two_groups();
         let out = run_flows(
             &fab,
-            &[Flow { route: fab.route_intra(0, 0, 1), service: 0.5, tag: 0 }],
+            &[Flow { route: fab.route_intra(0, 0, 1), service: 0.5, tag: 0, owner: 0 }],
         );
         assert!((out.busy[fab.nic_out(0, 0)] - 0.5).abs() < 1e-12);
         assert!((out.busy[fab.nic_in(0, 1)] - 0.5).abs() < 1e-12);
@@ -921,7 +1090,8 @@ mod tests {
         assert_eq!(rates, vec![1.0]);
         let out = run_flows(&fab, &[]);
         assert_eq!(out.makespan, 0.0);
-        let out = run_flows(&fab, &[Flow { route: fab.route_spine(0, 1), service: 0.0, tag: 0 }]);
+        let zero = Flow { route: fab.route_spine(0, 1), service: 0.0, tag: 0, owner: 0 };
+        let out = run_flows(&fab, &[zero]);
         assert_eq!(out.makespan, 0.0);
     }
 
@@ -959,8 +1129,8 @@ mod tests {
         let mut fab = two_groups();
         fab.set_link_cap(fab.spine(), 0.0);
         let flows = vec![
-            Flow { route: fab.route_spine(0, 1), service: 1.0, tag: 0 },
-            Flow { route: fab.route_intra(0, 0, 1), service: 0.25, tag: 1 },
+            Flow { route: fab.route_spine(0, 1), service: 1.0, tag: 0, owner: 0 },
+            Flow { route: fab.route_intra(0, 0, 1), service: 0.25, tag: 1, owner: 0 },
         ];
         let out = run_flows(&fab, &flows);
         assert!(out.finish[0].is_infinite(), "stalled flow must not report finish 0");
@@ -970,6 +1140,51 @@ mod tests {
         // the healthy flow's carried work is still accounted
         assert!((out.busy[fab.nic_out(0, 0)] - 0.25).abs() < 1e-12);
         assert_eq!(out.busy[fab.spine()], 0.0, "a dead link never carries work");
+    }
+
+    #[test]
+    fn degenerate_flow_sets_price_to_zero_with_finite_accounting() {
+        // pin run_flows/run_flow_set degenerate inputs: an empty flow
+        // set and all-zero services must report makespan 0.0 with no
+        // NaN/∞ leaking into the link-busy or slowdown accounting
+        let fab = two_groups();
+        for out in [run_flows(&fab, &[]), run_flow_set(&fab, &[], &[])] {
+            assert_eq!(out.makespan, 0.0);
+            assert_eq!(out.worst_slowdown, 1.0);
+            assert!(out.finish.is_empty());
+            assert!(out.busy.iter().all(|b| *b == 0.0));
+        }
+        let flows = vec![
+            Flow { route: fab.route_spine(0, 1), service: 0.0, tag: 0, owner: 0 },
+            Flow { route: fab.route_intra(0, 0, 1), service: 0.0, tag: 1, owner: 0 },
+        ];
+        let out = run_flows(&fab, &flows);
+        assert_eq!(out.makespan, 0.0);
+        assert_eq!(out.worst_slowdown, 1.0);
+        assert_eq!(out.finish, vec![0.0, 0.0]);
+        assert!(out.busy.iter().all(|b| *b == 0.0));
+    }
+
+    #[test]
+    fn zero_service_flow_over_a_dead_link_still_prices_to_zero() {
+        // a flow with nothing to send cannot stall, even routed over a
+        // zero-capacity link — and the dead link's zero capacity must
+        // never divide into the busy accounting
+        let mut fab = two_groups();
+        fab.set_link_cap(fab.spine(), 0.0);
+        let out = run_flows(
+            &fab,
+            &[
+                Flow { route: fab.route_spine(0, 1), service: 0.0, tag: 0, owner: 0 },
+                Flow { route: fab.route_intra(1, 0, 1), service: 0.5, tag: 1, owner: 0 },
+            ],
+        );
+        assert_eq!(out.finish[0], 0.0, "no work, no stall");
+        assert!((out.finish[1] - 0.5).abs() < 1e-12, "healthy flow unaffected");
+        assert_eq!(out.makespan, 0.5);
+        assert_eq!(out.worst_slowdown, 1.0);
+        assert!(out.busy.iter().all(|b| b.is_finite()), "no ∞/NaN in link busy");
+        assert_eq!(out.busy[fab.spine()], 0.0);
     }
 
     /// Brute-force reference: global water-filling re-run from scratch
@@ -1047,7 +1262,7 @@ mod tests {
                     _ => fab.route_flat((g, s), (g2, d)),
                 };
                 let service = if rng.usize_in(0, 9) == 0 { 0.0 } else { 0.05 + rng.f64() };
-                Flow { route, service, tag: i }
+                Flow { route, service, tag: i, owner: 0 }
             })
             .collect()
     }
@@ -1108,5 +1323,59 @@ mod tests {
                 last = out.makespan;
             }
         });
+    }
+
+    #[test]
+    fn placement_policies_differ_on_the_reference_fleet() {
+        // the acceptance scenario: 4 jobs x 3 groups on 4 racks x 4
+        // slots. Pack splits jobs 1 and 2 across rack boundaries;
+        // topology-aware co-locates all four; spread scatters everyone.
+        let place_all = |policy: PlacementPolicy| -> Vec<Vec<usize>> {
+            let mut inv = RackInventory::new(4, 4);
+            (0..4).map(|_| inv.place(policy, 3).unwrap()).collect()
+        };
+
+        let pack = place_all(PlacementPolicy::Pack);
+        assert_eq!(pack[0], vec![0, 0, 0], "job 0 fits rack 0");
+        assert_eq!(pack[1], vec![0, 1, 1], "job 1 straddles racks 0/1");
+        assert_eq!(pack[2], vec![1, 1, 2], "job 2 straddles racks 1/2");
+        assert_eq!(pack[3], vec![2, 2, 2], "job 3 fits rack 2");
+        let pack_x: Vec<usize> = pack.iter().map(|a| spine_crossings(a)).collect();
+        assert_eq!(pack_x, vec![0, 2, 2, 0]);
+
+        let topo = place_all(PlacementPolicy::TopologyAware);
+        for (j, a) in topo.iter().enumerate() {
+            assert_eq!(spine_crossings(a), 0, "job {j} must be co-located: {a:?}");
+        }
+
+        let spread = place_all(PlacementPolicy::Spread);
+        for (j, a) in spread.iter().enumerate() {
+            assert_eq!(spine_crossings(a), 3, "spread scatters job {j}: {a:?}");
+        }
+    }
+
+    #[test]
+    fn rack_inventory_releases_and_rejects() {
+        let mut inv = RackInventory::new(2, 2);
+        assert_eq!(inv.free_slots(), 4);
+        let a = inv.place(PlacementPolicy::Pack, 3).unwrap();
+        assert_eq!(inv.free_slots(), 1);
+        let err = inv.place(PlacementPolicy::Pack, 2).unwrap_err().to_string();
+        assert!(err.contains("placement failed"), "admission error is explicit: {err}");
+        inv.release(&a);
+        assert_eq!(inv.free_slots(), 4, "departure returns every slot");
+        // refilled inventory accepts again
+        inv.place(PlacementPolicy::Spread, 4).unwrap();
+        assert_eq!(inv.free_slots(), 0);
+    }
+
+    #[test]
+    fn spine_crossings_counts_ring_hops() {
+        assert_eq!(spine_crossings(&[]), 0);
+        assert_eq!(spine_crossings(&[3]), 0, "one group has no ring hops");
+        assert_eq!(spine_crossings(&[0, 0, 0]), 0);
+        assert_eq!(spine_crossings(&[0, 1]), 2, "both hops of a 2-ring cross");
+        assert_eq!(spine_crossings(&[0, 0, 1]), 2);
+        assert_eq!(spine_crossings(&[0, 1, 2]), 3);
     }
 }

@@ -43,7 +43,7 @@ pub mod net;
 pub mod perturb;
 
 pub use cost::{AllreduceAlgo, Link};
-pub use fabric::{FabricConfig, FabricModel};
+pub use fabric::{FabricConfig, FabricModel, PlacementPolicy, RackInventory};
 pub use net::{NetConfig, NetModel};
 pub use perturb::{FailStop, LinkWindow, PerturbConfig, Rejoin};
 

@@ -212,9 +212,33 @@ pub struct NetAcc {
     /// the pair pins the name layout, so a regroup reshaping the graph
     /// triggers a re-map while identical segments reuse it.
     fabric_sig: (usize, usize),
+    /// Tenant the current flows belong to
+    /// ([`super::perturb::PerturbConfig::flow_owner`]); spine busy
+    /// seconds are attributed to it in `owner_spine`.
+    flow_owner: usize,
+    /// Owner id → spine busy seconds carried on that owner's behalf.
+    owner_spine: std::collections::BTreeMap<usize, f64>,
 }
 
 impl NetAcc {
+    /// Accumulator whose flows are owned by tenant `owner` (`0` = the
+    /// single-job convention; [`Self::default`] uses it).
+    pub fn with_owner(owner: usize) -> Self {
+        Self { flow_owner: owner, ..Self::default() }
+    }
+
+    /// Re-tag subsequent flows with a new owner (a fleet replay prices
+    /// one tenant's collectives, then the next, on one accumulator).
+    pub fn set_flow_owner(&mut self, owner: usize) {
+        self.flow_owner = owner;
+    }
+
+    /// `(owner, spine busy seconds)` pairs, owner-ordered. Empty until
+    /// a routed collective actually crossed the spine.
+    pub fn spine_busy_by_owner(&self) -> Vec<(usize, f64)> {
+        self.owner_spine.iter().map(|(&o, &b)| (o, b)).collect()
+    }
+
     fn phase_mut(&mut self, phase: Phase) -> &mut NetPhaseStats {
         self.phases.entry(phase.name()).or_insert_with(|| NetPhaseStats {
             phase: phase.name().to_string(),
@@ -244,6 +268,10 @@ impl NetAcc {
                 }
                 self.fabric_busy[id] += b;
             }
+        }
+        let spine = fab.spine();
+        if spine < busy.len() && busy[spine] > 0.0 {
+            *self.owner_spine.entry(self.flow_owner).or_default() += busy[spine];
         }
     }
 
@@ -1090,5 +1118,34 @@ mod tests {
         assert_eq!("packet".parse::<NetModel>().unwrap(), NetModel::Packet);
         assert_eq!("closed".parse::<NetModel>().unwrap(), NetModel::ClosedForm);
         assert!("nope".parse::<NetModel>().is_err());
+    }
+
+    #[test]
+    fn spine_busy_is_attributed_to_the_flow_owner() {
+        // two collectives on one accumulator, re-tagged between them:
+        // the shared accounting (fabric_report) merges, the per-owner
+        // spine attribution keeps the tenants apart
+        let fab = Fabric::two_tier(&[2, 2], 2.0);
+        let spine = fab.spine();
+        let mut spine_only = vec![0.0; fab.num_links()];
+        spine_only[spine] = 0.5;
+
+        let mut acc = NetAcc::with_owner(3);
+        acc.add_fabric_busy(&fab, &spine_only);
+        acc.set_flow_owner(7);
+        acc.add_fabric_busy(&fab, &spine_only);
+        acc.add_fabric_busy(&fab, &spine_only);
+        assert_eq!(acc.spine_busy_by_owner(), vec![(3, 0.5), (7, 1.0)]);
+
+        // intra-rack traffic never charges anyone's spine bill
+        let mut intra = vec![0.0; fab.num_links()];
+        intra[fab.route_intra(0, 0, 1)[0]] = 1.0;
+        acc.add_fabric_busy(&fab, &intra);
+        assert_eq!(acc.spine_busy_by_owner(), vec![(3, 0.5), (7, 1.0)]);
+
+        // the default accumulator stays on the single-job convention
+        let mut solo = NetAcc::default();
+        solo.add_fabric_busy(&fab, &spine_only);
+        assert_eq!(solo.spine_busy_by_owner(), vec![(0, 0.5)]);
     }
 }

@@ -62,6 +62,10 @@ pub mod domain {
     /// ([`super::net`]). A fresh domain, so enabling `--net-jitter`
     /// can never shift the worker/communicator/link schedules above.
     pub const NET: u64 = 7;
+    /// Per-job arrival stagger of a multi-tenant fleet
+    /// ([`super::des::run_fleet`]), drawn from the fleet's own seed —
+    /// fleet admission never perturbs the per-job schedules.
+    pub const FLEET: u64 = 8;
 }
 
 /// A fail-stop fault: `worker` dies at the boundary *before* executing
@@ -230,6 +234,11 @@ pub struct PerturbConfig {
     /// steps) switch this off to skip the per-event label allocation;
     /// makespans and reports are unaffected.
     pub trace: bool,
+    /// Tenant identity stamped on every flow this run offers to the
+    /// shared fabric ([`super::net::NetAcc`] spine attribution). `0`
+    /// for single-job runs; [`super::des::run_fleet`] sets the job
+    /// index so multi-tenant accounting can tell neighbors apart.
+    pub flow_owner: usize,
 }
 
 impl Default for PerturbConfig {
@@ -249,6 +258,7 @@ impl Default for PerturbConfig {
             fabric: super::fabric::FabricConfig::default(),
             delay_unit: 2e-3,
             trace: true,
+            flow_owner: 0,
         }
     }
 }

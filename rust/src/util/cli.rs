@@ -104,6 +104,22 @@ impl Args {
             .transpose()
     }
 
+    /// Parse an optional flag straight into any `FromStr` type (enum
+    /// flags like `--placement`), with the flag name in the error.
+    pub fn parse_or<T>(&self, key: &str, default: T) -> Result<T>
+    where
+        T: std::str::FromStr,
+        T::Err: Into<anyhow::Error>,
+    {
+        self.mark(key);
+        match self.flags.get(key) {
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("--{key}: {}", e.into())),
+            None => Ok(default),
+        }
+    }
+
     pub fn switch(&self, key: &str) -> bool {
         self.mark(key);
         self.switches.iter().any(|s| s == key)
@@ -154,6 +170,25 @@ mod tests {
         let a = Args::parse(&raw("--tyop 3"), &[]).unwrap();
         let _ = a.usize_or("typo", 1);
         assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn parse_or_goes_through_fromstr() {
+        let a = Args::parse(&raw("--placement topology-aware"), &[]).unwrap();
+        let p: crate::simnet::PlacementPolicy =
+            a.parse_or("placement", crate::simnet::PlacementPolicy::Pack).unwrap();
+        assert_eq!(p, crate::simnet::PlacementPolicy::TopologyAware);
+        // default when absent, named error on garbage
+        let d: crate::simnet::PlacementPolicy =
+            a.parse_or("missing", crate::simnet::PlacementPolicy::Spread).unwrap();
+        assert_eq!(d, crate::simnet::PlacementPolicy::Spread);
+        let b = Args::parse(&raw("--placement diagonal"), &[]).unwrap();
+        let err = b
+            .parse_or("placement", crate::simnet::PlacementPolicy::Pack)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--placement"), "{err}");
+        a.finish().unwrap();
     }
 
     #[test]

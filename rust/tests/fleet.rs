@@ -1,0 +1,211 @@
+//! Multi-tenant fleet suite (ISSUE 9): several jobs on one shared
+//! Clos, priced by `des::run_fleet`'s two-layer replay.
+//!
+//! Contracts pinned here:
+//!
+//! 1. **reduction** — a fleet of ONE job prices identically (< 1e-9)
+//!    to the single-job DES entry point for every registry scheduler,
+//!    under every placement policy, perturbed or not: with a single
+//!    tenant the shared-fabric max–min solve and the job's own solve
+//!    are the same solve, so the contention layer is exactly a no-op;
+//! 2. **determinism** — a fleet run is bitwise-reproducible per
+//!    `(seed, placement)`, and the seeded arrival stagger is the only
+//!    randomness (different fleet seeds move arrivals, nothing else);
+//! 3. **the placement headline** — on the reference scenario (4 mixed
+//!    jobs × 3 groups on 4 racks × 4 slots, oversub 4) topology-aware
+//!    placement strictly reduces the mean makespan stretch of the
+//!    LSGD-family (layered) jobs vs `pack`, because it zeroes the
+//!    spine crossings `pack` pays for straddling rack boundaries;
+//! 4. **admission** — a job that doesn't fit at arrival is a hard
+//!    error naming the job, and departures really free their slots.
+
+use lsgd::config::{FleetConfig, JobSpec};
+use lsgd::sched::scheduler::{scheduler_for, REGISTRY};
+use lsgd::simnet::{des, ClusterModel, PerturbConfig, PlacementPolicy};
+use lsgd::topology::Topology;
+
+const POLICIES: [PlacementPolicy; 3] =
+    [PlacementPolicy::Pack, PlacementPolicy::Spread, PlacementPolicy::TopologyAware];
+
+fn fleet_of(jobs: &str) -> FleetConfig {
+    FleetConfig { jobs: FleetConfig::parse_jobs(jobs).unwrap(), ..FleetConfig::default() }
+}
+
+/// A model whose global collective is *not* hidden under I/O, so
+/// contention on the spine is visible in the makespan (the paper
+/// model's generous I/O window would swallow mild stretch).
+fn exposed_model() -> ClusterModel {
+    let mut m = ClusterModel::paper_k80();
+    m.t_io = 1e-3;
+    m
+}
+
+fn stragglers(seed: u64) -> PerturbConfig {
+    let mut p = PerturbConfig::default();
+    p.seed = seed;
+    p.straggle_prob = 0.2;
+    p.straggle_factor = 2.5;
+    p
+}
+
+// ------------------------------------------------- contract 1
+
+#[test]
+fn one_job_fleet_reduces_to_single_job_pricing() {
+    let m = ClusterModel::paper_k80();
+    for perturbed in [false, true] {
+        let p = if perturbed { stragglers(11) } else { PerturbConfig::default() };
+        for name in REGISTRY {
+            let spec = format!("{name}:3x4:steps=5");
+            let job = JobSpec::parse(&spec).unwrap();
+            let topo = Topology::new(job.groups, job.workers).unwrap();
+            let sched = scheduler_for(job.algo, &job.sched).unwrap();
+            let solo = des::run_sched_perturbed(&m, &topo, job.steps, &p, sched.as_ref()).unwrap();
+
+            for policy in POLICIES {
+                let mut fleet = fleet_of(&spec);
+                fleet.placement = policy;
+                let report = des::run_fleet(&m, &fleet, &p).unwrap();
+                assert_eq!(report.jobs.len(), 1);
+                let slo = &report.jobs[0];
+                assert!(
+                    (slo.solo_makespan - solo.makespan).abs() < 1e-9,
+                    "{name}/{policy}: fleet solo layer {} vs run_sched_perturbed {}",
+                    slo.solo_makespan,
+                    solo.makespan
+                );
+                assert!(
+                    (slo.shared_makespan - solo.makespan).abs() < 1e-9,
+                    "{name}/{policy} (perturbed={perturbed}): one tenant must price \
+                     like the single-job entry point: shared {} vs solo {}",
+                    slo.shared_makespan,
+                    solo.makespan
+                );
+                assert!(
+                    (slo.stretch - 1.0).abs() < 1e-9,
+                    "{name}/{policy}: solo stretch {}",
+                    slo.stretch
+                );
+                assert!(
+                    (report.fleet_makespan - solo.makespan).abs() < 1e-9,
+                    "{name}/{policy}: fleet clock"
+                );
+            }
+        }
+    }
+}
+
+// ------------------------------------------------- contract 2
+
+#[test]
+fn fleet_is_bitwise_reproducible_per_seed() {
+    let m = exposed_model();
+    let jobs = "lsgd:3x4:steps=4,lsgd:3x4:steps=4,lasgd:3x4:steps=4,csgd:3x4:steps=4";
+    for policy in POLICIES {
+        let mut fleet = fleet_of(jobs);
+        fleet.placement = policy;
+        fleet.stagger = 0.5;
+        fleet.seed = 0xFEE7;
+        let a = des::run_fleet(&m, &fleet, &stragglers(7)).unwrap();
+        let b = des::run_fleet(&m, &fleet, &stragglers(7)).unwrap();
+        assert_eq!(a, b, "{policy}: same (seed, placement) must replay bitwise");
+
+        // the fleet seed drives the stagger and nothing else
+        fleet.seed = 0xBEEF;
+        let c = des::run_fleet(&m, &fleet, &stragglers(7)).unwrap();
+        assert!(
+            a.jobs.iter().zip(&c.jobs).any(|(x, y)| x.arrival != y.arrival),
+            "{policy}: a different fleet seed must move some arrival"
+        );
+        for (x, y) in a.jobs.iter().zip(&c.jobs) {
+            assert_eq!(
+                x.solo_makespan, y.solo_makespan,
+                "{policy}: the fleet seed must never leak into the solo layer"
+            );
+        }
+    }
+}
+
+// ------------------------------------------------- contract 3
+
+#[test]
+fn topology_aware_beats_pack_on_the_reference_fleet() {
+    // the acceptance scenario: 4 mixed jobs x 3 groups on 4 racks x 4
+    // slots, oversub 4, simultaneous arrivals. Pack straddles jobs 1
+    // and 2 across rack boundaries (2 spine crossings each), so their
+    // collectives halve on the shared spine; topology-aware co-locates
+    // every job and the whole fleet prices at stretch 1.
+    let m = exposed_model();
+    let jobs = "lsgd:3x4:steps=4,lsgd:3x4:steps=4,lasgd:3x4:steps=4,csgd:3x4:steps=4";
+    let run = |policy: PlacementPolicy| {
+        let mut fleet = fleet_of(jobs);
+        fleet.placement = policy;
+        des::run_fleet(&m, &fleet, &PerturbConfig::default()).unwrap()
+    };
+
+    let pack = run(PlacementPolicy::Pack);
+    let topo = run(PlacementPolicy::TopologyAware);
+
+    // placement geometry: pack straddles the middle jobs, topo doesn't
+    assert_eq!(
+        pack.jobs.iter().map(|j| j.spine_crossings).collect::<Vec<_>>(),
+        vec![0, 2, 2, 0]
+    );
+    assert!(topo.jobs.iter().all(|j| j.spine_crossings == 0));
+    assert!(topo.jobs.iter().all(|j| j.rack_count == 1));
+
+    // the straddling jobs really fought for the spine under pack
+    assert!(pack.jobs[1].spine_busy > 0.0, "straddling job must be charged spine time");
+    assert!(pack.jobs[2].spine_busy > 0.0);
+    assert!((pack.jobs[1].spine_share + pack.jobs[2].spine_share - 1.0).abs() < 1e-9);
+    assert_eq!(topo.spine_busy_total, 0.0, "co-located fleet never touches the spine");
+
+    // the headline: topology-aware strictly reduces the LSGD-family
+    // (layered) mean stretch vs pack
+    let layered = |j: &lsgd::metrics::JobSlo| j.algo != "csgd";
+    let s_pack = pack.mean_stretch_of(layered);
+    let s_topo = topo.mean_stretch_of(layered);
+    assert!(
+        s_topo < s_pack,
+        "layered mean stretch: topology-aware {s_topo} must beat pack {s_pack}"
+    );
+    assert!(
+        pack.jobs[1].stretch > 1.0 + 1e-6,
+        "the straddling lsgd job pays a real contention tax: {}",
+        pack.jobs[1].stretch
+    );
+    assert!(
+        topo.jobs.iter().all(|j| (j.stretch - 1.0).abs() < 1e-9),
+        "co-located jobs keep their solo price: {:?}",
+        topo.jobs.iter().map(|j| j.stretch).collect::<Vec<_>>()
+    );
+    // contention tax is the same information as stretch, in seconds
+    assert!(pack.jobs[1].contention_tax > 0.0);
+    let latest = pack.jobs.iter().map(|j| j.arrival + j.shared_makespan).fold(0.0, f64::max);
+    assert!((pack.fleet_makespan - latest).abs() < 1e-12, "fleet clock is the last completion");
+}
+
+// ------------------------------------------------- contract 4
+
+#[test]
+fn admission_is_loud_and_departures_free_slots() {
+    let m = ClusterModel::paper_k80();
+    // two 3-group jobs on a 2x2 fabric: together they don't fit
+    let mut fleet = fleet_of("lsgd:3x2:steps=2,lsgd:3x2:steps=2");
+    fleet.racks = 2;
+    fleet.rack_slots = 2;
+    let err = des::run_fleet(&m, &fleet, &PerturbConfig::default()).unwrap_err().to_string();
+    assert!(err.contains("admission"), "concurrent jobs that don't fit: {err}");
+    assert!(err.contains("job 1"), "the rejected job is named: {err}");
+
+    // the same pair staggered far apart shares the fabric serially:
+    // job 0 departs, its racks free up, job 1 places cleanly
+    let mut fleet = fleet_of("lsgd:3x2:steps=2,lsgd:3x2:steps=2:arrive=10000");
+    fleet.racks = 2;
+    fleet.rack_slots = 2;
+    let report = des::run_fleet(&m, &fleet, &PerturbConfig::default()).unwrap();
+    for j in &report.jobs {
+        assert!((j.stretch - 1.0).abs() < 1e-9, "serial tenants never contend: {}", j.stretch);
+    }
+    assert!(report.fleet_makespan >= 10000.0);
+}
