@@ -16,12 +16,17 @@
 
 use lsgd::simnet::{
     des, fabric, ClusterModel, FabricConfig, FabricModel, NetConfig, NetModel, PerturbConfig,
+    RoutingPolicy,
 };
 use lsgd::topology::Topology;
 use lsgd::util::bench::{enforce_baseline_from_env, smoke_mode, Harness};
 
 fn two_tier(oversub: f64) -> FabricConfig {
-    FabricConfig { model: FabricModel::TwoTier, oversub }
+    FabricConfig { model: FabricModel::TwoTier, oversub, ..Default::default() }
+}
+
+fn three_tier(oversub: f64, pods: usize, routing: RoutingPolicy) -> FabricConfig {
+    FabricConfig { model: FabricModel::ThreeTier { pods }, oversub, routing }
 }
 
 fn main() {
@@ -43,6 +48,15 @@ fn main() {
         fabric::max_min_rates(fab.caps(), &routes)
     });
 
+    // the 3-tier twin: same flow set, deeper graph (5-hop crossing
+    // routes over 4 pods), so the solve touches ~2x the links
+    let fab3 = fabric::Fabric::three_tier(&sizes, 2.0, 4);
+    let flows3 = fab3.flat_allreduce_flows(&sizes, 1.0);
+    let routes3: Vec<Vec<usize>> = flows3.iter().map(|f| f.route.clone()).collect();
+    h.bench("fabric/maxmin_3tier/64g_4pod_256flows", || {
+        fabric::max_min_rates(fab3.caps(), &routes3)
+    });
+
     // contended closed-form DES steps (oversub 2): the LSGD row routes
     // the communicator ring, the CSGD row the full 256-rank flat ring
     let fabcfg = two_tier(2.0);
@@ -51,6 +65,18 @@ fn main() {
     });
     h.bench("fabric/csgd_2tier_step/64x4x3", || {
         des::run_csgd_fabric(&m, &topo, 3, &fabcfg).unwrap().makespan
+    });
+
+    // routing-policy cost on the 3-tier graph: deterministic single
+    // plane vs the seeded ECMP hash per crossing flow — the delta is
+    // the per-flow route-choice overhead, not the solve itself
+    let det3 = three_tier(2.0, 4, RoutingPolicy::Deterministic);
+    h.bench("fabric/csgd_3tier_det_step/64x4x3", || {
+        des::run_csgd_fabric(&m, &topo, 3, &det3).unwrap().makespan
+    });
+    let ecmp3 = three_tier(2.0, 4, RoutingPolicy::Ecmp);
+    h.bench("fabric/csgd_3tier_ecmp_step/64x4x3", || {
+        des::run_csgd_fabric(&m, &topo, 3, &ecmp3).unwrap().makespan
     });
 
     // contended packet steps: fair-sharing plus the seeded per-message

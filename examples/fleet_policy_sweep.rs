@@ -68,8 +68,9 @@ fn main() -> Result<()> {
         let report = des::run_fleet(&m, &f, &PerturbConfig::default())?;
         print!("{}", report.to_table());
         println!();
-        let layered = report.mean_stretch_of(|j| j.algo != "csgd");
-        summary.push((policy, report.mean_stretch(), layered, report.spine_busy_total));
+        let layered = report.mean_stretch_of(|j| j.algo != "csgd").unwrap_or(f64::NAN);
+        let all = report.mean_stretch().unwrap_or(f64::NAN);
+        summary.push((policy, all, layered, report.spine_busy_total));
     }
 
     println!("# placement summary (mean makespan stretch, lower is better)");

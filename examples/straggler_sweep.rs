@@ -30,6 +30,11 @@
 //!    barrier caps the tax at the slowest *group*, not the slowest
 //!    *rank*, so the lasgd curve sits under lsgd's at every
 //!    probability.
+//! 9. **Routing policy** (three-tier fabric, `--fabric 3tier`) — the
+//!    same LSGD run under a degraded spine plane, once per routing
+//!    policy: deterministic routes every crossing lane over the dead
+//!    plane, ECMP hashes a fraction of them onto it, adaptive reads
+//!    the allocator and routes around it entirely.
 //!
 //! ```bash
 //! cargo run --release --example straggler_sweep -- --steps 6
@@ -80,6 +85,7 @@ const PARTS: &[(&str, fn(&Ctx) -> Result<()>)] = &[
     ("packet-level network emulation vs the α+β closed forms", part6_packet),
     ("step time vs spine oversubscription: the shared-fabric knee", part7_oversub),
     ("barrier scope: lasgd's group-local rendezvous vs the global barrier", part8_scope),
+    ("routing policy vs a degraded spine plane: det / ecmp / adaptive", part9_routing),
 ];
 
 fn main() -> Result<()> {
@@ -346,7 +352,7 @@ fn part7_oversub(c: &Ctx) -> Result<()> {
     );
     let mut prev_l = 0.0_f64;
     for oversub in [1.0, 1.5, 2.0, 3.0, 4.0, 6.0, 8.0] {
-        let fab = FabricConfig { model: FabricModel::TwoTier, oversub };
+        let fab = FabricConfig { model: FabricModel::TwoTier, oversub, ..Default::default() };
         let l = des::per_step(&des::run_lsgd_fabric(&c.m, &topo, steps, &fab)?, steps);
         let cs = des::per_step(&des::run_csgd_fabric(&c.m, &topo, steps, &fab)?, steps);
         let marker = if oversub > knee { "   <- spine exposed" } else { "" };
@@ -414,5 +420,39 @@ fn part8_scope(c: &Ctx) -> Result<()> {
     println!("→ the barrier scope IS the tax knob: global (lsgd) pays the slowest rank,");
     println!("  group-local (lasgd) pays only the slowest rank per group — the curve");
     println!("  flattens as soon as the straggler leaves the critical timeline");
+    Ok(())
+}
+
+fn part9_routing(c: &Ctx) -> Result<()> {
+    use lsgd::simnet::RoutingPolicy;
+    // 8 groups over 4 pods (two racks each), spine oversub 4; plane 0
+    // runs 64x degraded for the whole run. The routing policy decides
+    // who pays for it: deterministic sends every cross-pod lane over
+    // the dead plane, ECMP hashes ~1/planes of them onto it, adaptive
+    // sees the collapsed capacity at flow start and routes around it
+    let topo = Topology::new(8, 4)?;
+    let steps = c.steps.max(3);
+    let base = des::per_step(&des::run_lsgd(&c.m, &topo, steps), steps);
+    println!("  8x4 on 3tier:4:4, plane0 64x degraded, {steps} steps/point");
+    println!("{:>10} {:>10} {:>10}", "routing", "lsgd_s", "tax_s");
+    let mut per = Vec::new();
+    for routing in [RoutingPolicy::Deterministic, RoutingPolicy::Ecmp, RoutingPolicy::Adaptive] {
+        let mut p = PerturbConfig::default();
+        p.fabric = "3tier:4:4".parse()?;
+        p.fabric.routing = routing;
+        p.parse_link_degrade(&format!("plane0@0..{steps}x64"))?;
+        let l = des::per_step(&des::run_lsgd_perturbed(&c.m, &topo, steps, &p)?, steps);
+        println!("{routing:>10} {l:>10.3} {:>10.3}", l - base);
+        per.push(l);
+    }
+    let (det, ecmp, ada) = (per[0], per[1], per[2]);
+    assert!(
+        ada <= ecmp + 1e-9 && ecmp <= det + 1e-9,
+        "routing must order adaptive ≤ ecmp ≤ det, got {ada:.3} / {ecmp:.3} / {det:.3}"
+    );
+    assert!(det > ada + 1e-6, "the deterministic path must really pay the degraded plane");
+    println!("→ a degraded spine plane is a routing-policy question: deterministic");
+    println!("  pays it in full, ecmp pays a hash-share of it, adaptive reads the");
+    println!("  allocator's rates and steers every lane around the fault");
     Ok(())
 }

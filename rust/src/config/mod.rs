@@ -223,7 +223,8 @@ impl JobSpec {
     }
 }
 
-/// A multi-tenant fleet: several jobs sharing one two-tier Clos
+/// A multi-tenant fleet: several jobs sharing one rack-level Clos
+/// (two-tier, or three-tier with `pods >= 2`)
 /// ([`crate::simnet::des::run_fleet`]), with a placement policy
 /// mapping each job's groups onto racks at arrival.
 #[derive(Debug, Clone, PartialEq)]
@@ -242,6 +243,13 @@ pub struct FleetConfig {
     /// Max seconds of seeded stagger added to each job's requested
     /// arrival (`0` = arrivals exactly as specified).
     pub stagger: f64,
+    /// Aggregation pods of the shared fabric. `1` (the default) keeps
+    /// the classic two-tier rack fabric; `>= 2` builds the three-tier
+    /// Clos (racks split over pods, one spine plane per pod).
+    pub pods: usize,
+    /// Routing policy for rack-crossing communicator lanes on the
+    /// shared fabric (non-deterministic policies need `pods >= 2`).
+    pub routing: crate::simnet::RoutingPolicy,
 }
 
 impl Default for FleetConfig {
@@ -254,6 +262,8 @@ impl Default for FleetConfig {
             oversub: 4.0,
             seed: 0xF1EE7,
             stagger: 0.0,
+            pods: 1,
+            routing: crate::simnet::RoutingPolicy::default(),
         }
     }
 }
@@ -277,6 +287,18 @@ impl FleetConfig {
             self.stagger.is_finite() && self.stagger >= 0.0,
             "fleet stagger must be finite and >= 0, got {}",
             self.stagger
+        );
+        anyhow::ensure!(
+            (1..=self.racks).contains(&self.pods),
+            "fleet pods must be in 1..=racks ({}), got {}",
+            self.racks,
+            self.pods
+        );
+        anyhow::ensure!(
+            self.routing == crate::simnet::RoutingPolicy::Deterministic || self.pods >= 2,
+            "--routing {} needs a multi-pod fleet fabric (--pods >= 2): \
+             a single-pod fabric has a single candidate path",
+            self.routing
         );
         for (j, job) in self.jobs.iter().enumerate() {
             job.validate().map_err(|e| anyhow::anyhow!("fleet job {j}: {e}"))?;
@@ -707,5 +729,20 @@ mod tests {
             .is_err(),
             "oversub below 1 is rejected"
         );
+        // pods must fit in the racks; multipath routing needs pods >= 2
+        let base = FleetConfig {
+            jobs: FleetConfig::parse_jobs("lsgd:2x2").unwrap(),
+            ..FleetConfig::default()
+        };
+        let err = FleetConfig { pods: 5, ..base.clone() }.validate().unwrap_err().to_string();
+        assert!(err.contains("pods"), "{err}");
+        let err = FleetConfig { routing: crate::simnet::RoutingPolicy::Ecmp, ..base.clone() }
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--pods"), "{err}");
+        FleetConfig { pods: 2, routing: crate::simnet::RoutingPolicy::Adaptive, ..base }
+            .validate()
+            .unwrap();
     }
 }

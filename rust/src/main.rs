@@ -58,8 +58,11 @@ SUBCOMMANDS:
             --hetero H           permanent per-rank speed spread [0,H]
             --comm-stragglers P[xF]  straggle each group's communicator
             --comm-hetero H      permanent per-communicator speed spread
-            --link-degrade G@S..ExF  group G's fabric runs Fx slower
-                                 for steps S..E (comma-separated)
+            --link-degrade T@S..ExF  fabric piece T runs Fx slower for
+                                 steps S..E (comma-separated); T = group
+                                 index, or a named core link under a
+                                 routed fabric: spine (2tier) / planeK
+                                 (3tier spine plane K)
             --fail W@S[,W@S..]   fail-stop worker W before step S
                                  (elastic regroup: survivors re-shard)
             --rejoin W@S[,W@S..] failed worker W rejoins before step S
@@ -69,10 +72,17 @@ SUBCOMMANDS:
             --net-jitter J       per-message delay tail amplitude
             --net-reorder R      per-message reorder probability
             --net-chunk C        sub-messages per transfer (serialization)
-            --fabric flat|2tier[:oversub]  route collectives over private
-                                 links (default, bit-identical to the
-                                 pre-fabric model) or a shared two-tier
-                                 graph with max-min fair-share contention
+            --fabric flat|2tier[:F]|3tier[:F[:pods]]  route collectives
+                                 over private links (default, bit-identical
+                                 to the pre-fabric model), a shared two-tier
+                                 graph with max-min fair-share contention,
+                                 or a three-tier Clos (groups split over
+                                 aggregation pods, one spine plane per pod,
+                                 spine oversubscription F)
+            --routing det|ecmp|adaptive  spine-plane choice for crossing
+                                 flows on a 3tier fabric (det = plane 0;
+                                 ecmp = seeded hash per flow; adaptive =
+                                 least-loaded at flow start)
             --perturb-seed S --straggle-secs SECS (delay per 1x slowdown)
   audit     run CSGD and LSGD back-to-back, compare trajectories bitwise
             (same flags as train, plus --paper-literal)
@@ -83,11 +93,12 @@ SUBCOMMANDS:
             --algo csgd|lsgd|ma|dasgd|dcs3gd|lasgd --groups G --workers W --steps K
             [--comm-interval K] [--alpha A] [--lambda L]
             [--stragglers P[xF]] [--hetero H] [--comm-stragglers P[xF]]
-            [--comm-hetero H] [--link-degrade G@S..ExF]
+            [--comm-hetero H] [--link-degrade T@S..ExF]
             [--fail W@S[,..]] [--rejoin W@S[,..]] [--perturb-seed S]
             [--net-model closed|packet] [--net-jitter J]
             [--net-reorder R] [--net-chunk C]
-            [--fabric flat|2tier[:oversub]]
+            [--fabric flat|2tier[:F]|3tier[:F[:pods]]]
+            [--routing det|ecmp|adaptive]
             multi-tenant fleet (replaces the single-job flags):
             --fleet J1,J2,..     one spec per job, grammar
                                  algo:GxW[:steps=K][:arrive=T]
@@ -95,6 +106,10 @@ SUBCOMMANDS:
             [--placement pack|spread|topology-aware] (group → rack)
             [--racks R] [--rack-slots C]  shared-Clos inventory
             [--oversub X]        spine oversubscription (default 4)
+            [--pods P]           aggregation pods (default 1 = two-tier;
+                                 P>=2 = three-tier, racks split over pods)
+            [--fleet-routing det|ecmp|adaptive]  per-lane spine-plane
+                                 choice on a multi-pod fleet fabric
             [--fleet-seed S] [--stagger SECS]  seeded arrival stagger
   config    dump | check [--file FILE]
   info      [--artifacts DIR]
@@ -134,13 +149,27 @@ fn parse_perturb(a: &Args) -> Result<PerturbConfig> {
     if let Some(spec) = a.opt_str("fabric") {
         p.fabric = spec.parse()?;
     }
+    if let Some(r) = a.opt_str("routing") {
+        p.fabric.routing = r.parse()?;
+        // fail now, not at run time: ecmp/adaptive need multiple planes
+        p.fabric.validate()?;
+    }
     p.seed = a.u64_or("perturb-seed", p.seed)?;
     p.delay_unit = a.f64_or("straggle-secs", p.delay_unit)?;
     Ok(p)
 }
 
-/// Busiest-first `fabric[link] …` report lines (simulate).
+/// Busiest-first `fabric[link] …` report lines (simulate), prefixed by
+/// the per-tier rollup (core / pod / tor / nic).
 fn print_fabric_stats(links: &[lsgd::metrics::LinkStats]) {
+    for t in lsgd::metrics::rollup_link_tiers(links) {
+        println!(
+            "  fabric tier {:<4}: busy {:.3}s, bottleneck utilization {:.1}%",
+            t.link,
+            t.busy_secs,
+            100.0 * t.utilization
+        );
+    }
     let mut sorted: Vec<&lsgd::metrics::LinkStats> = links.iter().collect();
     sorted.sort_by(|a, b| {
         b.utilization
@@ -483,6 +512,8 @@ fn cmd_fleet(a: &Args, spec: &str) -> Result<()> {
     fleet.oversub = a.f64_or("oversub", fleet.oversub)?;
     fleet.seed = a.u64_or("fleet-seed", fleet.seed)?;
     fleet.stagger = a.f64_or("stagger", fleet.stagger)?;
+    fleet.pods = a.usize_or("pods", fleet.pods)?;
+    fleet.routing = a.parse_or("fleet-routing", fleet.routing)?;
     let perturb = parse_perturb(a)?;
     a.finish()?;
 

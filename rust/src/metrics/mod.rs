@@ -152,12 +152,48 @@ pub struct NetPhaseStats {
 /// oversubscription knee shows up.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct LinkStats {
-    /// Link label (`spine`, `up[g]`, `down[g]`, `nic_out[g.s]`, …).
+    /// Link label (`spine`, `plane[k]`, `agg[p]`, `up[g]`, `down[g]`,
+    /// `nic_out[g.s]`, …).
     pub link: String,
     /// Carried work divided by capacity (seconds busy).
     pub busy_secs: f64,
     /// `busy_secs / makespan`, capped at 1.
     pub utilization: f64,
+}
+
+/// Fabric tier of a link label: `core` (the two-tier spine / the
+/// three-tier spine planes), `pod` (aggregation switches + pod trunks),
+/// `tor` (per-group up/down links), `nic` (per-slot lanes).
+pub fn link_tier(link: &str) -> &'static str {
+    if link == "spine" || link.starts_with("plane") {
+        "core"
+    } else if link.starts_with("agg") || link.starts_with("pod_") {
+        "pod"
+    } else if link.starts_with("up") || link.starts_with("down") {
+        "tor"
+    } else {
+        "nic"
+    }
+}
+
+/// Per-tier rollup of a fabric report: total busy seconds across the
+/// tier's links plus the tier's bottleneck (max) utilization, ordered
+/// core → pod → tor → nic. Tiers the fabric doesn't have are omitted,
+/// so a two-tier run rolls up to core/tor/nic only.
+pub fn rollup_link_tiers(links: &[LinkStats]) -> Vec<LinkStats> {
+    let mut out = Vec::new();
+    for tier in ["core", "pod", "tor", "nic"] {
+        let sel: Vec<&LinkStats> = links.iter().filter(|l| link_tier(&l.link) == tier).collect();
+        if sel.is_empty() {
+            continue;
+        }
+        out.push(LinkStats {
+            link: tier.into(),
+            busy_secs: sel.iter().map(|l| l.busy_secs).sum(),
+            utilization: sel.iter().map(|l| l.utilization).fold(0.0, f64::max),
+        });
+    }
+    out
 }
 
 /// Straggler / fault accounting for one run of the thread-per-rank
@@ -378,15 +414,20 @@ pub struct FleetReport {
 }
 
 impl FleetReport {
-    /// Mean stretch across jobs selected by `pred` (`NaN` when none
-    /// match, so a filter typo can't silently pass as "no stretch").
-    pub fn mean_stretch_of(&self, pred: impl Fn(&JobSlo) -> bool) -> f64 {
+    /// Mean stretch across jobs selected by `pred`, or `None` when
+    /// nothing matches — an explicit empty, not the 0/0 `NaN` the old
+    /// signature leaked into comparisons (where it silently made every
+    /// `<`/`>` assertion false).
+    pub fn mean_stretch_of(&self, pred: impl Fn(&JobSlo) -> bool) -> Option<f64> {
         let sel: Vec<f64> = self.jobs.iter().filter(|j| pred(j)).map(|j| j.stretch).collect();
-        sel.iter().sum::<f64>() / sel.len() as f64
+        if sel.is_empty() {
+            return None;
+        }
+        Some(sel.iter().sum::<f64>() / sel.len() as f64)
     }
 
-    /// Mean stretch across the whole fleet.
-    pub fn mean_stretch(&self) -> f64 {
+    /// Mean stretch across the whole fleet (`None` for a jobless fleet).
+    pub fn mean_stretch(&self) -> Option<f64> {
         self.mean_stretch_of(|_| true)
     }
 
@@ -540,13 +581,41 @@ mod tests {
             fleet_makespan: 25.0,
             spine_busy_total: 2.0,
         };
-        assert!((r.mean_stretch() - 2.0).abs() < 1e-12);
-        assert!((r.mean_stretch_of(|j| j.algo != "csgd") - 1.5).abs() < 1e-12);
-        assert!(r.mean_stretch_of(|_| false).is_nan(), "empty selection is loud");
+        assert!((r.mean_stretch().unwrap() - 2.0).abs() < 1e-12);
+        assert!((r.mean_stretch_of(|j| j.algo != "csgd").unwrap() - 1.5).abs() < 1e-12);
+        assert_eq!(r.mean_stretch_of(|_| false), None, "empty selection is an explicit None");
+        assert_eq!(FleetReport::default().mean_stretch(), None, "jobless fleet has no stretch");
         let table = r.to_table();
         assert!(table.contains("placement=pack"));
         assert!(table.contains("lsgd 3x4"));
         assert!(table.contains("stretch"));
+    }
+
+    #[test]
+    fn link_tier_rollup_sums_busy_and_keeps_bottleneck_utilization() {
+        let l = |link: &str, busy: f64, util: f64| LinkStats {
+            link: link.into(),
+            busy_secs: busy,
+            utilization: util,
+        };
+        let links = [
+            l("plane[0]", 1.0, 0.9),
+            l("plane[1]", 2.0, 0.4),
+            l("agg[0]", 0.5, 0.2),
+            l("pod_up[1]", 0.5, 0.3),
+            l("up[3]", 1.0, 0.1),
+            l("nic_out[0.1]", 0.25, 0.05),
+        ];
+        let tiers = rollup_link_tiers(&links);
+        let names: Vec<&str> = tiers.iter().map(|t| t.link.as_str()).collect();
+        assert_eq!(names, ["core", "pod", "tor", "nic"]);
+        assert!((tiers[0].busy_secs - 3.0).abs() < 1e-12, "core busy sums the planes");
+        assert!((tiers[0].utilization - 0.9).abs() < 1e-12, "tier keeps the bottleneck");
+        assert!((tiers[1].busy_secs - 1.0).abs() < 1e-12);
+        // a two-tier report has no pod tier at all
+        let two = rollup_link_tiers(&[l("spine", 1.0, 0.5), l("up[0]", 0.5, 0.2)]);
+        let names: Vec<&str> = two.iter().map(|t| t.link.as_str()).collect();
+        assert_eq!(names, ["core", "tor"]);
     }
 
     #[test]

@@ -839,6 +839,7 @@ impl SegCosts<'_> {
 /// *positional* semantics — it scales the named communicator slot's
 /// whole lane (see [`super::perturb::PerturbConfig::link_factor`]).
 fn degraded_fabric(p: &PerturbConfig, fab: &Fabric, groups: usize, step: usize) -> Option<Fabric> {
+    use super::perturb::LinkTarget;
     let mut out: Option<Fabric> = None;
     for gi in 0..groups {
         let f = p.link_factor(gi, step);
@@ -850,6 +851,25 @@ fn degraded_fabric(p: &PerturbConfig, fab: &Fabric, groups: usize, step: usize) 
             let down = fb.downlink(gi);
             let cap = fb.caps()[down] / f;
             fb.set_link_cap(down, cap);
+        }
+    }
+    // named core targets: the two-tier spine, or one spine plane of a
+    // three-tier core — a degraded plane hits every flow routed over
+    // it, and only those (adaptive routing steers around it entirely)
+    let spine_f = p.core_link_factor(LinkTarget::Spine, step);
+    if spine_f != 1.0 {
+        let fb = out.get_or_insert_with(|| fab.clone());
+        let l = fb.spine();
+        let cap = fb.caps()[l] / spine_f;
+        fb.set_link_cap(l, cap);
+    }
+    for k in 0..fab.plane_count() {
+        let f = p.core_link_factor(LinkTarget::Plane(k), step);
+        if f != 1.0 {
+            let fb = out.get_or_insert_with(|| fab.clone());
+            let l = fb.plane(k);
+            let cap = fb.caps()[l] / f;
+            fb.set_link_cap(l, cap);
         }
     }
     out
@@ -1630,10 +1650,14 @@ fn extract_colls(sched: &dyn Scheduler, spans: &[Span]) -> Vec<FleetColl> {
 ///    ([`extract_colls`]).
 /// 2. **Contention layer** — a fluid replay on the *rack-level* shared
 ///    fabric (`racks` groups of `rack_slots` lanes,
-///    [`Fabric::two_tier`] with the fleet's oversub). Each collective
+///    [`Fabric::two_tier`] with the fleet's oversub, or
+///    [`Fabric::three_tier`] when `pods >= 2`). Each collective
 ///    becomes its placement's spine-crossing ring hops, tagged with
 ///    the owning job, and all live flows compete in the existing
-///    max–min allocator. A flow's progress is scaled by
+///    max–min allocator. With a multi-pod fabric each rack-crossing
+///    lane picks its spine plane per the fleet's routing policy
+///    (PR 9's crossing minimization pushed down from job to
+///    communicator-lane granularity). A flow's progress is scaled by
 ///    `r_shared / r_alone` — the rate the allocator grants it over the
 ///    rate it would get with only its own job present — so with one
 ///    tenant the two solves coincide and the fleet prices *exactly*
@@ -1653,6 +1677,19 @@ pub fn run_fleet(
 ) -> Result<crate::metrics::FleetReport> {
     use crate::metrics::{FleetReport, JobSlo};
     fleet.validate()?;
+    // --link-degrade windows are step-indexed against a single job's
+    // schedule; the fleet layer-2 replay runs on a continuous shared
+    // clock with no step counter, so the windows cannot bind to it.
+    // Refusing loudly beats the old behavior (the solo layer applied
+    // them while the contention layer silently replayed on a pristine
+    // fabric, under-pricing every degraded run).
+    anyhow::ensure!(
+        p.link_windows.is_empty(),
+        "--link-degrade windows are not supported under `fleet`: the shared-fabric \
+         replay has no per-job step clock to bind {} window(s) to (drop --link-degrade \
+         or price the job solo)",
+        p.link_windows.len()
+    );
     let njobs = fleet.jobs.len();
 
     // ---- layer 1: solo pricing on private fabrics --------------------
@@ -1684,9 +1721,14 @@ pub fn run_fleet(
     }
 
     // ---- layer 2: fluid contention replay on the rack fabric ---------
-    let shared = Fabric::two_tier(&vec![fleet.rack_slots; fleet.racks], fleet.oversub);
+    let rack_sizes = vec![fleet.rack_slots; fleet.racks];
+    let shared = if fleet.pods > 1 {
+        Fabric::three_tier(&rack_sizes, fleet.oversub, fleet.pods).with_routing(fleet.routing)
+    } else {
+        Fabric::two_tier(&rack_sizes, fleet.oversub)
+    };
     let caps = shared.caps().to_vec();
-    let spine = shared.spine();
+    let core = shared.core();
     let mut inv = RackInventory::new(fleet.racks, fleet.rack_slots);
 
     #[derive(Debug)]
@@ -1808,7 +1850,7 @@ pub fn run_fleet(
         if dt > 0.0 {
             for (i, f) in flows.iter_mut().enumerate() {
                 f.remaining -= dt * ratio[i];
-                if f.route.contains(&spine) {
+                if f.route.iter().any(|l| core.contains(l)) {
                     js[f.job].spine_busy += dt * r_all[i];
                 }
             }
@@ -1889,13 +1931,36 @@ pub fn run_fleet(
                 let racks = &js[job].racks;
                 let g = racks.len();
                 let mut n = 0;
+                // routing choice at communicator-lane granularity: each
+                // rack-crossing ring hop picks its spine plane — ECMP
+                // hashes (job, collective, lane) under [`domain::ROUTE`],
+                // Adaptive starts from the planes' live-flow load
+                let mut plane_load = vec![0.0_f64; shared.plane_count()];
+                for f in &flows {
+                    for (k, load) in plane_load.iter_mut().enumerate() {
+                        if f.route.contains(&shared.plane(k)) {
+                            *load += 1.0;
+                        }
+                    }
+                }
                 for gi in 0..g {
                     let (ra, rb) = (racks[gi], racks[(gi + 1) % g]);
                     if g > 1 && ra != rb {
+                        let k = if shared.route_choices(ra, rb) <= 1 {
+                            0
+                        } else {
+                            let h = mix(
+                                fleet.seed,
+                                domain::ROUTE,
+                                ((job as u64) << 40) | ((c as u64) << 16) | gi as u64,
+                                ((ra as u64) << 32) | rb as u64,
+                            );
+                            shared.pick_plane(h, &mut plane_load, 1.0)
+                        };
                         flows.push(ActiveFlow {
                             job,
                             coll: c,
-                            route: shared.route_spine(ra, rb),
+                            route: shared.route_spine_via(ra, rb, k),
                             remaining: coll.dur,
                             dur: coll.dur,
                         });

@@ -69,44 +69,146 @@ pub enum FabricModel {
     Flat,
     /// Two-tier Clos: per-rank NICs, per-group switches, shared spine.
     TwoTier,
+    /// Three-tier Clos: NIC → ToR → aggregation pod → spine plane.
+    /// Groups split contiguously across `pods` aggregation pods; one
+    /// spine plane per pod gives pod-crossing flows a real multipath
+    /// choice ([`RoutingPolicy`]).
+    ThreeTier {
+        /// Aggregation pods (= spine planes). Clamped to the group
+        /// count at build time; `pods = 1` collapses to a two-tier
+        /// graph whose agg switch plays the spine role exactly.
+        pods: usize,
+    },
+}
+
+/// How a pod-crossing flow picks among the candidate spine planes of a
+/// three-tier fabric. Two-tier and flat fabrics have a single path, so
+/// any policy but [`RoutingPolicy::Deterministic`] is rejected there
+/// (silent no-op convention).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoutingPolicy {
+    /// Every crossing flow rides spine plane 0 — the worst case under
+    /// contention, and the baseline the repricing contracts pin.
+    #[default]
+    Deterministic,
+    /// Hash (seed, collective, src, dst) over the planes via the
+    /// route-domain draw ([`super::perturb`] `domain::ROUTE`) — the
+    /// classic static flow-hash: bitwise-reproducible per seed, blind
+    /// to load and to degraded planes.
+    Ecmp,
+    /// Pick the candidate plane with the least projected relative load
+    /// at flow start (ties → lowest plane id). Capacity-aware, so a
+    /// degraded plane is routed around instead of merely diluted.
+    Adaptive,
+}
+
+impl std::str::FromStr for RoutingPolicy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "det" | "deterministic" => Ok(Self::Deterministic),
+            "ecmp" => Ok(Self::Ecmp),
+            "adaptive" => Ok(Self::Adaptive),
+            other => {
+                anyhow::bail!("unknown routing policy {other:?} (expected det|ecmp|adaptive)")
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for RoutingPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Deterministic => "det",
+            Self::Ecmp => "ecmp",
+            Self::Adaptive => "adaptive",
+        })
+    }
 }
 
 /// Fabric knobs. `Default` is the flat/private-link model — exactly
 /// the pre-fabric behaviour.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FabricConfig {
-    /// Private links or the two-tier shared graph.
+    /// Private links, the two-tier shared graph, or the three-tier
+    /// pod/plane graph.
     pub model: FabricModel,
-    /// Spine oversubscription factor `≥ 1`: the spine carries
-    /// `groups / oversub` NIC-units of bandwidth. `1` = non-blocking.
+    /// Spine oversubscription factor `≥ 1`: the spine (two-tier) or
+    /// each agg switch / spine plane (three-tier) carries its tier's
+    /// lane count divided by this. `1` = non-blocking.
     pub oversub: f64,
+    /// How pod-crossing flows pick a spine plane (three-tier only).
+    pub routing: RoutingPolicy,
 }
 
 impl Default for FabricConfig {
     fn default() -> Self {
-        Self { model: FabricModel::Flat, oversub: 1.0 }
+        Self { model: FabricModel::Flat, oversub: 1.0, routing: RoutingPolicy::Deterministic }
     }
+}
+
+/// Parse-time oversubscription check: a non-finite or `< 1` factor is
+/// rejected *here*, with a named error, so call paths that never reach
+/// `validate` cannot carry a nonsense oversub (hard-error convention).
+fn parse_oversub(spec: &str, field: &str) -> Result<f64> {
+    let v: f64 = field.trim().parse().map_err(|_| {
+        anyhow::anyhow!("bad oversubscription factor in fabric spec {spec:?}")
+    })?;
+    anyhow::ensure!(
+        v.is_finite() && v >= 1.0,
+        "fabric oversubscription in {spec:?} must be a finite factor ≥ 1 (got {v})"
+    );
+    Ok(v)
 }
 
 impl std::str::FromStr for FabricConfig {
     type Err = anyhow::Error;
 
-    /// Parse `flat`, `2tier`, or `2tier:OVERSUB` (e.g. `2tier:2.5`).
+    /// Parse `flat`, `2tier[:OVERSUB]`, or `3tier[:OVERSUB[:PODS]]`
+    /// (e.g. `2tier:2.5`, `3tier:4:2`). Pods default to 2 — the
+    /// smallest graph with a real multipath choice.
     fn from_str(s: &str) -> Result<Self> {
         let cfg = match s {
             "flat" => FabricConfig::default(),
             "2tier" | "two-tier" | "twotier" => {
-                FabricConfig { model: FabricModel::TwoTier, oversub: 1.0 }
+                FabricConfig { model: FabricModel::TwoTier, ..FabricConfig::default() }
             }
-            other => match other.strip_prefix("2tier:") {
-                Some(f) => FabricConfig {
-                    model: FabricModel::TwoTier,
-                    oversub: f.trim().parse().map_err(|_| {
-                        anyhow::anyhow!("bad oversubscription factor in fabric spec {s:?}")
-                    })?,
-                },
-                None => anyhow::bail!("unknown fabric {s:?} (flat|2tier[:oversub])"),
+            "3tier" | "three-tier" | "threetier" => FabricConfig {
+                model: FabricModel::ThreeTier { pods: 2 },
+                ..FabricConfig::default()
             },
+            other => {
+                if let Some(f) = other.strip_prefix("2tier:") {
+                    FabricConfig {
+                        model: FabricModel::TwoTier,
+                        oversub: parse_oversub(s, f)?,
+                        ..FabricConfig::default()
+                    }
+                } else if let Some(rest) = other.strip_prefix("3tier:") {
+                    let (f, pods) = match rest.split_once(':') {
+                        None => (rest, 2),
+                        Some((f, p)) => {
+                            let pods: usize = p.trim().parse().map_err(|_| {
+                                anyhow::anyhow!("bad pod count in fabric spec {s:?}")
+                            })?;
+                            anyhow::ensure!(
+                                pods >= 1,
+                                "fabric spec {s:?} needs at least one pod"
+                            );
+                            (f, pods)
+                        }
+                    };
+                    FabricConfig {
+                        model: FabricModel::ThreeTier { pods },
+                        oversub: parse_oversub(s, f)?,
+                        ..FabricConfig::default()
+                    }
+                } else {
+                    anyhow::bail!(
+                        "unknown fabric {s:?} (flat|2tier[:oversub]|3tier[:oversub[:pods]])"
+                    );
+                }
+            }
         };
         cfg.validate()?;
         Ok(cfg)
@@ -133,6 +235,21 @@ impl FabricConfig {
             anyhow::ensure!(
                 self.oversub == 1.0,
                 "oversubscription has no effect under the flat fabric — pass --fabric 2tier:F"
+            );
+        }
+        if let FabricModel::ThreeTier { pods } = self.model {
+            anyhow::ensure!(pods >= 1, "a three-tier fabric needs at least one pod");
+        }
+        if self.routing != RoutingPolicy::Deterministic {
+            let pods = match self.model {
+                FabricModel::ThreeTier { pods } => pods,
+                _ => 0,
+            };
+            anyhow::ensure!(
+                pods >= 2,
+                "routing policy {} has a single candidate path here — it needs a \
+                 three-tier fabric with at least 2 pods (--fabric 3tier:F:P)",
+                self.routing
             );
         }
         Ok(())
@@ -164,13 +281,24 @@ impl FabricConfig {
         if self.is_flat() || sizes.len() <= 1 {
             None
         } else {
-            Some(Fabric::two_tier(sizes, self.oversub))
+            let fab = match self.model {
+                FabricModel::Flat => unreachable!("guarded by is_flat above"),
+                FabricModel::TwoTier => Fabric::two_tier(sizes, self.oversub),
+                FabricModel::ThreeTier { pods } => {
+                    Fabric::three_tier(sizes, self.oversub, pods)
+                }
+            };
+            Some(fab.with_routing(self.routing))
         }
     }
 }
 
-/// The link graph of one two-tier fabric instance: index layout is
-/// `[spine, up[0], down[0], …, up[G-1], down[G-1], nic_out/in pairs]`.
+/// The link graph of one fabric instance. Two-tier index layout is
+/// `[spine, up[0], down[0], …, up[G-1], down[G-1], nic_out/in pairs]`;
+/// three-tier prepends the core tier instead of the single spine:
+/// `[plane[0..K], (agg, pod_up, pod_down) per pod, up/down pairs,
+/// nic pairs]` — the per-group and NIC blocks always start at
+/// `core_links`, so two-tier ids are bit-identical to the seed layout.
 /// Uplinks and NICs are full-duplex (separate up/down, out/in links)
 /// so a ring neighbour exchange is not charged twice.
 #[derive(Debug, Clone)]
@@ -180,6 +308,19 @@ pub struct Fabric {
     /// NIC slots per group: `max(group size) + 1` (the `+1` is the
     /// communicator rank riding on the group's switch).
     stride: usize,
+    /// Core-tier links preceding the per-group up/down block: 1 for
+    /// two-tier (the spine), `planes + 3·pods` for three-tier.
+    core_links: usize,
+    /// Spine planes — the multipath width for pod-crossing flows.
+    /// 1 under two-tier.
+    planes: usize,
+    /// Aggregation pods. 1 under two-tier.
+    pods: usize,
+    /// Pod of each group (contiguous balanced split; all zero under
+    /// two-tier).
+    pod_of: Vec<usize>,
+    /// How pod-crossing flows pick a plane (see [`Fabric::pick_plane`]).
+    routing: RoutingPolicy,
 }
 
 impl Fabric {
@@ -193,7 +334,71 @@ impl Fabric {
         let n_links = 1 + 2 * groups + 2 * groups * stride;
         let mut caps = vec![1.0; n_links];
         caps[0] = groups as f64 / oversub.max(1.0);
-        Fabric { caps, groups, stride }
+        Fabric {
+            caps,
+            groups,
+            stride,
+            core_links: 1,
+            planes: 1,
+            pods: 1,
+            pod_of: vec![0; groups],
+            routing: RoutingPolicy::Deterministic,
+        }
+    }
+
+    /// Build the three-tier graph: groups split contiguously over
+    /// `pods` aggregation pods (clamped to the group count), one spine
+    /// plane per pod. Each agg switch carries `pod_size / oversub`
+    /// NIC-units — at `pods = 1` it plays exactly the two-tier spine
+    /// role, which is the `3tier:F:1 ≡ 2tier:F` repricing contract.
+    /// Each plane carries `groups / oversub`: the core is deliberately
+    /// overprovisioned so that at `oversub = 1` even all-on-plane-0
+    /// deterministic routing conserves the private-link costs.
+    /// Pod trunks (`pod_up`/`pod_down`) carry their pod's full lane
+    /// count and are never the bottleneck.
+    pub fn three_tier(sizes: &[usize], oversub: f64, pods: usize) -> Fabric {
+        let groups = sizes.len();
+        let pods = pods.clamp(1, groups.max(1));
+        let planes = pods;
+        let stride = sizes.iter().copied().max().unwrap_or(0) + 1;
+        let core_links = planes + 3 * pods;
+        let n_links = core_links + 2 * groups + 2 * groups * stride;
+        let mut caps = vec![1.0; n_links];
+        let os = oversub.max(1.0);
+        let pod_of: Vec<usize> = (0..groups).map(|g| g * pods / groups).collect();
+        let mut pod_sizes = vec![0usize; pods];
+        for &p in &pod_of {
+            pod_sizes[p] += 1;
+        }
+        for k in 0..planes {
+            caps[k] = groups as f64 / os;
+        }
+        for (p, &sz) in pod_sizes.iter().enumerate() {
+            caps[planes + 3 * p] = sz as f64 / os; // agg[p]
+            caps[planes + 3 * p + 1] = sz as f64; // pod_up[p]
+            caps[planes + 3 * p + 2] = sz as f64; // pod_down[p]
+        }
+        Fabric {
+            caps,
+            groups,
+            stride,
+            core_links,
+            planes,
+            pods,
+            pod_of,
+            routing: RoutingPolicy::Deterministic,
+        }
+    }
+
+    /// Attach a routing policy (builder style — [`FabricConfig::build`]
+    /// threads the configured policy through here).
+    pub fn with_routing(mut self, routing: RoutingPolicy) -> Fabric {
+        self.routing = routing;
+        self
+    }
+
+    pub fn routing(&self) -> RoutingPolicy {
+        self.routing
     }
 
     /// Link capacities, indexed by link id.
@@ -217,46 +422,111 @@ impl Fabric {
         self.groups
     }
 
-    /// The shared spine's link id (always 0).
+    /// The shared spine's link id (always 0). Under three-tier this is
+    /// spine plane 0 — the deterministic-routing default path.
     pub fn spine(&self) -> usize {
         0
     }
 
-    /// Group `g`'s uplink (group switch → spine) link id. Public so
-    /// fault injection (`--link-degrade` under `--fabric 2tier`) can
+    /// Spine plane `k`'s link id (`k < plane_count`). Plane 0 is the
+    /// two-tier spine.
+    pub fn plane(&self, k: usize) -> usize {
+        debug_assert!(k < self.planes);
+        k
+    }
+
+    /// Spine planes — the multipath width for pod-crossing flows
+    /// (1 under two-tier).
+    pub fn plane_count(&self) -> usize {
+        self.planes
+    }
+
+    /// Aggregation pods (1 under two-tier).
+    pub fn pod_count(&self) -> usize {
+        self.pods
+    }
+
+    /// Pod hosting group `g`.
+    pub fn pod_of(&self, g: usize) -> usize {
+        self.pod_of[g]
+    }
+
+    /// The core-tier link ids: the single spine under two-tier, the
+    /// spine planes plus every pod's agg/trunk links under three-tier.
+    /// Busy seconds on these links are what multi-tenant replays
+    /// attribute back to owners as "spine" time.
+    pub fn core(&self) -> std::ops::Range<usize> {
+        0..self.core_links
+    }
+
+    /// Pod `p`'s aggregation switch link id (three-tier).
+    pub fn agg(&self, p: usize) -> usize {
+        debug_assert!(self.core_links > 1, "agg links exist only under three-tier");
+        self.planes + 3 * p
+    }
+
+    /// Pod `p`'s trunk toward the spine planes (three-tier).
+    pub fn pod_up(&self, p: usize) -> usize {
+        self.agg(p) + 1
+    }
+
+    /// Pod `p`'s trunk from the spine planes (three-tier).
+    pub fn pod_down(&self, p: usize) -> usize {
+        self.agg(p) + 2
+    }
+
+    /// Group `g`'s uplink (group switch → core) link id. Public so
+    /// fault injection (`--link-degrade` under a routed fabric) can
     /// squeeze the physical link a communicator's traffic rides on.
     pub fn uplink(&self, g: usize) -> usize {
         self.up(g)
     }
 
-    /// Group `g`'s downlink (spine → group switch) link id — the
+    /// Group `g`'s downlink (core → group switch) link id — the
     /// receive side of [`Fabric::uplink`].
     pub fn downlink(&self, g: usize) -> usize {
         self.down(g)
     }
 
     fn up(&self, g: usize) -> usize {
-        1 + 2 * g
+        self.core_links + 2 * g
     }
 
     fn down(&self, g: usize) -> usize {
-        2 + 2 * g
+        self.core_links + 2 * g + 1
     }
 
     fn nic_out(&self, g: usize, slot: usize) -> usize {
-        1 + 2 * self.groups + 2 * (g * self.stride + slot)
+        self.core_links + 2 * self.groups + 2 * (g * self.stride + slot)
     }
 
     fn nic_in(&self, g: usize, slot: usize) -> usize {
         self.nic_out(g, slot) + 1
     }
 
+    /// True when this is the single-spine two-tier graph.
+    fn is_two_tier(&self) -> bool {
+        self.core_links == 1
+    }
+
     /// Report label of a link id.
     pub fn link_name(&self, l: usize) -> String {
-        if l == 0 {
-            return "spine".to_string();
+        if l < self.core_links {
+            if self.is_two_tier() {
+                return "spine".to_string();
+            }
+            if l < self.planes {
+                return format!("plane[{l}]");
+            }
+            let c = l - self.planes;
+            let p = c / 3;
+            return match c % 3 {
+                0 => format!("agg[{p}]"),
+                1 => format!("pod_up[{p}]"),
+                _ => format!("pod_down[{p}]"),
+            };
         }
-        let l1 = l - 1;
+        let l1 = l - self.core_links;
         if l1 < 2 * self.groups {
             let g = l1 / 2;
             return if l1 % 2 == 0 { format!("up[{g}]") } else { format!("down[{g}]") };
@@ -280,21 +550,91 @@ impl Fabric {
     }
 
     /// Route of one communicator-to-communicator message of the global
-    /// allreduce: group `gs`'s uplink → spine → group `gd`'s downlink.
+    /// allreduce over the default path (spine plane 0 — what
+    /// deterministic routing always picks).
     pub fn route_spine(&self, gs: usize, gd: usize) -> Vec<usize> {
-        vec![self.up(gs), self.spine(), self.down(gd)]
+        self.route_spine_via(gs, gd, 0)
+    }
+
+    /// Route of one crossing message via spine plane `k`: two-tier is
+    /// uplink → spine → downlink; three-tier same-pod traffic turns
+    /// around at the pod's agg switch (`k` is irrelevant — there is
+    /// one path); pod-crossing traffic climbs the pod trunk to plane
+    /// `k` and descends into the destination pod.
+    pub fn route_spine_via(&self, gs: usize, gd: usize, k: usize) -> Vec<usize> {
+        if self.is_two_tier() {
+            return vec![self.up(gs), self.spine(), self.down(gd)];
+        }
+        let (ps, pd) = (self.pod_of[gs], self.pod_of[gd]);
+        if ps == pd {
+            vec![self.up(gs), self.agg(ps), self.down(gd)]
+        } else {
+            vec![self.up(gs), self.pod_up(ps), self.plane(k), self.pod_down(pd), self.down(gd)]
+        }
+    }
+
+    /// Number of candidate core paths for a `gs → gd` crossing
+    /// message: one per spine plane for pod-crossing three-tier
+    /// traffic, 1 everywhere else (no choice to make).
+    pub fn route_choices(&self, gs: usize, gd: usize) -> usize {
+        if !self.is_two_tier() && self.pod_of[gs] != self.pod_of[gd] {
+            self.planes
+        } else {
+            1
+        }
+    }
+
+    /// Pick the spine plane for one pod-crossing message under the
+    /// fabric's routing policy. `h` is the caller's route-domain hash
+    /// (only ECMP consumes it); `load` is a per-plane assigned-work
+    /// tally the caller threads through one collective, and `work` the
+    /// message's weight — Adaptive greedily minimizes the projected
+    /// relative load `(load[k] + work) / cap(plane k)` against the
+    /// *current* (possibly degraded) plane capacities, ties to the
+    /// lowest plane id, and charges its choice to `load`. Entirely
+    /// deterministic given (policy, h, call order).
+    pub fn pick_plane(&self, h: u64, load: &mut [f64], work: f64) -> usize {
+        match self.routing {
+            RoutingPolicy::Deterministic => 0,
+            RoutingPolicy::Ecmp => (h % self.planes.max(1) as u64) as usize,
+            RoutingPolicy::Adaptive => {
+                let mut best = 0usize;
+                let mut best_cost = f64::INFINITY;
+                for k in 0..self.planes {
+                    let cap = self.caps[self.plane(k)];
+                    let cost =
+                        if cap > 0.0 { (load[k] + work) / cap } else { f64::INFINITY };
+                    if cost < best_cost {
+                        best = k;
+                        best_cost = cost;
+                    }
+                }
+                load[best] += work;
+                best
+            }
+        }
     }
 
     /// Route of one flat-collective message between worker slots
-    /// (`group`, `local`): NIC out, then — when the peer hangs off
-    /// another switch — uplink/spine/downlink, then NIC in.
+    /// (`group`, `local`) over the default core path: NIC out, then —
+    /// when the peer hangs off another switch — the crossing core
+    /// route, then NIC in.
     pub fn route_flat(&self, src: (usize, usize), dst: (usize, usize)) -> Vec<usize> {
-        let mut r = Vec::with_capacity(5);
+        self.route_flat_via(src, dst, 0)
+    }
+
+    /// [`Fabric::route_flat`] with an explicit spine-plane choice for
+    /// the crossing segment.
+    pub fn route_flat_via(
+        &self,
+        src: (usize, usize),
+        dst: (usize, usize),
+        k: usize,
+    ) -> Vec<usize> {
+        let mut r = Vec::with_capacity(7);
         r.push(self.nic_out(src.0, src.1));
         if src.0 != dst.0 {
-            r.push(self.up(src.0));
-            r.push(self.spine());
-            r.push(self.down(dst.0));
+            r.extend(self.route_spine_via(src.0, dst.0, k));
         }
         r.push(self.nic_in(dst.0, dst.1));
         r
@@ -945,10 +1285,60 @@ mod tests {
         assert_eq!(t.oversub, 2.5);
         assert!("2tier:0.5".parse::<FabricConfig>().is_err(), "oversub below 1");
         assert!("2tier:x".parse::<FabricConfig>().is_err());
-        assert!("3tier".parse::<FabricConfig>().is_err());
+        let t: FabricConfig = "3tier".parse().unwrap();
+        assert_eq!(t.model, FabricModel::ThreeTier { pods: 2 }, "pods default to 2");
+        assert_eq!(t.oversub, 1.0);
+        let t: FabricConfig = "3tier:4".parse().unwrap();
+        assert_eq!((t.model, t.oversub), (FabricModel::ThreeTier { pods: 2 }, 4.0));
+        let t: FabricConfig = "3tier:2.5:4".parse().unwrap();
+        assert_eq!((t.model, t.oversub), (FabricModel::ThreeTier { pods: 4 }, 2.5));
+        assert!("3tier:1:0".parse::<FabricConfig>().is_err(), "zero pods");
+        assert!("3tier:1:x".parse::<FabricConfig>().is_err());
         // programmatic misuse: oversub under flat is a silent no-op
-        let bad = FabricConfig { model: FabricModel::Flat, oversub: 2.0 };
+        let bad = FabricConfig { model: FabricModel::Flat, oversub: 2.0, ..Default::default() };
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn bad_oversub_is_a_parse_time_error_with_a_named_message() {
+        // regression: `2tier:-3` / `2tier:inf` used to parse and defer
+        // the rejection to validate(), so call paths that never
+        // validated carried a nonsense oversub
+        for spec in ["2tier:-3", "2tier:inf", "2tier:nan", "3tier:-3:2", "3tier:inf"] {
+            let err = spec.parse::<FabricConfig>().unwrap_err().to_string();
+            assert!(
+                err.contains("must be a finite factor ≥ 1"),
+                "{spec}: want the named parse-time error, got {err:?}"
+            );
+            assert!(err.contains(spec), "{spec}: the offending spec is echoed: {err:?}");
+        }
+    }
+
+    #[test]
+    fn routing_policy_parses_and_rejects_single_path_fabrics() {
+        assert_eq!("det".parse::<RoutingPolicy>().unwrap(), RoutingPolicy::Deterministic);
+        assert_eq!("ecmp".parse::<RoutingPolicy>().unwrap(), RoutingPolicy::Ecmp);
+        assert_eq!("adaptive".parse::<RoutingPolicy>().unwrap(), RoutingPolicy::Adaptive);
+        assert!("fastest".parse::<RoutingPolicy>().is_err());
+        // ECMP/adaptive with a single candidate path would be a silent
+        // no-op — rejected under flat, 2tier, and single-pod 3tier
+        for model in [
+            FabricModel::Flat,
+            FabricModel::TwoTier,
+            FabricModel::ThreeTier { pods: 1 },
+        ] {
+            for routing in [RoutingPolicy::Ecmp, RoutingPolicy::Adaptive] {
+                let cfg = FabricConfig { model, routing, ..Default::default() };
+                let err = cfg.validate().unwrap_err().to_string();
+                assert!(err.contains("single candidate path"), "{model:?}: {err}");
+            }
+        }
+        let ok = FabricConfig {
+            model: FabricModel::ThreeTier { pods: 2 },
+            routing: RoutingPolicy::Ecmp,
+            ..Default::default()
+        };
+        ok.validate().unwrap();
     }
 
     #[test]
@@ -1367,6 +1757,189 @@ mod tests {
         // refilled inventory accepts again
         inv.place(PlacementPolicy::Spread, 4).unwrap();
         assert_eq!(inv.free_slots(), 0);
+    }
+
+    #[test]
+    fn three_tier_layout_names_and_caps() {
+        let fab = Fabric::three_tier(&[2, 2, 2, 2], 2.0, 2);
+        assert_eq!(fab.plane_count(), 2);
+        assert_eq!(fab.pod_count(), 2);
+        assert_eq!((0..4).map(|g| fab.pod_of(g)).collect::<Vec<_>>(), vec![0, 0, 1, 1]);
+        assert_eq!(fab.core(), 0..8, "2 planes + 3 core links per pod");
+        assert_eq!(fab.link_name(fab.plane(1)), "plane[1]");
+        assert_eq!(fab.link_name(fab.agg(0)), "agg[0]");
+        assert_eq!(fab.link_name(fab.pod_up(1)), "pod_up[1]");
+        assert_eq!(fab.link_name(fab.pod_down(0)), "pod_down[0]");
+        assert_eq!(fab.link_name(fab.uplink(2)), "up[2]");
+        assert_eq!(fab.link_name(fab.downlink(3)), "down[3]");
+        // planes carry G/F each, aggs pod/F, trunks the full pod
+        assert_eq!(fab.caps()[fab.plane(0)], 2.0);
+        assert_eq!(fab.caps()[fab.agg(0)], 1.0);
+        assert_eq!(fab.caps()[fab.pod_up(0)], 2.0);
+        assert_eq!(fab.caps()[fab.uplink(0)], 1.0);
+        // every id names a distinct link
+        let names: std::collections::BTreeSet<String> =
+            (0..fab.num_links()).map(|l| fab.link_name(l)).collect();
+        assert_eq!(names.len(), fab.num_links());
+        // pods clamp to the group count; uneven splits stay contiguous
+        assert_eq!(Fabric::three_tier(&[1, 1], 1.0, 8).pod_count(), 2);
+        let uneven = Fabric::three_tier(&[1; 5], 1.0, 2);
+        assert_eq!((0..5).map(|g| uneven.pod_of(g)).collect::<Vec<_>>(), vec![0, 0, 0, 1, 1]);
+    }
+
+    #[test]
+    fn three_tier_routes_turn_around_at_the_right_tier() {
+        let fab = Fabric::three_tier(&[2; 4], 1.0, 2);
+        assert_eq!(fab.route_spine(0, 1), vec![fab.uplink(0), fab.agg(0), fab.downlink(1)]);
+        assert_eq!(
+            fab.route_spine_via(1, 2, 1),
+            vec![fab.uplink(1), fab.pod_up(0), fab.plane(1), fab.pod_down(1), fab.downlink(2)]
+        );
+        assert_eq!(fab.route_choices(0, 1), 1, "same-pod traffic has one path");
+        assert_eq!(fab.route_choices(1, 2), 2, "pod-crossing traffic picks a plane");
+        // flat routes splice the same core path between the NIC pair
+        let r = fab.route_flat_via((0, 0), (3, 1), 1);
+        assert_eq!(r.len(), 7);
+        assert_eq!(r[1..6], fab.route_spine_via(0, 3, 1)[..]);
+        // a single pod is structurally the two-tier graph: the agg
+        // switch plays the spine, at the spine's capacity
+        let one = Fabric::three_tier(&[3; 4], 2.5, 1);
+        let two = Fabric::two_tier(&[3; 4], 2.5);
+        assert_eq!(one.route_spine(1, 2).len(), 3);
+        assert_eq!(one.caps()[one.agg(0)], two.caps()[two.spine()]);
+        assert_eq!(one.route_choices(0, 3), 1);
+    }
+
+    #[test]
+    fn pick_plane_follows_the_policy() {
+        let base = Fabric::three_tier(&[2; 8], 4.0, 4);
+        let mut load = vec![0.0; 4];
+        let det = base.clone().with_routing(RoutingPolicy::Deterministic);
+        assert_eq!(det.pick_plane(17, &mut load, 1.0), 0, "deterministic pins plane 0");
+
+        let ecmp = base.clone().with_routing(RoutingPolicy::Ecmp);
+        for h in 0..16u64 {
+            assert_eq!(ecmp.pick_plane(h, &mut load, 1.0), (h % 4) as usize);
+        }
+
+        let mut adaptive = base.clone().with_routing(RoutingPolicy::Adaptive);
+        let mut load = vec![0.0; 4];
+        let picks: Vec<usize> =
+            (0..4).map(|_| adaptive.pick_plane(0, &mut load, 1.0)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 3], "equal caps round-robin by tie-break");
+        // a degraded plane is avoided, not merely diluted
+        adaptive.set_link_cap(adaptive.plane(0), 1e-3);
+        let mut load = vec![0.0; 4];
+        let picks: Vec<usize> =
+            (0..6).map(|_| adaptive.pick_plane(0, &mut load, 1.0)).collect();
+        assert!(picks.iter().all(|&k| k != 0), "degraded plane routed around: {picks:?}");
+    }
+
+    /// Ring flows over a 3-tier fabric with the given policy: crossing
+    /// hops pick their plane through [`Fabric::pick_plane`] exactly
+    /// like the routed replay does.
+    fn ring_flows_under(fab: &Fabric, service: f64) -> Vec<Flow> {
+        let g = fab.groups();
+        let mut load = vec![0.0; fab.plane_count()];
+        (0..g)
+            .map(|gs| {
+                let gd = (gs + 1) % g;
+                let k = if fab.route_choices(gs, gd) > 1 {
+                    fab.pick_plane(gs as u64, &mut load, 1.0)
+                } else {
+                    0
+                };
+                Flow { route: fab.route_spine_via(gs, gd, k), service, tag: gs, owner: 0 }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn routing_policies_conserve_at_oversub_1_and_order_under_contention() {
+        // 8 groups over 4 pods: the communicator ring crosses pods 4
+        // times, so route choice has real work to do
+        let sizes = [2usize; 8];
+        let run = |oversub: f64, routing: RoutingPolicy, degrade0: bool| {
+            let mut fab = Fabric::three_tier(&sizes, oversub, 4).with_routing(routing);
+            if degrade0 {
+                let p0 = fab.plane(0);
+                let c = fab.caps()[p0];
+                fab.set_link_cap(p0, c / 64.0);
+            }
+            let flows = ring_flows_under(&fab, 1.0);
+            run_flows(&fab, &flows)
+        };
+        let policies =
+            [RoutingPolicy::Deterministic, RoutingPolicy::Ecmp, RoutingPolicy::Adaptive];
+        // oversub 1: every policy conserves the private-link cost
+        for routing in policies {
+            let out = run(1.0, routing, false);
+            assert!((out.makespan - 1.0).abs() < 1e-9, "{routing}: {}", out.makespan);
+            assert!((out.worst_slowdown - 1.0).abs() < 1e-9);
+        }
+        // contended with plane 0 degraded: the policies order
+        let det = run(4.0, RoutingPolicy::Deterministic, true).makespan;
+        let ecmp = run(4.0, RoutingPolicy::Ecmp, true).makespan;
+        let ada = run(4.0, RoutingPolicy::Adaptive, true).makespan;
+        assert!(
+            ada <= ecmp + 1e-9 && ecmp <= det + 1e-9,
+            "adaptive {ada} ≤ ecmp {ecmp} ≤ det {det}"
+        );
+        assert!(ada < det - 1e-9, "routing around the degraded plane is a strict win");
+    }
+
+    #[test]
+    fn ecmp_conserves_crossing_bytes_across_planes() {
+        use crate::util::prop::{self, GenExt};
+        // satellite property: at oversub 1 the bytes ECMP spreads over
+        // the candidate planes sum to exactly what deterministic
+        // routing pushes through plane 0 — path choice moves traffic,
+        // it never creates or destroys it
+        prop::run(32, |rng| {
+            let groups = rng.usize_in(4, 9);
+            let pods = rng.usize_in(2, groups.min(4));
+            let sizes: Vec<usize> = (0..groups).map(|_| rng.usize_in(1, 3)).collect();
+            let service = 0.05 + rng.f64();
+            let seed = rng.next_u64();
+            let core_bytes = |routing: RoutingPolicy| {
+                let fab = Fabric::three_tier(&sizes, 1.0, pods).with_routing(routing);
+                let mut load = vec![0.0; fab.plane_count()];
+                let flows: Vec<Flow> = (0..groups)
+                    .map(|gs| {
+                        let gd = (gs + 1) % groups;
+                        let k = if fab.route_choices(gs, gd) > 1 {
+                            let h = crate::simnet::perturb::mix(
+                                seed,
+                                crate::simnet::perturb::domain::ROUTE,
+                                gs as u64,
+                                gd as u64,
+                            );
+                            fab.pick_plane(h, &mut load, 1.0)
+                        } else {
+                            0
+                        };
+                        Flow {
+                            route: fab.route_spine_via(gs, gd, k),
+                            service,
+                            tag: gs,
+                            owner: 0,
+                        }
+                    })
+                    .collect();
+                let out = run_flows(&fab, &flows);
+                let planes: f64 = (0..fab.plane_count())
+                    .map(|k| out.busy[fab.plane(k)] * fab.caps()[fab.plane(k)])
+                    .sum();
+                (planes, out.makespan)
+            };
+            let (det_bytes, det_make) = core_bytes(RoutingPolicy::Deterministic);
+            let (ecmp_bytes, ecmp_make) = core_bytes(RoutingPolicy::Ecmp);
+            assert!(
+                (det_bytes - ecmp_bytes).abs() < 1e-9 * det_bytes.max(1.0),
+                "plane bytes: det {det_bytes} vs ecmp {ecmp_bytes}"
+            );
+            assert!((det_make - ecmp_make).abs() < 1e-9, "uncontended makespans agree");
+        });
     }
 
     #[test]

@@ -20,12 +20,15 @@
 //!   reordering and chunk serialization (`NetModel::{ClosedForm,
 //!   Packet}` switches both DES paths; jitter-free packet replays
 //!   reproduce the closed forms to `< 1e-9`);
-//! * [`fabric`] — topology-aware shared fabric (`--fabric 2tier`):
-//!   per-rank NICs, per-group switches, an oversubscribable spine, and
-//!   a max–min fair-share allocator so concurrent message schedules
-//!   compete for links instead of each owning a private one (with one
-//!   flow per link the routed replay degenerates to the private-link
-//!   costs — the conservation contract in `rust/tests/netsim.rs`);
+//! * [`fabric`] — topology-aware shared fabric (`--fabric 2tier` /
+//!   `--fabric 3tier:F:pods`): per-rank NICs, per-group switches, an
+//!   oversubscribable spine (two-tier) or aggregation-pod + spine-plane
+//!   core (three-tier) with `--routing det|ecmp|adaptive` multipath
+//!   choice over the planes, and a max–min fair-share allocator so
+//!   concurrent message schedules compete for links instead of each
+//!   owning a private one (with one flow per link the routed replay
+//!   degenerates to the private-link costs — the conservation contract
+//!   in `rust/tests/netsim.rs`);
 //! * [`perturb`] — seeded straggler / heterogeneity / fail-stop /
 //!   rejoin injection (worker- and communicator-class, plus transient
 //!   link-degradation windows), shared with the real thread-per-rank
@@ -43,9 +46,9 @@ pub mod net;
 pub mod perturb;
 
 pub use cost::{AllreduceAlgo, Link};
-pub use fabric::{FabricConfig, FabricModel, PlacementPolicy, RackInventory};
+pub use fabric::{FabricConfig, FabricModel, PlacementPolicy, RackInventory, RoutingPolicy};
 pub use net::{NetConfig, NetModel};
-pub use perturb::{FailStop, LinkWindow, PerturbConfig, Rejoin};
+pub use perturb::{FailStop, LinkTarget, LinkWindow, PerturbConfig, Rejoin};
 
 use crate::topology::Topology;
 

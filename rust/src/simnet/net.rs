@@ -269,9 +269,16 @@ impl NetAcc {
                 self.fabric_busy[id] += b;
             }
         }
-        let spine = fab.spine();
-        if spine < busy.len() && busy[spine] > 0.0 {
-            *self.owner_spine.entry(self.flow_owner).or_default() += busy[spine];
+        // core-tier busy (the two-tier spine; planes + pod links under
+        // three-tier) is what multi-tenant accounting charges owners
+        let mut core = 0.0_f64;
+        for l in fab.core() {
+            if l < busy.len() {
+                core += busy[l];
+            }
+        }
+        if core > 0.0 {
+            *self.owner_spine.entry(self.flow_owner).or_default() += core;
         }
     }
 
@@ -496,6 +503,29 @@ fn pattern_of(shape: Shape, total_rounds: usize, ri: usize) -> usize {
     }
 }
 
+/// Spine-plane choice for one `gs → gd` crossing message: plane 0
+/// unless the fabric offers a real multipath choice (three-tier,
+/// pod-crossing), in which case its routing policy decides — ECMP
+/// from a [`domain::ROUTE`] draw keyed by (collective, src group, dst
+/// group) so the choice is per-flow-stable and bitwise-reproducible
+/// per seed, adaptive from the running per-plane load tally. The
+/// route draws live in their own domain: switching policies can never
+/// shift the NET jitter/reorder stream.
+fn crossing_plane(
+    fab: &Fabric,
+    seed: u64,
+    a: u64,
+    gs: usize,
+    gd: usize,
+    plane_load: &mut [f64],
+) -> usize {
+    if fab.route_choices(gs, gd) <= 1 {
+        return 0;
+    }
+    let h = mix(seed, domain::ROUTE, a, ((gs as u64) << 32) | gd as u64);
+    fab.pick_plane(h, plane_load, 1.0)
+}
+
 /// Fabric-routed counterpart of [`sim_rounds`]: identical draw keys
 /// and per-message service arithmetic, but each round's messages run
 /// as concurrent flows under progressive filling
@@ -533,6 +563,10 @@ fn sim_rounds_routed(
     };
     let mut arena: Vec<usize> = Vec::new();
     let mut patterns: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n_patterns];
+    // per-plane assignment tally for adaptive routing, threaded across
+    // the whole collective's patterns (the capacities `pick_plane`
+    // consults are `fab`'s — already degraded for this step)
+    let mut plane_load = vec![0.0_f64; fab.plane_count()];
     for (ri, round) in rounds.iter().enumerate() {
         let pid = pattern_of(shape, total_rounds, ri);
         if !patterns[pid].is_empty() {
@@ -543,9 +577,15 @@ fn sim_rounds_routed(
             let (src, dst) = msg_peer(shape, p, total_rounds, ri, mi);
             let route = match kind {
                 RouteKind::IntraTree { group } => fab.route_intra(*group, src, dst),
-                RouteKind::CommGlobal => fab.route_spine(src, dst),
+                RouteKind::CommGlobal => {
+                    let k = crossing_plane(fab, seed, a, src, dst, &mut plane_load);
+                    fab.route_spine_via(src, dst, k)
+                }
                 RouteKind::Flat { sizes } => {
-                    fab.route_flat(fabric::flat_slot(sizes, src), fabric::flat_slot(sizes, dst))
+                    let s = fabric::flat_slot(sizes, src);
+                    let d = fabric::flat_slot(sizes, dst);
+                    let k = crossing_plane(fab, seed, a, s.0, d.0, &mut plane_load);
+                    fab.route_flat_via(s, d, k)
                 }
             };
             let off = arena.len();

@@ -66,6 +66,11 @@ pub mod domain {
     /// ([`super::des::run_fleet`]), drawn from the fleet's own seed —
     /// fleet admission never perturbs the per-job schedules.
     pub const FLEET: u64 = 8;
+    /// ECMP spine-plane choice of a pod-crossing flow on a three-tier
+    /// fabric ([`super::fabric::RoutingPolicy::Ecmp`]). A fresh
+    /// domain, so switching routing policies can never shift the
+    /// worker/communicator/link/NET schedules above.
+    pub const ROUTE: u64 = 9;
 }
 
 /// A fail-stop fault: `worker` dies at the boundary *before* executing
@@ -120,41 +125,66 @@ impl std::str::FromStr for Rejoin {
     }
 }
 
-/// A transient link-degradation window: group `group`'s inter-node
-/// fabric runs `factor`× slower for every step in `steps`.
+/// What physical piece of the fabric a [`LinkWindow`] degrades.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkTarget {
+    /// A communicator slot (current-membership group index): the
+    /// historical numeric target. Flat fabric → the slot's whole
+    /// inter-node lane; routed fabric → the slot's up/down links.
+    Group(usize),
+    /// The two-tier shared spine itself — every crossing flow pays.
+    Spine,
+    /// One spine plane of a three-tier fabric. Deterministic routing
+    /// is stuck with a degraded plane 0; ECMP dilutes it; adaptive
+    /// routing steers around it entirely.
+    Plane(usize),
+}
+
+impl std::fmt::Display for LinkTarget {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Group(g) => write!(f, "{g}"),
+            Self::Spine => f.write_str("spine"),
+            Self::Plane(k) => write!(f, "plane{k}"),
+        }
+    }
+}
+
+/// A transient link-degradation window: the targeted piece of fabric
+/// runs `factor`× slower for every step in `steps`.
 ///
-/// `group` names a **communicator slot** (current-membership group
-/// index), not a set of worker ids: a degraded fabric is positional
-/// infrastructure (the g-th node's NIC / rack switch), and it stays
-/// degraded no matter which workers a regroup re-shards onto it.
-/// Consequently, after removals shrink the cluster below `group + 1`
-/// groups, the window is inert for the shrunken stretch (that slot has
-/// no communicator) and takes effect again if a rejoin resurrects it.
-/// Validation bounds `group` against the launch topology — the
-/// per-segment group count is schedule-dependent and can't be checked
-/// statically.
+/// A numeric target names a **communicator slot** (current-membership
+/// group index), not a set of worker ids: a degraded fabric is
+/// positional infrastructure (the g-th node's NIC / rack switch), and
+/// it stays degraded no matter which workers a regroup re-shards onto
+/// it. Consequently, after removals shrink the cluster below
+/// `group + 1` groups, the window is inert for the shrunken stretch
+/// (that slot has no communicator) and takes effect again if a rejoin
+/// resurrects it. Validation bounds `group` against the launch
+/// topology — the per-segment group count is schedule-dependent and
+/// can't be checked statically.
 ///
 /// *What* the window slows depends on the fabric model in force:
 ///
-/// - **Flat fabric** (the default, private per-group lanes): the
+/// - **Flat fabric** (the default, private per-group lanes): a numeric
 ///   window keeps its historical slot semantics and scales the slot's
 ///   whole inter-node lane — startup latency grows, bandwidth shrinks
 ///   ([`super::cost::Link::scaled`], applied via
-///   [`PerturbConfig::link_factor`]).
-/// - **Routed fabric** (`--fabric 2tier`): the window binds to the
-///   slot's *physical* spine-facing links instead — the group's uplink
-///   and downlink capacities are divided by `factor` for the covered
-///   steps, and the max-min fair-share allocator re-prices every flow
-///   crossing them. Flows routed around the squeezed links are
-///   untouched, so the same window hurts less (or more) depending on
-///   who shares the bottleneck — exactly the locality a per-lane
-///   scalar cannot express. See `degraded_fabric` in
-///   [`super::des`].
+///   [`PerturbConfig::link_factor`]). Named targets (`spine`,
+///   `planeK`) have no flat-fabric meaning and are rejected.
+/// - **Routed fabric** (`--fabric 2tier` / `3tier`): windows bind to
+///   *physical* fabric links — a numeric window divides the group's
+///   uplink and downlink capacities by `factor` for the covered steps,
+///   `spine@…` squeezes the two-tier spine, and `planeK@…` squeezes
+///   spine plane `K` of a three-tier core, hitting every flow routed
+///   over it. The max-min fair-share allocator re-prices every flow
+///   crossing the squeezed links; flows routed around them are
+///   untouched — exactly the locality a per-lane scalar cannot
+///   express. See `degraded_fabric` in [`super::des`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct LinkWindow {
-    /// Communicator slot (membership group index) whose fabric
-    /// degrades.
-    pub group: usize,
+    /// Which piece of the fabric degrades.
+    pub target: LinkTarget,
     /// Steps the window covers (half-open).
     pub steps: std::ops::Range<usize>,
     /// Slowdown factor `≥ 1`.
@@ -164,11 +194,26 @@ pub struct LinkWindow {
 impl std::str::FromStr for LinkWindow {
     type Err = anyhow::Error;
 
-    /// Parse `GROUP@START..ENDxFACTOR`, e.g. `1@3..8x2.5`.
+    /// Parse `TARGET@START..ENDxFACTOR`, where `TARGET` is a group
+    /// index, `spine`, or `planeK` — e.g. `1@3..8x2.5`,
+    /// `spine@0..4x8`, `plane0@2..6x16`.
     fn from_str(s: &str) -> Result<Self> {
-        let (g, rest) = s.split_once('@').with_context(|| {
-            format!("bad link window {s:?} (expected GROUP@START..ENDxFACTOR, e.g. 1@3..8x2.5)")
+        let (t, rest) = s.split_once('@').with_context(|| {
+            format!(
+                "bad link window {s:?} (expected TARGET@START..ENDxFACTOR, e.g. 1@3..8x2.5, \
+                 spine@0..4x8, plane0@2..6x16)"
+            )
         })?;
+        let t = t.trim();
+        let target = if t == "spine" {
+            LinkTarget::Spine
+        } else if let Some(k) = t.strip_prefix("plane") {
+            LinkTarget::Plane(
+                k.trim().parse().with_context(|| format!("bad plane index in {s:?}"))?,
+            )
+        } else {
+            LinkTarget::Group(t.parse().with_context(|| format!("bad group id in {s:?}"))?)
+        };
         let (range, factor) = rest
             .split_once('x')
             .with_context(|| format!("bad link window {s:?} (missing xFACTOR)"))?;
@@ -176,7 +221,7 @@ impl std::str::FromStr for LinkWindow {
             .split_once("..")
             .with_context(|| format!("bad step range in {s:?} (expected START..END)"))?;
         Ok(LinkWindow {
-            group: g.trim().parse().with_context(|| format!("bad group id in {s:?}"))?,
+            target,
             steps: a.trim().parse().with_context(|| format!("bad window start in {s:?}"))?
                 ..b.trim().parse().with_context(|| format!("bad window end in {s:?}"))?,
             factor: factor.trim().parse().with_context(|| format!("bad factor in {s:?}"))?,
@@ -407,12 +452,34 @@ impl PerturbConfig {
                 "link degrade factor must be ≥ 1 (got {})",
                 lw.factor
             );
-            anyhow::ensure!(
-                lw.group < topo.groups,
-                "link window names group {} but the topology has {} groups",
-                lw.group,
-                topo.groups
-            );
+            match lw.target {
+                LinkTarget::Group(g) => anyhow::ensure!(
+                    g < topo.groups,
+                    "link window names group {g} but the topology has {} groups",
+                    topo.groups
+                ),
+                LinkTarget::Spine => anyhow::ensure!(
+                    self.fabric.model == super::fabric::FabricModel::TwoTier,
+                    "spine@… link windows need the two-tier fabric (--fabric 2tier); \
+                     under 3tier name a plane instead (planeK@…)"
+                ),
+                LinkTarget::Plane(k) => match self.fabric.model {
+                    super::fabric::FabricModel::ThreeTier { pods } => {
+                        // the build clamps pods (= planes) to the group
+                        // count, so bound against both
+                        let planes = pods.min(topo.groups);
+                        anyhow::ensure!(
+                            k < planes,
+                            "link window names plane {k} but the fabric has {planes} \
+                             spine planes"
+                        );
+                    }
+                    _ => bail!(
+                        "plane{k}@… link windows need a three-tier fabric \
+                         (--fabric 3tier:F[:pods])"
+                    ),
+                },
+            }
             anyhow::ensure!(
                 lw.steps.start < lw.steps.end,
                 "empty link window {}..{}",
@@ -550,7 +617,18 @@ impl PerturbConfig {
     pub fn link_factor(&self, group: usize, step: usize) -> f64 {
         self.link_windows
             .iter()
-            .filter(|w| w.group == group && w.steps.contains(&step))
+            .filter(|w| w.target == LinkTarget::Group(group) && w.steps.contains(&step))
+            .map(|w| w.factor)
+            .product()
+    }
+
+    /// Degradation factor of a *named* core link (spine or spine
+    /// plane) at one step — the product of every matching window.
+    /// `1` outside all windows; numeric (group) windows never match.
+    pub fn core_link_factor(&self, target: LinkTarget, step: usize) -> f64 {
+        self.link_windows
+            .iter()
+            .filter(|w| w.target == target && w.steps.contains(&step))
             .map(|w| w.factor)
             .product()
     }
@@ -940,13 +1018,24 @@ mod tests {
         assert_eq!(
             p.link_windows,
             vec![
-                LinkWindow { group: 1, steps: 3..8, factor: 2.5 },
-                LinkWindow { group: 0, steps: 0..2, factor: 4.0 },
+                LinkWindow { target: LinkTarget::Group(1), steps: 3..8, factor: 2.5 },
+                LinkWindow { target: LinkTarget::Group(0), steps: 0..2, factor: 4.0 },
             ]
+        );
+        // named fabric-link targets
+        assert_eq!(
+            "spine@0..4x8".parse::<LinkWindow>().unwrap(),
+            LinkWindow { target: LinkTarget::Spine, steps: 0..4, factor: 8.0 }
+        );
+        assert_eq!(
+            "plane2@1..6x16".parse::<LinkWindow>().unwrap(),
+            LinkWindow { target: LinkTarget::Plane(2), steps: 1..6, factor: 16.0 }
         );
         assert!("1@3..x2".parse::<LinkWindow>().is_err());
         assert!("1@3-8x2".parse::<LinkWindow>().is_err());
         assert!("1@3..8".parse::<LinkWindow>().is_err());
+        assert!("planex@1..3x2".parse::<LinkWindow>().is_err());
+        assert!("rack@1..3x2".parse::<LinkWindow>().is_err());
     }
 
     #[test]
@@ -1087,6 +1176,58 @@ mod tests {
         let mut p = PerturbConfig::default();
         p.parse_link_degrade("1@1..3x2").unwrap();
         p.validate(&topo22(), 10).unwrap();
+    }
+
+    #[test]
+    fn validate_binds_named_windows_to_their_fabric_model() {
+        // spine@… means nothing on a flat fabric — a silent no-op,
+        // hence a hard error naming the fix
+        let mut p = PerturbConfig::default();
+        p.parse_link_degrade("spine@1..3x2").unwrap();
+        let err = p.validate(&topo22(), 10).unwrap_err().to_string();
+        assert!(err.contains("--fabric 2tier"), "{err}");
+        p.fabric = "2tier:2".parse().unwrap();
+        p.validate(&topo22(), 10).unwrap();
+        // …and the two-tier spine is not a three-tier target
+        p.fabric = "3tier:2".parse().unwrap();
+        let err = p.validate(&topo22(), 10).unwrap_err().to_string();
+        assert!(err.contains("planeK"), "{err}");
+
+        // planeK@… needs a three-tier fabric with plane K
+        let mut p = PerturbConfig::default();
+        p.parse_link_degrade("plane0@1..3x2").unwrap();
+        assert!(p.validate(&topo22(), 10).is_err(), "flat fabric has no planes");
+        p.fabric = "2tier:2".parse().unwrap();
+        let err = p.validate(&topo22(), 10).unwrap_err().to_string();
+        assert!(err.contains("three-tier"), "{err}");
+        p.fabric = "3tier:2:2".parse().unwrap();
+        p.validate(&topo22(), 10).unwrap();
+        let mut p = PerturbConfig::default();
+        p.parse_link_degrade("plane5@1..3x2").unwrap();
+        p.fabric = "3tier:2:2".parse().unwrap();
+        let err = p.validate(&topo22(), 10).unwrap_err().to_string();
+        assert!(err.contains("plane 5"), "plane index bound: {err}");
+        // clamped planes: 4 configured pods on a 2-group topology
+        // leave only 2 planes
+        let mut p = PerturbConfig::default();
+        p.parse_link_degrade("plane3@1..3x2").unwrap();
+        p.fabric = "3tier:2:4".parse().unwrap();
+        assert!(p.validate(&topo22(), 10).is_err(), "plane clamped away by group count");
+    }
+
+    #[test]
+    fn core_link_factor_matches_only_named_targets() {
+        let mut p = PerturbConfig::default();
+        p.parse_link_degrade("0@0..9x2,spine@2..5x3,plane1@4..6x5,spine@4..5x7").unwrap();
+        assert_eq!(p.core_link_factor(LinkTarget::Spine, 1), 1.0);
+        assert_eq!(p.core_link_factor(LinkTarget::Spine, 2), 3.0);
+        assert_eq!(p.core_link_factor(LinkTarget::Spine, 4), 21.0, "overlap compounds");
+        assert_eq!(p.core_link_factor(LinkTarget::Plane(1), 4), 5.0);
+        assert_eq!(p.core_link_factor(LinkTarget::Plane(0), 4), 1.0);
+        // group windows and named windows never cross-match
+        assert_eq!(p.link_factor(0, 3), 2.0);
+        assert_eq!(p.core_link_factor(LinkTarget::Group(0), 3), 2.0);
+        assert_eq!(p.link_factor(1, 4), 1.0, "plane windows don't leak into slots");
     }
 
     #[test]

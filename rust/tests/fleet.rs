@@ -163,8 +163,8 @@ fn topology_aware_beats_pack_on_the_reference_fleet() {
     // the headline: topology-aware strictly reduces the LSGD-family
     // (layered) mean stretch vs pack
     let layered = |j: &lsgd::metrics::JobSlo| j.algo != "csgd";
-    let s_pack = pack.mean_stretch_of(layered);
-    let s_topo = topo.mean_stretch_of(layered);
+    let s_pack = pack.mean_stretch_of(layered).expect("pack fleet has layered jobs");
+    let s_topo = topo.mean_stretch_of(layered).expect("topo fleet has layered jobs");
     assert!(
         s_topo < s_pack,
         "layered mean stretch: topology-aware {s_topo} must beat pack {s_pack}"
@@ -208,4 +208,60 @@ fn admission_is_loud_and_departures_free_slots() {
         assert!((j.stretch - 1.0).abs() < 1e-9, "serial tenants never contend: {}", j.stretch);
     }
     assert!(report.fleet_makespan >= 10000.0);
+}
+
+// ------------------------------------------------- contract 5 (ISSUE 10)
+
+/// Regression: `--link-degrade` used to be applied by the solo layer
+/// and silently ignored by the layer-2 contention replay, under-pricing
+/// every degraded fleet. The windows are step-indexed and the fleet
+/// clock has no step counter, so the supported behavior is a hard
+/// error naming the flag.
+#[test]
+fn link_degrade_windows_are_a_hard_error_under_fleet() {
+    let m = ClusterModel::paper_k80();
+    let fleet = fleet_of("lsgd:2x2:steps=2");
+    let mut p = PerturbConfig::default();
+    p.parse_link_degrade("0@1..3x4").unwrap();
+    let err = des::run_fleet(&m, &fleet, &p).unwrap_err().to_string();
+    assert!(err.contains("--link-degrade"), "the flag is named: {err}");
+    assert!(err.contains("fleet"), "the unsupported mode is named: {err}");
+    // without the windows the same config runs
+    des::run_fleet(&m, &fleet, &PerturbConfig::default()).unwrap();
+}
+
+// ------------------------------------------------- contract 6 (ISSUE 10)
+
+/// The three-tier fleet fabric (`pods >= 2`) keeps both PR 9 pillars
+/// under every routing policy: a single tenant still prices exactly
+/// like the solo entry point (the own-rates and all-rates solves are
+/// the same solve whatever plane each lane picked), and a contended
+/// replay is bitwise-reproducible per (seed, policy).
+#[test]
+fn three_tier_fleet_reduces_solo_and_reproduces_per_policy() {
+    use lsgd::simnet::RoutingPolicy;
+    let m = exposed_model();
+    for routing in [RoutingPolicy::Deterministic, RoutingPolicy::Ecmp, RoutingPolicy::Adaptive] {
+        // one tenant: stretch 1 under any plane assignment
+        let mut fleet = fleet_of("lsgd:4x2:steps=3");
+        fleet.placement = PlacementPolicy::Spread;
+        fleet.pods = 2;
+        fleet.routing = routing;
+        let report = des::run_fleet(&m, &fleet, &PerturbConfig::default()).unwrap();
+        assert!(
+            (report.jobs[0].stretch - 1.0).abs() < 1e-9,
+            "{routing}: one tenant on a 3-tier fleet fabric must price solo, got {}",
+            report.jobs[0].stretch
+        );
+
+        // contended: deterministic replay per (seed, policy)
+        let mut fleet = fleet_of("csgd:4x1:steps=3,csgd:4x1:steps=3,lsgd:4x2:steps=3");
+        fleet.placement = PlacementPolicy::Spread;
+        fleet.pods = 2;
+        fleet.routing = routing;
+        let a = des::run_fleet(&m, &fleet, &PerturbConfig::default()).unwrap();
+        let b = des::run_fleet(&m, &fleet, &PerturbConfig::default()).unwrap();
+        assert_eq!(a, b, "{routing}: fleet replay must be bitwise-reproducible");
+        assert!(a.spine_busy_total > 0.0, "{routing}: spread jobs must cross the core");
+    }
 }

@@ -32,12 +32,23 @@
 //!  (g) the zero-jitter packet replay reproduces the closed-form DES
 //!      for `ma`/`dasgd`/`dcs3gd` across the group grid, and `ma`'s
 //!      priced communication falls as ~1/k in `comm_interval`.
+//!
+//! Acceptance (ISSUE 10 — three-tier Clos and routing policies):
+//!  (h) repricing — `3tier:F:1` (one pod: the agg switch plays the
+//!      spine) reproduces `2tier:F` to < 1e-9 for every REGISTRY
+//!      scheduler, and the routed-vs-private conservation grid
+//!      extends to the three-tier graph under every routing policy;
+//!  (i) ordering — on the contended reference scenario with a
+//!      degraded spine plane, adaptive ≤ ECMP ≤ deterministic
+//!      makespans, with routing-around a strict win;
+//!  (j) reproducibility — every scheduler × routing policy replay is
+//!      bitwise-identical per seed.
 
 use lsgd::config::{Algo, SchedConfig};
-use lsgd::sched::scheduler::scheduler_for;
+use lsgd::sched::scheduler::{scheduler_for, REGISTRY};
 use lsgd::simnet::{
     cost, des, fabric::Fabric, net, AllreduceAlgo, ClusterModel, FabricConfig, Link, NetConfig,
-    NetModel, PerturbConfig,
+    NetModel, PerturbConfig, RoutingPolicy,
 };
 use lsgd::topology::Topology;
 
@@ -443,7 +454,8 @@ fn fabric_makespan_monotone_in_oversubscription() {
     let mut last_l = 0.0_f64;
     let mut last_c = 0.0_f64;
     for oversub in [1.0, 1.5, 2.0, 4.0, 8.0] {
-        let fab = FabricConfig { model: lsgd::simnet::FabricModel::TwoTier, oversub };
+        let fab =
+            FabricConfig { model: lsgd::simnet::FabricModel::TwoTier, oversub, ..Default::default() };
         let l = des::run_lsgd_fabric(&m, &topo, steps, &fab).unwrap().makespan;
         let c = des::run_csgd_fabric(&m, &topo, steps, &fab).unwrap().makespan;
         assert!(l >= last_l - 1e-9, "lsgd shrank at oversub {oversub}: {l} < {last_l}");
@@ -459,7 +471,8 @@ fn fabric_makespan_monotone_in_oversubscription() {
     for oversub in [1.0, 2.0, 4.0] {
         let mut p = PerturbConfig::default();
         p.net = packet(0.3, 0.0, 1);
-        p.fabric = FabricConfig { model: lsgd::simnet::FabricModel::TwoTier, oversub };
+        p.fabric =
+            FabricConfig { model: lsgd::simnet::FabricModel::TwoTier, oversub, ..Default::default() };
         let mk = des::run_lsgd_perturbed(&m, &topo, steps, &p).unwrap().makespan;
         assert!(mk >= last - 1e-9, "packet lsgd shrank at oversub {oversub}");
         last = mk;
@@ -476,7 +489,8 @@ fn fabric_contention_tax_lsgd_below_csgd_at_64x4() {
     let topo = Topology::new(64, 4).unwrap();
     let steps = 3;
     for oversub in [2.0, 4.0] {
-        let fab = FabricConfig { model: lsgd::simnet::FabricModel::TwoTier, oversub };
+        let fab =
+            FabricConfig { model: lsgd::simnet::FabricModel::TwoTier, oversub, ..Default::default() };
         let tax_l = des::per_step(&des::run_lsgd_fabric(&m, &topo, steps, &fab).unwrap(), steps)
             - des::per_step(&des::run_lsgd(&m, &topo, steps), steps);
         let tax_c = des::per_step(&des::run_csgd_fabric(&m, &topo, steps, &fab).unwrap(), steps)
@@ -736,5 +750,171 @@ fn layered_family_comm_time_falls_inversely_with_comm_interval() {
             last_makespan < r1.makespan - 1e-9,
             "{algo:?}: k=8 must be strictly cheaper than every-step sync"
         );
+    }
+}
+
+// ------------------------------------ acceptance (h) — ISSUE 10
+
+#[test]
+fn three_tier_single_pod_reprices_two_tier_for_every_scheduler() {
+    // the repricing contract: with one pod the three-tier graph is
+    // structurally the two-tier Clos — the lone agg switch carries the
+    // spine's capacity and every crossing route is three links — so
+    // every REGISTRY scheduler prices both fabrics identically
+    let m = ClusterModel::paper_k80();
+    let topo = Topology::new(8, 4).unwrap();
+    let steps = 3;
+    let mut two = PerturbConfig::default();
+    two.fabric = "2tier:2.5".parse().unwrap();
+    let mut three = two.clone();
+    three.fabric = "3tier:2.5:1".parse().unwrap();
+    for name in REGISTRY {
+        let sched =
+            scheduler_for(name.parse::<Algo>().unwrap(), &SchedConfig::default()).unwrap();
+        let a = des::run_sched_perturbed(&m, &topo, steps, &two, sched.as_ref()).unwrap();
+        let b = des::run_sched_perturbed(&m, &topo, steps, &three, sched.as_ref()).unwrap();
+        assert!(
+            (a.makespan - b.makespan).abs() < 1e-9,
+            "{name}: 2tier:2.5 {} vs 3tier:2.5:1 {}",
+            a.makespan,
+            b.makespan
+        );
+        assert!((a.hidden_comm - b.hidden_comm).abs() < 1e-9, "{name}: overlap diverged");
+    }
+}
+
+#[test]
+fn three_tier_conservation_over_the_grid() {
+    // acceptance (d) extended to the deeper graph: at oversub 1 every
+    // tier is provisioned for its worst concurrent lane count, so the
+    // routed replay reproduces the private-link packet costs under
+    // EVERY routing policy — path choice moves traffic between planes
+    // that all have headroom
+    let cfg = packet(0.0, 0.0, 1);
+    let link = L_COMM;
+    let policies =
+        [RoutingPolicy::Deterministic, RoutingPolicy::Ecmp, RoutingPolicy::Adaptive];
+    for p in [2usize, 3, 5, 8, 16, 64] {
+        let sizes = vec![4usize; p];
+        for pods in [2usize, 4] {
+            for routing in policies {
+                let fab = Fabric::three_tier(&sizes, 1.0, pods).with_routing(routing);
+                for (algo, n) in [
+                    (AllreduceAlgo::Ring, 1e6),
+                    (AllreduceAlgo::RecursiveHalvingDoubling, 102.4e6),
+                ] {
+                    let mut acc = net::NetAcc::default();
+                    let private = net::allreduce(
+                        algo,
+                        link,
+                        p,
+                        n,
+                        &cfg,
+                        SEED,
+                        net::Phase::GlobalAllreduce,
+                        0,
+                        &mut acc,
+                    );
+                    let routed = net::allreduce_routed(
+                        algo,
+                        link,
+                        p,
+                        n,
+                        &cfg,
+                        SEED,
+                        net::Phase::GlobalAllreduce,
+                        0,
+                        &fab,
+                        &net::RouteKind::CommGlobal,
+                        &mut acc,
+                    );
+                    assert!(
+                        (routed - private).abs() < 1e-9,
+                        "{algo:?} p={p} pods={pods} {routing}: routed {routed} vs \
+                         private {private}"
+                    );
+                }
+            }
+        }
+    }
+    // end-to-end: the non-blocking three-tier DES reproduces the
+    // private-link DES for both schedules across the group grid
+    let m = ClusterModel::paper_k80();
+    let steps = 3;
+    for g in [2usize, 8, 64] {
+        let topo = Topology::new(g, 4).unwrap();
+        for spec in ["3tier", "3tier:1:4"] {
+            let fab: FabricConfig = spec.parse().unwrap();
+            let l = des::run_lsgd_fabric(&m, &topo, steps, &fab).unwrap();
+            assert!(
+                (l.makespan - des::run_lsgd(&m, &topo, steps).makespan).abs() < 1e-9,
+                "G={g} {spec} lsgd"
+            );
+            let c = des::run_csgd_fabric(&m, &topo, steps, &fab).unwrap();
+            assert!(
+                (c.makespan - des::run_csgd(&m, &topo, steps).makespan).abs() < 1e-9,
+                "G={g} {spec} csgd"
+            );
+        }
+    }
+}
+
+// ------------------------------------ acceptance (i) — ISSUE 10
+
+#[test]
+fn routing_policies_order_on_a_degraded_spine_plane() {
+    // the headline demo, pinned: `--link-degrade plane0@…` squeezes
+    // spine plane 0 by 64×. Deterministic routing sends every
+    // pod-crossing lane straight into it; ECMP's hash spread dilutes
+    // the hit; adaptive routing sees the degraded capacity and routes
+    // around it entirely
+    let m = ClusterModel::paper_k80();
+    let topo = Topology::new(8, 4).unwrap();
+    let steps = 3;
+    let run = |routing: RoutingPolicy| {
+        let mut p = PerturbConfig::default();
+        p.fabric = "3tier:4:4".parse().unwrap();
+        p.fabric.routing = routing;
+        p.parse_link_degrade(&format!("plane0@0..{steps}x64")).unwrap();
+        des::run_lsgd_perturbed(&m, &topo, steps, &p).unwrap().makespan
+    };
+    let det = run(RoutingPolicy::Deterministic);
+    let ecmp = run(RoutingPolicy::Ecmp);
+    let ada = run(RoutingPolicy::Adaptive);
+    assert!(
+        ada <= ecmp + 1e-9 && ecmp <= det + 1e-9,
+        "adaptive {ada} ≤ ecmp {ecmp} ≤ det {det}"
+    );
+    assert!(det > ada + 1e-6, "routing around the degraded plane must win outright");
+}
+
+// ------------------------------------ acceptance (j) — ISSUE 10
+
+#[test]
+fn three_tier_replays_are_bitwise_reproducible_per_scheduler_and_policy() {
+    let m = ClusterModel::paper_k80();
+    let topo = Topology::new(8, 2).unwrap();
+    let steps = 3;
+    for name in REGISTRY {
+        let sched =
+            scheduler_for(name.parse::<Algo>().unwrap(), &SchedConfig::default()).unwrap();
+        for routing in
+            [RoutingPolicy::Deterministic, RoutingPolicy::Ecmp, RoutingPolicy::Adaptive]
+        {
+            let mut p = PerturbConfig::default();
+            p.fabric = "3tier:2:4".parse().unwrap();
+            p.fabric.routing = routing;
+            p.net = packet(0.3, 0.05, 1);
+            let a = des::run_sched_perturbed(&m, &topo, steps, &p, sched.as_ref()).unwrap();
+            let b = des::run_sched_perturbed(&m, &topo, steps, &p, sched.as_ref()).unwrap();
+            assert_eq!(
+                a.makespan.to_bits(),
+                b.makespan.to_bits(),
+                "{name} × {routing}: replay not bitwise"
+            );
+            assert_eq!(a.spans, b.spans, "{name} × {routing}");
+            assert_eq!(a.net, b.net, "{name} × {routing}");
+            assert_eq!(a.fabric, b.fabric, "{name} × {routing}");
+        }
     }
 }

@@ -46,6 +46,13 @@
 //!      under the profile and undercuts flat CSGD's — and the engine's
 //!      `ma` merges stay bitwise-deterministic per seed across the
 //!      `comm_interval` sweep.
+//!
+//! Acceptance (ISSUE 10 — routing policies):
+//!  (h) ECMP's plane hashes live in their own `perturb::domain::ROUTE`
+//!      tag: switching the routing policy — which consumes those
+//!      draws — never shifts the seeded worker/communicator/link/NET
+//!      schedules, the DES's message accounting, the regroup
+//!      schedule, or the engine trajectory.
 
 use lsgd::config::{Algo, ExperimentConfig, SchedConfig};
 use lsgd::metrics::RegroupKind;
@@ -746,4 +753,70 @@ fn stale_schedulers_absorb_perturbed_io_like_lsgd() {
         let r = run(&c, &p);
         assert!(r.hidden_io_secs > 0.0, "{algo}: lost the absorption channel");
     }
+}
+
+// ------------------------------------------------------ acceptance (h)
+
+#[test]
+fn route_draws_never_shift_existing_schedules_or_numerics() {
+    use lsgd::simnet::RoutingPolicy;
+    // ROUTE-domain separation end-to-end. The seeded factor schedules
+    // are pure functions of (seed, domain, indices), so the policy
+    // switch cannot touch them…
+    let mut det = PerturbConfig::default();
+    det.hetero = 0.4;
+    det.straggle_prob = 0.3;
+    det.comm_straggle_prob = 0.3;
+    det.net.model = NetModel::Packet;
+    det.net.jitter = 0.5;
+    det.fabric = "3tier:2:4".parse().unwrap();
+    let mut ecmp = det.clone();
+    ecmp.fabric.routing = RoutingPolicy::Ecmp;
+    for w in 0..16usize {
+        for s in 0..20usize {
+            assert_eq!(det.compute_scale(w, s), ecmp.compute_scale(w, s));
+            assert_eq!(det.comm_scale(w % 4, s), ecmp.comm_scale(w % 4, s));
+            assert_eq!(det.link_factor(w % 4, s), ecmp.link_factor(w % 4, s));
+        }
+    }
+    // …and the DES replay consuming the ROUTE draws leaves the NET
+    // accounting untouched: same messages, same reorder draws, same
+    // injected jitter — only the contention timing may move
+    let m = ClusterModel::paper_k80();
+    let topo = Topology::new(8, 2).unwrap();
+    let a = des::run_lsgd_perturbed(&m, &topo, 4, &det).unwrap();
+    let b = des::run_lsgd_perturbed(&m, &topo, 4, &ecmp).unwrap();
+    for (x, y) in a.net.iter().zip(&b.net) {
+        assert_eq!(x.phase, y.phase);
+        assert_eq!(x.messages, y.messages, "{}: ECMP shifted the message draws", x.phase);
+        assert_eq!(x.reordered, y.reordered, "{}: ECMP shifted the reorder draws", x.phase);
+        assert!(
+            (x.delay_total - y.delay_total).abs() < 1e-12,
+            "{}: ECMP shifted the jitter draws",
+            x.phase
+        );
+    }
+    // a fail/rejoin schedule regroups identically under every policy
+    let mut fail_det = PerturbConfig::default();
+    fail_det.fabric = "3tier:2:2".parse().unwrap();
+    fail_det.parse_failures("5@2").unwrap();
+    fail_det.parse_rejoins("5@4").unwrap();
+    let mut fail_ada = fail_det.clone();
+    fail_ada.fabric.routing = RoutingPolicy::Adaptive;
+    let fa = des::run_lsgd_perturbed(&m, &topo, 6, &fail_det).unwrap();
+    let fb = des::run_lsgd_perturbed(&m, &topo, 6, &fail_ada).unwrap();
+    assert_eq!(fa.regroups, fb.regroups, "route draws shifted the regroup schedule");
+    // engine trajectory: the real engine injects the deterministic
+    // crossing-stretch schedule, which is routing-policy-blind — the
+    // trajectory and injected totals are bit-identical across policies
+    let c = cfg(2, 2, 4, Algo::Lsgd);
+    let mut eng_det = PerturbConfig::default();
+    eng_det.fabric = "3tier:3:2".parse().unwrap();
+    eng_det.delay_unit = 0.002;
+    let mut eng_ecmp = eng_det.clone();
+    eng_ecmp.fabric.routing = RoutingPolicy::Ecmp;
+    let ra = run(&c, &eng_det);
+    let rb = run(&c, &eng_ecmp);
+    assert_eq!(ra.step_checksums, rb.step_checksums, "route draws touched numerics");
+    assert_eq!(ra.perturb.fabric_injected_per_group, rb.perturb.fabric_injected_per_group);
 }
